@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Fig. 10 — the NYC-taxi case study (synthetic
+//! DEBS'15-like rides; per-borough mean trip distance).
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    let (a, b, c) = figures::fig10(&ctx);
+    a.print();
+    b.print();
+    c.print();
+}

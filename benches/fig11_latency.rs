@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 11 — total processing latency of both
+//! case-study datasets at 60% sampling.
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    figures::fig11(&ctx).print();
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Fig. 5 (a) throughput vs sampling fraction,
+//! (b) accuracy loss vs sampling fraction, (c) throughput vs batch interval.
+//!
+//! `cargo bench --bench fig5_micro` (env `SA_SCALE=full` for the recorded
+//! EXPERIMENTS.md scale).
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    figures::fig5a(&ctx).print();
+    figures::fig5b(&ctx).print();
+    figures::fig5c(&ctx).print();
+}

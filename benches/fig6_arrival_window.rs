@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Fig. 6 (a) accuracy vs sub-stream-C arrival
+//! rate, (b) throughput vs window size, (c) accuracy vs window size.
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    figures::fig6a(&ctx).print();
+    let (b, c) = figures::fig6bc(&ctx);
+    b.print();
+    c.print();
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Fig. 7 (a) scalability over workers/nodes,
+//! (b) throughput at fixed 1% accuracy under Gaussian skew, (c) accuracy
+//! under Poisson skew.
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    figures::fig7a(&ctx).print();
+    figures::fig7b(&ctx).print();
+    figures::fig7c(&ctx).print();
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig. 8 — the per-window MEAN timeline under
+//! Gaussian skew for the three Spark-based sampled systems vs exact.
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    figures::fig8(&ctx).print();
+}

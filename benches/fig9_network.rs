@@ -1,0 +1,17 @@
+//! Bench: regenerate paper Fig. 9 — the network-traffic case study
+//! (CAIDA-like synthetic NetFlow; per-protocol traffic totals).
+
+use streamapprox::harness::{figures, Ctx, Scale};
+
+fn main() {
+    let scale = match std::env::var("SA_SCALE").as_deref() {
+        Ok("full") => Scale::full(),
+        _ => Scale::quick(),
+    };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    let (a, b, c) = figures::fig9(&ctx);
+    a.print();
+    b.print();
+    c.print();
+}

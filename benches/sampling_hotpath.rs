@@ -1,0 +1,60 @@
+//! Micro-benchmark of the sampling hot path: per-item cost of each
+//! algorithm at ingest, and the per-interval close cost.  This is the §Perf
+//! instrument for L3 — run before/after optimizations and record deltas in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use streamapprox::core::Item;
+use streamapprox::engine::IngestPool;
+use streamapprox::sampling::SamplerKind;
+use streamapprox::util::rng::Rng;
+use streamapprox::util::table::Table;
+
+fn bench_sampler(kind: SamplerKind, n_items: usize, intervals: usize) -> (f64, f64) {
+    let mut pool = IngestPool::new(kind, 1, 0.4, 7);
+    let mut rng = Rng::seed_from_u64(1);
+    let items: Vec<Item> = (0..n_items)
+        .map(|i| Item::new((rng.range_usize(0, 3)) as u16, rng.normal(100.0, 10.0), i as u64))
+        .collect();
+
+    // warm-up interval (locks OASRS capacities)
+    for &it in &items {
+        pool.offer(it);
+    }
+    pool.finish_interval();
+
+    let t0 = Instant::now();
+    let mut close_ns = 0u64;
+    for _ in 0..intervals {
+        for &it in &items {
+            pool.offer(it);
+        }
+        let c0 = Instant::now();
+        let r = pool.finish_interval();
+        close_ns += c0.elapsed().as_nanos() as u64;
+        assert!(r.arrived() > 0.0);
+    }
+    let total_ns = t0.elapsed().as_nanos() as f64;
+    let per_item_ns = (total_ns - close_ns as f64) / (n_items * intervals) as f64;
+    let close_ms = close_ns as f64 / intervals as f64 / 1e6;
+    (per_item_ns, close_ms)
+}
+
+fn main() {
+    let n = 200_000;
+    let intervals = 5;
+    let mut t = Table::new(
+        format!("sampling hot path ({n} items/interval, {intervals} intervals, 1 worker)"),
+        &["sampler", "per-item (ns)", "interval close (ms)"],
+    );
+    for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
+        let (per_item, close) = bench_sampler(kind, n, intervals);
+        t.row(vec![
+            format!("{kind:?}"),
+            format!("{per_item:.1}"),
+            format!("{close:.2}"),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,109 @@
+//! End-to-end driver: exercises **all layers composed** on a real small
+//! workload, proving the full stack works — broker ingestion (Kafka-like
+//! aggregator) → parallel OASRS sampling → both engines → sliding windows →
+//! the AOT-compiled XLA aggregation artifacts (L2 JAX graph wrapping the L1
+//! Pallas kernel) → error estimation + adaptive feedback.
+//!
+//! Reports the paper's headline metric — throughput speedup of the sampled
+//! systems over native execution at a given accuracy — on the CAIDA-like
+//! network workload.  Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use streamapprox::datasets::caida::CaidaConfig;
+use streamapprox::prelude::*;
+use streamapprox::stream::{Broker, ReplayTool, TopicConfig};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // ---- Layer check 1: XLA artifacts must load (no native fallback: this
+    // driver exists to prove the AOT path). -------------------------------
+    let svc = ComputeService::start(Backend::Xla, None)
+        .map_err(|e| format!("XLA artifacts required (run `make artifacts`): {e}"))?;
+    println!("[1/4] XLA backend up: artifacts compiled on PJRT CPU");
+
+    // ---- Layer check 2: broker ingestion. -------------------------------
+    // 120 s of backbone NetFlow (~2.4 M flows), replayed through the
+    // Kafka-like aggregator exactly as the paper's methodology describes
+    // (200-item messages, §6.1).
+    let trace = CaidaConfig { flows_per_sec: 20_000.0, ..Default::default() }.generate(120_000);
+    let broker = Broker::new();
+    broker.create_topic("netflow", TopicConfig { partitions: 4, capacity: 64 * 1024 })?;
+    let replay = ReplayTool::new(trace.clone());
+    let mut consumer = broker.consumer("netflow")?;
+    let mut via_broker: Vec<Item> = Vec::with_capacity(trace.len());
+    std::thread::scope(|s| -> Result<(), streamapprox::core::Error> {
+        s.spawn(|| replay.replay_all(&broker, "netflow"));
+        while let Some(it) = consumer.poll() {
+            via_broker.push(it);
+        }
+        Ok(())
+    })?;
+    assert_eq!(via_broker.len(), trace.len(), "broker must conserve items");
+    via_broker.sort_by_key(|i| i.ts);
+    println!(
+        "[2/4] broker delivered {} items ({} produced / {} consumed)",
+        via_broker.len(),
+        broker.stats("netflow")?.0,
+        broker.stats("netflow")?.1
+    );
+
+    // ---- Layer check 3: all four systems over the same stream. ----------
+    let window = WindowConfig::paper_default();
+    let run = |engine: EngineKind, sampler: SamplerKind, budget: QueryBudget| {
+        let p = PipelineBuilder::new()
+            .engine(engine)
+            .sampler(sampler)
+            .budget(budget)
+            .query(Query::PerStratumSum)
+            .window(window)
+            .workers(2)
+            .build_with_handle(svc.handle());
+        p.run_items(&via_broker)
+    };
+
+    let native = run(EngineKind::Pipelined, SamplerKind::None, QueryBudget::SamplingFraction(1.0))?;
+    let native_b = run(EngineKind::Batched, SamplerKind::None, QueryBudget::SamplingFraction(1.0))?;
+    let flink_sa =
+        run(EngineKind::Pipelined, SamplerKind::Oasrs, QueryBudget::SamplingFraction(0.6))?;
+    let spark_sa =
+        run(EngineKind::Batched, SamplerKind::Oasrs, QueryBudget::SamplingFraction(0.6))?;
+    println!("[3/4] four systems executed over the broker-fed stream");
+
+    // ---- Layer check 4: headline metrics. -------------------------------
+    let headline = |name: &str, r: &RunReport, base: &RunReport| {
+        println!(
+            "  {:<20} {:>10.0} items/s  ({:.2}x native)  loss {:.3}%  windows {}",
+            name,
+            r.throughput(),
+            r.throughput() / base.throughput(),
+            r.mean_accuracy_loss() * 100.0,
+            r.windows.len()
+        );
+    };
+    println!("[4/4] headline (sampling fraction 60%):");
+    headline("native-flink", &native, &native);
+    headline("flink-streamapprox", &flink_sa, &native);
+    headline("native-spark", &native_b, &native_b);
+    headline("spark-streamapprox", &spark_sa, &native_b);
+
+    let speedup_flink = flink_sa.throughput() / native.throughput();
+    let speedup_spark = spark_sa.throughput() / native_b.throughput();
+    let loss = flink_sa.mean_accuracy_loss();
+    println!(
+        "\nheadline: Flink-SA {speedup_flink:.2}x native-Flink, Spark-SA {speedup_spark:.2}x native-Spark, loss {:.3}%",
+        loss * 100.0
+    );
+
+    // The e2e driver is also a gate: sampling must beat native while
+    // keeping the paper-grade accuracy.
+    assert!(speedup_flink > 1.0, "Flink StreamApprox must beat native Flink");
+    assert!(speedup_spark > 1.0, "Spark StreamApprox must beat native Spark");
+    // Heavy-tailed flow sizes put a floor under sampling error at 10^5-item
+    // windows; 2% is paper-grade for this workload scale.
+    assert!(loss < 0.02, "accuracy loss must stay under 2% at 60% sampling");
+    assert!(flink_sa.windows.len() >= 20, "must emit full window series");
+    println!("\nE2E OK — all layers composed (broker → OASRS → engines → XLA → bounds)");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: approximate SUM over a three-sub-stream Gaussian mix with
+//! OASRS at a 60% budget, printing each window's `output ± bound` next to
+//! the exact value.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use streamapprox::prelude::*;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Prefer the AOT XLA artifacts; fall back to the native executor.
+    let pipeline = PipelineBuilder::new()
+        .engine(EngineKind::Pipelined)
+        .sampler(SamplerKind::Oasrs)
+        .budget(QueryBudget::SamplingFraction(0.6))
+        .query(Query::Sum)
+        .window(WindowConfig::paper_default()) // w = 10 s, δ = 5 s
+        .workers(2);
+    let pipeline = match pipeline.clone().build_xla() {
+        Ok(p) => {
+            println!("compute backend: XLA (AOT artifacts)");
+            p
+        }
+        Err(e) => {
+            println!("compute backend: native ({e})");
+            pipeline.build_native()
+        }
+    };
+
+    // 60 s of the paper's §5.1 Gaussian microbenchmark mix.
+    let stream = StreamConfig::gaussian_micro(1000.0, 7);
+    let report = pipeline.run_stream(&stream, 60_000)?;
+
+    println!(
+        "processed {} items in {:.1} ms  ({:.0} items/s)",
+        report.items_processed,
+        report.wall_ns as f64 / 1e6,
+        report.throughput()
+    );
+    println!("{:<12} {:>24} {:>16} {:>10}", "window", "approx SUM ± bound(95%)", "exact SUM", "loss");
+    for w in &report.windows {
+        let ci = w.result.scalar.unwrap();
+        println!(
+            "{:>6}-{:<5} {:>15.0} ±{:>7.0} {:>16.0} {:>9.3}%",
+            w.start_ms / 1000,
+            w.end_ms / 1000,
+            ci.value,
+            ci.bound,
+            w.exact_scalar.unwrap_or(f64::NAN),
+            w.accuracy_loss().unwrap_or(f64::NAN) * 100.0
+        );
+    }
+    println!("mean accuracy loss: {:.4}%", report.mean_accuracy_loss() * 100.0);
+    Ok(())
+}

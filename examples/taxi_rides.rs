@@ -1,0 +1,67 @@
+//! NYC taxi ride analytics case study (paper §6.3): average trip distance
+//! per borough per sliding window, on a synthetic DEBS'15-like ride stream.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example taxi_rides
+//! ```
+
+use streamapprox::datasets::taxi::{TaxiConfig, BOROUGHS};
+use streamapprox::prelude::*;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let svc = match ComputeService::start(Backend::Xla, None) {
+        Ok(s) => {
+            println!("compute backend: XLA (AOT artifacts)");
+            s
+        }
+        Err(e) => {
+            println!("compute backend: native ({e})");
+            ComputeService::native()
+        }
+    };
+
+    let trace = TaxiConfig::default().generate(60_000);
+    println!("replaying {} rides", trace.len());
+
+    // Accuracy-budget run: keep the mean's error bound under 0.5%,
+    // letting the adaptive feedback pick the fraction.
+    let pipeline = PipelineBuilder::new()
+        .engine(EngineKind::Pipelined)
+        .sampler(SamplerKind::Oasrs)
+        .budget(QueryBudget::TargetRelativeError { target: 0.005, initial_fraction: 0.2 })
+        .query(Query::PerStratumMean)
+        .window(WindowConfig::paper_default())
+        .workers(2)
+        .build_with_handle(svc.handle());
+    let r = pipeline.run_items(&trace)?;
+
+    println!(
+        "throughput {:.0} items/s, mean loss {:.3}%, {} windows",
+        r.throughput(),
+        r.mean_accuracy_loss() * 100.0,
+        r.windows.len()
+    );
+
+    if let Some(w) = r.windows.last() {
+        let approx = w.result.per_stratum.as_ref().unwrap();
+        let exact = w.exact_per_stratum.as_ref().unwrap();
+        println!(
+            "\nlast window ({}-{} s): avg trip distance (miles)",
+            w.start_ms / 1000,
+            w.end_ms / 1000
+        );
+        println!("{:<15} {:>8} {:>8} {:>8}", "borough", "approx", "exact", "loss");
+        for (b, name) in BOROUGHS.iter().enumerate() {
+            if exact[b] > 0.0 {
+                println!(
+                    "{:<15} {:>8.2} {:>8.2} {:>7.2}%",
+                    name,
+                    approx[b],
+                    exact[b],
+                    (approx[b] - exact[b]).abs() / exact[b] * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
+}

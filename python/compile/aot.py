@@ -1,0 +1,99 @@
+"""AOT lowering: L2 window-aggregation graph -> HLO text artifacts.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 rust crate links) rejects with
+``proto.id() <= INT_MAX``.  The HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one HLO module per static item-capacity N):
+
+    artifacts/window_agg_n{N}.hlo.txt   for N in CAPACITIES
+    artifacts/manifest.json             shapes + output layout for rust
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import make_jitted
+
+# Item capacities of the AOT variants. The rust runtime picks the smallest
+# variant that fits a window sample and chunks anything larger than the max.
+CAPACITIES = (1024, 4096, 16384)
+NUM_STRATA = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n_items: int, num_strata: int) -> str:
+    fn, specs = make_jitted(n_items, num_strata)
+    return to_hlo_text(fn.lower(*specs))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="legacy single-file path (ignored)")
+    parser.add_argument(
+        "--capacities", type=int, nargs="*", default=list(CAPACITIES)
+    )
+    parser.add_argument("--num-strata", type=int, default=NUM_STRATA)
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    variants = []
+    for n in sorted(args.capacities):
+        text = lower_variant(n, args.num_strata)
+        path = os.path.join(args.out_dir, f"window_agg_n{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        variants.append(
+            {
+                "n_items": n,
+                "num_strata": args.num_strata,
+                "file": os.path.basename(path),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "num_strata": args.num_strata,
+        "pad_id": -1,
+        # Tupled outputs, in order, with row-major shapes:
+        "outputs": [
+            {"name": "partials", "shape": [args.num_strata, 3]},
+            {"name": "weights", "shape": [args.num_strata]},
+            {"name": "strata_sums", "shape": [args.num_strata]},
+            {
+                "name": "scalars",
+                "shape": [6],
+                "fields": ["sum", "mean", "var_sum", "var_mean", "total_c", "total_y"],
+            },
+        ],
+        "inputs": ["ids:i32[N]", "values:f32[N]", "c:f32[K]", "n_cap:f32[K]"],
+        "variants": variants,
+        "jax_version": jax.__version__,
+    }
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the L1 stratified aggregation kernel.
+
+Used by pytest/hypothesis to validate ``stratified_agg.stratified_aggregate``
+and by the L2 model tests.  Deliberately written with jnp segment ops — no
+Pallas, no blocking — so it is an independent implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stratified_aggregate_ref(
+    ids: jax.Array, values: jax.Array, *, num_strata: int
+) -> jax.Array:
+    """Reference per-stratum [count, sum, sum_sq]; ids of -1 are padding."""
+    values = values.astype(jnp.float32)
+    valid = ids >= 0
+    # Route padding to a scratch segment K and slice it off afterwards.
+    seg = jnp.where(valid, ids, num_strata)
+    count = jax.ops.segment_sum(
+        valid.astype(jnp.float32), seg, num_segments=num_strata + 1
+    )
+    total = jax.ops.segment_sum(
+        jnp.where(valid, values, 0.0), seg, num_segments=num_strata + 1
+    )
+    sumsq = jax.ops.segment_sum(
+        jnp.where(valid, values * values, 0.0), seg, num_segments=num_strata + 1
+    )
+    return jnp.stack([count, total, sumsq], axis=1)[:num_strata]

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: per-stratum (segmented) aggregation of a window sample.
+
+The analytics hot spot of StreamApprox is computing, for every stratum i in a
+window sample, the selected-item count Y_i, the sum of selected items, and the
+sum of squares (needed for the variance estimate, Eq. 7 of the paper).
+
+TPU adaptation (DESIGN.md SS5): a GPU implementation would scatter-add with
+atomics keyed by stratum id.  On TPU we recast the scatter-add as a one-hot
+matmul so it lands on the MXU: for a block of B items we materialize
+``onehot[B, K] = (ids[:, None] == iota(K)[None, :])`` in VMEM and compute
+
+    partial[K, 3] += onehot.T @ [ones, values, values**2]
+
+accumulating the f32[K, 3] partials across the item-axis grid.  The K axis is
+small (16 strata) and stays VMEM-resident for the whole kernel; only the item
+blocks stream through.  Padding items carry id = -1 and match no one-hot
+column, so they drop out without a separate mask pass.
+
+The kernel is lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; numerics are validated through the interpret path against
+``ref.py`` (pure jnp) by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block of items streamed through VMEM per grid step.  256 items x
+# K=16 one-hot = 16 KB f32 in VMEM — far below the ~16 MB budget; chosen so
+# the [B, 3] feature tile and the one-hot both fit comfortably while keeping
+# the grid short.
+DEFAULT_BLOCK_ITEMS = 256
+
+
+def _agg_kernel(ids_ref, values_ref, out_ref, *, num_strata: int):
+    """One grid step: aggregate a block of items into the [K, 3] accumulator.
+
+    out_ref accumulates across the grid (same block for every step), so we
+    initialise it on the first step and add partials afterwards.
+    """
+    step = pl.program_id(0)
+
+    ids = ids_ref[...]  # i32[B]
+    values = values_ref[...].astype(jnp.float32)  # f32[B]
+
+    # One-hot over strata: padding ids (-1) match nothing.
+    strata = jax.lax.iota(jnp.int32, num_strata)  # i32[K]
+    onehot = (ids[:, None] == strata[None, :]).astype(jnp.float32)  # [B, K]
+
+    # Feature matrix: count, sum, sum of squares — fused into one matmul so
+    # the MXU sees a single [K, B] x [B, 3] contraction per block.
+    feats = jnp.stack(
+        [jnp.ones_like(values), values, values * values], axis=1
+    )  # [B, 3]
+
+    partial = jnp.dot(
+        onehot.T, feats, preferred_element_type=jnp.float32
+    )  # [K, 3]
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(step != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+def stratified_aggregate(
+    ids: jax.Array,
+    values: jax.Array,
+    *,
+    num_strata: int,
+    block_items: int = DEFAULT_BLOCK_ITEMS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-stratum [count, sum, sum_sq] of ``values`` grouped by ``ids``.
+
+    Args:
+      ids: i32[N] stratum id per item; -1 marks padding (ignored).
+      values: f32[N] item values.
+      num_strata: K, the number of strata (output rows).
+      block_items: items per grid step (must divide N).
+      interpret: run the Pallas kernel in interpret mode (required on CPU).
+
+    Returns:
+      f32[K, 3]: column 0 = Y_i (selected count), column 1 = sum of selected
+      items, column 2 = sum of squares of selected items.
+    """
+    n = ids.shape[0]
+    if values.shape[0] != n:
+        raise ValueError(f"ids/values length mismatch: {n} vs {values.shape[0]}")
+    if n % block_items != 0:
+        raise ValueError(f"N={n} must be a multiple of block_items={block_items}")
+
+    grid = (n // block_items,)
+    kernel = functools.partial(_agg_kernel, num_strata=num_strata)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_items,), lambda i: (i,)),
+            pl.BlockSpec((block_items,), lambda i: (i,)),
+        ],
+        # The accumulator is the same [K, 3] block on every grid step.
+        out_specs=pl.BlockSpec((num_strata, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_strata, 3), jnp.float32),
+        interpret=interpret,
+    )(ids, values)

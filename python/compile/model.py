@@ -1,0 +1,116 @@
+"""L2: StreamApprox per-window approximate-query graph (build-time JAX).
+
+Implements the paper's estimation pipeline over one window sample produced by
+the L3 OASRS sampler (or by the SRS/STS baselines — the math is identical
+once per-stratum counters are supplied):
+
+  * per-stratum partials (Y_i, sum I_ij, sum I_ij^2) — via the L1 Pallas
+    kernel ``kernels.stratified_agg`` so the hot loop lowers into the same
+    HLO module,
+  * weights W_i = C_i / N_i if C_i > N_i else 1              (Eq. 1),
+  * per-stratum estimated sums SUM_i = (sum I_ij) * W_i      (Eq. 2),
+  * total SUM = sum_i SUM_i                                  (Eq. 3),
+  * MEAN = SUM / sum_i C_i                                   (Eq. 4),
+  * s_i^2 sample variance of each stratum's sample           (Eq. 7),
+  * Var(SUM)  = sum_i C_i (C_i - Y_i) s_i^2 / Y_i            (Eq. 6),
+  * Var(MEAN) = sum_i w_i^2 (s_i^2 / Y_i) (C_i - Y_i)/C_i    (Eq. 9),
+    with w_i = C_i / sum C_i.
+
+Shapes are static for AOT: N items (padded with id = -1), K strata.  The
+graph returns the raw per-stratum partials *as well as* the fused estimates,
+so the Rust runtime can either consume the estimates directly (single-chunk
+windows) or combine partials across chunks of a large window and finish the
+estimate Rust-side; tests cross-check both paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.stratified_agg import stratified_aggregate
+from compile.kernels.ref import stratified_aggregate_ref
+
+
+def _estimates_from_partials(partials, c, n_cap):
+    """Eq. 1-9 given per-stratum partials [K,3], arrivals c[K], capacities n_cap[K]."""
+    y = partials[:, 0]  # Y_i: items actually selected
+    s1 = partials[:, 1]  # sum of selected items
+    s2 = partials[:, 2]  # sum of squares of selected items
+
+    # Eq. 1 — weight per stratum. Strata with C_i <= N_i keep weight 1.
+    weights = jnp.where(c > n_cap, c / jnp.maximum(n_cap, 1.0), 1.0)
+
+    # Eq. 2/3 — estimated per-stratum and total sums.
+    strata_sums = s1 * weights
+    total_sum = jnp.sum(strata_sums)
+
+    # Eq. 4 — estimated mean over all arrived items.
+    total_c = jnp.sum(c)
+    mean = total_sum / jnp.maximum(total_c, 1.0)
+
+    # Eq. 7 — per-stratum sample variance s_i^2 (0 when Y_i < 2).
+    ybar = s1 / jnp.maximum(y, 1.0)
+    s_sq = jnp.where(y > 1.0, (s2 - y * ybar * ybar) / jnp.maximum(y - 1.0, 1.0), 0.0)
+    # Guard tiny negatives from floating-point cancellation.
+    s_sq = jnp.maximum(s_sq, 0.0)
+
+    # Eq. 6 — variance of the SUM estimate.
+    fpc = jnp.maximum(c - y, 0.0)  # 0 when the stratum was fully sampled
+    var_sum_terms = jnp.where(y > 0.0, c * fpc * s_sq / jnp.maximum(y, 1.0), 0.0)
+    var_sum = jnp.sum(var_sum_terms)
+
+    # Eq. 9 — variance of the MEAN estimate.
+    omega = c / jnp.maximum(total_c, 1.0)
+    var_mean_terms = jnp.where(
+        (y > 0.0) & (c > 0.0),
+        omega * omega * (s_sq / jnp.maximum(y, 1.0)) * fpc / jnp.maximum(c, 1.0),
+        0.0,
+    )
+    var_mean = jnp.sum(var_mean_terms)
+
+    total_y = jnp.sum(y)
+    scalars = jnp.stack([total_sum, mean, var_sum, var_mean, total_c, total_y])
+    return weights, strata_sums, scalars
+
+
+def window_aggregate(ids, values, c, n_cap, *, num_strata: int, interpret=True):
+    """Full per-window job: L1 kernel + Eq. 1-9 estimates.
+
+    Args:
+      ids: i32[N] stratum id per sampled item (-1 = padding).
+      values: f32[N] sampled item values.
+      c: f32[K] per-stratum arrival counters C_i for the window.
+      n_cap: f32[K] per-stratum reservoir capacities N_i.
+
+    Returns:
+      (partials f32[K,3], weights f32[K], strata_sums f32[K], scalars f32[6])
+      with scalars = [SUM, MEAN, Var(SUM), Var(MEAN), total_C, total_Y].
+    """
+    partials = stratified_aggregate(
+        ids, values, num_strata=num_strata, interpret=interpret
+    )
+    weights, strata_sums, scalars = _estimates_from_partials(partials, c, n_cap)
+    return partials, weights, strata_sums, scalars
+
+
+def window_aggregate_ref(ids, values, c, n_cap, *, num_strata: int):
+    """Same estimation graph over the pure-jnp reference kernel (test oracle)."""
+    partials = stratified_aggregate_ref(ids, values, num_strata=num_strata)
+    weights, strata_sums, scalars = _estimates_from_partials(partials, c, n_cap)
+    return partials, weights, strata_sums, scalars
+
+
+def make_jitted(n_items: int, num_strata: int):
+    """jit-able closure with static shapes, for AOT lowering and tests."""
+
+    def fn(ids, values, c, n_cap):
+        return window_aggregate(ids, values, c, n_cap, num_strata=num_strata)
+
+    specs = (
+        jax.ShapeDtypeStruct((n_items,), jnp.int32),
+        jax.ShapeDtypeStruct((n_items,), jnp.float32),
+        jax.ShapeDtypeStruct((num_strata,), jnp.float32),
+        jax.ShapeDtypeStruct((num_strata,), jnp.float32),
+    )
+    return jax.jit(fn), specs

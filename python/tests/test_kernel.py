@@ -1,0 +1,156 @@
+"""L1 Pallas kernel vs pure-jnp reference — the core correctness signal.
+
+Hypothesis sweeps shapes/strata/value ranges; fixed cases pin edge
+behaviours (padding, empty strata, block boundaries, negative values).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import stratified_aggregate_ref
+from compile.kernels.stratified_agg import stratified_aggregate
+
+
+def run_both(ids, values, num_strata, block_items=None):
+    ids = jnp.asarray(ids, dtype=jnp.int32)
+    values = jnp.asarray(values, dtype=jnp.float32)
+    kwargs = {}
+    if block_items is not None:
+        kwargs["block_items"] = block_items
+    got = stratified_aggregate(ids, values, num_strata=num_strata, **kwargs)
+    want = stratified_aggregate_ref(ids, values, num_strata=num_strata)
+    return np.asarray(got), np.asarray(want)
+
+
+class TestFixedCases:
+    def test_single_stratum(self):
+        got, want = run_both([0] * 256, np.arange(256.0), num_strata=4)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert got[0, 0] == 256.0
+        assert got[1:, 0].sum() == 0.0
+
+    def test_all_padding(self):
+        got, want = run_both([-1] * 256, np.ones(256), num_strata=8)
+        np.testing.assert_allclose(got, want)
+        assert got.sum() == 0.0
+
+    def test_mixed_padding(self):
+        ids = np.array([0, -1, 1, -1] * 64)
+        vals = np.array([2.0, 99.0, 3.0, 99.0] * 64)
+        got, want = run_both(ids, vals, num_strata=2)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        # padding values must not leak into any stratum
+        assert got[0, 1] == pytest.approx(2.0 * 64)
+        assert got[1, 1] == pytest.approx(3.0 * 64)
+
+    def test_round_robin_strata(self):
+        k = 16
+        n = 1024
+        ids = np.arange(n) % k
+        vals = np.ones(n)
+        got, want = run_both(ids, vals, num_strata=k)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        np.testing.assert_allclose(got[:, 0], n / k)
+
+    def test_negative_values(self):
+        ids = np.zeros(256, dtype=np.int32)
+        vals = np.linspace(-100, 100, 256)
+        got, want = run_both(ids, vals, num_strata=1)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+        # sum of symmetric range ~ 0, sumsq strictly positive
+        assert abs(got[0, 1]) < 1e-3
+        assert got[0, 2] > 0
+
+    def test_multi_block_accumulation(self):
+        """Grid > 1: accumulation across blocks must match reference."""
+        n = 2048  # 8 blocks of 256
+        rng = np.random.default_rng(0)
+        ids = rng.integers(0, 16, size=n)
+        vals = rng.normal(1000.0, 50.0, size=n)
+        got, want = run_both(ids, vals, num_strata=16)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_custom_block_size(self):
+        n = 512
+        rng = np.random.default_rng(1)
+        ids = rng.integers(-1, 4, size=n)
+        vals = rng.normal(size=n)
+        for b in (64, 128, 512):
+            got, want = run_both(ids, vals, num_strata=4, block_items=b)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_block_size_must_divide(self):
+        with pytest.raises(ValueError):
+            stratified_aggregate(
+                jnp.zeros(100, jnp.int32),
+                jnp.zeros(100, jnp.float32),
+                num_strata=4,
+                block_items=64,
+            )
+
+    def test_length_mismatch(self):
+        with pytest.raises(ValueError):
+            stratified_aggregate(
+                jnp.zeros(256, jnp.int32),
+                jnp.zeros(128, jnp.float32),
+                num_strata=4,
+            )
+
+    def test_out_of_range_ids_dropped(self):
+        """ids >= num_strata match no one-hot column, like padding."""
+        ids = np.array([0, 5, 1, 9] * 64)  # 5 and 9 out of range for K=2
+        vals = np.ones(256)
+        got, want = run_both(ids, vals, num_strata=2)
+        # ref routes invalid ids >= K into the scratch segment only if they
+        # equal K; segment_sum with larger ids would error, so clamp in the
+        # comparison: kernel must count exactly the in-range items.
+        assert got[0, 0] == 64.0
+        assert got[1, 0] == 64.0
+
+    def test_dtype_output(self):
+        got = stratified_aggregate(
+            jnp.zeros(256, jnp.int32), jnp.ones(256, jnp.float32), num_strata=4
+        )
+        assert got.dtype == jnp.float32
+        assert got.shape == (4, 3)
+
+
+@st.composite
+def sample_case(draw):
+    num_strata = draw(st.integers(min_value=1, max_value=16))
+    blocks = draw(st.integers(min_value=1, max_value=4))
+    block_items = draw(st.sampled_from([64, 128, 256]))
+    n = blocks * block_items
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    frac_pad = draw(st.floats(min_value=0.0, max_value=0.9))
+    scale = draw(st.sampled_from([1.0, 50.0, 1e4]))
+    return num_strata, n, block_items, seed, frac_pad, scale
+
+
+class TestHypothesis:
+    @settings(max_examples=25, deadline=None)
+    @given(sample_case())
+    def test_kernel_matches_ref(self, case):
+        num_strata, n, block_items, seed, frac_pad, scale = case
+        rng = np.random.default_rng(seed)
+        ids = rng.integers(0, num_strata, size=n)
+        pad = rng.random(n) < frac_pad
+        ids = np.where(pad, -1, ids)
+        vals = rng.normal(0.0, scale, size=n)
+        got, want = run_both(ids, vals, num_strata, block_items=block_items)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3 * scale)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_counts_are_exact_integers(self, seed):
+        rng = np.random.default_rng(seed)
+        n, k = 512, 8
+        ids = rng.integers(-1, k, size=n)
+        vals = rng.normal(size=n)
+        got, _ = run_both(ids, vals, k)
+        counts = got[:, 0]
+        np.testing.assert_array_equal(counts, np.round(counts))
+        assert counts.sum() == (ids >= 0).sum()

@@ -1,0 +1,211 @@
+//! Query budgets and the virtual cost function (paper §2.3 assumption 1,
+//! §7 discussion).
+//!
+//! The paper assumes "a virtual cost function which translates a given query
+//! budget (expected latency or throughput guarantees, or the required
+//! accuracy level) into the appropriate sample size".  This module
+//! implements that translation:
+//!
+//! * **fraction / sample-size budgets** — direct.
+//! * **accuracy budgets** — the [`FeedbackController`] closed loop (§4.2.1):
+//!   widen the sample when the observed bound exceeds the target, shrink
+//!   when comfortably under.
+//! * **latency / throughput budgets** — a token-style resource model in the
+//!   spirit of Pulsar [10]: the pipeline continuously estimates the
+//!   processing cost per sampled item (EWMA over observed window-processing
+//!   times) and sizes the next interval's sample so the window's predicted
+//!   cost fits the budgeted time.
+
+use crate::error::feedback::FeedbackController;
+
+/// User-facing budget for a streaming query.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryBudget {
+    /// Sample this fraction of the stream (the microbenchmarks' knob).
+    SamplingFraction(f64),
+    /// Absolute per-interval sample size.
+    SampleSizePerInterval(usize),
+    /// Keep the relative error bound of query results under `target`
+    /// (e.g. 0.01 = 1%), adapting the fraction from `initial_fraction`.
+    TargetRelativeError { target: f64, initial_fraction: f64 },
+    /// Spend at most `ms_per_window` milliseconds of compute per window.
+    LatencyPerWindowMs(f64),
+}
+
+impl QueryBudget {
+    /// Initial sampling fraction implied by the budget (before any
+    /// observations are available).
+    pub fn initial_fraction(&self) -> f64 {
+        match *self {
+            QueryBudget::SamplingFraction(f) => f.clamp(1e-4, 1.0),
+            QueryBudget::SampleSizePerInterval(_) => 1.0, // resolved per interval
+            QueryBudget::TargetRelativeError { initial_fraction, .. } => {
+                initial_fraction.clamp(1e-4, 1.0)
+            }
+            QueryBudget::LatencyPerWindowMs(_) => 1.0,
+        }
+    }
+}
+
+/// The virtual cost function: folds budget + runtime observations into the
+/// sampling fraction for the next interval.
+#[derive(Debug)]
+pub struct CostFunction {
+    budget: QueryBudget,
+    feedback: Option<FeedbackController>,
+    /// EWMA of per-sampled-item processing cost (ns).
+    cost_per_item_ns: f64,
+    /// EWMA of items arriving per interval.
+    arrivals_per_interval: f64,
+    fraction: f64,
+}
+
+const EWMA: f64 = 0.4;
+
+impl CostFunction {
+    pub fn new(budget: QueryBudget) -> Self {
+        let feedback = match &budget {
+            QueryBudget::TargetRelativeError { target, initial_fraction } => {
+                Some(FeedbackController::new(*target, *initial_fraction))
+            }
+            _ => None,
+        };
+        let fraction = budget.initial_fraction();
+        Self {
+            budget,
+            feedback,
+            cost_per_item_ns: 0.0,
+            arrivals_per_interval: 0.0,
+            fraction,
+        }
+    }
+
+    pub fn budget(&self) -> &QueryBudget {
+        &self.budget
+    }
+
+    /// Current sampling fraction.
+    pub fn fraction(&self) -> f64 {
+        self.fraction
+    }
+
+    /// Feed one window's observations: arrivals in the interval, sampled
+    /// items, processing time, and the achieved relative error bound.
+    /// Returns the fraction for the next interval.
+    pub fn observe(
+        &mut self,
+        arrived: f64,
+        sampled: usize,
+        processing_ns: u64,
+        rel_error: f64,
+    ) -> f64 {
+        // Update cost model.
+        if sampled > 0 {
+            let per_item = processing_ns as f64 / sampled as f64;
+            self.cost_per_item_ns = if self.cost_per_item_ns == 0.0 {
+                per_item
+            } else {
+                EWMA * per_item + (1.0 - EWMA) * self.cost_per_item_ns
+            };
+        }
+        if arrived > 0.0 {
+            self.arrivals_per_interval = if self.arrivals_per_interval == 0.0 {
+                arrived
+            } else {
+                EWMA * arrived + (1.0 - EWMA) * self.arrivals_per_interval
+            };
+        }
+
+        self.fraction = match &self.budget {
+            QueryBudget::SamplingFraction(f) => f.clamp(1e-4, 1.0),
+            QueryBudget::SampleSizePerInterval(n) => {
+                if self.arrivals_per_interval > 0.0 {
+                    (*n as f64 / self.arrivals_per_interval).clamp(1e-4, 1.0)
+                } else {
+                    1.0
+                }
+            }
+            QueryBudget::TargetRelativeError { .. } => {
+                self.feedback.as_mut().expect("feedback exists").observe(rel_error)
+            }
+            QueryBudget::LatencyPerWindowMs(ms) => {
+                // Pulsar-style token model: budget_ns / cost_per_item =
+                // affordable sample size; fraction = affordable / arrivals.
+                if self.cost_per_item_ns > 0.0 && self.arrivals_per_interval > 0.0 {
+                    let affordable = ms * 1e6 / self.cost_per_item_ns;
+                    (affordable / self.arrivals_per_interval).clamp(1e-4, 1.0)
+                } else {
+                    1.0
+                }
+            }
+        };
+        self.fraction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_fraction_is_stable() {
+        let mut cf = CostFunction::new(QueryBudget::SamplingFraction(0.6));
+        assert_eq!(cf.fraction(), 0.6);
+        cf.observe(10_000.0, 6_000, 1_000_000, 0.05);
+        assert_eq!(cf.fraction(), 0.6);
+    }
+
+    #[test]
+    fn sample_size_budget_tracks_arrivals() {
+        let mut cf = CostFunction::new(QueryBudget::SampleSizePerInterval(1_000));
+        cf.observe(10_000.0, 10_000, 1_000_000, 0.0);
+        assert!((cf.fraction() - 0.1).abs() < 1e-9);
+        // arrivals double -> fraction roughly halves (EWMA-smoothed)
+        cf.observe(20_000.0, 2_000, 1_000_000, 0.0);
+        assert!(cf.fraction() < 0.1);
+    }
+
+    #[test]
+    fn accuracy_budget_uses_feedback() {
+        let mut cf = CostFunction::new(QueryBudget::TargetRelativeError {
+            target: 0.01,
+            initial_fraction: 0.2,
+        });
+        let f0 = cf.fraction();
+        let f1 = cf.observe(1_000.0, 200, 1_000, 0.05); // error too big
+        assert!(f1 > f0);
+        let f2 = cf.observe(1_000.0, 500, 1_000, 0.001); // error tiny
+        assert!(f2 < f1);
+    }
+
+    #[test]
+    fn latency_budget_sizes_sample_to_cost() {
+        let mut cf = CostFunction::new(QueryBudget::LatencyPerWindowMs(10.0));
+        // 1000 ns per item, 100k arrivals: affordable = 10ms/1us = 10k -> 0.1
+        cf.observe(100_000.0, 50_000, 50_000_000, 0.0);
+        let f = cf.fraction();
+        assert!((f - 0.1).abs() < 0.05, "fraction {f}");
+    }
+
+    #[test]
+    fn latency_budget_adapts_to_costlier_items() {
+        let mut cf = CostFunction::new(QueryBudget::LatencyPerWindowMs(10.0));
+        cf.observe(100_000.0, 50_000, 50_000_000, 0.0); // 1 us/item
+        let f_cheap = cf.fraction();
+        for _ in 0..6 {
+            cf.observe(100_000.0, 10_000, 100_000_000, 0.0); // 10 us/item
+        }
+        assert!(cf.fraction() < f_cheap);
+    }
+
+    #[test]
+    fn initial_fractions() {
+        assert_eq!(QueryBudget::SamplingFraction(0.4).initial_fraction(), 0.4);
+        assert_eq!(QueryBudget::SampleSizePerInterval(5).initial_fraction(), 1.0);
+        assert_eq!(
+            QueryBudget::TargetRelativeError { target: 0.01, initial_fraction: 0.3 }
+                .initial_fraction(),
+            0.3
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! Core data types shared by every layer of the coordinator.
+//!
+//! A *data item* is one element of the input stream; a *stratum* identifies
+//! the sub-stream it arrived from (paper §2.3: the stream is stratified by
+//! source).  Timestamps are simulated event-time milliseconds — the whole
+//! system runs on a virtual clock so experiments are deterministic and not
+//! bound to wall-clock pacing.
+
+/// Identifier of a stratum (sub-stream). The AOT artifacts are compiled for
+/// `MAX_STRATA` strata; higher ids are rejected at ingest.
+pub type StratumId = u16;
+
+/// Number of strata the AOT compute artifacts support. Mirrors
+/// `python/compile/aot.py::NUM_STRATA`.
+pub const MAX_STRATA: usize = 16;
+
+/// Virtual event time in milliseconds since the start of the experiment.
+pub type EventTime = u64;
+
+/// One element of the input data stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Item {
+    /// Sub-stream (stratum) this item belongs to.
+    pub stratum: StratumId,
+    /// The item's numeric payload (what linear queries aggregate).
+    pub value: f64,
+    /// Virtual event time at which the item entered the system.
+    pub ts: EventTime,
+}
+
+impl Item {
+    /// Convenience constructor.
+    pub fn new(stratum: StratumId, value: f64, ts: EventTime) -> Self {
+        Self { stratum, value, ts }
+    }
+}
+
+/// Library-wide error type.
+#[derive(Debug)]
+pub enum Error {
+    Xla(String),
+    Artifact(String),
+    Config(String),
+    Stream(String),
+    Query(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Artifact(e.to_string())
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Xla(s) => write!(f, "xla runtime error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Stream(s) => write!(f, "stream error: {s}"),
+            Error::Query(s) => write!(f, "query error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_constructor() {
+        let it = Item::new(3, 42.5, 1000);
+        assert_eq!(it.stratum, 3);
+        assert_eq!(it.value, 42.5);
+        assert_eq!(it.ts, 1000);
+    }
+
+    #[test]
+    fn error_display() {
+        let e = Error::Config("bad".into());
+        assert!(e.to_string().contains("bad"));
+    }
+}

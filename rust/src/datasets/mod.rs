@@ -1,0 +1,13 @@
+//! Case-study datasets (paper §6).
+//!
+//! The originals (670 GB CAIDA traces; the DEBS'15 NYC taxi dataset) are not
+//! redistributable, so these are synthetic generators that preserve the
+//! properties the experiments exercise: the stratification (protocol /
+//! borough), the strata skew, and the heavy-tailed value distributions.
+//! DESIGN.md §2 documents the substitutions.
+
+pub mod caida;
+pub mod taxi;
+
+pub use caida::CaidaConfig;
+pub use taxi::TaxiConfig;

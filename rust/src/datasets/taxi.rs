@@ -1,0 +1,119 @@
+//! Synthetic NYC-taxi-like ride trace (paper §6.3; DEBS'15 grand challenge).
+//!
+//! The paper maps each ride's start coordinates to one of New York's
+//! boroughs and measures the average trip distance per borough per sliding
+//! window.  This generator reproduces:
+//!
+//! * six borough strata with the strong Manhattan skew of the real data;
+//! * log-normal trip distances whose medians differ per borough (short
+//!   intra-Manhattan hops vs long Staten Island / airport trips);
+//! * item value = trip distance in miles, stratum = borough.
+
+use crate::core::{Item, StratumId};
+use crate::util::rng::Rng;
+
+/// Borough strata.
+pub const MANHATTAN: StratumId = 0;
+pub const BROOKLYN: StratumId = 1;
+pub const QUEENS: StratumId = 2;
+pub const BRONX: StratumId = 3;
+pub const STATEN_ISLAND: StratumId = 4;
+pub const OTHER: StratumId = 5;
+
+pub const BOROUGHS: [&str; 6] =
+    ["manhattan", "brooklyn", "queens", "bronx", "staten-island", "other"];
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct TaxiConfig {
+    /// Rides per second of virtual time.
+    pub rides_per_sec: f64,
+    /// Borough mix — the 2013 dataset is overwhelmingly Manhattan-origin.
+    pub mix: [f64; 6],
+    pub seed: u64,
+}
+
+impl Default for TaxiConfig {
+    fn default() -> Self {
+        Self {
+            rides_per_sec: 15_000.0,
+            mix: [0.88, 0.06, 0.04, 0.012, 0.003, 0.005],
+            seed: 2013,
+        }
+    }
+}
+
+/// (log-mu, log-sigma) of trip distance per borough.
+const DIST_PARAMS: [(f64, f64); 6] = [
+    (0.6, 0.6),  // manhattan: median ~1.8 mi
+    (1.1, 0.6),  // brooklyn: ~3 mi
+    (1.6, 0.7),  // queens: ~5 mi (airports)
+    (1.3, 0.6),  // bronx: ~3.7 mi
+    (2.0, 0.5),  // staten island: ~7.4 mi
+    (1.5, 0.9),  // other: diffuse
+];
+
+impl TaxiConfig {
+    /// Generate `duration_ms` of trace, sorted by event time.
+    pub fn generate(&self, duration_ms: u64) -> Vec<Item> {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let n = (self.rides_per_sec * duration_ms as f64 / 1000.0) as usize;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ts = rng.range_u64(0, duration_ms.max(1));
+            let b = rng.categorical(&self.mix);
+            let (mu, sigma) = DIST_PARAMS[b];
+            let miles = rng.log_normal(mu, sigma).min(100.0);
+            items.push(Item::new(b as StratumId, miles, ts));
+        }
+        items.sort_by_key(|i| i.ts);
+        items
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manhattan_dominates() {
+        let items = TaxiConfig::default().generate(5_000);
+        let n = items.len() as f64;
+        let manhattan =
+            items.iter().filter(|i| i.stratum == MANHATTAN).count() as f64 / n;
+        assert!((manhattan - 0.88).abs() < 0.02, "manhattan share {manhattan}");
+        // all six boroughs appear
+        for b in 0..6u16 {
+            assert!(items.iter().any(|i| i.stratum == b), "borough {b} missing");
+        }
+    }
+
+    #[test]
+    fn distances_ordered_by_borough() {
+        let items = TaxiConfig::default().generate(20_000);
+        let mean = |b: StratumId| {
+            let v: Vec<f64> =
+                items.iter().filter(|i| i.stratum == b).map(|i| i.value).collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(mean(MANHATTAN) < mean(BROOKLYN));
+        assert!(mean(BROOKLYN) < mean(QUEENS));
+        assert!(mean(QUEENS) < mean(STATEN_ISLAND));
+    }
+
+    #[test]
+    fn distances_positive_and_bounded() {
+        let items = TaxiConfig::default().generate(2_000);
+        for it in &items {
+            assert!(it.value > 0.0 && it.value <= 100.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let a = TaxiConfig::default().generate(1_000);
+        let b = TaxiConfig::default().generate(1_000);
+        assert!(a.iter().zip(&b).all(|(x, y)| x == y));
+        assert!(a.windows(2).all(|w| w[0].ts <= w[1].ts));
+    }
+}

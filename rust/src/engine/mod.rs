@@ -1,0 +1,223 @@
+//! Stream-processing engines (paper §2.2): the batched model (Spark
+//! Streaming) and the pipelined model (Apache Flink), both running the same
+//! samplers, window logic, and XLA-backed query execution.
+//!
+//! * [`worker`] — parallel per-worker samplers with the per-algorithm
+//!   finish protocols (OASRS merge without barriers; STS two-phase
+//!   count/sample with a real synchronization barrier).
+//! * [`batched`] — micro-batches at a fixed batch interval; batch-fashion
+//!   samplers (SRS/STS) buffer whole batches ("RDDs") before sampling,
+//!   OASRS samples at ingest *before* the batch forms (§4.2.1).
+//! * [`pipelined`] — item-at-a-time operators connected by bounded
+//!   channels; the window query runs concurrently with ingest.
+
+pub mod batched;
+pub mod pipelined;
+pub mod worker;
+
+use crate::core::EventTime;
+use crate::query::QueryResult;
+
+pub use worker::IngestPool;
+
+/// Which processing model to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Micro-batched (Spark-Streaming-like).
+    Batched,
+    /// Pipelined (Flink-like).
+    Pipelined,
+}
+
+impl EngineKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::Batched => "batched(spark)",
+            EngineKind::Pipelined => "pipelined(flink)",
+        }
+    }
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub kind: EngineKind,
+    /// Batch interval (virtual ms) — batched engine only.
+    pub batch_interval_ms: EventTime,
+    /// Parallel sampling workers (scale-up knob; Fig. 7a).
+    pub workers: usize,
+    /// Simulated nodes: workers are grouped and each group's results are
+    /// merged per node before the global merge (scale-out knob; Fig. 7a).
+    pub nodes: usize,
+    /// Track exact aggregates for accuracy-loss measurement (adds uniform
+    /// per-item work; disable for pure throughput runs).
+    pub track_exact: bool,
+    /// Bounded queue capacity between pipelined operators.
+    pub channel_capacity: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            kind: EngineKind::Pipelined,
+            batch_interval_ms: 500,
+            workers: 1,
+            nodes: 1,
+            track_exact: true,
+            channel_capacity: 16 * 1024,
+            seed: 42,
+        }
+    }
+}
+
+/// One emitted window result.
+#[derive(Debug, Clone)]
+pub struct WindowReport {
+    pub start_ms: EventTime,
+    pub end_ms: EventTime,
+    /// Approximate query output ± bound.
+    pub result: QueryResult,
+    /// Exact scalar (when tracking is on).
+    pub exact_scalar: Option<f64>,
+    /// Exact per-stratum values (when tracking is on and the query is
+    /// per-stratum).
+    pub exact_per_stratum: Option<Vec<f64>>,
+    /// Items that arrived in the window span.
+    pub arrived: f64,
+    /// Items in the window's sample.
+    pub sampled: usize,
+    /// Wall time spent closing the interval + running the query (ns).
+    pub processing_ns: u64,
+}
+
+impl WindowReport {
+    /// |approx − exact| / exact for the scalar output.
+    pub fn accuracy_loss(&self) -> Option<f64> {
+        self.exact_scalar
+            .map(|ex| crate::query::accuracy_loss(self.result.value(), ex))
+    }
+}
+
+/// Outcome of one engine run over a finite trace.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub windows: Vec<WindowReport>,
+    pub items_processed: u64,
+    pub wall_ns: u64,
+}
+
+impl RunReport {
+    /// End-to-end processing throughput (items/s).
+    pub fn throughput(&self) -> f64 {
+        self.items_processed as f64 / (self.wall_ns as f64 / 1e9).max(1e-9)
+    }
+
+    /// Mean accuracy loss over steady-state windows.  Windows that span
+    /// event time 0 are warm-up: the samplers' adaptive capacities have no
+    /// arrival history there (OASRS sizes reservoirs from the previous
+    /// intervals' EWMA), so they are excluded — the paper likewise reports
+    /// steady-state accuracy.  Falls back to all windows if nothing else
+    /// is available.
+    pub fn mean_accuracy_loss(&self) -> f64 {
+        let steady: Vec<f64> = self
+            .windows
+            .iter()
+            .filter(|w| w.start_ms > 0)
+            .filter_map(|w| w.accuracy_loss())
+            .filter(|l| l.is_finite())
+            .collect();
+        let losses = if steady.is_empty() {
+            self.windows
+                .iter()
+                .filter_map(|w| w.accuracy_loss())
+                .filter(|l| l.is_finite())
+                .collect()
+        } else {
+            steady
+        };
+        if losses.is_empty() {
+            f64::NAN
+        } else {
+            losses.iter().sum::<f64>() / losses.len() as f64
+        }
+    }
+
+    /// Mean per-window processing latency (ns).
+    pub fn mean_window_latency_ns(&self) -> f64 {
+        if self.windows.is_empty() {
+            return f64::NAN;
+        }
+        self.windows.iter().map(|w| w.processing_ns as f64).sum::<f64>()
+            / self.windows.len() as f64
+    }
+
+    /// p-th percentile window latency (ns), p in [0, 100].
+    pub fn latency_percentile_ns(&self, p: f64) -> f64 {
+        if self.windows.is_empty() {
+            return f64::NAN;
+        }
+        let mut l: Vec<u64> = self.windows.iter().map(|w| w.processing_ns).collect();
+        l.sort_unstable();
+        let idx = ((p / 100.0) * (l.len() - 1) as f64).round() as usize;
+        l[idx.min(l.len() - 1)] as f64
+    }
+
+    /// Total sampled items across windows.
+    pub fn total_sampled(&self) -> usize {
+        self.windows.iter().map(|w| w.sampled).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
+    use crate::runtime::{RustExecutor, WindowInput};
+
+    fn dummy_report(value: f64, exact: f64, ns: u64) -> WindowReport {
+        let out = RustExecutor.aggregate(&WindowInput::default());
+        WindowReport {
+            start_ms: 0,
+            end_ms: 1000,
+            result: QueryResult {
+                scalar: Some(ConfidenceInterval { value, bound: 0.0, level: ConfidenceLevel::P95 }),
+                per_stratum: None,
+                output: out,
+            },
+            exact_scalar: Some(exact),
+            exact_per_stratum: None,
+            arrived: 100.0,
+            sampled: 50,
+            processing_ns: ns,
+        }
+    }
+
+    #[test]
+    fn run_report_metrics() {
+        let r = RunReport {
+            windows: vec![dummy_report(101.0, 100.0, 1000), dummy_report(99.0, 100.0, 3000)],
+            items_processed: 1_000_000,
+            wall_ns: 500_000_000, // 0.5 s
+        };
+        assert!((r.throughput() - 2_000_000.0).abs() < 1.0);
+        assert!((r.mean_accuracy_loss() - 0.01).abs() < 1e-12);
+        assert_eq!(r.mean_window_latency_ns(), 2000.0);
+        assert_eq!(r.latency_percentile_ns(0.0), 1000.0);
+        assert_eq!(r.latency_percentile_ns(100.0), 3000.0);
+        assert_eq!(r.total_sampled(), 100);
+    }
+
+    #[test]
+    fn empty_report_nan_metrics() {
+        let r = RunReport::default();
+        assert!(r.mean_accuracy_loss().is_nan());
+        assert!(r.mean_window_latency_ns().is_nan());
+    }
+
+    #[test]
+    fn engine_labels() {
+        assert!(EngineKind::Batched.label().contains("spark"));
+        assert!(EngineKind::Pipelined.label().contains("flink"));
+    }
+}

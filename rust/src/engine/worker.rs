@@ -1,0 +1,477 @@
+//! Parallel sampling workers shared by both engines.
+//!
+//! Each worker thread owns an independent sampler instance and receives a
+//! round-robin partition of the input (the even split the paper's
+//! distributed-execution section assumes).  The per-interval protocol
+//! depends on the algorithm:
+//!
+//! * **OASRS / SRS / native** — one `Finish` round: every worker emits its
+//!   local `SampleResult`; results merge associatively with **no barrier
+//!   between workers** (they never wait on each other's data).
+//! * **STS (`sampleByKeyExact`)** — two rounds with a true synchronization
+//!   barrier: a count pass (workers report exact per-stratum counts), a
+//!   coordinator-side merge + proportional target allocation (the "join" the
+//!   paper blames), then a sampling pass against the allocated targets.
+//!
+//! With `workers == 1` the pool runs inline (no threads, no channels) — the
+//! single-core configuration and the pipelined engine's sampling operator
+//! use this fast path.
+
+use crate::core::{Item, MAX_STRATA};
+use crate::error::estimator::StrataState;
+use crate::sampling::oasrs::merge_worker_results;
+use crate::sampling::{
+    NoopSampler, OasrsSampler, SampleResult, Sampler, SamplerKind, SrsSampler,
+};
+use crate::util::channel::{bounded, Receiver, Sender};
+use crate::util::rng::Rng;
+
+/// Per-worker sampler instance (concrete dispatch; the STS two-phase
+/// protocol needs more than the `Sampler` trait exposes).
+pub enum WorkerSampler {
+    Oasrs(OasrsSampler),
+    Srs(SrsSampler),
+    Sts(StsBatch),
+    Noop(NoopSampler),
+}
+
+impl WorkerSampler {
+    fn new(kind: SamplerKind, fraction: f64, seed: u64) -> Self {
+        match kind {
+            SamplerKind::Oasrs => WorkerSampler::Oasrs(OasrsSampler::new(fraction, seed)),
+            SamplerKind::Srs => WorkerSampler::Srs(SrsSampler::new(fraction, seed)),
+            SamplerKind::Sts => WorkerSampler::Sts(StsBatch::new(seed)),
+            SamplerKind::None => WorkerSampler::Noop(NoopSampler::new()),
+        }
+    }
+
+    #[inline]
+    fn offer(&mut self, item: &Item) {
+        match self {
+            WorkerSampler::Oasrs(s) => s.offer(item),
+            WorkerSampler::Srs(s) => s.offer(item),
+            WorkerSampler::Sts(s) => s.offer(item),
+            WorkerSampler::Noop(s) => s.offer(item),
+        }
+    }
+
+    fn finish_simple(&mut self) -> SampleResult {
+        match self {
+            WorkerSampler::Oasrs(s) => s.finish_interval(),
+            WorkerSampler::Srs(s) => s.finish_interval(),
+            WorkerSampler::Noop(s) => s.finish_interval(),
+            WorkerSampler::Sts(_) => panic!("STS requires the two-phase protocol"),
+        }
+    }
+
+    fn set_fraction(&mut self, f: f64) {
+        match self {
+            WorkerSampler::Oasrs(s) => s.set_fraction(f),
+            WorkerSampler::Srs(s) => s.set_fraction(f),
+            WorkerSampler::Noop(s) => s.set_fraction(f),
+            WorkerSampler::Sts(_) => {} // fraction applied via targets
+        }
+    }
+}
+
+/// STS worker state: buffers its partition of the batch; the coordinator
+/// drives the two-phase count/sample protocol.
+pub struct StsBatch {
+    groups: Vec<Vec<f64>>,
+    counts: [usize; MAX_STRATA],
+    rng: Rng,
+}
+
+impl StsBatch {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            groups: (0..MAX_STRATA).map(|_| Vec::new()).collect(),
+            counts: [0; MAX_STRATA],
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    #[inline]
+    pub fn offer(&mut self, item: &Item) {
+        let s = item.stratum as usize;
+        if s < MAX_STRATA {
+            // groupBy(strata) happens at ingest into per-key buffers — the
+            // shuffle-write half of Spark's groupBy.
+            self.groups[s].push(item.value);
+            self.counts[s] += 1;
+        }
+    }
+
+    /// Phase 1: exact local per-stratum counts (`sampleByKeyExact`'s count
+    /// job).
+    pub fn local_counts(&self) -> [usize; MAX_STRATA] {
+        self.counts
+    }
+
+    /// Phase 2: sample exactly `targets[s]` items per stratum from the local
+    /// groups by full random sort, then reset for the next interval.
+    pub fn finish_with_targets(&mut self, targets: &[usize; MAX_STRATA]) -> SampleResult {
+        let mut sample = Vec::new();
+        let mut state = StrataState::default();
+        for s in 0..MAX_STRATA {
+            let c_i = self.counts[s];
+            state.c[s] = c_i as f64;
+            if c_i == 0 {
+                continue;
+            }
+            let k_i = targets[s].min(c_i);
+            // Full key sort — the exact variant's cost signature.
+            let mut keyed: Vec<(f64, usize)> = (0..c_i).map(|i| (self.rng.f64(), i)).collect();
+            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for &(_, idx) in keyed.iter().take(k_i) {
+                sample.push((s as u16, self.groups[s][idx]));
+            }
+            state.n_cap[s] = k_i as f64;
+        }
+        for g in &mut self.groups {
+            g.clear();
+        }
+        self.counts = [0; MAX_STRATA];
+        SampleResult { sample, state }
+    }
+}
+
+/// Items are shipped to workers in chunks (shuffle buffers), not one by
+/// one — a per-item channel rendezvous costs ~0.5 µs and would dominate
+/// every sampler; real engines batch their network transfers the same way.
+const CHUNK: usize = 512;
+
+enum Msg {
+    Chunk(Vec<Item>),
+    /// Simple one-round finish (OASRS/SRS/native).
+    Finish(Sender<SampleResult>),
+    /// STS phase 1.
+    Counts(Sender<[usize; MAX_STRATA]>),
+    /// STS phase 2.
+    FinishSts([usize; MAX_STRATA], Sender<SampleResult>),
+    SetFraction(f64),
+}
+
+enum PoolImpl {
+    /// Single worker, no threads.
+    Inline(Box<WorkerSampler>),
+    Threaded {
+        txs: Vec<Sender<Msg>>,
+        joins: Vec<std::thread::JoinHandle<()>>,
+        /// Pending chunk being filled (flushed to workers round-robin).
+        buf: Vec<Item>,
+    },
+}
+
+/// Parallel ingest + sampling pool.
+pub struct IngestPool {
+    kind: SamplerKind,
+    fraction: f64,
+    imp: PoolImpl,
+    next: usize,
+    n_workers: usize,
+}
+
+impl IngestPool {
+    pub fn new(kind: SamplerKind, n_workers: usize, fraction: f64, seed: u64) -> Self {
+        let n = n_workers.max(1);
+        let imp = if n == 1 {
+            PoolImpl::Inline(Box::new(WorkerSampler::new(kind, fraction, seed)))
+        } else {
+            let mut txs = Vec::new();
+            let mut joins = Vec::new();
+            for w in 0..n {
+                let (tx, rx): (Sender<Msg>, Receiver<Msg>) = bounded(8192);
+                let mut sampler = WorkerSampler::new(kind, fraction, seed.wrapping_add(w as u64 * 7919));
+                joins.push(
+                    std::thread::Builder::new()
+                        .name(format!("sa-worker-{w}"))
+                        .spawn(move || {
+                            while let Some(msg) = rx.recv() {
+                                match msg {
+                                    Msg::Chunk(items) => {
+                                        for it in &items {
+                                            sampler.offer(it);
+                                        }
+                                    }
+                                    Msg::Finish(reply) => {
+                                        let _ = reply.send(sampler.finish_simple());
+                                    }
+                                    Msg::Counts(reply) => {
+                                        if let WorkerSampler::Sts(s) = &sampler {
+                                            let _ = reply.send(s.local_counts());
+                                        }
+                                    }
+                                    Msg::FinishSts(targets, reply) => {
+                                        if let WorkerSampler::Sts(s) = &mut sampler {
+                                            let _ = reply.send(s.finish_with_targets(&targets));
+                                        }
+                                    }
+                                    Msg::SetFraction(f) => sampler.set_fraction(f),
+                                }
+                            }
+                        })
+                        .expect("spawn worker"),
+                );
+                txs.push(tx);
+            }
+            PoolImpl::Threaded { txs, joins, buf: Vec::with_capacity(CHUNK) }
+        };
+        Self { kind, fraction, imp, next: 0, n_workers: n }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn kind(&self) -> SamplerKind {
+        self.kind
+    }
+
+    /// Offer one item (chunk-round-robin partitioning across workers).
+    #[inline]
+    pub fn offer(&mut self, item: Item) {
+        match &mut self.imp {
+            PoolImpl::Inline(s) => s.offer(&item),
+            PoolImpl::Threaded { txs, buf, .. } => {
+                buf.push(item);
+                if buf.len() >= CHUNK {
+                    let chunk = std::mem::replace(buf, Vec::with_capacity(CHUNK));
+                    let w = self.next;
+                    self.next = (self.next + 1) % txs.len();
+                    let _ = txs[w].send(Msg::Chunk(chunk));
+                }
+            }
+        }
+    }
+
+    /// Flush the pending partial chunk (interval close).
+    fn flush(&mut self) {
+        if let PoolImpl::Threaded { txs, buf, .. } = &mut self.imp {
+            if !buf.is_empty() {
+                let chunk = std::mem::replace(buf, Vec::with_capacity(CHUNK));
+                let w = self.next;
+                self.next = (self.next + 1) % txs.len();
+                let _ = txs[w].send(Msg::Chunk(chunk));
+            }
+        }
+    }
+
+    /// Close the interval on every worker and merge their results.
+    pub fn finish_interval(&mut self) -> SampleResult {
+        self.flush();
+        match &mut self.imp {
+            PoolImpl::Inline(s) => match s.as_mut() {
+                WorkerSampler::Sts(sts) => {
+                    // Single worker: counts -> proportional targets -> sample.
+                    let counts = sts.local_counts();
+                    let targets = proportional_targets(&counts, self.fraction);
+                    sts.finish_with_targets(&targets)
+                }
+                other => other.finish_simple(),
+            },
+            PoolImpl::Threaded { txs, .. } => {
+                if self.kind == SamplerKind::Sts {
+                    // Phase 1: count pass (synchronization barrier — the
+                    // coordinator must gather every worker's counts before
+                    // any worker may sample).
+                    let mut replies = Vec::new();
+                    for tx in txs.iter() {
+                        let (rtx, rrx) = bounded(1);
+                        let _ = tx.send(Msg::Counts(rtx));
+                        replies.push(rrx);
+                    }
+                    let per_worker: Vec<[usize; MAX_STRATA]> = replies
+                        .into_iter()
+                        .map(|r| r.recv().unwrap_or([0; MAX_STRATA]))
+                        .collect();
+                    let mut global = [0usize; MAX_STRATA];
+                    for c in &per_worker {
+                        for s in 0..MAX_STRATA {
+                            global[s] += c[s];
+                        }
+                    }
+                    let global_targets = proportional_targets(&global, self.fraction);
+                    // Phase 2: allocate targets proportionally to each
+                    // worker's local share, then sample.
+                    let mut replies = Vec::new();
+                    for (w, tx) in txs.iter().enumerate() {
+                        let mut t = [0usize; MAX_STRATA];
+                        for s in 0..MAX_STRATA {
+                            if global[s] > 0 {
+                                t[s] = (global_targets[s] * per_worker[w][s] + global[s] / 2)
+                                    / global[s];
+                            }
+                        }
+                        let (rtx, rrx) = bounded(1);
+                        let _ = tx.send(Msg::FinishSts(t, rtx));
+                        replies.push(rrx);
+                    }
+                    merge_worker_results(
+                        replies.into_iter().filter_map(|r| r.recv()).collect(),
+                    )
+                } else {
+                    let mut replies = Vec::new();
+                    for tx in txs.iter() {
+                        let (rtx, rrx) = bounded(1);
+                        let _ = tx.send(Msg::Finish(rtx));
+                        replies.push(rrx);
+                    }
+                    merge_worker_results(
+                        replies.into_iter().filter_map(|r| r.recv()).collect(),
+                    )
+                }
+            }
+        }
+    }
+
+    /// Update the sampling fraction for subsequent intervals.
+    pub fn set_fraction(&mut self, fraction: f64) {
+        self.fraction = fraction;
+        match &mut self.imp {
+            PoolImpl::Inline(s) => s.set_fraction(fraction),
+            PoolImpl::Threaded { txs, .. } => {
+                for tx in txs {
+                    let _ = tx.send(Msg::SetFraction(fraction));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for IngestPool {
+    fn drop(&mut self) {
+        if let PoolImpl::Threaded { txs, joins, .. } = &mut self.imp {
+            for tx in txs.iter() {
+                tx.close();
+            }
+            for j in joins.drain(..) {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Proportional STS allocation: `k_i = round(fraction * C_i)`, at least one
+/// item from every non-empty stratum.
+fn proportional_targets(counts: &[usize; MAX_STRATA], fraction: f64) -> [usize; MAX_STRATA] {
+    let mut t = [0usize; MAX_STRATA];
+    for s in 0..MAX_STRATA {
+        if counts[s] > 0 {
+            t[s] = ((fraction * counts[s] as f64).round() as usize).clamp(1, counts[s]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::estimator::{estimate, StrataPartials};
+
+    fn feed(pool: &mut IngestPool, n: usize, strata: usize) {
+        for i in 0..n {
+            pool.offer(Item::new((i % strata) as u16, i as f64, i as u64));
+        }
+    }
+
+    #[test]
+    fn inline_oasrs_counts_everything() {
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 1, 0.5, 1);
+        feed(&mut p, 1000, 4);
+        let r = p.finish_interval();
+        assert_eq!(r.arrived(), 1000.0);
+    }
+
+    #[test]
+    fn threaded_oasrs_counts_everything() {
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 4, 0.5, 2);
+        feed(&mut p, 10_000, 4);
+        let r = p.finish_interval();
+        assert_eq!(r.arrived(), 10_000.0);
+        // second interval isolated
+        let r2 = p.finish_interval();
+        assert_eq!(r2.arrived(), 0.0);
+    }
+
+    #[test]
+    fn threaded_sts_proportional() {
+        let mut p = IngestPool::new(SamplerKind::Sts, 4, 0.5, 3);
+        for i in 0..8000 {
+            p.offer(Item::new(0, i as f64, 0));
+        }
+        for i in 0..2000 {
+            p.offer(Item::new(1, i as f64, 0));
+        }
+        let r = p.finish_interval();
+        let n0 = r.sample.iter().filter(|(s, _)| *s == 0).count() as f64;
+        let n1 = r.sample.iter().filter(|(s, _)| *s == 1).count() as f64;
+        assert!((n0 - 4000.0).abs() <= 4.0, "n0 {n0}");
+        assert!((n1 - 1000.0).abs() <= 4.0, "n1 {n1}");
+        assert_eq!(r.state.c[0], 8000.0);
+    }
+
+    #[test]
+    fn sts_estimate_accuracy_multi_worker() {
+        let mut p = IngestPool::new(SamplerKind::Sts, 3, 0.25, 4);
+        let mut rng = Rng::seed_from_u64(5);
+        let mut exact = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.normal(100.0, 10.0);
+            p.offer(Item::new(0, v, 0));
+            exact += v;
+        }
+        for _ in 0..50 {
+            let v = rng.normal(50_000.0, 100.0);
+            p.offer(Item::new(2, v, 0));
+            exact += v;
+        }
+        let r = p.finish_interval();
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        let rel = (est.sum - exact).abs() / exact;
+        assert!(rel < 0.02, "rel err {rel}");
+    }
+
+    #[test]
+    fn srs_multi_worker_fraction() {
+        let mut p = IngestPool::new(SamplerKind::Srs, 2, 0.3, 6);
+        feed(&mut p, 10_000, 3);
+        let r = p.finish_interval();
+        let f = r.fraction();
+        assert!((f - 0.3).abs() < 0.01, "fraction {f}");
+    }
+
+    #[test]
+    fn native_multi_worker_keeps_all() {
+        let mut p = IngestPool::new(SamplerKind::None, 4, 1.0, 7);
+        feed(&mut p, 5000, 5);
+        let r = p.finish_interval();
+        assert_eq!(r.sample.len(), 5000);
+    }
+
+    #[test]
+    fn set_fraction_propagates() {
+        let mut p = IngestPool::new(SamplerKind::Sts, 2, 0.5, 8);
+        p.set_fraction(0.1);
+        feed(&mut p, 10_000, 2);
+        let r = p.finish_interval();
+        let f = r.fraction();
+        assert!((f - 0.1).abs() < 0.01, "fraction {f}");
+    }
+
+    #[test]
+    fn oasrs_no_sync_rare_stratum_kept_across_workers() {
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 4, 0.1, 9);
+        for i in 0..100_000 {
+            p.offer(Item::new(0, 1.0, i));
+        }
+        for _ in 0..8 {
+            p.offer(Item::new(2, 1e6, 0));
+        }
+        let r = p.finish_interval();
+        let n2 = r.sample.iter().filter(|(s, _)| *s == 2).count();
+        assert_eq!(n2, 8);
+    }
+
+    use crate::util::rng::Rng;
+}

@@ -1,0 +1,170 @@
+//! Confidence intervals from the "68-95-99.7" rule (paper §3.3).
+//!
+//! The approximate result falls within 1, 2, 3 standard deviations of the
+//! true result with probability 68% / 95% / 99.7%; the standard deviation is
+//! the square root of the estimated variance (Eq. 6 / Eq. 9).
+
+use super::estimator::Estimate;
+
+/// Confidence levels supported by the paper's error-bound rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfidenceLevel {
+    /// ±1σ ≈ 68%.
+    P68,
+    /// ±2σ ≈ 95%.
+    P95,
+    /// ±3σ ≈ 99.7%.
+    P997,
+}
+
+impl ConfidenceLevel {
+    /// Number of standard deviations for this level.
+    pub fn sigmas(self) -> f64 {
+        match self {
+            ConfidenceLevel::P68 => 1.0,
+            ConfidenceLevel::P95 => 2.0,
+            ConfidenceLevel::P997 => 3.0,
+        }
+    }
+}
+
+/// An `output ± error bound` result (paper Algorithm 2's final step).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfidenceInterval {
+    /// Point estimate.
+    pub value: f64,
+    /// Half-width of the interval (the "error bound").
+    pub bound: f64,
+    /// Level the bound was computed at.
+    pub level: ConfidenceLevel,
+}
+
+impl ConfidenceInterval {
+    /// Interval for the SUM estimate.
+    pub fn for_sum(e: &Estimate, level: ConfidenceLevel) -> Self {
+        Self { value: e.sum, bound: level.sigmas() * e.var_sum.max(0.0).sqrt(), level }
+    }
+
+    /// Interval for the MEAN estimate.
+    pub fn for_mean(e: &Estimate, level: ConfidenceLevel) -> Self {
+        Self { value: e.mean, bound: level.sigmas() * e.var_mean.max(0.0).sqrt(), level }
+    }
+
+    /// Relative error bound (`bound / |value|`), `inf` when value is 0.
+    pub fn relative(&self) -> f64 {
+        if self.value == 0.0 {
+            if self.bound == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.bound / self.value.abs()
+        }
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.value - self.bound
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.value + self.bound
+    }
+
+    pub fn contains(&self, truth: f64) -> bool {
+        truth >= self.lo() && truth <= self.hi()
+    }
+}
+
+impl std::fmt::Display for ConfidenceInterval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.4} ± {:.4}", self.value, self.bound)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::estimator::{estimate, StrataPartials, StrataState, K};
+
+    fn est_with_var(var_sum: f64) -> Estimate {
+        Estimate {
+            sum: 100.0,
+            mean: 10.0,
+            var_sum,
+            var_mean: var_sum / 100.0,
+            total_c: 10.0,
+            total_y: 5.0,
+            weights: [1.0; K],
+            strata_sums: [0.0; K],
+        }
+    }
+
+    #[test]
+    fn sigma_scaling() {
+        let e = est_with_var(4.0); // sd = 2
+        assert_eq!(ConfidenceInterval::for_sum(&e, ConfidenceLevel::P68).bound, 2.0);
+        assert_eq!(ConfidenceInterval::for_sum(&e, ConfidenceLevel::P95).bound, 4.0);
+        assert_eq!(ConfidenceInterval::for_sum(&e, ConfidenceLevel::P997).bound, 6.0);
+    }
+
+    #[test]
+    fn interval_endpoints_and_contains() {
+        let e = est_with_var(4.0);
+        let ci = ConfidenceInterval::for_sum(&e, ConfidenceLevel::P95);
+        assert_eq!(ci.lo(), 96.0);
+        assert_eq!(ci.hi(), 104.0);
+        assert!(ci.contains(100.0));
+        assert!(ci.contains(96.0));
+        assert!(!ci.contains(95.9));
+    }
+
+    #[test]
+    fn relative_bound() {
+        let e = est_with_var(25.0); // sd 5
+        let ci = ConfidenceInterval::for_sum(&e, ConfidenceLevel::P68);
+        assert!((ci.relative() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_value_zero_bound_is_zero_relative() {
+        let ci = ConfidenceInterval { value: 0.0, bound: 0.0, level: ConfidenceLevel::P95 };
+        assert_eq!(ci.relative(), 0.0);
+        let ci2 = ConfidenceInterval { value: 0.0, bound: 1.0, level: ConfidenceLevel::P95 };
+        assert!(ci2.relative().is_infinite());
+    }
+
+    #[test]
+    fn statistical_coverage_p95() {
+        // Sample repeatedly from a population; the 95% CI on SUM should
+        // cover the true sum in roughly >= 90% of trials (Monte Carlo slack).
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(7);
+        let population: Vec<f64> = (0..1000).map(|_| rng.range_f64(0.0, 100.0)).collect();
+        let truth: f64 = population.iter().sum();
+        let n_cap = 100usize;
+        let trials = 200;
+        let mut covered = 0;
+        for _ in 0..trials {
+            // SRS of n_cap items from the single stratum
+            let mut partials = StrataPartials::default();
+            let mut chosen = std::collections::HashSet::new();
+            while chosen.len() < n_cap {
+                chosen.insert(rng.range_usize(0, population.len()));
+            }
+            for &i in &chosen {
+                partials.push(0, population[i]);
+            }
+            let mut st = StrataState::default();
+            st.c[0] = population.len() as f64;
+            st.n_cap = [n_cap as f64; K];
+            let e = estimate(&partials, &st);
+            let ci = ConfidenceInterval::for_sum(&e, ConfidenceLevel::P95);
+            if ci.contains(truth) {
+                covered += 1;
+            }
+        }
+        let coverage = covered as f64 / trials as f64;
+        assert!(coverage > 0.88, "coverage {coverage} too low");
+    }
+}

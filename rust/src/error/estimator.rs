@@ -1,0 +1,275 @@
+//! Estimator arithmetic for approximate linear queries — Eq. (1)–(9).
+//!
+//! Per-stratum *partials* (selected count `Y_i`, `Σ I_ij`, `Σ I_ij²`) are
+//! associative under addition, so partial aggregates computed over chunks of
+//! a window (or on different worker nodes — paper §3.2 "Distributed
+//! execution") combine losslessly before the estimate is finished.  The same
+//! arithmetic is implemented in the L2 JAX graph (`python/compile/model.py`);
+//! integration tests cross-check the two.
+
+use crate::core::MAX_STRATA;
+
+/// Number of strata the fixed-shape compute kernels support.
+pub const K: usize = MAX_STRATA;
+
+/// Per-stratum partial aggregates of a sample: `Y_i`, `Σ I`, `Σ I²`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrataPartials {
+    /// Number of items actually selected per stratum (`Y_i`).
+    pub y: [f64; K],
+    /// Sum of selected item values per stratum.
+    pub sum: [f64; K],
+    /// Sum of squared selected item values per stratum.
+    pub sumsq: [f64; K],
+}
+
+impl Default for StrataPartials {
+    fn default() -> Self {
+        Self { y: [0.0; K], sum: [0.0; K], sumsq: [0.0; K] }
+    }
+}
+
+impl StrataPartials {
+    /// Accumulate one selected item into stratum `i`.
+    #[inline]
+    pub fn push(&mut self, i: usize, value: f64) {
+        self.y[i] += 1.0;
+        self.sum[i] += value;
+        self.sumsq[i] += value * value;
+    }
+
+    /// Combine partials from another chunk / worker (associative merge).
+    pub fn merge(&mut self, other: &StrataPartials) {
+        for i in 0..K {
+            self.y[i] += other.y[i];
+            self.sum[i] += other.sum[i];
+            self.sumsq[i] += other.sumsq[i];
+        }
+    }
+
+    /// Build partials from a flat sample of (stratum, value) pairs.
+    pub fn from_sample<'a>(items: impl IntoIterator<Item = &'a (u16, f64)>) -> Self {
+        let mut p = Self::default();
+        for &(s, v) in items {
+            if (s as usize) < K {
+                p.push(s as usize, v);
+            }
+        }
+        p
+    }
+
+    /// Total number of selected items across strata.
+    pub fn total_y(&self) -> f64 {
+        self.y.iter().sum()
+    }
+}
+
+/// Per-stratum bookkeeping the sampler maintains per window: arrival counters
+/// `C_i` and reservoir capacities `N_i`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrataState {
+    /// Items that *arrived* per stratum in the window (`C_i`).
+    pub c: [f64; K],
+    /// Reservoir capacity per stratum (`N_i`).
+    pub n_cap: [f64; K],
+}
+
+impl Default for StrataState {
+    fn default() -> Self {
+        Self { c: [0.0; K], n_cap: [0.0; K] }
+    }
+}
+
+impl StrataState {
+    /// Merge counters from another worker (capacities must agree; arrival
+    /// counters add — paper §3.2 distributed execution).
+    pub fn merge_counters(&mut self, other: &StrataState) {
+        for i in 0..K {
+            self.c[i] += other.c[i];
+        }
+    }
+
+    pub fn total_c(&self) -> f64 {
+        self.c.iter().sum()
+    }
+}
+
+/// A finished estimate for one window: Eq. (1)–(9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    /// Approximate total SUM over all strata (Eq. 3).
+    pub sum: f64,
+    /// Approximate MEAN over all arrived items (Eq. 4).
+    pub mean: f64,
+    /// Estimated variance of the SUM estimate (Eq. 6).
+    pub var_sum: f64,
+    /// Estimated variance of the MEAN estimate (Eq. 9).
+    pub var_mean: f64,
+    /// Total arrived items Σ C_i.
+    pub total_c: f64,
+    /// Total selected items Σ Y_i.
+    pub total_y: f64,
+    /// Per-stratum weights W_i (Eq. 1).
+    pub weights: [f64; K],
+    /// Per-stratum estimated sums SUM_i (Eq. 2).
+    pub strata_sums: [f64; K],
+}
+
+/// Finish an estimate from combined partials and strata state.
+///
+/// This is the exact arithmetic of the L2 graph (`model.py`), kept in sync by
+/// the `runtime` integration tests.
+pub fn estimate(partials: &StrataPartials, state: &StrataState) -> Estimate {
+    let mut weights = [1.0f64; K];
+    let mut strata_sums = [0.0f64; K];
+    let mut total_sum = 0.0;
+    let mut var_sum = 0.0;
+    let total_c: f64 = state.total_c();
+    let mut var_mean = 0.0;
+
+    for i in 0..K {
+        let c = state.c[i];
+        let n_cap = state.n_cap[i];
+        let y = partials.y[i];
+        let s1 = partials.sum[i];
+        let s2 = partials.sumsq[i];
+
+        // Eq. 1 — weight.
+        weights[i] = if c > n_cap { c / n_cap.max(1.0) } else { 1.0 };
+
+        // Eq. 2 — per-stratum estimated sum.
+        strata_sums[i] = s1 * weights[i];
+        total_sum += strata_sums[i];
+
+        // Eq. 7 — sample variance (0 when fewer than 2 selected items).
+        let s_sq = if y > 1.0 {
+            let ybar = s1 / y;
+            ((s2 - y * ybar * ybar) / (y - 1.0)).max(0.0)
+        } else {
+            0.0
+        };
+
+        // Eq. 6 / Eq. 9 terms.
+        let fpc = (c - y).max(0.0);
+        if y > 0.0 {
+            var_sum += c * fpc * s_sq / y;
+            if c > 0.0 && total_c > 0.0 {
+                let omega = c / total_c;
+                var_mean += omega * omega * (s_sq / y) * (fpc / c);
+            }
+        }
+    }
+
+    let mean = total_sum / total_c.max(1.0);
+    Estimate {
+        sum: total_sum,
+        mean,
+        var_sum,
+        var_mean,
+        total_c,
+        total_y: partials.total_y(),
+        weights,
+        strata_sums,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_case() -> (StrataPartials, StrataState) {
+        let mut p = StrataPartials::default();
+        // stratum 0: 4 items of value 2
+        for _ in 0..4 {
+            p.push(0, 2.0);
+        }
+        // stratum 1: 2 items, values 10 and 20
+        p.push(1, 10.0);
+        p.push(1, 20.0);
+        let mut st = StrataState::default();
+        st.c[0] = 8.0; // twice as many arrived as selected
+        st.c[1] = 2.0; // fully sampled
+        st.n_cap = [4.0; K];
+        (p, st)
+    }
+
+    #[test]
+    fn weight_law_eq1() {
+        let (p, st) = simple_case();
+        let e = estimate(&p, &st);
+        assert_eq!(e.weights[0], 2.0); // C=8 > N=4 -> 8/4
+        assert_eq!(e.weights[1], 1.0); // C=2 <= N=4 -> 1
+    }
+
+    #[test]
+    fn sum_eq2_eq3() {
+        let (p, st) = simple_case();
+        let e = estimate(&p, &st);
+        // stratum 0: sum 8 * w 2 = 16; stratum 1: 30 * 1 = 30
+        assert_eq!(e.strata_sums[0], 16.0);
+        assert_eq!(e.strata_sums[1], 30.0);
+        assert_eq!(e.sum, 46.0);
+    }
+
+    #[test]
+    fn mean_eq4() {
+        let (p, st) = simple_case();
+        let e = estimate(&p, &st);
+        assert!((e.mean - 46.0 / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fully_sampled_stratum_contributes_zero_variance() {
+        let (p, st) = simple_case();
+        let e = estimate(&p, &st);
+        // stratum 1 fully sampled (C=Y=2) -> fpc = 0 -> no variance term;
+        // stratum 0 items identical -> s^2 = 0. Total variance = 0.
+        assert_eq!(e.var_sum, 0.0);
+        assert_eq!(e.var_mean, 0.0);
+    }
+
+    #[test]
+    fn variance_eq6_hand_computed() {
+        let mut p = StrataPartials::default();
+        // stratum 0: values 1, 3 selected out of C=10
+        p.push(0, 1.0);
+        p.push(0, 3.0);
+        let mut st = StrataState::default();
+        st.c[0] = 10.0;
+        st.n_cap = [2.0; K];
+        let e = estimate(&p, &st);
+        // s^2 = ((1-2)^2 + (3-2)^2) / 1 = 2
+        // Var(SUM) = C*(C-Y)*s^2/Y = 10*8*2/2 = 80
+        assert!((e.var_sum - 80.0).abs() < 1e-9);
+        // Var(MEAN) = w^2 * s^2/Y * (C-Y)/C with w = 1 -> 2/2 * 8/10 = 0.8
+        assert!((e.var_mean - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_whole() {
+        let items: Vec<(u16, f64)> =
+            (0..100).map(|i| ((i % 5) as u16, i as f64)).collect();
+        let whole = StrataPartials::from_sample(&items);
+        let mut a = StrataPartials::from_sample(&items[..37]);
+        let b = StrataPartials::from_sample(&items[37..]);
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn empty_partials_estimate_is_zero() {
+        let p = StrataPartials::default();
+        let st = StrataState::default();
+        let e = estimate(&p, &st);
+        assert_eq!(e.sum, 0.0);
+        assert_eq!(e.var_sum, 0.0);
+        assert_eq!(e.total_y, 0.0);
+    }
+
+    #[test]
+    fn out_of_range_strata_ignored_in_from_sample() {
+        let items = vec![(0u16, 1.0), (99u16, 5.0)];
+        let p = StrataPartials::from_sample(&items);
+        assert_eq!(p.total_y(), 1.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Adaptive feedback: re-tune the sample size when the observed error bound
+//! exceeds the user's accuracy target (paper §4.2.1: "For cases where the
+//! error bound is larger than the specified target, an adaptive feedback
+//! mechanism is activated to increase the sample size").
+//!
+//! The controller is a damped multiplicative-increase / gentle-decrease loop
+//! over the *sampling fraction*: per window it compares the achieved relative
+//! error bound against the target and scales the fraction by a bounded
+//! factor.  Variance of a mean estimate shrinks ~1/Y, so to shrink the bound
+//! by ratio r the sample must grow by ~r²; the controller applies that model
+//! with damping to avoid oscillation under bursty arrivals.
+
+/// Adaptive sample-size controller.
+#[derive(Debug, Clone)]
+pub struct FeedbackController {
+    /// Target relative error bound (e.g. 0.01 = 1%).
+    target_rel_error: f64,
+    /// Current sampling fraction in (0, 1].
+    fraction: f64,
+    /// Damping in (0, 1]: 1 = immediate jumps, smaller = smoother.
+    damping: f64,
+    /// Floor / ceiling for the fraction.
+    min_fraction: f64,
+    max_fraction: f64,
+    /// Number of adjustments made (for introspection / tests).
+    adjustments: u64,
+}
+
+impl FeedbackController {
+    /// Create a controller starting at `initial_fraction`, aiming at
+    /// `target_rel_error`.
+    pub fn new(target_rel_error: f64, initial_fraction: f64) -> Self {
+        Self {
+            target_rel_error: target_rel_error.max(1e-9),
+            fraction: initial_fraction.clamp(1e-4, 1.0),
+            damping: 0.5,
+            min_fraction: 0.01,
+            max_fraction: 1.0,
+            adjustments: 0,
+        }
+    }
+
+    /// Override the damping factor (tests / tuning).
+    pub fn with_damping(mut self, damping: f64) -> Self {
+        self.damping = damping.clamp(0.01, 1.0);
+        self
+    }
+
+    /// Override fraction bounds.
+    pub fn with_bounds(mut self, min: f64, max: f64) -> Self {
+        self.min_fraction = min.clamp(1e-4, 1.0);
+        self.max_fraction = max.clamp(self.min_fraction, 1.0);
+        self.fraction = self.fraction.clamp(self.min_fraction, self.max_fraction);
+        self
+    }
+
+    /// Current sampling fraction.
+    pub fn fraction(&self) -> f64 {
+        self.fraction
+    }
+
+    pub fn target(&self) -> f64 {
+        self.target_rel_error
+    }
+
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments
+    }
+
+    /// Feed the relative error bound observed on the last window; returns the
+    /// fraction to use for the next window.
+    ///
+    /// `observed` of `NaN`/`inf` (e.g. zero-valued window) leaves the
+    /// fraction unchanged.
+    pub fn observe(&mut self, observed_rel_error: f64) -> f64 {
+        if !observed_rel_error.is_finite() {
+            return self.fraction;
+        }
+        let ratio = observed_rel_error / self.target_rel_error;
+        // Error ∝ 1/sqrt(sample) -> sample multiplier = ratio².  Damp in
+        // log-space to avoid overshoot: multiplier^damping.
+        let raw = (ratio * ratio).max(1e-6);
+        let mult = raw.powf(self.damping);
+        // Clamp a single step to [0.5x, 4x] so one noisy window cannot slam
+        // the fraction across its whole range.
+        let mult = mult.clamp(0.5, 4.0);
+        let next = (self.fraction * mult).clamp(self.min_fraction, self.max_fraction);
+        if (next - self.fraction).abs() > f64::EPSILON {
+            self.adjustments += 1;
+        }
+        self.fraction = next;
+        self.fraction
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_when_error_above_target() {
+        let mut c = FeedbackController::new(0.01, 0.2);
+        let before = c.fraction();
+        let after = c.observe(0.05); // 5x worse than target
+        assert!(after > before);
+    }
+
+    #[test]
+    fn shrinks_when_error_below_target() {
+        let mut c = FeedbackController::new(0.01, 0.8);
+        let after = c.observe(0.001); // 10x better than target
+        assert!(after < 0.8);
+    }
+
+    #[test]
+    fn clamped_to_bounds() {
+        let mut c = FeedbackController::new(0.01, 0.5).with_bounds(0.1, 0.9);
+        for _ in 0..20 {
+            c.observe(10.0);
+        }
+        assert!(c.fraction() <= 0.9);
+        for _ in 0..50 {
+            c.observe(1e-9);
+        }
+        assert!(c.fraction() >= 0.1);
+    }
+
+    #[test]
+    fn at_target_is_stable() {
+        let mut c = FeedbackController::new(0.01, 0.4);
+        let f0 = c.fraction();
+        let f1 = c.observe(0.01);
+        assert!((f1 - f0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_and_inf_ignored() {
+        let mut c = FeedbackController::new(0.01, 0.4);
+        assert_eq!(c.observe(f64::NAN), 0.4);
+        assert_eq!(c.observe(f64::INFINITY), 0.4);
+        assert_eq!(c.adjustments(), 0);
+    }
+
+    #[test]
+    fn converges_on_simulated_plant() {
+        // Simulated system: rel error = base / sqrt(fraction).  With
+        // base = 0.01 the fixed point for target 0.02 is fraction 0.25.
+        let mut c = FeedbackController::new(0.02, 0.9);
+        let mut f = c.fraction();
+        for _ in 0..60 {
+            let err = 0.01 / f.sqrt();
+            f = c.observe(err);
+        }
+        assert!((f - 0.25).abs() < 0.05, "converged to {f}");
+    }
+
+    #[test]
+    fn single_step_bounded() {
+        let mut c = FeedbackController::new(0.01, 0.2).with_damping(1.0);
+        let f = c.observe(1000.0); // absurd error
+        assert!(f <= 0.2 * 4.0 + 1e-12);
+    }
+}

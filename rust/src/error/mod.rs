@@ -1,0 +1,15 @@
+//! Error estimation for approximate query results (paper §3.3).
+//!
+//! Implements the estimator arithmetic of Eq. (1)–(9) — shared between the
+//! pure-Rust compute backend, the chunk-combining path of the XLA runtime,
+//! and the adaptive feedback loop — plus confidence intervals from the
+//! "68-95-99.7" rule and the feedback controller that re-tunes the sample
+//! size when the error bound exceeds the user's target (§4.2.1).
+
+pub mod bounds;
+pub mod estimator;
+pub mod feedback;
+
+pub use bounds::{ConfidenceInterval, ConfidenceLevel};
+pub use estimator::{Estimate, StrataPartials, StrataState};
+pub use feedback::FeedbackController;

@@ -1,0 +1,357 @@
+//! One function per paper figure.  Each returns the rendered table(s); the
+//! caller (bench binary / CLI) prints them and EXPERIMENTS.md records the
+//! paper-vs-measured comparison.
+
+use crate::core::Item;
+use crate::datasets::{CaidaConfig, TaxiConfig};
+use crate::metrics::fraction_for_accuracy;
+use crate::query::Query;
+use crate::stream::{StreamConfig, StreamGenerator};
+use crate::util::table::{fmt_pct, fmt_throughput, Table};
+use crate::window::WindowConfig;
+
+use super::{run_system, Ctx, System};
+
+/// Sampling fractions swept by the paper (10%–90%).
+pub const FRACTIONS: [f64; 5] = [0.1, 0.2, 0.4, 0.6, 0.8];
+
+fn micro_trace(ctx: &Ctx, rate_c: f64, seed: u64) -> Vec<Item> {
+    StreamGenerator::new(&StreamConfig::gaussian_micro(rate_c, seed))
+        .take_until(ctx.scale.duration_ms)
+}
+
+fn window_default() -> WindowConfig {
+    WindowConfig::paper_default()
+}
+
+/// Fig. 5a — peak throughput vs sampling fraction, all six systems
+/// (Gaussian microbenchmark).
+pub fn fig5a(ctx: &Ctx) -> Table {
+    let items = micro_trace(ctx, 1000.0, 50);
+    let mut t = Table::new(
+        "Fig 5a: peak throughput (items/s) vs sampling fraction — Gaussian micro",
+        &["system", "10%", "20%", "40%", "60%", "80%", "native(100%)"],
+    );
+    for sys in [System::SparkApprox, System::FlinkApprox, System::SparkSrs, System::SparkSts] {
+        let mut row = vec![sys.label().to_string()];
+        for &f in &FRACTIONS {
+            let m = run_system(ctx, sys, &items, window_default(), Query::Sum, f, 500, false);
+            row.push(fmt_throughput(m.summary.throughput));
+        }
+        row.push("-".into());
+        t.row(row);
+    }
+    for sys in [System::NativeSpark, System::NativeFlink] {
+        let m = run_system(ctx, sys, &items, window_default(), Query::Sum, 1.0, 500, false);
+        let mut row = vec![sys.label().to_string()];
+        row.extend(std::iter::repeat("-".to_string()).take(5));
+        row.push(fmt_throughput(m.summary.throughput));
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 5b — accuracy loss vs sampling fraction.
+pub fn fig5b(ctx: &Ctx) -> Table {
+    let items = micro_trace(ctx, 1000.0, 51);
+    let mut t = Table::new(
+        "Fig 5b: accuracy loss vs sampling fraction — Gaussian micro",
+        &["system", "10%", "20%", "40%", "60%", "80%"],
+    );
+    for sys in [System::SparkApprox, System::FlinkApprox, System::SparkSrs, System::SparkSts] {
+        let mut row = vec![sys.label().to_string()];
+        for &f in &FRACTIONS {
+            let m = run_system(ctx, sys, &items, window_default(), Query::Sum, f, 500, true);
+            row.push(fmt_pct(m.summary.accuracy_loss));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 5c — throughput vs batch interval (Spark-based systems, 60%).
+pub fn fig5c(ctx: &Ctx) -> Table {
+    let items = micro_trace(ctx, 1000.0, 52);
+    let mut t = Table::new(
+        "Fig 5c: peak throughput (items/s) vs batch interval — Spark systems @60%",
+        &["system", "250ms", "500ms", "1000ms"],
+    );
+    for sys in System::SPARK_SAMPLED {
+        let mut row = vec![sys.label().to_string()];
+        for &bi in &[250u64, 500, 1000] {
+            let m = run_system(ctx, sys, &items, window_default(), Query::Sum, 0.6, bi, false);
+            row.push(fmt_throughput(m.summary.throughput));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 6a — accuracy loss vs arrival rate of sub-stream C (60%).
+pub fn fig6a(ctx: &Ctx) -> Table {
+    let mut t = Table::new(
+        "Fig 6a: accuracy loss vs arrival rate of sub-stream C @60%",
+        &["system", "100/s", "1000/s", "4000/s", "8000/s"],
+    );
+    let rates = [100.0, 1000.0, 4000.0, 8000.0];
+    let traces: Vec<Vec<Item>> =
+        rates.iter().map(|&rc| micro_trace(ctx, rc, 53)).collect();
+    for sys in System::SAMPLED {
+        let mut row = vec![sys.label().to_string()];
+        for items in &traces {
+            let m = run_system(ctx, sys, items, window_default(), Query::Sum, 0.6, 500, true);
+            row.push(fmt_pct(m.summary.accuracy_loss));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 6b/6c — throughput + accuracy vs window size (rates 8000/2000/100).
+pub fn fig6bc(ctx: &Ctx) -> (Table, Table) {
+    let items = micro_trace(ctx, 100.0, 54);
+    let sizes: [(u64, u64); 3] = [(5_000, 5_000), (10_000, 5_000), (20_000, 10_000)];
+    let mut tb = Table::new(
+        "Fig 6b: peak throughput (items/s) vs window size @60%",
+        &["system", "w=5s", "w=10s", "w=20s"],
+    );
+    let mut tc = Table::new(
+        "Fig 6c: accuracy loss vs window size @60%",
+        &["system", "w=5s", "w=10s", "w=20s"],
+    );
+    for sys in System::SAMPLED {
+        let mut rb = vec![sys.label().to_string()];
+        let mut rc = vec![sys.label().to_string()];
+        for &(w, s) in &sizes {
+            let wc = WindowConfig::new(w, s);
+            let m = run_system(ctx, sys, &items, wc, Query::Sum, 0.6, 500, true);
+            rb.push(fmt_throughput(m.summary.throughput));
+            rc.push(fmt_pct(m.summary.accuracy_loss));
+        }
+        tb.row(rb);
+        tc.row(rc);
+    }
+    (tb, tc)
+}
+
+/// Fig. 7a — scalability: throughput vs workers (scale-up) and vs nodes
+/// (scale-out), sampling fraction 40%.
+pub fn fig7a(ctx: &Ctx) -> Table {
+    let items = micro_trace(ctx, 1000.0, 55);
+    let mut t = Table::new(
+        "Fig 7a: peak throughput (items/s) vs parallelism @40%",
+        &["system", "w=1", "w=2", "w=4", "w=8 (~1 node)", "w=16 (~2 nodes)", "w=24 (~3 nodes)"],
+    );
+    for sys in [System::SparkApprox, System::FlinkApprox, System::SparkSrs, System::SparkSts] {
+        let mut row = vec![sys.label().to_string()];
+        for &w in &[1usize, 2, 4, 8, 16, 24] {
+            let m = super::run_system_workers(
+                ctx,
+                sys,
+                &items,
+                window_default(),
+                Query::Sum,
+                0.4,
+                500,
+                false,
+                w,
+            );
+            row.push(fmt_throughput(m.summary.throughput));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 7b — throughput at the same (1%) accuracy loss, Gaussian skew.
+pub fn fig7b(ctx: &Ctx) -> Table {
+    let items = StreamGenerator::new(&StreamConfig::gaussian_skew(10_000.0, 56))
+        .take_until(ctx.scale.duration_ms);
+    let mut t = Table::new(
+        "Fig 7b: peak throughput at 1% accuracy loss — Gaussian skew (80/19/1)",
+        &["system", "fraction@1%", "throughput"],
+    );
+    for sys in System::SAMPLED {
+        let f = fraction_for_accuracy(
+            |frac| {
+                run_system(ctx, sys, &items, window_default(), Query::Sum, frac, 500, true)
+                    .summary
+                    .accuracy_loss
+            },
+            0.01,
+            6,
+        );
+        let m = run_system(ctx, sys, &items, window_default(), Query::Sum, f, 500, false);
+        t.row(vec![
+            sys.label().to_string(),
+            fmt_pct(f),
+            fmt_throughput(m.summary.throughput),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7c — accuracy loss vs fraction, Poisson skew (80/19.99/0.01).
+pub fn fig7c(ctx: &Ctx) -> Table {
+    let items = StreamGenerator::new(&StreamConfig::poisson_skew(10_000.0, 57))
+        .take_until(ctx.scale.duration_ms);
+    let mut t = Table::new(
+        "Fig 7c: accuracy loss vs sampling fraction — Poisson skew (80/19.99/0.01)",
+        &["system", "10%", "20%", "40%", "60%", "80%"],
+    );
+    for sys in System::SAMPLED {
+        let mut row = vec![sys.label().to_string()];
+        for &f in &FRACTIONS {
+            let m = run_system(ctx, sys, &items, window_default(), Query::Sum, f, 500, true);
+            row.push(fmt_pct(m.summary.accuracy_loss));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 8 — per-window MEAN timeline under Gaussian skew (w=10s, δ=5s):
+/// exact vs each Spark-based sampled system, fraction 60%.
+pub fn fig8(ctx: &Ctx) -> Table {
+    let items = StreamGenerator::new(&StreamConfig::gaussian_skew(10_000.0, 58))
+        .take_until(ctx.scale.duration_ms);
+    let mut t = Table::new(
+        "Fig 8: per-window MEAN every 5s (Gaussian skew, w=10s δ=5s, 60%)",
+        &["window-end(s)", "exact", "streamapprox", "spark-srs", "spark-sts"],
+    );
+    let mut series: Vec<Vec<(u64, f64, f64)>> = Vec::new(); // (end, approx, exact)
+    for sys in System::SPARK_SAMPLED {
+        let m = crate::pipeline::PipelineBuilder::new()
+            .engine(sys.engine())
+            .sampler(sys.sampler())
+            .budget(crate::budget::QueryBudget::SamplingFraction(0.6))
+            .query(Query::Mean)
+            .window(window_default())
+            .batch_interval_ms(500)
+            .workers(ctx.scale.workers)
+            .track_exact(true)
+            .seed(99)
+            .build_with_handle(ctx.handle());
+        let r = m.run_items(&items).expect("run");
+        series.push(
+            r.windows
+                .iter()
+                .map(|w| (w.end_ms, w.result.value(), w.exact_scalar.unwrap_or(f64::NAN)))
+                .collect(),
+        );
+    }
+    let n = series.iter().map(|s| s.len()).min().unwrap_or(0);
+    for i in 0..n {
+        let (end, _, exact) = series[0][i];
+        t.row(vec![
+            format!("{}", end / 1000),
+            format!("{exact:.2}"),
+            format!("{:.2}", series[0][i].1),
+            format!("{:.2}", series[1][i].1),
+            format!("{:.2}", series[2][i].1),
+        ]);
+    }
+    t
+}
+
+/// Shared driver for the two case studies (Figs. 9 and 10).
+fn case_study(
+    ctx: &Ctx,
+    name: &str,
+    items: &[Item],
+    query: Query,
+) -> (Table, Table, Table) {
+    let w = window_default();
+    let mut ta = Table::new(
+        format!("{name} (a): peak throughput (items/s) vs sampling fraction"),
+        &["system", "10%", "20%", "40%", "60%", "80%", "native"],
+    );
+    for sys in [System::SparkApprox, System::FlinkApprox, System::SparkSrs, System::SparkSts] {
+        let mut row = vec![sys.label().to_string()];
+        for &f in &FRACTIONS {
+            let m = run_system(ctx, sys, items, w, query.clone(), f, 500, false);
+            row.push(fmt_throughput(m.summary.throughput));
+        }
+        row.push("-".into());
+        ta.row(row);
+    }
+    for sys in [System::NativeSpark, System::NativeFlink] {
+        let m = run_system(ctx, sys, items, w, query.clone(), 1.0, 500, false);
+        let mut row = vec![sys.label().to_string()];
+        row.extend(std::iter::repeat("-".to_string()).take(5));
+        row.push(fmt_throughput(m.summary.throughput));
+        ta.row(row);
+    }
+
+    let mut tb = Table::new(
+        format!("{name} (b): accuracy loss vs sampling fraction"),
+        &["system", "10%", "20%", "40%", "60%", "80%"],
+    );
+    for sys in System::SAMPLED {
+        let mut row = vec![sys.label().to_string()];
+        for &f in &FRACTIONS {
+            let m = run_system(ctx, sys, items, w, query.clone(), f, 500, true);
+            row.push(fmt_pct(m.summary.accuracy_loss));
+        }
+        tb.row(row);
+    }
+
+    let mut tc = Table::new(
+        format!("{name} (c): peak throughput at 1% accuracy loss"),
+        &["system", "fraction@1%", "throughput"],
+    );
+    for sys in System::SAMPLED {
+        let f = fraction_for_accuracy(
+            |frac| {
+                run_system(ctx, sys, items, w, query.clone(), frac, 500, true)
+                    .summary
+                    .accuracy_loss
+            },
+            0.01,
+            6,
+        );
+        let m = run_system(ctx, sys, items, w, query.clone(), f, 500, false);
+        tc.row(vec![
+            sys.label().to_string(),
+            fmt_pct(f),
+            fmt_throughput(m.summary.throughput),
+        ]);
+    }
+    (ta, tb, tc)
+}
+
+/// Fig. 9 — network traffic analytics (CAIDA-like): per-protocol totals.
+pub fn fig9(ctx: &Ctx) -> (Table, Table, Table) {
+    let items = CaidaConfig::default().generate(ctx.scale.duration_ms);
+    case_study(ctx, "Fig 9: network traffic", &items, Query::PerStratumSum)
+}
+
+/// Fig. 10 — NYC taxi analytics: per-borough mean trip distance.
+pub fn fig10(ctx: &Ctx) -> (Table, Table, Table) {
+    let items = TaxiConfig::default().generate(ctx.scale.duration_ms);
+    case_study(ctx, "Fig 10: NYC taxi", &items, Query::PerStratumMean)
+}
+
+/// Fig. 11 — total processing latency of both case-study datasets @60%.
+pub fn fig11(ctx: &Ctx) -> Table {
+    let caida = CaidaConfig::default().generate(ctx.scale.duration_ms);
+    let taxi = TaxiConfig::default().generate(ctx.scale.duration_ms);
+    let mut t = Table::new(
+        "Fig 11: total processing time (ms) @60%",
+        &["system", "network-traffic", "nyc-taxi"],
+    );
+    for sys in System::SPARK_SAMPLED {
+        let mc = run_system(
+            ctx, sys, &caida, window_default(), Query::PerStratumSum, 0.6, 500, false,
+        );
+        let mt = run_system(
+            ctx, sys, &taxi, window_default(), Query::PerStratumMean, 0.6, 500, false,
+        );
+        t.row(vec![
+            sys.label().to_string(),
+            format!("{:.1}", mc.summary.wall_ns / 1e6),
+            format!("{:.1}", mt.summary.wall_ns / 1e6),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,257 @@
+//! Benchmark harness: regenerates every table/figure of the paper's
+//! evaluation (§5 microbenchmarks, §6 case studies).  Each `figN_*`
+//! function runs the corresponding experiment and returns an ASCII table
+//! with the same rows/series the paper plots; the `benches/` binaries and
+//! the CLI (`streamapprox bench --figure ...`) are thin wrappers.
+//!
+//! The six evaluated systems map onto (engine, sampler) pairs:
+//!
+//! | paper name            | engine    | sampler |
+//! |-----------------------|-----------|---------|
+//! | Spark-StreamApprox    | batched   | OASRS   |
+//! | Flink-StreamApprox    | pipelined | OASRS   |
+//! | Spark-based SRS       | batched   | SRS     |
+//! | Spark-based STS       | batched   | STS     |
+//! | native Spark          | batched   | none    |
+//! | native Flink          | pipelined | none    |
+
+pub mod figures;
+
+use crate::budget::QueryBudget;
+use crate::core::Item;
+use crate::engine::EngineKind;
+use crate::metrics::{summarize, RunSummary};
+use crate::pipeline::PipelineBuilder;
+use crate::query::Query;
+use crate::runtime::{Backend, ComputeHandle, ComputeService};
+use crate::sampling::SamplerKind;
+use crate::window::WindowConfig;
+
+/// The six systems of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    SparkApprox,
+    FlinkApprox,
+    SparkSrs,
+    SparkSts,
+    NativeSpark,
+    NativeFlink,
+}
+
+impl System {
+    pub const ALL: [System; 6] = [
+        System::SparkApprox,
+        System::FlinkApprox,
+        System::SparkSrs,
+        System::SparkSts,
+        System::NativeSpark,
+        System::NativeFlink,
+    ];
+
+    /// The four sampled systems (Figs. 6a, 7b, 9c, 10c).
+    pub const SAMPLED: [System; 4] =
+        [System::SparkApprox, System::FlinkApprox, System::SparkSrs, System::SparkSts];
+
+    /// The three Spark-based sampled systems (Figs. 5c, 8, 11).
+    pub const SPARK_SAMPLED: [System; 3] =
+        [System::SparkApprox, System::SparkSrs, System::SparkSts];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            System::SparkApprox => "spark-streamapprox",
+            System::FlinkApprox => "flink-streamapprox",
+            System::SparkSrs => "spark-srs",
+            System::SparkSts => "spark-sts",
+            System::NativeSpark => "native-spark",
+            System::NativeFlink => "native-flink",
+        }
+    }
+
+    pub fn engine(self) -> EngineKind {
+        match self {
+            System::FlinkApprox | System::NativeFlink => EngineKind::Pipelined,
+            _ => EngineKind::Batched,
+        }
+    }
+
+    pub fn sampler(self) -> SamplerKind {
+        match self {
+            System::SparkApprox | System::FlinkApprox => SamplerKind::Oasrs,
+            System::SparkSrs => SamplerKind::Srs,
+            System::SparkSts => SamplerKind::Sts,
+            System::NativeSpark | System::NativeFlink => SamplerKind::None,
+        }
+    }
+}
+
+/// Experiment scale preset.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// Virtual duration of each run (ms).
+    pub duration_ms: u64,
+    /// Repeats per configuration (the paper averages 10 runs).
+    pub repeats: usize,
+    /// Workers per system.
+    pub workers: usize,
+}
+
+impl Scale {
+    /// Fast preset for `cargo bench` smoke runs and CI.
+    pub fn quick() -> Self {
+        Self { duration_ms: 30_000, repeats: 2, workers: 2 }
+    }
+
+    /// Full preset for the recorded EXPERIMENTS.md numbers.
+    pub fn full() -> Self {
+        Self { duration_ms: 60_000, repeats: 3, workers: 2 }
+    }
+}
+
+/// Shared harness context: one compute service reused by every pipeline so
+/// the XLA artifacts compile once.
+pub struct Ctx {
+    service: ComputeService,
+    pub scale: Scale,
+}
+
+impl Ctx {
+    /// XLA backend when artifacts are present, else the native executor.
+    pub fn auto(scale: Scale) -> Self {
+        let service = match ComputeService::start(Backend::Xla, None) {
+            Ok(svc) => svc,
+            Err(e) => {
+                eprintln!("note: XLA backend unavailable ({e}); using native executor");
+                ComputeService::native()
+            }
+        };
+        let ctx = Self { service, scale };
+        ctx.warm_up();
+        ctx
+    }
+
+    /// Execute each artifact variant once so first-run JIT/alloc costs don't
+    /// land inside the first measurement.
+    fn warm_up(&self) {
+        use crate::runtime::WindowInput;
+        let h = self.handle();
+        for n in [1024usize, 4096, 16384] {
+            let mut wi = WindowInput::default();
+            wi.ids = vec![0; n];
+            wi.values = vec![1.0; n];
+            wi.c[0] = n as f64;
+            wi.n_cap = [n as f64; crate::error::estimator::K];
+            let _ = h.aggregate(wi);
+        }
+    }
+
+    pub fn native(scale: Scale) -> Self {
+        Self { service: ComputeService::native(), scale }
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        self.service.handle()
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.service.handle().backend()
+    }
+}
+
+/// One measured configuration.
+pub struct Measurement {
+    pub system: System,
+    pub summary: RunSummary,
+}
+
+/// Run `system` over a shared trace and summarize across repeats
+/// (`ctx.scale.workers` workers).
+#[allow(clippy::too_many_arguments)]
+pub fn run_system(
+    ctx: &Ctx,
+    system: System,
+    items: &[Item],
+    window: WindowConfig,
+    query: Query,
+    fraction: f64,
+    batch_interval_ms: u64,
+    track_exact: bool,
+) -> Measurement {
+    run_system_workers(
+        ctx,
+        system,
+        items,
+        window,
+        query,
+        fraction,
+        batch_interval_ms,
+        track_exact,
+        ctx.scale.workers,
+    )
+}
+
+/// [`run_system`] with an explicit worker count (scalability sweeps).
+#[allow(clippy::too_many_arguments)]
+pub fn run_system_workers(
+    ctx: &Ctx,
+    system: System,
+    items: &[Item],
+    window: WindowConfig,
+    query: Query,
+    fraction: f64,
+    batch_interval_ms: u64,
+    track_exact: bool,
+    workers: usize,
+) -> Measurement {
+    let mut reports = Vec::new();
+    for rep in 0..ctx.scale.repeats {
+        let pipeline = PipelineBuilder::new()
+            .engine(system.engine())
+            .sampler(system.sampler())
+            .budget(QueryBudget::SamplingFraction(fraction))
+            .query(query.clone())
+            .window(window)
+            .batch_interval_ms(batch_interval_ms)
+            .workers(workers)
+            .track_exact(track_exact)
+            .seed(42 + rep as u64)
+            .build_with_handle(ctx.handle());
+        reports.push(pipeline.run_items(items).expect("pipeline run"));
+    }
+    Measurement { system, summary: summarize(&reports) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_mapping() {
+        assert_eq!(System::SparkApprox.engine(), EngineKind::Batched);
+        assert_eq!(System::SparkApprox.sampler(), SamplerKind::Oasrs);
+        assert_eq!(System::FlinkApprox.engine(), EngineKind::Pipelined);
+        assert_eq!(System::NativeFlink.sampler(), SamplerKind::None);
+        assert_eq!(System::ALL.len(), 6);
+    }
+
+    #[test]
+    fn run_system_produces_summary() {
+        let ctx = Ctx::native(Scale { duration_ms: 4_000, repeats: 2, workers: 1 });
+        let items = crate::stream::StreamGenerator::new(
+            &crate::stream::StreamConfig::gaussian_micro(100.0, 1),
+        )
+        .take_until(4_000);
+        let m = run_system(
+            &ctx,
+            System::SparkApprox,
+            &items,
+            WindowConfig::new(2_000, 1_000),
+            Query::Sum,
+            0.5,
+            500,
+            true,
+        );
+        assert_eq!(m.summary.runs, 2);
+        assert!(m.summary.throughput > 0.0);
+        assert!(m.summary.accuracy_loss < 0.2);
+    }
+}

@@ -1,0 +1,60 @@
+//! # StreamApprox
+//!
+//! A reproduction of *"Approximate Stream Analytics in Apache Flink and
+//! Apache Spark Streaming"* (StreamApprox): approximate computing for stream
+//! analytics via **Online Adaptive Stratified Reservoir Sampling (OASRS)**,
+//! with rigorous error bounds, generic over batched (Spark-Streaming-like)
+//! and pipelined (Flink-like) stream processing models.
+//!
+//! The library is a three-layer system:
+//! * **L3 (this crate)** — the streaming coordinator: broker, samplers,
+//!   engines, windows, queries, error estimation, budgets, metrics.
+//! * **L2/L1 (build time)** — the per-window aggregation job as a JAX graph
+//!   wrapping a Pallas kernel, AOT-lowered to HLO text in `artifacts/` and
+//!   executed through [`runtime`] (PJRT CPU). Python never runs at runtime.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use streamapprox::prelude::*;
+//!
+//! let pipeline = PipelineBuilder::new()
+//!     .engine(EngineKind::Pipelined)
+//!     .sampler(SamplerKind::Oasrs)
+//!     .budget(QueryBudget::SamplingFraction(0.6))
+//!     .query(Query::sum())
+//!     .build_native();
+//! let report = pipeline
+//!     .run_stream(&StreamConfig::gaussian_micro(1000.0, 7), 60_000)
+//!     .unwrap();
+//! println!("{:.0} items/s", report.throughput());
+//! ```
+
+pub mod budget;
+pub mod core;
+pub mod datasets;
+pub mod engine;
+pub mod error;
+pub mod harness;
+pub mod metrics;
+pub mod pipeline;
+pub mod query;
+pub mod runtime;
+pub mod sampling;
+pub mod stream;
+pub mod util;
+pub mod window;
+
+/// Commonly used types, one import away.
+pub mod prelude {
+    pub use crate::budget::QueryBudget;
+    pub use crate::core::{Item, StratumId, MAX_STRATA};
+    pub use crate::engine::{EngineKind, RunReport};
+    pub use crate::error::{ConfidenceInterval, ConfidenceLevel, Estimate};
+    pub use crate::pipeline::{Pipeline, PipelineBuilder, PipelineReport};
+    pub use crate::query::Query;
+    pub use crate::runtime::{Backend, ComputeService};
+    pub use crate::sampling::SamplerKind;
+    pub use crate::stream::{StreamConfig, SubStreamSpec};
+    pub use crate::window::WindowConfig;
+}

@@ -1,0 +1,197 @@
+//! StreamApprox CLI — leader entrypoint (hand-rolled arg parsing; the
+//! offline build environment has no clap).
+//!
+//! ```text
+//! streamapprox info
+//! streamapprox run   [--engine batched|pipelined] [--sampler oasrs|srs|sts|none]
+//!                    [--fraction 0.6] [--workers N] [--duration-ms 30000]
+//!                    [--query sum|mean|count|per-stratum-sum|per-stratum-mean]
+//!                    [--dataset micro|caida|taxi] [--backend xla|native]
+//! streamapprox bench --figure fig5a|fig5b|fig5c|fig6a|fig6bc|fig7a|fig7b|
+//!                             fig7c|fig8|fig9|fig10|fig11|all [--full]
+//! ```
+
+use std::collections::HashMap;
+
+use streamapprox::datasets::{CaidaConfig, TaxiConfig};
+use streamapprox::harness::{figures, Ctx, Scale};
+use streamapprox::prelude::*;
+use streamapprox::runtime::default_artifacts_dir;
+use streamapprox::stream::StreamGenerator;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn cmd_info() {
+    let dir = default_artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match streamapprox::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("  strata: {}, pad id: {}", m.num_strata, m.pad_id);
+            for v in m.sorted_variants() {
+                println!("  variant: {} (N={})", v.file, v.n_items);
+            }
+            match ComputeService::start(Backend::Xla, Some(dir)) {
+                Ok(_) => println!("  XLA backend: OK (PJRT CPU)"),
+                Err(e) => println!("  XLA backend: FAILED ({e})"),
+            }
+        }
+        Err(e) => println!("  not available ({e}); run `make artifacts`"),
+    }
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+    let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
+    let engine = match get("engine", "pipelined").as_str() {
+        "batched" => EngineKind::Batched,
+        _ => EngineKind::Pipelined,
+    };
+    let sampler = match get("sampler", "oasrs").as_str() {
+        "srs" => SamplerKind::Srs,
+        "sts" => SamplerKind::Sts,
+        "none" => SamplerKind::None,
+        _ => SamplerKind::Oasrs,
+    };
+    let query = match get("query", "sum").as_str() {
+        "mean" => Query::Mean,
+        "count" => Query::Count,
+        "per-stratum-sum" => Query::PerStratumSum,
+        "per-stratum-mean" => Query::PerStratumMean,
+        _ => Query::Sum,
+    };
+    let fraction: f64 = get("fraction", "0.6").parse()?;
+    let workers: usize = get("workers", "1").parse()?;
+    let duration: u64 = get("duration-ms", "30000").parse()?;
+    let builder = PipelineBuilder::new()
+        .engine(engine)
+        .sampler(sampler)
+        .budget(QueryBudget::SamplingFraction(fraction))
+        .query(query)
+        .window(WindowConfig::paper_default())
+        .workers(workers);
+    let pipeline = match get("backend", "xla").as_str() {
+        "native" => builder.build_native(),
+        _ => match builder.clone().build_xla() {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("xla backend unavailable ({e}); using native");
+                builder.build_native()
+            }
+        },
+    };
+    let items = match get("dataset", "micro").as_str() {
+        "caida" => CaidaConfig::default().generate(duration),
+        "taxi" => TaxiConfig::default().generate(duration),
+        _ => StreamGenerator::new(&StreamConfig::gaussian_micro(1000.0, 7)).take_until(duration),
+    };
+    let r = pipeline.run_items(&items)?;
+    println!(
+        "{} items in {:.1} ms -> {:.0} items/s; {} windows; mean loss {:.4}%",
+        r.items_processed,
+        r.wall_ns as f64 / 1e6,
+        r.throughput(),
+        r.windows.len(),
+        r.mean_accuracy_loss() * 100.0
+    );
+    for w in r.windows.iter().rev().take(3).collect::<Vec<_>>().into_iter().rev() {
+        if let Some(ci) = w.result.scalar {
+            println!(
+                "  window {:>4}-{:<4}s: {} (exact {:.1})",
+                w.start_ms / 1000,
+                w.end_ms / 1000,
+                ci,
+                w.exact_scalar.unwrap_or(f64::NAN)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) {
+    let scale = if flags.contains_key("full") { Scale::full() } else { Scale::quick() };
+    let ctx = Ctx::auto(scale);
+    eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);
+    let fig = flags.get("figure").map(|s| s.as_str()).unwrap_or("all");
+    let run = |name: &str| fig == "all" || fig == name;
+    if run("fig5a") {
+        figures::fig5a(&ctx).print();
+    }
+    if run("fig5b") {
+        figures::fig5b(&ctx).print();
+    }
+    if run("fig5c") {
+        figures::fig5c(&ctx).print();
+    }
+    if run("fig6a") {
+        figures::fig6a(&ctx).print();
+    }
+    if run("fig6bc") {
+        let (b, c) = figures::fig6bc(&ctx);
+        b.print();
+        c.print();
+    }
+    if run("fig7a") {
+        figures::fig7a(&ctx).print();
+    }
+    if run("fig7b") {
+        figures::fig7b(&ctx).print();
+    }
+    if run("fig7c") {
+        figures::fig7c(&ctx).print();
+    }
+    if run("fig8") {
+        figures::fig8(&ctx).print();
+    }
+    if run("fig9") {
+        let (a, b, c) = figures::fig9(&ctx);
+        a.print();
+        b.print();
+        c.print();
+    }
+    if run("fig10") {
+        let (a, b, c) = figures::fig10(&ctx);
+        a.print();
+        b.print();
+        c.print();
+    }
+    if run("fig11") {
+        figures::fig11(&ctx).print();
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(),
+        Some("run") => {
+            if let Err(e) = cmd_run(&flags) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Some("bench") => cmd_bench(&flags),
+        _ => {
+            eprintln!("usage: streamapprox <info|run|bench> [flags]  (see --help in source)");
+            std::process::exit(2);
+        }
+    }
+}

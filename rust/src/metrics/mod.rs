@@ -1,0 +1,129 @@
+//! Measurement utilities (paper §6.1): throughput, latency, accuracy loss,
+//! multi-run aggregation (the paper reports the average over 10 runs), and
+//! the fixed-accuracy throughput search used by Figs. 7b / 9c / 10c.
+
+use crate::engine::RunReport;
+
+/// Summary statistics over repeated runs of the same configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub runs: usize,
+    /// Mean throughput (items/s).
+    pub throughput: f64,
+    /// Std-dev of throughput across runs.
+    pub throughput_sd: f64,
+    /// Mean of mean-accuracy-loss across runs.
+    pub accuracy_loss: f64,
+    /// Mean per-window processing latency (ns).
+    pub window_latency_ns: f64,
+    /// Mean total items per run.
+    pub items: f64,
+    /// Mean wall time per run (ns).
+    pub wall_ns: f64,
+}
+
+/// Aggregate several runs into a summary.
+pub fn summarize(reports: &[RunReport]) -> RunSummary {
+    if reports.is_empty() {
+        return RunSummary::default();
+    }
+    let n = reports.len() as f64;
+    let thr: Vec<f64> = reports.iter().map(|r| r.throughput()).collect();
+    let thr_mean = thr.iter().sum::<f64>() / n;
+    let thr_var = thr.iter().map(|t| (t - thr_mean) * (t - thr_mean)).sum::<f64>() / n;
+    let losses: Vec<f64> = reports
+        .iter()
+        .map(|r| r.mean_accuracy_loss())
+        .filter(|l| l.is_finite())
+        .collect();
+    let loss = if losses.is_empty() {
+        f64::NAN
+    } else {
+        losses.iter().sum::<f64>() / losses.len() as f64
+    };
+    RunSummary {
+        runs: reports.len(),
+        throughput: thr_mean,
+        throughput_sd: thr_var.sqrt(),
+        accuracy_loss: loss,
+        window_latency_ns: reports.iter().map(|r| r.mean_window_latency_ns()).sum::<f64>() / n,
+        items: reports.iter().map(|r| r.items_processed as f64).sum::<f64>() / n,
+        wall_ns: reports.iter().map(|r| r.wall_ns as f64).sum::<f64>() / n,
+    }
+}
+
+/// Binary-search the sampling fraction that achieves a target accuracy loss
+/// (paper's "fix the accuracy loss, compare throughputs" methodology):
+/// returns the smallest tested fraction whose measured loss ≤ target.
+///
+/// `measure(fraction) -> loss` runs the system at the fraction and returns
+/// the observed mean accuracy loss (assumed monotone non-increasing in the
+/// fraction, which holds in expectation).
+pub fn fraction_for_accuracy(
+    mut measure: impl FnMut(f64) -> f64,
+    target_loss: f64,
+    iters: usize,
+) -> f64 {
+    let mut lo = 0.01;
+    let mut hi = 1.0;
+    // If even full sampling misses the target (shouldn't happen), return 1.
+    let mut best = 1.0;
+    for _ in 0..iters {
+        let mid = 0.5 * (lo + hi);
+        let loss = measure(mid);
+        if loss <= target_loss {
+            best = mid;
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo < 0.02 {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_empty() {
+        let s = summarize(&[]);
+        assert_eq!(s.runs, 0);
+    }
+
+    #[test]
+    fn summarize_multiple() {
+        let mk = |items: u64, wall: u64| RunReport {
+            windows: vec![],
+            items_processed: items,
+            wall_ns: wall,
+        };
+        let s = summarize(&[mk(1000, 1_000_000_000), mk(2000, 1_000_000_000)]);
+        assert_eq!(s.runs, 2);
+        assert!((s.throughput - 1500.0).abs() < 1e-9);
+        assert!(s.throughput_sd > 0.0);
+        assert!(s.accuracy_loss.is_nan()); // no windows
+    }
+
+    #[test]
+    fn fraction_search_monotone_plant() {
+        // loss(f) = 0.05 / sqrt(f) -> target 0.1 needs f >= 0.25
+        let f = fraction_for_accuracy(|f| 0.05 / f.sqrt(), 0.1, 12);
+        assert!((f - 0.25).abs() < 0.1, "f {f}");
+    }
+
+    #[test]
+    fn fraction_search_easy_target() {
+        let f = fraction_for_accuracy(|_| 0.0, 0.5, 8);
+        assert!(f < 0.1, "f {f}");
+    }
+
+    #[test]
+    fn fraction_search_impossible_target() {
+        let f = fraction_for_accuracy(|_| 1.0, 0.001, 8);
+        assert_eq!(f, 1.0);
+    }
+}

@@ -1,0 +1,255 @@
+//! The public face of StreamApprox: a builder that assembles source,
+//! sampler, engine, window, query, budget, and compute backend into a
+//! runnable pipeline (paper Fig. 1 / Algorithm 2).
+//!
+//! ```text
+//! input stream -> [broker] -> engine{ sampler -> windows } -> XLA query
+//!                                 -> output ± error bound, feedback loop
+//! ```
+
+use crate::budget::{CostFunction, QueryBudget};
+use crate::core::{Item, Result};
+use crate::engine::batched::BatchedEngine;
+use crate::engine::pipelined::PipelinedEngine;
+use crate::engine::{EngineConfig, EngineKind, RunReport};
+use crate::query::{Query, QueryExecutor};
+use crate::runtime::{Backend, ComputeHandle, ComputeService};
+use crate::sampling::SamplerKind;
+use crate::stream::{StreamConfig, StreamGenerator};
+use crate::window::WindowConfig;
+
+/// Builder for a [`Pipeline`].
+#[derive(Debug, Clone)]
+pub struct PipelineBuilder {
+    engine: EngineKind,
+    sampler: SamplerKind,
+    budget: QueryBudget,
+    query: Query,
+    window: WindowConfig,
+    batch_interval_ms: u64,
+    workers: usize,
+    nodes: usize,
+    track_exact: bool,
+    seed: u64,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        Self {
+            engine: EngineKind::Pipelined,
+            sampler: SamplerKind::Oasrs,
+            budget: QueryBudget::SamplingFraction(0.6),
+            query: Query::Sum,
+            window: WindowConfig::paper_default(),
+            batch_interval_ms: 500,
+            workers: 1,
+            nodes: 1,
+            track_exact: true,
+            seed: 42,
+        }
+    }
+}
+
+impl PipelineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.engine = kind;
+        self
+    }
+
+    pub fn sampler(mut self, kind: SamplerKind) -> Self {
+        self.sampler = kind;
+        self
+    }
+
+    pub fn budget(mut self, budget: QueryBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn query(mut self, query: Query) -> Self {
+        self.query = query;
+        self
+    }
+
+    pub fn window(mut self, window: WindowConfig) -> Self {
+        self.window = window;
+        self
+    }
+
+    pub fn batch_interval_ms(mut self, ms: u64) -> Self {
+        self.batch_interval_ms = ms;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn track_exact(mut self, yes: bool) -> Self {
+        self.track_exact = yes;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Build with the pure-Rust compute backend (no artifacts needed).
+    pub fn build_native(self) -> Pipeline {
+        let svc = ComputeService::native();
+        let handle = svc.handle();
+        self.finish(Some(svc), handle)
+    }
+
+    /// Build with the XLA/PJRT backend (loads `artifacts/`).
+    pub fn build_xla(self) -> Result<Pipeline> {
+        let svc = ComputeService::start(Backend::Xla, None)?;
+        let handle = svc.handle();
+        Ok(self.finish(Some(svc), handle))
+    }
+
+    /// Build on a shared compute handle (lets many pipelines reuse one
+    /// compiled artifact set — the benchmark harness does this).
+    pub fn build_with_handle(self, handle: ComputeHandle) -> Pipeline {
+        self.finish(None, handle)
+    }
+
+    fn finish(self, service: Option<ComputeService>, handle: ComputeHandle) -> Pipeline {
+        let config = EngineConfig {
+            kind: self.engine,
+            batch_interval_ms: self.batch_interval_ms,
+            workers: self.workers * self.nodes.max(1),
+            nodes: self.nodes,
+            track_exact: self.track_exact,
+            channel_capacity: 16 * 1024,
+            seed: self.seed,
+        };
+        Pipeline {
+            config,
+            window: self.window,
+            query: self.query,
+            sampler: self.sampler,
+            budget: self.budget,
+            executor: QueryExecutor::new(handle),
+            _service: service,
+        }
+    }
+}
+
+/// A runnable StreamApprox pipeline.
+pub struct Pipeline {
+    config: EngineConfig,
+    window: WindowConfig,
+    query: Query,
+    sampler: SamplerKind,
+    budget: QueryBudget,
+    executor: QueryExecutor,
+    /// Owned compute service (None when sharing a handle).
+    _service: Option<ComputeService>,
+}
+
+/// Convenience alias for the run outcome.
+pub type PipelineReport = RunReport;
+
+impl Pipeline {
+    /// Run over a pre-generated, event-time-sorted trace.
+    pub fn run_items(&self, items: &[Item]) -> Result<RunReport> {
+        let mut cost = CostFunction::new(self.budget.clone());
+        match self.config.kind {
+            EngineKind::Batched => {
+                BatchedEngine::new(&self.config, self.window, self.query.clone(), &self.executor)
+                    .run(items, self.sampler, &mut cost)
+            }
+            EngineKind::Pipelined => {
+                PipelinedEngine::new(&self.config, self.window, self.query.clone(), &self.executor)
+                    .run(items, self.sampler, &mut cost)
+            }
+        }
+    }
+
+    /// Generate `duration_ms` of a synthetic stream and run over it.
+    pub fn run_stream(&self, stream: &StreamConfig, duration_ms: u64) -> Result<RunReport> {
+        let items = StreamGenerator::new(stream).take_until(duration_ms);
+        self.run_items(&items)
+    }
+
+    pub fn sampler(&self) -> SamplerKind {
+        self.sampler
+    }
+
+    pub fn engine_kind(&self) -> EngineKind {
+        self.config.kind
+    }
+
+    pub fn window_config(&self) -> WindowConfig {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_run() {
+        let p = PipelineBuilder::new()
+            .window(WindowConfig::new(2_000, 1_000))
+            .build_native();
+        let r = p
+            .run_stream(&StreamConfig::gaussian_micro(100.0, 3), 6_000)
+            .unwrap();
+        assert!(!r.windows.is_empty());
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn batched_and_pipelined_same_accuracy_class() {
+        let mk = |kind| {
+            PipelineBuilder::new()
+                .engine(kind)
+                .sampler(SamplerKind::Oasrs)
+                .budget(QueryBudget::SamplingFraction(0.6))
+                .window(WindowConfig::new(2_000, 1_000))
+                .build_native()
+        };
+        let stream = StreamConfig::gaussian_micro(100.0, 5);
+        let rb = mk(EngineKind::Batched).run_stream(&stream, 10_000).unwrap();
+        let rp = mk(EngineKind::Pipelined).run_stream(&stream, 10_000).unwrap();
+        assert!(rb.mean_accuracy_loss() < 0.05);
+        assert!(rp.mean_accuracy_loss() < 0.05);
+    }
+
+    #[test]
+    fn shared_handle_pipelines() {
+        let svc = ComputeService::native();
+        let a = PipelineBuilder::new()
+            .window(WindowConfig::tumbling(1_000))
+            .build_with_handle(svc.handle());
+        let b = PipelineBuilder::new()
+            .sampler(SamplerKind::Srs)
+            .window(WindowConfig::tumbling(1_000))
+            .build_with_handle(svc.handle());
+        let stream = StreamConfig::gaussian_micro(100.0, 6);
+        assert!(!a.run_stream(&stream, 4_000).unwrap().windows.is_empty());
+        assert!(!b.run_stream(&stream, 4_000).unwrap().windows.is_empty());
+    }
+
+    #[test]
+    fn accessors() {
+        let p = PipelineBuilder::new().sampler(SamplerKind::Sts).build_native();
+        assert_eq!(p.sampler(), SamplerKind::Sts);
+        assert_eq!(p.engine_kind(), EngineKind::Pipelined);
+        assert_eq!(p.window_config(), WindowConfig::paper_default());
+    }
+}

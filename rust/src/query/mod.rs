@@ -1,0 +1,319 @@
+//! Approximate linear queries (paper §3.2): sum, mean, count, histogram and
+//! per-stratum aggregates, executed over a window sample through the
+//! compute service (XLA artifacts or the native executor) and annotated with
+//! error bounds (§3.3).
+
+use crate::core::{Error, Result, MAX_STRATA};
+use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
+use crate::error::estimator::K;
+use crate::runtime::{ComputeHandle, WindowInput, WindowOutput};
+use crate::sampling::SampleResult;
+
+/// A streaming query over the item values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Query {
+    /// Total of all item values (Eq. 3).
+    Sum,
+    /// Mean of all item values (Eq. 4).
+    Mean,
+    /// Number of items (estimated from weights when sampled).
+    Count,
+    /// Per-stratum totals — e.g. TCP/UDP/ICMP traffic sizes (§6.2).
+    PerStratumSum,
+    /// Per-stratum means — e.g. average trip distance per borough (§6.3).
+    PerStratumMean,
+    /// Histogram of values over fixed buckets in [lo, hi).
+    Histogram { lo: f64, hi: f64, buckets: usize },
+}
+
+impl Query {
+    pub fn sum() -> Self {
+        Query::Sum
+    }
+
+    pub fn mean() -> Self {
+        Query::Mean
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Query::Sum => "sum",
+            Query::Mean => "mean",
+            Query::Count => "count",
+            Query::PerStratumSum => "per-stratum-sum",
+            Query::PerStratumMean => "per-stratum-mean",
+            Query::Histogram { .. } => "histogram",
+        }
+    }
+}
+
+/// Result of a query over one window: `output ± error bound`.
+#[derive(Debug, Clone)]
+pub struct QueryResult {
+    /// Scalar result with CI (Sum/Mean/Count), if applicable.
+    pub scalar: Option<ConfidenceInterval>,
+    /// Per-stratum values (PerStratum* and Histogram queries).
+    pub per_stratum: Option<Vec<f64>>,
+    /// The raw estimate backing the result.
+    pub output: WindowOutput,
+}
+
+impl QueryResult {
+    /// Point value of the scalar result.
+    pub fn value(&self) -> f64 {
+        self.scalar.map(|ci| ci.value).unwrap_or(f64::NAN)
+    }
+
+    /// Relative error bound of the scalar result.
+    pub fn relative_bound(&self) -> f64 {
+        self.scalar.map(|ci| ci.relative()).unwrap_or(f64::NAN)
+    }
+}
+
+/// Executes queries over window samples via a compute handle.
+pub struct QueryExecutor {
+    compute: ComputeHandle,
+    level: ConfidenceLevel,
+}
+
+impl QueryExecutor {
+    pub fn new(compute: ComputeHandle) -> Self {
+        Self { compute, level: ConfidenceLevel::P95 }
+    }
+
+    pub fn with_level(mut self, level: ConfidenceLevel) -> Self {
+        self.level = level;
+        self
+    }
+
+    /// Run `query` over a window's merged sample.
+    pub fn execute(&self, query: &Query, window: &SampleResult) -> Result<QueryResult> {
+        let input = WindowInput::from_sample(&window.sample, &window.state);
+        let output = self.compute.aggregate(input)?;
+        self.interpret(query, window, output)
+    }
+
+    /// Interpret a compute output under a query (separated for tests).
+    pub fn interpret(
+        &self,
+        query: &Query,
+        window: &SampleResult,
+        output: WindowOutput,
+    ) -> Result<QueryResult> {
+        let est = &output.estimate;
+        let result = match query {
+            Query::Sum => QueryResult {
+                scalar: Some(ConfidenceInterval::for_sum(est, self.level)),
+                per_stratum: None,
+                output: output.clone(),
+            },
+            Query::Mean => QueryResult {
+                scalar: Some(ConfidenceInterval::for_mean(est, self.level)),
+                per_stratum: None,
+                output: output.clone(),
+            },
+            Query::Count => {
+                // Arrival counters are exact (maintained outside the sample),
+                // so COUNT carries a zero-width bound.
+                let ci = ConfidenceInterval { value: est.total_c, bound: 0.0, level: self.level };
+                QueryResult { scalar: Some(ci), per_stratum: None, output: output.clone() }
+            }
+            Query::PerStratumSum => QueryResult {
+                scalar: Some(ConfidenceInterval::for_sum(est, self.level)),
+                per_stratum: Some(est.strata_sums.to_vec()),
+                output: output.clone(),
+            },
+            Query::PerStratumMean => {
+                let mut means = vec![0.0; MAX_STRATA];
+                for s in 0..K {
+                    let c = window.state.c[s];
+                    if c > 0.0 {
+                        means[s] = est.strata_sums[s] / c;
+                    }
+                }
+                QueryResult {
+                    scalar: Some(ConfidenceInterval::for_mean(est, self.level)),
+                    per_stratum: Some(means),
+                    output: output.clone(),
+                }
+            }
+            Query::Histogram { lo, hi, buckets } => {
+                if *buckets == 0 || hi <= lo {
+                    return Err(Error::Query("bad histogram spec".into()));
+                }
+                // Weighted histogram over the sample: each selected item of
+                // stratum i represents W_i originals.
+                let mut hist = vec![0.0; *buckets];
+                let width = (hi - lo) / *buckets as f64;
+                for &(s, v) in &window.sample {
+                    let w = est.weights[s as usize];
+                    if v >= *lo && v < *hi {
+                        let b = ((v - lo) / width) as usize;
+                        hist[b.min(buckets - 1)] += w;
+                    }
+                }
+                QueryResult {
+                    scalar: Some(ConfidenceInterval::for_sum(est, self.level)),
+                    per_stratum: Some(hist),
+                    output: output.clone(),
+                }
+            }
+        };
+        Ok(result)
+    }
+}
+
+/// Exact (no-sampling) evaluation of a query over raw items — the ground
+/// truth for accuracy-loss measurements (§6.1: |approx − exact| / exact).
+pub fn exact_eval(query: &Query, items: &[(u16, f64)]) -> (f64, Vec<f64>) {
+    let mut count = [0.0f64; MAX_STRATA];
+    let mut sum = [0.0f64; MAX_STRATA];
+    for &(s, v) in items {
+        if (s as usize) < MAX_STRATA {
+            count[s as usize] += 1.0;
+            sum[s as usize] += v;
+        }
+    }
+    let total_c: f64 = count.iter().sum();
+    let total_sum: f64 = sum.iter().sum();
+    match query {
+        Query::Sum => (total_sum, vec![]),
+        Query::Mean => (if total_c > 0.0 { total_sum / total_c } else { 0.0 }, vec![]),
+        Query::Count => (total_c, vec![]),
+        Query::PerStratumSum => (total_sum, sum.to_vec()),
+        Query::PerStratumMean => {
+            let means = (0..MAX_STRATA)
+                .map(|s| if count[s] > 0.0 { sum[s] / count[s] } else { 0.0 })
+                .collect();
+            (if total_c > 0.0 { total_sum / total_c } else { 0.0 }, means)
+        }
+        Query::Histogram { lo, hi, buckets } => {
+            let mut hist = vec![0.0; *buckets];
+            let width = (hi - lo) / *buckets as f64;
+            for &(_, v) in items {
+                if v >= *lo && v < *hi {
+                    let b = ((v - lo) / width) as usize;
+                    hist[b.min(buckets - 1)] += 1.0;
+                }
+            }
+            (total_sum, hist)
+        }
+    }
+}
+
+/// Accuracy loss |approx − exact| / |exact| (0 when exact == 0 == approx).
+pub fn accuracy_loss(approx: f64, exact: f64) -> f64 {
+    if exact == 0.0 {
+        if approx == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (approx - exact).abs() / exact.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Item;
+    use crate::runtime::ComputeService;
+    use crate::sampling::{NoopSampler, Sampler};
+
+    fn window_from_items(items: &[(u16, f64)]) -> SampleResult {
+        let mut s = NoopSampler::new();
+        for (i, &(st, v)) in items.iter().enumerate() {
+            s.offer(&Item::new(st, v, i as u64));
+        }
+        s.finish_interval()
+    }
+
+    fn items() -> Vec<(u16, f64)> {
+        let mut v = Vec::new();
+        for i in 0..100 {
+            v.push((0, 10.0 + (i % 5) as f64));
+        }
+        for i in 0..50 {
+            v.push((1, 100.0 + (i % 3) as f64));
+        }
+        v
+    }
+
+    #[test]
+    fn sum_query_exact_on_full_sample() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        let r = exec.execute(&Query::Sum, &w).unwrap();
+        let (exact, _) = exact_eval(&Query::Sum, &items());
+        assert!((r.value() - exact).abs() < 1e-9);
+        assert_eq!(r.scalar.unwrap().bound, 0.0); // fully sampled
+    }
+
+    #[test]
+    fn mean_and_count() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        let rm = exec.execute(&Query::Mean, &w).unwrap();
+        let (exact_mean, _) = exact_eval(&Query::Mean, &items());
+        assert!((rm.value() - exact_mean).abs() < 1e-9);
+        let rc = exec.execute(&Query::Count, &w).unwrap();
+        assert_eq!(rc.value(), 150.0);
+    }
+
+    #[test]
+    fn per_stratum_queries() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        let r = exec.execute(&Query::PerStratumSum, &w).unwrap();
+        let (_, exact) = exact_eval(&Query::PerStratumSum, &items());
+        let got = r.per_stratum.unwrap();
+        for s in 0..2 {
+            assert!((got[s] - exact[s]).abs() < 1e-9, "stratum {s}");
+        }
+        let r = exec.execute(&Query::PerStratumMean, &w).unwrap();
+        let (_, exact) = exact_eval(&Query::PerStratumMean, &items());
+        let got = r.per_stratum.unwrap();
+        for s in 0..2 {
+            assert!((got[s] - exact[s]).abs() < 1e-9, "stratum {s}");
+        }
+    }
+
+    #[test]
+    fn histogram_weighted() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        let q = Query::Histogram { lo: 0.0, hi: 200.0, buckets: 4 };
+        let r = exec.execute(&q, &w).unwrap();
+        let hist = r.per_stratum.unwrap();
+        // stratum 0 values are 10..14 -> bucket 0; stratum 1 ~ 100..102 -> bucket 2
+        assert_eq!(hist[0], 100.0);
+        assert_eq!(hist[2], 50.0);
+        assert_eq!(hist[1] + hist[3], 0.0);
+    }
+
+    #[test]
+    fn bad_histogram_rejected() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        assert!(exec
+            .execute(&Query::Histogram { lo: 1.0, hi: 1.0, buckets: 4 }, &w)
+            .is_err());
+        assert!(exec
+            .execute(&Query::Histogram { lo: 0.0, hi: 1.0, buckets: 0 }, &w)
+            .is_err());
+    }
+
+    #[test]
+    fn accuracy_loss_metric() {
+        assert_eq!(accuracy_loss(101.0, 100.0), 0.01);
+        assert_eq!(accuracy_loss(0.0, 0.0), 0.0);
+        assert!(accuracy_loss(1.0, 0.0).is_infinite());
+        assert_eq!(accuracy_loss(99.0, 100.0), 0.01);
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact manifest: describes the AOT-compiled HLO variants produced by
+//! `python/compile/aot.py` (shapes, output layout, file names).  Parsed with
+//! the in-tree JSON parser (`util::json`).
+
+use std::path::{Path, PathBuf};
+
+use crate::core::{Error, Result};
+use crate::util::json::{parse, Value};
+
+/// One AOT variant: an HLO module compiled for a fixed item capacity.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    /// Static item capacity N of this module.
+    pub n_items: usize,
+    /// Number of strata K.
+    pub num_strata: usize,
+    /// File name (relative to the artifacts dir).
+    pub file: String,
+}
+
+/// Output descriptor (name + shape) for sanity checks.
+#[derive(Debug, Clone)]
+pub struct OutputDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub num_strata: usize,
+    pub pad_id: i32,
+    pub outputs: Vec<OutputDesc>,
+    pub variants: Vec<Variant>,
+    pub jax_version: String,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn field<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key)
+        .ok_or_else(|| Error::Artifact(format!("manifest missing field {key:?}")))
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let v = parse(&text).map_err(Error::Artifact)?;
+
+        let num_strata = field(&v, "num_strata")?
+            .as_i64()
+            .ok_or_else(|| Error::Artifact("num_strata not a number".into()))?
+            as usize;
+        let pad_id = field(&v, "pad_id")?
+            .as_i64()
+            .ok_or_else(|| Error::Artifact("pad_id not a number".into()))? as i32;
+
+        let mut outputs = Vec::new();
+        for o in field(&v, "outputs")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("outputs not an array".into()))?
+        {
+            outputs.push(OutputDesc {
+                name: field(o, "name")?
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("output name not a string".into()))?
+                    .to_string(),
+                shape: field(o, "shape")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Artifact("shape not an array".into()))?
+                    .iter()
+                    .filter_map(|x| x.as_i64())
+                    .map(|x| x as usize)
+                    .collect(),
+            });
+        }
+
+        let mut variants = Vec::new();
+        for var in field(&v, "variants")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("variants not an array".into()))?
+        {
+            variants.push(Variant {
+                n_items: field(var, "n_items")?
+                    .as_i64()
+                    .ok_or_else(|| Error::Artifact("n_items not a number".into()))?
+                    as usize,
+                num_strata: field(var, "num_strata")?
+                    .as_i64()
+                    .ok_or_else(|| Error::Artifact("num_strata not a number".into()))?
+                    as usize,
+                file: field(var, "file")?
+                    .as_str()
+                    .ok_or_else(|| Error::Artifact("file not a string".into()))?
+                    .to_string(),
+            });
+        }
+
+        let jax_version = v
+            .get("jax_version")
+            .and_then(|x| x.as_str())
+            .unwrap_or("")
+            .to_string();
+
+        let m = Manifest { num_strata, pad_id, outputs, variants, jax_version, dir: dir.to_path_buf() };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.variants.is_empty() {
+            return Err(Error::Artifact("manifest has no variants".into()));
+        }
+        let names: Vec<&str> = self.outputs.iter().map(|o| o.name.as_str()).collect();
+        if names != ["partials", "weights", "strata_sums", "scalars"] {
+            return Err(Error::Artifact(format!(
+                "unexpected output layout: {names:?}"
+            )));
+        }
+        for v in &self.variants {
+            if v.num_strata != self.num_strata {
+                return Err(Error::Artifact(format!(
+                    "variant {} strata mismatch: {} != {}",
+                    v.file, v.num_strata, self.num_strata
+                )));
+            }
+            if !self.dir.join(&v.file).exists() {
+                return Err(Error::Artifact(format!(
+                    "missing artifact file {}",
+                    self.dir.join(&v.file).display()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Variants sorted ascending by capacity.
+    pub fn sorted_variants(&self) -> Vec<&Variant> {
+        let mut v: Vec<&Variant> = self.variants.iter().collect();
+        v.sort_by_key(|v| v.n_items);
+        v
+    }
+
+    /// Largest capacity available.
+    pub fn max_capacity(&self) -> usize {
+        self.variants.iter().map(|v| v.n_items).max().unwrap_or(0)
+    }
+
+    /// Path of a variant's HLO text file.
+    pub fn variant_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+/// Resolve the default artifacts dir: `$STREAMAPPROX_ARTIFACTS` or the
+/// nearest ancestor `artifacts/` containing a manifest.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("STREAMAPPROX_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.num_strata, crate::core::MAX_STRATA);
+        assert_eq!(m.pad_id, -1);
+        assert!(m.max_capacity() >= 1024);
+        let sorted = m.sorted_variants();
+        assert!(sorted.windows(2).all(|w| w[0].n_items < w[1].n_items));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent/nowhere").is_err());
+    }
+
+    #[test]
+    fn bad_layout_rejected() {
+        let dir = std::env::temp_dir().join(format!("sa-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"num_strata":16,"pad_id":-1,"outputs":[{"name":"x","shape":[1]}],"variants":[{"n_items":8,"num_strata":16,"file":"f.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_variant_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("sa-manifest-test2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"num_strata":16,"pad_id":-1,
+                "outputs":[{"name":"partials","shape":[16,3]},{"name":"weights","shape":[16]},
+                           {"name":"strata_sums","shape":[16]},{"name":"scalars","shape":[6]}],
+                "variants":[{"n_items":8,"num_strata":16,"file":"missing.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

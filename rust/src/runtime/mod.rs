@@ -1,0 +1,18 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and executes the per-window aggregation job via
+//! the `xla` crate's PJRT CPU client.  Python never runs here — the HLO text
+//! files in `artifacts/` are the only hand-off.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json`.
+//! * [`xla_engine`] — compiles + executes the HLO variants; chunk-combining
+//!   for oversized windows; plus a semantics-identical pure-Rust executor.
+//! * [`service`] — hosts the engine on a dedicated thread (PJRT handles are
+//!   not `Send`) behind a cloneable handle.
+
+pub mod manifest;
+pub mod service;
+pub mod xla_engine;
+
+pub use manifest::{default_artifacts_dir, Manifest};
+pub use service::{Backend, ComputeHandle, ComputeService};
+pub use xla_engine::{RustExecutor, WindowInput, WindowOutput, XlaEngine};

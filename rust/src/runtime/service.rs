@@ -1,0 +1,213 @@
+//! Thread-hosted compute service around [`XlaEngine`].
+//!
+//! PJRT handles are not `Send`, so the engine lives on a dedicated thread;
+//! coordinator workers talk to it through a cloneable [`ComputeHandle`]
+//! (crossbeam rendezvous per request).  This mirrors a real deployment where
+//! the aggregation job is shipped to an executor service rather than run
+//! inline in the router thread.
+//!
+//! Backend selection:
+//! * [`Backend::Xla`] — the AOT artifacts via PJRT (the production path).
+//! * [`Backend::Native`] — pure-Rust executor with identical semantics
+//!   (baseline, tests, and environments without artifacts).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::core::{Error, Result};
+use crate::util::channel::{bounded, Sender};
+
+use super::manifest::{default_artifacts_dir, Manifest};
+use super::xla_engine::{RustExecutor, WindowInput, WindowOutput, XlaEngine};
+
+/// Which executor the service hosts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts on the PJRT CPU client.
+    Xla,
+    /// Pure-Rust reference executor.
+    Native,
+}
+
+struct Request {
+    input: WindowInput,
+    reply: Sender<Result<WindowOutput>>,
+}
+
+/// Cloneable handle for submitting window-aggregation jobs.
+pub struct ComputeHandle {
+    tx: Sender<Request>,
+    jobs: Arc<AtomicU64>,
+    backend: Backend,
+}
+
+impl Clone for ComputeHandle {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone(), jobs: self.jobs.clone(), backend: self.backend }
+    }
+}
+
+impl ComputeHandle {
+    /// Execute one window-aggregation job (blocking rendezvous).
+    pub fn aggregate(&self, input: WindowInput) -> Result<WindowOutput> {
+        let (rtx, rrx) = bounded(1);
+        self.tx
+            .send(Request { input, reply: rtx })
+            .map_err(|_| Error::Xla("compute service stopped".into()))?;
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        rrx.recv()
+            .ok_or_else(|| Error::Xla("compute service dropped reply".into()))?
+    }
+
+    /// Total jobs submitted through all clones of this handle.
+    pub fn jobs_submitted(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+}
+
+/// Owns the service thread; dropping it shuts the thread down.
+pub struct ComputeService {
+    handle: ComputeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Start a service with the given backend. For [`Backend::Xla`] the
+    /// artifacts are loaded from `artifacts_dir` (default: auto-discover).
+    pub fn start(backend: Backend, artifacts_dir: Option<std::path::PathBuf>) -> Result<Self> {
+        let (tx, rx) = bounded::<Request>(1024);
+        let (ready_tx, ready_rx) = bounded::<Result<()>>(1);
+
+        let join = std::thread::Builder::new()
+            .name("streamapprox-compute".into())
+            .spawn(move || {
+                enum Exec {
+                    Xla(XlaEngine),
+                    Native(RustExecutor),
+                }
+                let exec = match backend {
+                    Backend::Native => {
+                        let _ = ready_tx.send(Ok(()));
+                        Exec::Native(RustExecutor)
+                    }
+                    Backend::Xla => {
+                        let dir = artifacts_dir.unwrap_or_else(default_artifacts_dir);
+                        match Manifest::load(&dir).and_then(|m| XlaEngine::load(&m)) {
+                            Ok(engine) => {
+                                let _ = ready_tx.send(Ok(()));
+                                Exec::Xla(engine)
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        }
+                    }
+                };
+                while let Some(req) = rx.recv() {
+                    let out = match &exec {
+                        Exec::Xla(engine) => engine.aggregate(&req.input),
+                        Exec::Native(r) => Ok(r.aggregate(&req.input)),
+                    };
+                    // Receiver may have timed out / dropped; ignore.
+                    let _ = req.reply.send(out);
+                }
+            })
+            .map_err(|e| Error::Xla(format!("spawn compute thread: {e}")))?;
+
+        ready_rx
+            .recv()
+            .ok_or_else(|| Error::Xla("compute thread died during init".into()))??;
+
+        Ok(Self {
+            handle: ComputeHandle {
+                tx,
+                jobs: Arc::new(AtomicU64::new(0)),
+                backend,
+            },
+            join: Some(join),
+        })
+    }
+
+    /// Convenience: native-backend service (never fails on missing artifacts).
+    pub fn native() -> Self {
+        Self::start(Backend::Native, None).expect("native backend cannot fail")
+    }
+
+    /// Handle for submitting jobs (cloneable, Send + Sync).
+    pub fn handle(&self) -> ComputeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        self.handle.tx.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::MAX_STRATA;
+    use crate::error::estimator::K;
+
+    fn input() -> WindowInput {
+        let mut wi = WindowInput::default();
+        for i in 0..100 {
+            wi.ids.push((i % MAX_STRATA) as i32);
+            wi.values.push(i as f32);
+        }
+        for i in 0..K {
+            wi.c[i] = 20.0;
+            wi.n_cap[i] = 10.0;
+        }
+        wi
+    }
+
+    #[test]
+    fn native_service_roundtrip() {
+        let svc = ComputeService::native();
+        let h = svc.handle();
+        let out = h.aggregate(input()).unwrap();
+        assert!((out.partials.total_y() - 100.0).abs() < 1e-9);
+        assert_eq!(h.jobs_submitted(), 1);
+        assert_eq!(h.backend(), Backend::Native);
+    }
+
+    #[test]
+    fn concurrent_submissions() {
+        let svc = ComputeService::native();
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let out = h.aggregate(input()).unwrap();
+                    assert!(out.estimate.sum.is_finite());
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(svc.handle().jobs_submitted(), 8 * 50);
+    }
+
+    #[test]
+    fn xla_backend_missing_artifacts_errors() {
+        let res = ComputeService::start(
+            Backend::Xla,
+            Some(std::path::PathBuf::from("/nonexistent")),
+        );
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! PJRT-backed execution of the AOT window-aggregation artifacts.
+//!
+//! Loads each HLO-text variant once, compiles it on the PJRT CPU client, and
+//! executes it with padded fixed-shape inputs.  Samples larger than the
+//! biggest variant are chunked; per-stratum partials combine associatively
+//! and the estimate is finished with `error::estimator` (the same arithmetic
+//! as the in-graph epilogue — cross-checked in tests).
+//!
+//! `XlaEngine` holds raw PJRT pointers and is **not** `Send`; the
+//! [`super::service::ComputeService`] wraps it in a dedicated thread for the
+//! multi-worker coordinator.
+
+use crate::core::{Error, Result, MAX_STRATA};
+use crate::error::estimator::{estimate, Estimate, StrataPartials, StrataState, K};
+
+use super::manifest::Manifest;
+
+/// Input of one window-aggregation job (already sampled + weighted counters).
+#[derive(Debug, Clone, Default)]
+pub struct WindowInput {
+    /// Stratum id per sampled item.
+    pub ids: Vec<i32>,
+    /// Value per sampled item.
+    pub values: Vec<f32>,
+    /// Per-stratum arrival counters C_i.
+    pub c: [f64; K],
+    /// Per-stratum reservoir capacities N_i.
+    pub n_cap: [f64; K],
+}
+
+impl WindowInput {
+    /// Build from (stratum, value) pairs + counters.
+    pub fn from_sample(sample: &[(u16, f64)], state: &StrataState) -> Self {
+        let mut ids = Vec::with_capacity(sample.len());
+        let mut values = Vec::with_capacity(sample.len());
+        for &(s, v) in sample {
+            ids.push(s as i32);
+            values.push(v as f32);
+        }
+        Self { ids, values, c: state.c, n_cap: state.n_cap }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    fn strata_state(&self) -> StrataState {
+        StrataState { c: self.c, n_cap: self.n_cap }
+    }
+}
+
+/// Output of one window-aggregation job.
+#[derive(Debug, Clone)]
+pub struct WindowOutput {
+    /// Combined per-stratum partials.
+    pub partials: StrataPartials,
+    /// Finished estimate (Eq. 1-9).
+    pub estimate: Estimate,
+    /// Number of XLA executions this job needed (1 unless chunked).
+    pub executions: u32,
+}
+
+struct CompiledVariant {
+    n_items: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU engine holding compiled variants of the window-aggregation HLO.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    variants: Vec<CompiledVariant>,
+    num_strata: usize,
+}
+
+impl XlaEngine {
+    /// Compile every variant in the manifest on a fresh PJRT CPU client.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        let mut variants = Vec::new();
+        for v in manifest.sorted_variants() {
+            let path = manifest.variant_path(v);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+            )
+            .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))?;
+            variants.push(CompiledVariant { n_items: v.n_items, exe });
+        }
+        Ok(Self { client, variants, num_strata: manifest.num_strata })
+    }
+
+    /// Platform name of the underlying PJRT client (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Capacity of the largest compiled variant.
+    pub fn max_capacity(&self) -> usize {
+        self.variants.last().map(|v| v.n_items).unwrap_or(0)
+    }
+
+    fn pick_variant(&self, len: usize) -> &CompiledVariant {
+        self.variants
+            .iter()
+            .find(|v| v.n_items >= len)
+            .unwrap_or_else(|| self.variants.last().expect("no variants"))
+    }
+
+    /// Run the window-aggregation job, chunking if the sample exceeds the
+    /// largest variant.
+    pub fn aggregate(&self, input: &WindowInput) -> Result<WindowOutput> {
+        debug_assert_eq!(self.num_strata, MAX_STRATA);
+        let max = self.max_capacity();
+        let state = input.strata_state();
+
+        if input.len() <= max {
+            let (partials, estimate) = self.execute_chunk(
+                &input.ids,
+                &input.values,
+                &input.c,
+                &input.n_cap,
+                true,
+            )?;
+            return Ok(WindowOutput {
+                partials,
+                estimate: estimate.expect("estimate requested"),
+                executions: 1,
+            });
+        }
+
+        // Chunked path: combine partials, finish estimate Rust-side.
+        let mut combined = StrataPartials::default();
+        let mut execs = 0;
+        for (ids, values) in input
+            .ids
+            .chunks(max)
+            .zip(input.values.chunks(max))
+        {
+            let (p, _) = self.execute_chunk(ids, values, &input.c, &input.n_cap, false)?;
+            combined.merge(&p);
+            execs += 1;
+        }
+        let est = estimate(&combined, &state);
+        Ok(WindowOutput { partials: combined, estimate: est, executions: execs })
+    }
+
+    /// Execute one padded chunk. Returns partials, and the in-graph estimate
+    /// when `want_estimate` (only meaningful when the chunk is the whole
+    /// sample — the graph's C_i are window-level counters).
+    fn execute_chunk(
+        &self,
+        ids: &[i32],
+        values: &[f32],
+        c: &[f64; K],
+        n_cap: &[f64; K],
+        want_estimate: bool,
+    ) -> Result<(StrataPartials, Option<Estimate>)> {
+        let variant = self.pick_variant(ids.len());
+        let n = variant.n_items;
+
+        // Pad to the variant's static shape; id -1 = padding.
+        let mut ids_p = vec![-1i32; n];
+        ids_p[..ids.len()].copy_from_slice(ids);
+        let mut vals_p = vec![0f32; n];
+        vals_p[..values.len()].copy_from_slice(values);
+        let c_f: Vec<f32> = c.iter().map(|&x| x as f32).collect();
+        let n_f: Vec<f32> = n_cap.iter().map(|&x| x as f32).collect();
+
+        let lit_ids = xla::Literal::vec1(&ids_p);
+        let lit_vals = xla::Literal::vec1(&vals_p);
+        let lit_c = xla::Literal::vec1(&c_f);
+        let lit_n = xla::Literal::vec1(&n_f);
+
+        let result = variant
+            .exe
+            .execute::<xla::Literal>(&[lit_ids, lit_vals, lit_c, lit_n])
+            .map_err(|e| Error::Xla(e.to_string()))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(e.to_string()))?;
+
+        let outs = result.to_tuple().map_err(|e| Error::Xla(e.to_string()))?;
+        if outs.len() != 4 {
+            return Err(Error::Xla(format!("expected 4 outputs, got {}", outs.len())));
+        }
+
+        let partials_flat: Vec<f32> =
+            outs[0].to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+        let scalars: Vec<f32> = outs[3].to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+        let weights_v: Vec<f32> = outs[1].to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+        let strata_sums_v: Vec<f32> =
+            outs[2].to_vec().map_err(|e| Error::Xla(e.to_string()))?;
+
+        let mut partials = StrataPartials::default();
+        for i in 0..K {
+            partials.y[i] = partials_flat[i * 3] as f64;
+            partials.sum[i] = partials_flat[i * 3 + 1] as f64;
+            partials.sumsq[i] = partials_flat[i * 3 + 2] as f64;
+        }
+
+        let est = if want_estimate {
+            let mut weights = [0.0f64; K];
+            let mut strata_sums = [0.0f64; K];
+            for i in 0..K {
+                weights[i] = weights_v[i] as f64;
+                strata_sums[i] = strata_sums_v[i] as f64;
+            }
+            Some(Estimate {
+                sum: scalars[0] as f64,
+                mean: scalars[1] as f64,
+                var_sum: scalars[2] as f64,
+                var_mean: scalars[3] as f64,
+                total_c: scalars[4] as f64,
+                total_y: scalars[5] as f64,
+                weights,
+                strata_sums,
+            })
+        } else {
+            None
+        };
+        Ok((partials, est))
+    }
+}
+
+/// Pure-Rust executor with identical semantics — used as the baseline
+/// "native aggregation" backend, in tests, and wherever spinning up PJRT is
+/// unnecessary.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RustExecutor;
+
+impl RustExecutor {
+    pub fn aggregate(&self, input: &WindowInput) -> WindowOutput {
+        let mut partials = StrataPartials::default();
+        for (&id, &v) in input.ids.iter().zip(&input.values) {
+            if id >= 0 && (id as usize) < K {
+                partials.push(id as usize, v as f64);
+            }
+        }
+        let est = estimate(&partials, &input.strata_state());
+        WindowOutput { partials, estimate: est, executions: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_input(n: usize, seed: u64) -> WindowInput {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut input = WindowInput::default();
+        for _ in 0..n {
+            let s = rng.range_usize(0, MAX_STRATA) as i32;
+            input.ids.push(s);
+            input.values.push(rng.range_f64(-50.0, 150.0) as f32);
+        }
+        for i in 0..K {
+            input.c[i] = input.ids.iter().filter(|&&x| x == i as i32).count() as f64 * 2.0;
+            input.n_cap[i] = 64.0;
+        }
+        input
+    }
+
+    #[test]
+    fn rust_executor_matches_estimator_by_construction() {
+        let input = test_input(500, 1);
+        let out = RustExecutor.aggregate(&input);
+        assert_eq!(out.executions, 0);
+        assert!((out.partials.total_y() - 500.0).abs() < 1e-9);
+        assert!(out.estimate.sum.is_finite());
+    }
+
+    #[test]
+    fn window_input_from_sample() {
+        let sample = vec![(0u16, 1.0), (3u16, 2.5)];
+        let mut st = StrataState::default();
+        st.c[0] = 5.0;
+        st.n_cap = [10.0; K];
+        let wi = WindowInput::from_sample(&sample, &st);
+        assert_eq!(wi.ids, vec![0, 3]);
+        assert_eq!(wi.values, vec![1.0f32, 2.5f32]);
+        assert_eq!(wi.c[0], 5.0);
+    }
+
+    // XLA-backed tests live in rust/tests/runtime_xla.rs (integration) so a
+    // unit-test run without artifacts still passes.
+}

@@ -1,0 +1,204 @@
+//! Sampling algorithms (paper §2.4, §3.2, §4.1).
+//!
+//! * [`reservoir`] — classic reservoir sampling (Algorithm 1, Vitter '85).
+//! * [`oasrs`] — **O**nline **A**daptive **S**tratified **R**eservoir
+//!   **S**ampling, the paper's contribution (Algorithm 3): per-stratum
+//!   reservoirs + arrival counters, weights by Eq. (1), no synchronization.
+//! * [`srs`] — Spark-style Simple Random Sampling (`sample`): random-sort
+//!   with (p, q) thresholds [Meng, ICML'13], batch-fashion.
+//! * [`sts`] — Spark-style Stratified Sampling (`sampleByKey`): groupBy on
+//!   strata + per-stratum random-sort, batch-fashion, with the cross-worker
+//!   synchronization the paper blames for its poor scaling.
+//! * native (no sampling) is represented by [`NoopSampler`].
+//!
+//! All samplers emit a [`SampleResult`] per interval: the selected items and
+//! the per-stratum bookkeeping ([`StrataState`]) the estimator needs.  The
+//! SRS/STS baselines encode their uniform / proportional designs in the
+//! `n_cap` field so the single weight law Eq. (1) reproduces their
+//! Horvitz-Thompson weights (see each module's docs).
+
+pub mod oasrs;
+pub mod reservoir;
+pub mod srs;
+pub mod sts;
+
+use crate::core::Item;
+use crate::error::estimator::StrataState;
+
+pub use oasrs::OasrsSampler;
+pub use reservoir::Reservoir;
+pub use srs::SrsSampler;
+pub use sts::StsSampler;
+
+/// Which sampling algorithm a pipeline uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// The paper's online adaptive stratified reservoir sampling.
+    Oasrs,
+    /// Spark-style simple random sampling (`sample`).
+    Srs,
+    /// Spark-style stratified sampling (`sampleByKey`/`sampleByKeyExact`).
+    Sts,
+    /// No sampling — native execution.
+    None,
+}
+
+impl SamplerKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SamplerKind::Oasrs => "streamapprox",
+            SamplerKind::Srs => "spark-srs",
+            SamplerKind::Sts => "spark-sts",
+            SamplerKind::None => "native",
+        }
+    }
+
+    /// True for batch-fashion samplers that must buffer the whole interval
+    /// (the Spark baselines); OASRS and native stream item-at-a-time.
+    pub fn is_batch_fashion(self) -> bool {
+        matches!(self, SamplerKind::Srs | SamplerKind::Sts)
+    }
+}
+
+/// The per-interval output of a sampler.
+#[derive(Debug, Clone, Default)]
+pub struct SampleResult {
+    /// Selected items as (stratum, value) pairs.
+    pub sample: Vec<(u16, f64)>,
+    /// Per-stratum arrival counters + effective capacities for Eq. (1).
+    pub state: StrataState,
+}
+
+impl SampleResult {
+    /// Total arrived items this interval.
+    pub fn arrived(&self) -> f64 {
+        self.state.total_c()
+    }
+
+    /// Achieved sampling fraction.
+    pub fn fraction(&self) -> f64 {
+        let c = self.arrived();
+        if c == 0.0 {
+            0.0
+        } else {
+            self.sample.len() as f64 / c
+        }
+    }
+}
+
+/// Common interface: offer items during the interval, then finish it.
+pub trait Sampler: Send {
+    /// Offer one arriving item.
+    fn offer(&mut self, item: &Item);
+
+    /// Close the current interval: emit the sample + strata bookkeeping and
+    /// reset for the next interval.
+    fn finish_interval(&mut self) -> SampleResult;
+
+    /// Re-target the sampler (adaptive budgets — fraction in (0, 1]).
+    fn set_fraction(&mut self, fraction: f64);
+
+    /// Algorithm tag.
+    fn kind(&self) -> SamplerKind;
+}
+
+/// Native execution: keep every item, weight 1.
+#[derive(Debug, Default)]
+pub struct NoopSampler {
+    buf: Vec<(u16, f64)>,
+    state: StrataState,
+}
+
+impl NoopSampler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Sampler for NoopSampler {
+    fn offer(&mut self, item: &Item) {
+        let s = item.stratum as usize;
+        if s < crate::core::MAX_STRATA {
+            self.buf.push((item.stratum, item.value));
+            self.state.c[s] += 1.0;
+            // capacity tracks arrivals so C_i <= N_i and Eq. (1) gives 1.
+            self.state.n_cap[s] = self.state.c[s];
+        }
+    }
+
+    fn finish_interval(&mut self) -> SampleResult {
+        let sample = std::mem::take(&mut self.buf);
+        let state = self.state;
+        self.state = StrataState::default();
+        SampleResult { sample, state }
+    }
+
+    fn set_fraction(&mut self, _fraction: f64) {}
+
+    fn kind(&self) -> SamplerKind {
+        SamplerKind::None
+    }
+}
+
+/// Construct a sampler of the given kind with an initial sampling fraction.
+///
+/// `seed` makes every sampler deterministic for a fixed workload.
+pub fn make_sampler(kind: SamplerKind, fraction: f64, seed: u64) -> Box<dyn Sampler> {
+    match kind {
+        SamplerKind::Oasrs => Box::new(OasrsSampler::new(fraction, seed)),
+        SamplerKind::Srs => Box::new(SrsSampler::new(fraction, seed)),
+        SamplerKind::Sts => Box::new(StsSampler::new(fraction, seed)),
+        SamplerKind::None => Box::new(NoopSampler::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_keeps_everything_with_weight_one() {
+        let mut s = NoopSampler::new();
+        for i in 0..100 {
+            s.offer(&Item::new((i % 4) as u16, i as f64, i));
+        }
+        let r = s.finish_interval();
+        assert_eq!(r.sample.len(), 100);
+        assert_eq!(r.arrived(), 100.0);
+        assert_eq!(r.fraction(), 1.0);
+        let est = crate::error::estimator::estimate(
+            &crate::error::estimator::StrataPartials::from_sample(&r.sample),
+            &r.state,
+        );
+        // exact: sum of 0..99
+        assert!((est.sum - 4950.0).abs() < 1e-9);
+        assert_eq!(est.var_sum, 0.0);
+    }
+
+    #[test]
+    fn noop_interval_reset() {
+        let mut s = NoopSampler::new();
+        s.offer(&Item::new(0, 1.0, 0));
+        let r1 = s.finish_interval();
+        assert_eq!(r1.sample.len(), 1);
+        let r2 = s.finish_interval();
+        assert_eq!(r2.sample.len(), 0);
+        assert_eq!(r2.arrived(), 0.0);
+    }
+
+    #[test]
+    fn factory_returns_right_kinds() {
+        for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
+            let s = make_sampler(kind, 0.5, 1);
+            assert_eq!(s.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_naming() {
+        assert_eq!(SamplerKind::Oasrs.label(), "streamapprox");
+        assert!(SamplerKind::Srs.is_batch_fashion());
+        assert!(SamplerKind::Sts.is_batch_fashion());
+        assert!(!SamplerKind::Oasrs.is_batch_fashion());
+    }
+}

@@ -1,0 +1,405 @@
+//! OASRS — Online Adaptive Stratified Reservoir Sampling (paper §3.2,
+//! Algorithm 3).  The paper's core contribution.
+//!
+//! Per interval, each stratum `S_i` gets its own fixed-capacity reservoir of
+//! size `N_i` and an arrival counter `C_i`.  Items stream through with O(1)
+//! amortized work and **no synchronization**; at the end of the interval the
+//! per-stratum samples are emitted together with `(C_i, N_i)` so the
+//! estimator can weight them by Eq. (1):  `W_i = C_i/N_i` if `C_i > N_i`
+//! else `1`.
+//!
+//! **Adaptivity**: the per-stratum capacity is derived from the sampling
+//! fraction and an EWMA of the stratum's arrivals over past intervals, so
+//! the sampler tracks fluctuating sub-stream rates (the paper's "adaptive
+//! cost function"); a stratum first seen mid-interval gets a default
+//! capacity immediately — no sub-stream is overlooked regardless of
+//! popularity.
+//!
+//! **Distributed execution** (paper §3.2): `w` workers each run an
+//! independent OASRS with capacity `N_i/w`; [`merge_worker_results`]
+//! combines their samples, counters, and capacities without coordination.
+
+use crate::core::{Item, MAX_STRATA};
+use crate::error::estimator::StrataState;
+
+use super::reservoir::Reservoir;
+use super::{SampleResult, Sampler, SamplerKind};
+
+/// Default capacity for a stratum never seen before (items).
+const DEFAULT_CAP: usize = 64;
+/// EWMA smoothing for per-stratum arrival estimates.
+const EWMA_ALPHA: f64 = 0.5;
+
+/// The OASRS sampler.
+#[derive(Debug)]
+pub struct OasrsSampler {
+    fraction: f64,
+    /// Per-stratum reservoir for the current interval (lazily created).
+    reservoirs: Vec<Option<Reservoir<f64>>>,
+    /// Arrival counters C_i for the current interval.
+    counters: [f64; MAX_STRATA],
+    /// EWMA of per-interval arrivals per stratum (drives adaptivity).
+    ewma_arrivals: [f64; MAX_STRATA],
+    /// Capacities N_i chosen for the current interval.
+    caps: [usize; MAX_STRATA],
+    seed: u64,
+    interval: u64,
+}
+
+impl OasrsSampler {
+    pub fn new(fraction: f64, seed: u64) -> Self {
+        let mut reservoirs = Vec::with_capacity(MAX_STRATA);
+        reservoirs.resize_with(MAX_STRATA, || None);
+        Self {
+            fraction: fraction.clamp(1e-4, 1.0),
+            reservoirs,
+            counters: [0.0; MAX_STRATA],
+            ewma_arrivals: [0.0; MAX_STRATA],
+            caps: [0; MAX_STRATA],
+            seed,
+            interval: 0,
+        }
+    }
+
+    /// Capacity for stratum `s` given current knowledge (Algorithm 3's
+    /// `getSampleSize` step).
+    ///
+    /// The total per-interval budget (`fraction ×` expected arrivals) is
+    /// split **equally** across the known strata — the paper's design:
+    /// StreamApprox "only maintains a sample of a fixed size for each
+    /// sub-stream" (§5.2), which is what keeps rare-but-significant
+    /// sub-streams fully represented and decouples the per-stratum cost
+    /// from stratum popularity (unlike STS's proportional allocation).
+    fn capacity_for(&self, _s: usize) -> usize {
+        let total: f64 = self.ewma_arrivals.iter().sum();
+        if total <= 0.0 {
+            return DEFAULT_CAP;
+        }
+        let active = self.ewma_arrivals.iter().filter(|&&x| x > 0.0).count().max(1);
+        ((self.fraction * total / active as f64).ceil() as usize).max(1)
+    }
+
+    /// Current sampling fraction.
+    pub fn fraction(&self) -> f64 {
+        self.fraction
+    }
+}
+
+impl Sampler for OasrsSampler {
+    #[inline]
+    fn offer(&mut self, item: &Item) {
+        let s = item.stratum as usize;
+        if s >= MAX_STRATA {
+            return;
+        }
+        self.counters[s] += 1.0;
+        // Single slot lookup on the hot path; reservoir creation (first item
+        // of a new sub-stream this interval) is the cold branch.
+        if let Some(res) = &mut self.reservoirs[s] {
+            res.offer(item.value);
+            return;
+        }
+        let cap = self.capacity_for(s);
+        self.caps[s] = cap;
+        let seed = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((s as u64) << 32)
+            .wrapping_add(self.interval);
+        let mut res = Reservoir::new(cap, seed);
+        res.offer(item.value);
+        self.reservoirs[s] = Some(res);
+    }
+
+    fn finish_interval(&mut self) -> SampleResult {
+        let mut sample = Vec::new();
+        let mut state = StrataState::default();
+        for s in 0..MAX_STRATA {
+            let c = self.counters[s];
+            state.c[s] = c;
+            if let Some(res) = self.reservoirs[s].as_mut() {
+                state.n_cap[s] = self.caps[s] as f64;
+                for &v in res.items() {
+                    sample.push((s as u16, v));
+                }
+            } else {
+                state.n_cap[s] = 0.0;
+            }
+            // EWMA update (0 arrivals also update, decaying dead strata).
+            self.ewma_arrivals[s] = if self.interval == 0 && self.ewma_arrivals[s] == 0.0 {
+                c
+            } else {
+                EWMA_ALPHA * c + (1.0 - EWMA_ALPHA) * self.ewma_arrivals[s]
+            };
+        }
+        // Reset interval state.
+        self.counters = [0.0; MAX_STRATA];
+        self.reservoirs.iter_mut().for_each(|r| *r = None);
+        self.caps = [0; MAX_STRATA];
+        self.interval += 1;
+        SampleResult { sample, state }
+    }
+
+    fn set_fraction(&mut self, fraction: f64) {
+        self.fraction = fraction.clamp(1e-4, 1.0);
+    }
+
+    fn kind(&self) -> SamplerKind {
+        SamplerKind::Oasrs
+    }
+}
+
+/// Combine per-worker OASRS results for one interval (paper §3.2
+/// "Distributed execution"): samples concatenate, arrival counters and
+/// capacities add — no synchronization during the interval.
+pub fn merge_worker_results(parts: Vec<SampleResult>) -> SampleResult {
+    let mut merged = SampleResult::default();
+    for part in parts {
+        merged.sample.extend(part.sample);
+        for s in 0..MAX_STRATA {
+            merged.state.c[s] += part.state.c[s];
+            merged.state.n_cap[s] += part.state.n_cap[s];
+        }
+    }
+    merged
+}
+
+/// A distributed OASRS: `w` independent per-worker samplers, each sized
+/// `fraction/w` of the stream it sees.  Used by the engines' parallel path
+/// and by the scalability experiments (Fig. 7a).
+pub struct DistributedOasrs {
+    workers: Vec<OasrsSampler>,
+    next: usize,
+}
+
+impl DistributedOasrs {
+    pub fn new(n_workers: usize, fraction: f64, seed: u64) -> Self {
+        let workers = (0..n_workers.max(1))
+            .map(|w| OasrsSampler::new(fraction, seed.wrapping_add(w as u64 * 7919)))
+            .collect();
+        Self { workers, next: 0 }
+    }
+
+    /// Round-robin an item to a worker (models the even split the paper
+    /// assumes across workers of a sub-stream).
+    pub fn offer(&mut self, item: &Item) {
+        let w = self.next;
+        self.next = (self.next + 1) % self.workers.len();
+        self.workers[w].offer(item);
+    }
+
+    /// Finish the interval on every worker and merge.
+    pub fn finish_interval(&mut self) -> SampleResult {
+        let parts = self.workers.iter_mut().map(|w| w.finish_interval()).collect();
+        merge_worker_results(parts)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::estimator::{estimate, StrataPartials};
+
+    fn feed(sampler: &mut OasrsSampler, per_stratum: &[(u16, usize, f64)]) {
+        // (stratum, count, value_base)
+        let mut ts = 0;
+        for &(s, n, base) in per_stratum {
+            for i in 0..n {
+                sampler.offer(&Item::new(s, base + i as f64, ts));
+                ts += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn respects_per_stratum_capacity() {
+        let mut s = OasrsSampler::new(0.5, 1);
+        feed(&mut s, &[(0, 1000, 0.0), (1, 10, 0.0)]);
+        let r = s.finish_interval();
+        // stratum 0: default cap 64 (no history) -> at most 64 selected
+        let n0 = r.sample.iter().filter(|(st, _)| *st == 0).count();
+        let n1 = r.sample.iter().filter(|(st, _)| *st == 1).count();
+        assert_eq!(n0, 64);
+        assert_eq!(n1, 10); // fewer than cap -> all kept
+        assert_eq!(r.state.c[0], 1000.0);
+        assert_eq!(r.state.c[1], 10.0);
+    }
+
+    #[test]
+    fn weight_law_via_estimator() {
+        let mut s = OasrsSampler::new(0.5, 2);
+        feed(&mut s, &[(0, 1000, 5.0)]);
+        let r = s.finish_interval();
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        // W_0 = C/N = 1000/64
+        assert!((est.weights[0] - 1000.0 / 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adapts_capacity_to_arrival_rate() {
+        let mut s = OasrsSampler::new(0.1, 3);
+        // interval 1: 1000 items -> EWMA 1000
+        feed(&mut s, &[(0, 1000, 0.0)]);
+        s.finish_interval();
+        // interval 2: capacity should now be ~0.1 * 1000 = 100
+        feed(&mut s, &[(0, 1000, 0.0)]);
+        let r = s.finish_interval();
+        let n0 = r.sample.iter().filter(|(st, _)| *st == 0).count();
+        assert_eq!(n0, 100);
+        assert_eq!(r.state.n_cap[0], 100.0);
+    }
+
+    #[test]
+    fn tracks_rate_increase() {
+        let mut s = OasrsSampler::new(0.2, 4);
+        feed(&mut s, &[(0, 100, 0.0)]);
+        s.finish_interval(); // ewma 100
+        feed(&mut s, &[(0, 10_000, 0.0)]);
+        s.finish_interval(); // ewma -> 5050
+        feed(&mut s, &[(0, 10_000, 0.0)]);
+        let r = s.finish_interval();
+        // cap = ceil(0.2 * 5050) = 1010
+        assert_eq!(r.state.n_cap[0], 1010.0);
+    }
+
+    #[test]
+    fn never_overlooks_rare_stratum() {
+        // The SRS failure mode OASRS fixes: a tiny high-value sub-stream
+        // must always contribute to the sample.
+        let mut s = OasrsSampler::new(0.1, 5);
+        feed(&mut s, &[(0, 100_000, 1.0), (2, 3, 1_000_000.0)]);
+        let r = s.finish_interval();
+        let n2 = r.sample.iter().filter(|(st, _)| *st == 2).count();
+        assert_eq!(n2, 3, "rare stratum fully sampled");
+    }
+
+    #[test]
+    fn estimate_accuracy_on_skewed_stream() {
+        // 3 strata with very different scales; estimate vs exact sum.
+        let mut s = OasrsSampler::new(0.3, 6);
+        let mut exact = 0.0;
+        let mut rng = Rng::seed_from_u64(99);
+        for _ in 0..2 {
+            // warm-up interval then measured interval
+            exact = 0.0;
+            for _ in 0..8000 {
+                let v = rng.normal(10.0, 5.0);
+                s.offer(&Item::new(0, v, 0));
+                exact += v;
+            }
+            for _ in 0..2000 {
+                let v = rng.normal(1000.0, 50.0);
+                s.offer(&Item::new(1, v, 0));
+                exact += v;
+            }
+            for _ in 0..100 {
+                let v = rng.normal(10000.0, 500.0);
+                s.offer(&Item::new(2, v, 0));
+                exact += v;
+            }
+            if s.interval == 0 {
+                s.finish_interval();
+            }
+        }
+        let r = s.finish_interval();
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        let rel = (est.sum - exact).abs() / exact;
+        assert!(rel < 0.05, "relative error {rel}");
+    }
+
+    #[test]
+    fn interval_isolation() {
+        let mut s = OasrsSampler::new(0.5, 7);
+        feed(&mut s, &[(0, 50, 0.0)]);
+        let r1 = s.finish_interval();
+        let r2 = s.finish_interval();
+        assert!(r1.sample.len() > 0);
+        assert_eq!(r2.sample.len(), 0);
+        assert_eq!(r2.state.c[0], 0.0);
+    }
+
+    #[test]
+    fn distributed_merge_counts_add() {
+        let mut d = DistributedOasrs::new(4, 0.5, 8);
+        for i in 0..1000 {
+            d.offer(&Item::new((i % 3) as u16, i as f64, i as u64));
+        }
+        let r = d.finish_interval();
+        let total: f64 = r.state.c.iter().sum();
+        assert_eq!(total, 1000.0);
+        // per-stratum counters: 334/333/333
+        assert!((r.state.c[0] - 334.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn distributed_estimate_matches_single_node_statistically() {
+        // Same stream through 1-worker and 4-worker OASRS: estimates agree
+        // within a few σ.
+        let gen_stream = || {
+            let mut rng = Rng::seed_from_u64(55);
+            let mut items = Vec::new();
+            for _ in 0..20_000 {
+                items.push(Item::new(0, rng.normal(100.0, 20.0), 0));
+            }
+            for _ in 0..500 {
+                items.push(Item::new(1, rng.normal(5000.0, 100.0), 0));
+            }
+            items
+        };
+        let exact: f64 = gen_stream().iter().map(|i| i.value).sum();
+
+        let mut single = OasrsSampler::new(0.2, 9);
+        // warm-up to lock in capacities, then measure
+        for it in gen_stream() {
+            single.offer(&it);
+        }
+        single.finish_interval();
+        for it in gen_stream() {
+            single.offer(&it);
+        }
+        let r1 = single.finish_interval();
+        let e1 = estimate(&StrataPartials::from_sample(&r1.sample), &r1.state);
+
+        let mut dist = DistributedOasrs::new(4, 0.2, 10);
+        for it in gen_stream() {
+            dist.offer(&it);
+        }
+        dist.finish_interval();
+        for it in gen_stream() {
+            dist.offer(&it);
+        }
+        let r4 = dist.finish_interval();
+        let e4 = estimate(&StrataPartials::from_sample(&r4.sample), &r4.state);
+
+        for (e, tag) in [(e1, "single"), (e4, "dist")] {
+            let rel = (e.sum - exact).abs() / exact;
+            assert!(rel < 0.05, "{tag} relative error {rel}");
+        }
+    }
+
+    #[test]
+    fn set_fraction_applies_next_interval() {
+        let mut s = OasrsSampler::new(0.5, 11);
+        feed(&mut s, &[(0, 1000, 0.0)]);
+        s.finish_interval(); // ewma = 1000
+        s.set_fraction(0.01);
+        feed(&mut s, &[(0, 1000, 0.0)]);
+        let r = s.finish_interval();
+        assert_eq!(r.state.n_cap[0], 10.0); // 0.01 * 1000
+    }
+
+    #[test]
+    fn out_of_range_stratum_dropped() {
+        let mut s = OasrsSampler::new(0.5, 12);
+        s.offer(&Item::new(999, 1.0, 0));
+        let r = s.finish_interval();
+        assert!(r.sample.is_empty());
+        assert_eq!(r.arrived(), 0.0);
+    }
+
+    use crate::util::rng::Rng;
+}

@@ -1,0 +1,268 @@
+//! Spark-style Simple Random Sampling — the `sample` operator baseline
+//! (paper §4.1.1).
+//!
+//! Spark implements SRS by *random sort* [Meng, ICML '13]: assign each item
+//! a uniform key in [0,1], then take the `k` items with the smallest keys.
+//! Sorting the whole batch is the bottleneck, so Spark narrows it with two
+//! thresholds `p < q`: items with key < `p` are accepted outright, items
+//! with key > `q` are discarded outright, and only the (small) middle region
+//! is sorted.  We reproduce that algorithm — including its batch fashion:
+//! the whole interval is buffered (the "RDD") before sampling runs, which is
+//! exactly the overhead StreamApprox's on-the-fly sampling avoids.
+//!
+//! **Estimation**: an SRS sample is uniform over the whole batch, so every
+//! selected item represents `C_total / k` originals.  We encode that in the
+//! per-stratum capacities as `n_cap_i = C_i · k / C_total`, which makes the
+//! shared weight law Eq. (1) produce exactly the SRS Horvitz-Thompson weight
+//! `C_total / k` for every stratum.
+
+use crate::core::{Item, MAX_STRATA};
+use crate::error::estimator::StrataState;
+use crate::util::rng::Rng;
+
+use super::{SampleResult, Sampler, SamplerKind};
+
+/// Spark-`sample`-style simple random sampler (batch fashion).
+#[derive(Debug)]
+pub struct SrsSampler {
+    fraction: f64,
+    /// The buffered batch ("RDD"): (stratum, value).
+    batch: Vec<(u16, f64)>,
+    counters: [f64; MAX_STRATA],
+    rng: Rng,
+}
+
+impl SrsSampler {
+    pub fn new(fraction: f64, seed: u64) -> Self {
+        Self {
+            fraction: fraction.clamp(1e-4, 1.0),
+            batch: Vec::new(),
+            counters: [0.0; MAX_STRATA],
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    /// Random-sort selection of `k` items from `items` using the (p, q)
+    /// threshold optimization. Returns selected indices.
+    fn random_sort_select(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+        if k >= n {
+            return (0..n).collect();
+        }
+        // Keys for every item.
+        let keys: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        // Thresholds around k/n; the slack keeps P(middle misses the true
+        // k-th key) negligible (Chernoff), same construction as Spark's.
+        let ratio = k as f64 / n as f64;
+        let slack = 8.0 * (ratio * (1.0 - ratio) / n as f64).sqrt() + 16.0 / n as f64;
+        let p = (ratio - slack).max(0.0);
+        let q = (ratio + slack).min(1.0);
+
+        let mut accepted: Vec<usize> = Vec::with_capacity(k + 16);
+        let mut middle: Vec<usize> = Vec::new();
+        for (i, &key) in keys.iter().enumerate() {
+            if key < p {
+                accepted.push(i);
+            } else if key <= q {
+                middle.push(i);
+            }
+        }
+        if accepted.len() > k {
+            // Rare slack failure: fall back to sorting the accepted region.
+            accepted.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap());
+            accepted.truncate(k);
+            return accepted;
+        }
+        // Sort only the middle region and top up.
+        middle.sort_by(|&a, &b| keys[a].partial_cmp(&keys[b]).unwrap());
+        let need = k - accepted.len();
+        accepted.extend(middle.into_iter().take(need));
+        accepted
+    }
+}
+
+impl Sampler for SrsSampler {
+    #[inline]
+    fn offer(&mut self, item: &Item) {
+        let s = item.stratum as usize;
+        if s >= MAX_STRATA {
+            return;
+        }
+        // Batch fashion: buffer everything (this allocation churn is the
+        // cost StreamApprox's pre-RDD sampling avoids).
+        self.batch.push((item.stratum, item.value));
+        self.counters[s] += 1.0;
+    }
+
+    fn finish_interval(&mut self) -> SampleResult {
+        let batch = std::mem::take(&mut self.batch);
+        let n = batch.len();
+        let k = ((self.fraction * n as f64).round() as usize).min(n);
+
+        let selected = Self::random_sort_select(&mut self.rng, n, k);
+        let k_actual = selected.len();
+        let sample: Vec<(u16, f64)> = selected.into_iter().map(|i| batch[i]).collect();
+
+        // Global uniform weight C_total / k — exactly what Spark's `sample`
+        // gives you: a uniform sample with NO per-stratum bookkeeping, so
+        // every selected item represents C_total/k originals regardless of
+        // stratum.  Encoded via n_cap_i = C_i·k/C_total so Eq. (1)
+        // reproduces that weight.  This is deliberately NOT post-stratified:
+        // the randomness of the per-stratum allocation Y_i goes unmodelled,
+        // which both inflates SRS's real error on skewed streams and makes
+        // its error bounds unreliable — the paper's core argument for
+        // stratified sampling (§2.4, §5.2), and a property the integration
+        // tests assert.
+        let mut state = StrataState::default();
+        let c_total: f64 = self.counters.iter().sum();
+        for s in 0..MAX_STRATA {
+            state.c[s] = self.counters[s];
+            state.n_cap[s] = if c_total > 0.0 && (k_actual as f64) < c_total {
+                self.counters[s] * k_actual as f64 / c_total
+            } else {
+                self.counters[s]
+            };
+        }
+        self.counters = [0.0; MAX_STRATA];
+        SampleResult { sample, state }
+    }
+
+    fn set_fraction(&mut self, fraction: f64) {
+        self.fraction = fraction.clamp(1e-4, 1.0);
+    }
+
+    fn kind(&self) -> SamplerKind {
+        SamplerKind::Srs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::estimator::{estimate, StrataPartials};
+
+    fn feed_uniform(s: &mut SrsSampler, n: usize, strata: usize) {
+        for i in 0..n {
+            s.offer(&Item::new((i % strata) as u16, i as f64, i as u64));
+        }
+    }
+
+    #[test]
+    fn samples_requested_fraction() {
+        let mut s = SrsSampler::new(0.3, 1);
+        feed_uniform(&mut s, 10_000, 4);
+        let r = s.finish_interval();
+        let got = r.sample.len() as f64 / 10_000.0;
+        assert!((got - 0.3).abs() < 0.001, "fraction {got}");
+    }
+
+    #[test]
+    fn full_fraction_keeps_everything() {
+        let mut s = SrsSampler::new(1.0, 2);
+        feed_uniform(&mut s, 500, 3);
+        let r = s.finish_interval();
+        assert_eq!(r.sample.len(), 500);
+        // weights should be 1 -> estimate exact
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        let exact: f64 = (0..500).map(|i| i as f64).sum();
+        assert!((est.sum - exact).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_are_global_uniform_horvitz_thompson() {
+        let mut s = SrsSampler::new(0.25, 3);
+        feed_uniform(&mut s, 8000, 4);
+        let r = s.finish_interval();
+        let k = r.sample.len() as f64;
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        for i in 0..4 {
+            let expected = 8000.0 / k;
+            assert!(
+                (est.weights[i] - expected).abs() / expected < 1e-9,
+                "stratum {i} weight {} != {expected}",
+                est.weights[i]
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_unbiased_on_uniform_stream() {
+        let mut errs = Vec::new();
+        for seed in 0..20 {
+            let mut s = SrsSampler::new(0.2, seed);
+            let mut rng = Rng::seed_from_u64(1000 + seed);
+            let mut exact = 0.0;
+            for _ in 0..5000 {
+                let v = rng.normal(100.0, 10.0);
+                s.offer(&Item::new(0, v, 0));
+                exact += v;
+            }
+            let r = s.finish_interval();
+            let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+            errs.push((est.sum - exact) / exact);
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err.abs() < 0.01, "bias {mean_err}");
+    }
+
+    #[test]
+    fn can_overlook_tiny_stratum() {
+        // The documented SRS failure mode (paper §2.4): with a very small
+        // sub-stream and small fraction, some runs miss the stratum.
+        let mut missed = 0;
+        for seed in 0..50 {
+            let mut s = SrsSampler::new(0.05, seed);
+            for i in 0..10_000 {
+                s.offer(&Item::new(0, 1.0, i));
+            }
+            for _ in 0..3 {
+                s.offer(&Item::new(2, 1_000_000.0, 0));
+            }
+            let r = s.finish_interval();
+            if !r.sample.iter().any(|(st, _)| *st == 2) {
+                missed += 1;
+            }
+        }
+        assert!(missed > 5, "SRS should sometimes miss the rare stratum (missed {missed}/50)");
+    }
+
+    #[test]
+    fn selection_is_unbiased_per_item() {
+        // Every item equally likely under random-sort selection.
+        let n = 200;
+        let k = 20;
+        let trials = 3000;
+        let mut counts = vec![0u32; n];
+        for t in 0..trials {
+            let mut rng = Rng::seed_from_u64(t);
+            for i in SrsSampler::random_sort_select(&mut rng, n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let z = (c as f64 - expect) / (expect * (1.0 - k as f64 / n as f64)).sqrt();
+            assert!(z.abs() < 5.0, "item {i}: {c} vs {expect} (z {z:.2})");
+        }
+    }
+
+    #[test]
+    fn interval_reset() {
+        let mut s = SrsSampler::new(0.5, 9);
+        feed_uniform(&mut s, 100, 2);
+        s.finish_interval();
+        let r2 = s.finish_interval();
+        assert!(r2.sample.is_empty());
+        assert_eq!(r2.arrived(), 0.0);
+    }
+
+    #[test]
+    fn empty_interval_ok() {
+        let mut s = SrsSampler::new(0.5, 10);
+        let r = s.finish_interval();
+        assert!(r.sample.is_empty());
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        assert_eq!(est.sum, 0.0);
+    }
+
+    use crate::util::rng::Rng;
+}

@@ -1,0 +1,348 @@
+//! Kafka-like in-process stream aggregator (paper §2.1).
+//!
+//! The paper's deployment places Apache Kafka between the disjoint
+//! sub-streams and the analytics system.  This module is the in-process
+//! substitute: named topics with a fixed number of partitions, each
+//! partition a bounded queue ([`util::channel`]) so producers experience
+//! real backpressure when consumers lag; consumers attach to all partitions
+//! of a topic and drain them fairly (round-robin with blocking fallback).
+//!
+//! Partitioning is by stratum id (`stratum % partitions`), which preserves
+//! per-sub-stream FIFO order — the property OASRS's per-stratum counters
+//! rely on.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::core::{Error, Item, Result};
+use crate::util::channel::{bounded, Receiver, Sender, TryRecvError};
+
+/// Configuration of one topic.
+#[derive(Debug, Clone)]
+pub struct TopicConfig {
+    /// Number of partitions (parallelism of the topic).
+    pub partitions: usize,
+    /// Per-partition buffer capacity (items) — the backpressure bound.
+    pub capacity: usize,
+}
+
+impl Default for TopicConfig {
+    fn default() -> Self {
+        Self { partitions: 4, capacity: 64 * 1024 }
+    }
+}
+
+struct Topic {
+    senders: Vec<Sender<Item>>,
+    receivers: Vec<Receiver<Item>>,
+    produced: Arc<AtomicU64>,
+    consumed: Arc<AtomicU64>,
+}
+
+/// The in-process stream aggregator.
+#[derive(Default)]
+pub struct Broker {
+    topics: Mutex<HashMap<String, Arc<Topic>>>,
+}
+
+impl Broker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a topic (idempotent: re-creating with any config returns the
+    /// existing topic).
+    pub fn create_topic(&self, name: &str, config: TopicConfig) -> Result<()> {
+        let mut topics = self.topics.lock().unwrap();
+        if topics.contains_key(name) {
+            return Ok(());
+        }
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..config.partitions.max(1) {
+            let (tx, rx) = bounded(config.capacity.max(1));
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        topics.insert(
+            name.to_string(),
+            Arc::new(Topic {
+                senders,
+                receivers,
+                produced: Arc::new(AtomicU64::new(0)),
+                consumed: Arc::new(AtomicU64::new(0)),
+            }),
+        );
+        Ok(())
+    }
+
+    fn topic(&self, name: &str) -> Result<Arc<Topic>> {
+        self.topics
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Stream(format!("unknown topic {name:?}")))
+    }
+
+    /// Producer handle for a topic.
+    pub fn producer(&self, name: &str) -> Result<Producer> {
+        let t = self.topic(name)?;
+        Ok(Producer { topic: t })
+    }
+
+    /// Consumer handle attached to every partition of a topic.
+    pub fn consumer(&self, name: &str) -> Result<Consumer> {
+        let t = self.topic(name)?;
+        Ok(Consumer { topic: t, next: 0 })
+    }
+
+    /// Close a topic (producers fail afterwards; consumers drain).
+    pub fn close_topic(&self, name: &str) -> Result<()> {
+        let t = self.topic(name)?;
+        for s in &t.senders {
+            s.close();
+        }
+        Ok(())
+    }
+
+    /// (produced, consumed) counters of a topic.
+    pub fn stats(&self, name: &str) -> Result<(u64, u64)> {
+        let t = self.topic(name)?;
+        Ok((t.produced.load(Ordering::Relaxed), t.consumed.load(Ordering::Relaxed)))
+    }
+
+    /// Total items currently buffered in a topic (queue depth).
+    pub fn depth(&self, name: &str) -> Result<usize> {
+        let t = self.topic(name)?;
+        Ok(t.receivers.iter().map(|r| r.len()).sum())
+    }
+}
+
+/// Producer: publishes items, partitioned by stratum (per-stratum FIFO).
+pub struct Producer {
+    topic: Arc<Topic>,
+}
+
+impl Producer {
+    /// Blocking publish (backpressure when the partition is full).
+    pub fn send(&self, item: Item) -> Result<()> {
+        let p = item.stratum as usize % self.topic.senders.len();
+        self.topic.senders[p]
+            .send(item)
+            .map_err(|_| Error::Stream("topic closed".into()))?;
+        self.topic.produced.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Non-blocking publish; `false` when the partition is full.
+    pub fn try_send(&self, item: Item) -> Result<bool> {
+        let p = item.stratum as usize % self.topic.senders.len();
+        match self.topic.senders[p].try_send(item) {
+            Ok(()) => {
+                self.topic.produced.fetch_add(1, Ordering::Relaxed);
+                Ok(true)
+            }
+            Err(_) => Ok(false),
+        }
+    }
+
+    /// Close the topic from the producer side.
+    pub fn close(&self) {
+        for s in &self.topic.senders {
+            s.close();
+        }
+    }
+}
+
+impl Clone for Producer {
+    fn clone(&self) -> Self {
+        Self { topic: self.topic.clone() }
+    }
+}
+
+/// Consumer: drains all partitions of a topic fairly.
+pub struct Consumer {
+    topic: Arc<Topic>,
+    next: usize,
+}
+
+impl Consumer {
+    /// Blocking poll across partitions; `None` when the topic is closed and
+    /// fully drained.
+    pub fn poll(&mut self) -> Option<Item> {
+        let n = self.topic.receivers.len();
+        loop {
+            let mut all_closed = true;
+            for i in 0..n {
+                let idx = (self.next + i) % n;
+                match self.topic.receivers[idx].try_recv() {
+                    Ok(item) => {
+                        self.next = (idx + 1) % n;
+                        self.topic.consumed.fetch_add(1, Ordering::Relaxed);
+                        return Some(item);
+                    }
+                    Err(TryRecvError::Empty) => {
+                        all_closed = false;
+                    }
+                    Err(TryRecvError::Closed) => {}
+                }
+            }
+            if all_closed {
+                return None;
+            }
+            // Nothing ready: yield briefly rather than spin hot.
+            std::thread::yield_now();
+        }
+    }
+
+    /// Drain up to `max` currently-buffered items without blocking.
+    pub fn poll_batch(&mut self, max: usize) -> Vec<Item> {
+        let mut out = Vec::new();
+        let n = self.topic.receivers.len();
+        'outer: for _ in 0..n {
+            let idx = self.next;
+            self.next = (self.next + 1) % n;
+            while let Ok(item) = self.topic.receivers[idx].try_recv() {
+                self.topic.consumed.fetch_add(1, Ordering::Relaxed);
+                out.push(item);
+                if out.len() >= max {
+                    break 'outer;
+                }
+            }
+        }
+        out
+    }
+
+    /// True once the topic is closed and all partitions are drained.
+    pub fn is_terminated(&self) -> bool {
+        self.topic.receivers.iter().all(|r| r.is_terminated())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(s: u16, v: f64) -> Item {
+        Item::new(s, v, 0)
+    }
+
+    #[test]
+    fn produce_consume_roundtrip() {
+        let b = Broker::new();
+        b.create_topic("t", TopicConfig::default()).unwrap();
+        let p = b.producer("t").unwrap();
+        let mut c = b.consumer("t").unwrap();
+        for i in 0..100 {
+            p.send(item((i % 4) as u16, i as f64)).unwrap();
+        }
+        p.close();
+        let mut got = Vec::new();
+        while let Some(it) = c.poll() {
+            got.push(it.value);
+        }
+        assert_eq!(got.len(), 100);
+        let (prod, cons) = b.stats("t").unwrap();
+        assert_eq!((prod, cons), (100, 100));
+    }
+
+    #[test]
+    fn per_stratum_fifo_preserved() {
+        let b = Broker::new();
+        b.create_topic("t", TopicConfig { partitions: 3, capacity: 1024 }).unwrap();
+        let p = b.producer("t").unwrap();
+        let mut c = b.consumer("t").unwrap();
+        for i in 0..300 {
+            p.send(item((i % 5) as u16, i as f64)).unwrap();
+        }
+        p.close();
+        let mut per_stratum: HashMap<u16, Vec<f64>> = HashMap::new();
+        while let Some(it) = c.poll() {
+            per_stratum.entry(it.stratum).or_default().push(it.value);
+        }
+        for (_, vals) in per_stratum {
+            assert!(vals.windows(2).all(|w| w[0] < w[1]), "per-stratum order violated");
+        }
+    }
+
+    #[test]
+    fn unknown_topic_errors() {
+        let b = Broker::new();
+        assert!(b.producer("nope").is_err());
+        assert!(b.consumer("nope").is_err());
+    }
+
+    #[test]
+    fn backpressure_try_send() {
+        let b = Broker::new();
+        b.create_topic("t", TopicConfig { partitions: 1, capacity: 2 }).unwrap();
+        let p = b.producer("t").unwrap();
+        assert!(p.try_send(item(0, 1.0)).unwrap());
+        assert!(p.try_send(item(0, 2.0)).unwrap());
+        assert!(!p.try_send(item(0, 3.0)).unwrap()); // full
+        assert_eq!(b.depth("t").unwrap(), 2);
+    }
+
+    #[test]
+    fn multi_producer_multi_consumer_conservation() {
+        let b = Arc::new(Broker::new());
+        b.create_topic("t", TopicConfig { partitions: 4, capacity: 256 }).unwrap();
+        let n_producers = 4;
+        let per = 5_000;
+        let mut handles = Vec::new();
+        for pid in 0..n_producers {
+            let p = b.producer("t").unwrap();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    p.send(Item::new((i % 8) as u16, (pid * per + i) as f64, 0)).unwrap();
+                }
+            }));
+        }
+        let consumed = Arc::new(AtomicU64::new(0));
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let mut c = b.consumer("t").unwrap();
+            let consumed = consumed.clone();
+            consumers.push(std::thread::spawn(move || {
+                while let Some(_) = c.poll() {
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close_topic("t").unwrap();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::Relaxed), (n_producers * per) as u64);
+    }
+
+    #[test]
+    fn poll_batch_drains_quickly() {
+        let b = Broker::new();
+        b.create_topic("t", TopicConfig { partitions: 2, capacity: 1024 }).unwrap();
+        let p = b.producer("t").unwrap();
+        for i in 0..50 {
+            p.send(item((i % 2) as u16, i as f64)).unwrap();
+        }
+        let mut c = b.consumer("t").unwrap();
+        let batch = c.poll_batch(100);
+        assert_eq!(batch.len(), 50);
+        assert!(c.poll_batch(10).is_empty());
+    }
+
+    #[test]
+    fn create_topic_idempotent() {
+        let b = Broker::new();
+        b.create_topic("t", TopicConfig { partitions: 2, capacity: 8 }).unwrap();
+        let p = b.producer("t").unwrap();
+        p.send(item(0, 1.0)).unwrap();
+        // re-create must not wipe buffered data
+        b.create_topic("t", TopicConfig { partitions: 9, capacity: 9 }).unwrap();
+        assert_eq!(b.depth("t").unwrap(), 1);
+    }
+}

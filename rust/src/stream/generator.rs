@@ -1,0 +1,328 @@
+//! Synthetic sub-stream generators (paper §5.1).
+//!
+//! The microbenchmarks use three sub-streams A/B/C with Gaussian or Poisson
+//! value distributions and configurable arrival rates; the skew experiments
+//! (§5.7) give one sub-stream 80%+ of the items.  Items carry virtual event
+//! times, so experiments are deterministic and decoupled from wall-clock
+//! pacing — throughput is measured as processing rate over generated items,
+//! matching the paper's "increase the arrival rate until saturation"
+//! methodology.
+
+use crate::core::{EventTime, Item, StratumId};
+use crate::util::rng::Rng;
+
+/// Value distribution of one sub-stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Distribution {
+    /// Gaussian(mu, sigma).
+    Gaussian { mu: f64, sigma: f64 },
+    /// Poisson(lambda).
+    Poisson { lambda: f64 },
+    /// Log-normal of the underlying normal (mu, sigma) — used by the case
+    /// study datasets for heavy-tailed sizes.
+    LogNormal { mu: f64, sigma: f64 },
+    /// Constant value (degenerate; handy in tests).
+    Constant { value: f64 },
+}
+
+impl Distribution {
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Distribution::Gaussian { mu, sigma } => rng.normal(mu, sigma),
+            Distribution::Poisson { lambda } => rng.poisson(lambda) as f64,
+            Distribution::LogNormal { mu, sigma } => rng.log_normal(mu, sigma),
+            Distribution::Constant { value } => value,
+        }
+    }
+
+    /// True mean of the distribution (for exact-value cross-checks).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Distribution::Gaussian { mu, .. } => mu,
+            Distribution::Poisson { lambda } => lambda,
+            Distribution::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+            Distribution::Constant { value } => value,
+        }
+    }
+}
+
+/// Arrival-rate schedule of a sub-stream (items per second of virtual time).
+#[derive(Debug, Clone)]
+pub enum RateSchedule {
+    /// Constant rate.
+    Constant(f64),
+    /// Piecewise-constant: (from_ms, rate) steps, sorted by time.
+    Steps(Vec<(EventTime, f64)>),
+}
+
+impl RateSchedule {
+    /// Rate at virtual time `t` (ms).
+    pub fn rate_at(&self, t: EventTime) -> f64 {
+        match self {
+            RateSchedule::Constant(r) => *r,
+            RateSchedule::Steps(steps) => {
+                let mut rate = steps.first().map(|s| s.1).unwrap_or(0.0);
+                for &(from, r) in steps {
+                    if t >= from {
+                        rate = r;
+                    } else {
+                        break;
+                    }
+                }
+                rate
+            }
+        }
+    }
+}
+
+/// One sub-stream (stratum source).
+#[derive(Debug, Clone)]
+pub struct SubStreamSpec {
+    /// Stratum this sub-stream feeds.
+    pub stratum: StratumId,
+    /// Value distribution.
+    pub dist: Distribution,
+    /// Arrival rate schedule (items/s of virtual time).
+    pub rate: RateSchedule,
+}
+
+impl SubStreamSpec {
+    pub fn new(stratum: StratumId, dist: Distribution, rate_per_sec: f64) -> Self {
+        Self { stratum, dist, rate: RateSchedule::Constant(rate_per_sec) }
+    }
+}
+
+/// A full synthetic stream: several sub-streams merged by event time.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    pub substreams: Vec<SubStreamSpec>,
+    pub seed: u64,
+}
+
+impl StreamConfig {
+    /// The paper's §5.1 Gaussian microbenchmark mix: A(10,5)@8000/s,
+    /// B(1000,50)@2000/s, C(10000,500)@`rate_c`/s.
+    pub fn gaussian_micro(rate_c: f64, seed: u64) -> Self {
+        Self {
+            substreams: vec![
+                SubStreamSpec::new(0, Distribution::Gaussian { mu: 10.0, sigma: 5.0 }, 8000.0),
+                SubStreamSpec::new(1, Distribution::Gaussian { mu: 1000.0, sigma: 50.0 }, 2000.0),
+                SubStreamSpec::new(2, Distribution::Gaussian { mu: 10000.0, sigma: 500.0 }, rate_c),
+            ],
+            seed,
+        }
+    }
+
+    /// §5.7 skewed Gaussian: A(100,10) 80%, B(1000,100) 19%, C(10000,1000) 1%
+    /// of a `total_rate` stream.
+    pub fn gaussian_skew(total_rate: f64, seed: u64) -> Self {
+        Self {
+            substreams: vec![
+                SubStreamSpec::new(0, Distribution::Gaussian { mu: 100.0, sigma: 10.0 }, total_rate * 0.80),
+                SubStreamSpec::new(1, Distribution::Gaussian { mu: 1000.0, sigma: 100.0 }, total_rate * 0.19),
+                SubStreamSpec::new(2, Distribution::Gaussian { mu: 10000.0, sigma: 1000.0 }, total_rate * 0.01),
+            ],
+            seed,
+        }
+    }
+
+    /// §5.7 skewed Poisson: A(λ=10) 80%, B(λ=1000) 19.99%, C(λ=1e8) 0.01%.
+    pub fn poisson_skew(total_rate: f64, seed: u64) -> Self {
+        Self {
+            substreams: vec![
+                SubStreamSpec::new(0, Distribution::Poisson { lambda: 10.0 }, total_rate * 0.80),
+                SubStreamSpec::new(1, Distribution::Poisson { lambda: 1000.0 }, total_rate * 0.1999),
+                SubStreamSpec::new(2, Distribution::Poisson { lambda: 1e8 }, total_rate * 0.0001),
+            ],
+            seed,
+        }
+    }
+}
+
+/// Deterministic event-time-ordered generator over a [`StreamConfig`].
+pub struct StreamGenerator {
+    /// Per-substream state: (spec, next event time f64 ms, rng).
+    subs: Vec<(SubStreamSpec, f64, Rng)>,
+}
+
+impl StreamGenerator {
+    pub fn new(config: &StreamConfig) -> Self {
+        let subs = config
+            .substreams
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let rng = Rng::seed_from_u64(config.seed.wrapping_add(i as u64 * 0x9E37));
+                (s.clone(), 0.0f64, rng)
+            })
+            .collect();
+        Self { subs }
+    }
+
+    /// Generate all items with event time < `until_ms`, merged and sorted by
+    /// event time.
+    pub fn take_until(&mut self, until_ms: EventTime) -> Vec<Item> {
+        let mut items = Vec::new();
+        for (spec, next_t, rng) in &mut self.subs {
+            loop {
+                let t = *next_t;
+                if t >= until_ms as f64 {
+                    break;
+                }
+                let rate = spec.rate.rate_at(t as EventTime);
+                if rate <= 0.0 {
+                    // Skip forward to the next schedule step (or end).
+                    *next_t = match &spec.rate {
+                        RateSchedule::Steps(steps) => steps
+                            .iter()
+                            .map(|&(from, _)| from as f64)
+                            .find(|&from| from > t)
+                            .unwrap_or(until_ms as f64),
+                        _ => until_ms as f64,
+                    };
+                    continue;
+                }
+                if t < until_ms as f64 {
+                    items.push(Item::new(spec.stratum, spec.dist.sample(rng), t as EventTime));
+                }
+                // Deterministic inter-arrival: exponential spacing keeps the
+                // Poisson-process character; mean 1000/rate ms.
+                let gap_ms = rng.exponential(rate) * 1000.0;
+                *next_t = t + gap_ms.max(1e-6);
+            }
+        }
+        items.sort_by_key(|it| it.ts);
+        items
+    }
+
+    /// Exact aggregates of a generated batch: per-stratum (count, sum).
+    pub fn exact_aggregates(items: &[Item]) -> ([f64; crate::core::MAX_STRATA], [f64; crate::core::MAX_STRATA]) {
+        let mut count = [0.0; crate::core::MAX_STRATA];
+        let mut sum = [0.0; crate::core::MAX_STRATA];
+        for it in items {
+            let s = it.stratum as usize;
+            if s < crate::core::MAX_STRATA {
+                count[s] += 1.0;
+                sum[s] += it.value;
+            }
+        }
+        (count, sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_determines_item_count() {
+        let cfg = StreamConfig {
+            substreams: vec![SubStreamSpec::new(0, Distribution::Constant { value: 1.0 }, 1000.0)],
+            seed: 1,
+        };
+        let mut g = StreamGenerator::new(&cfg);
+        let items = g.take_until(10_000); // 10 s at 1000/s ~ 10k items
+        let n = items.len() as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "n = {n}");
+    }
+
+    #[test]
+    fn items_sorted_by_event_time() {
+        let cfg = StreamConfig::gaussian_micro(100.0, 2);
+        let mut g = StreamGenerator::new(&cfg);
+        let items = g.take_until(2_000);
+        assert!(items.windows(2).all(|w| w[0].ts <= w[1].ts));
+        // all three strata present
+        for s in 0..3u16 {
+            assert!(items.iter().any(|i| i.stratum == s), "stratum {s} missing");
+        }
+    }
+
+    #[test]
+    fn take_until_is_contiguous() {
+        let cfg = StreamConfig::gaussian_micro(500.0, 3);
+        let mut g = StreamGenerator::new(&cfg);
+        let a = g.take_until(1_000);
+        let b = g.take_until(2_000);
+        assert!(a.iter().all(|i| i.ts < 1_000));
+        assert!(b.iter().all(|i| i.ts >= 1_000 && i.ts < 2_000) || b.is_empty());
+    }
+
+    #[test]
+    fn step_schedule_changes_rate() {
+        let spec = SubStreamSpec {
+            stratum: 0,
+            dist: Distribution::Constant { value: 1.0 },
+            rate: RateSchedule::Steps(vec![(0, 100.0), (5_000, 2000.0)]),
+        };
+        let cfg = StreamConfig { substreams: vec![spec], seed: 4 };
+        let mut g = StreamGenerator::new(&cfg);
+        let first = g.take_until(5_000).len() as f64; // ~500
+        let second = g.take_until(10_000).len() as f64; // ~10000
+        assert!(first < 700.0, "first {first}");
+        assert!(second > 8_000.0, "second {second}");
+    }
+
+    #[test]
+    fn gaussian_values_have_right_mean() {
+        let cfg = StreamConfig {
+            substreams: vec![SubStreamSpec::new(
+                0,
+                Distribution::Gaussian { mu: 1000.0, sigma: 50.0 },
+                5000.0,
+            )],
+            seed: 5,
+        };
+        let mut g = StreamGenerator::new(&cfg);
+        let items = g.take_until(10_000);
+        let mean = items.iter().map(|i| i.value).sum::<f64>() / items.len() as f64;
+        assert!((mean - 1000.0).abs() < 5.0, "mean {mean}");
+    }
+
+    #[test]
+    fn skew_mix_shares() {
+        let cfg = StreamConfig::gaussian_skew(10_000.0, 6);
+        let mut g = StreamGenerator::new(&cfg);
+        let items = g.take_until(20_000);
+        let (count, _) = StreamGenerator::exact_aggregates(&items);
+        let total: f64 = count.iter().sum();
+        let share0 = count[0] / total;
+        let share2 = count[2] / total;
+        assert!((share0 - 0.80).abs() < 0.02, "share0 {share0}");
+        assert!((share2 - 0.01).abs() < 0.005, "share2 {share2}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = |seed| {
+            let cfg = StreamConfig::gaussian_micro(100.0, seed);
+            StreamGenerator::new(&cfg).take_until(1_000)
+        };
+        let a = gen(7);
+        let b = gen(7);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x == y));
+        assert_ne!(gen(7).len(), 0);
+    }
+
+    #[test]
+    fn poisson_large_lambda_values() {
+        let cfg = StreamConfig::poisson_skew(10_000.0, 8);
+        let mut g = StreamGenerator::new(&cfg);
+        let items = g.take_until(5_000);
+        // stratum 2 items around 1e8
+        let big: Vec<&Item> = items.iter().filter(|i| i.stratum == 2).collect();
+        if let Some(it) = big.first() {
+            assert!((it.value - 1e8).abs() / 1e8 < 0.01);
+        }
+    }
+
+    #[test]
+    fn log_normal_mean() {
+        let d = Distribution::LogNormal { mu: 0.0, sigma: 0.5 };
+        let mut rng = Rng::seed_from_u64(9);
+        let n = 100_000;
+        let mean = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - d.mean()).abs() / d.mean() < 0.02, "mean {mean} vs {}", d.mean());
+    }
+}

@@ -1,0 +1,11 @@
+//! Input-stream layer: synthetic sub-stream generators (paper §5.1), the
+//! Kafka-like in-process stream aggregator (§2.1), and the rate-controlled
+//! replay tool used by the case studies (§6.1).
+
+pub mod broker;
+pub mod generator;
+pub mod replay;
+
+pub use broker::{Broker, Consumer, Producer, TopicConfig};
+pub use generator::{Distribution, RateSchedule, StreamConfig, StreamGenerator, SubStreamSpec};
+pub use replay::ReplayTool;

