@@ -1,0 +1,121 @@
+//! Micro-benchmark of the sketch hot paths: per-item offer cost, merge
+//! cost, and query cost for the three mergeable summaries.  This is the
+//! §Perf instrument for the sketch subsystem — run before/after
+//! optimizations and record deltas in EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench sketch_hotpath` (env `SA_SKETCH_N=5000000` to scale).
+
+use std::time::Instant;
+
+use streamapprox::sketch::{HeavyHitters, HyperLogLog, QuantileSketch};
+use streamapprox::util::rng::Rng;
+use streamapprox::util::table::Table;
+
+struct Timing {
+    offer_ns: f64,
+    merge_us: f64,
+    query_us: f64,
+}
+
+fn bench<S, O, M, Q>(n: usize, mut mk: impl FnMut(u64) -> S, offer: O, merge: M, query: Q) -> Timing
+where
+    O: Fn(&mut S, f64, f64),
+    M: Fn(&mut S, &S),
+    Q: Fn(&S) -> f64,
+{
+    let mut rng = Rng::seed_from_u64(1);
+    let vals: Vec<(f64, f64)> =
+        (0..n).map(|_| (rng.log_normal(6.9, 1.5), rng.range_f64(0.5, 4.0))).collect();
+
+    // offer
+    let mut s = mk(1);
+    let t0 = Instant::now();
+    for &(v, w) in &vals {
+        offer(&mut s, v, w);
+    }
+    let offer_ns = t0.elapsed().as_nanos() as f64 / n as f64;
+
+    // merge (8 shards, like the per-window shard merge)
+    let shards: Vec<S> = (0..8)
+        .map(|i| {
+            let mut p = mk(2 + i);
+            for &(v, w) in vals.iter().skip(i as usize).step_by(8) {
+                offer(&mut p, v, w);
+            }
+            p
+        })
+        .collect();
+    let mut merged = mk(99);
+    let t0 = Instant::now();
+    for p in &shards {
+        merge(&mut merged, p);
+    }
+    let merge_us = t0.elapsed().as_nanos() as f64 / 1e3;
+
+    // query
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for _ in 0..100 {
+        acc += query(&merged);
+    }
+    assert!(acc.is_finite() || acc.is_nan());
+    let query_us = t0.elapsed().as_nanos() as f64 / 100.0 / 1e3;
+
+    Timing { offer_ns, merge_us, query_us }
+}
+
+fn main() {
+    let n: usize = std::env::var("SA_SKETCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+
+    let mut t = Table::new(
+        format!("sketch hot path (n = {n}, lognormal values, HT-style weights)"),
+        &["sketch", "offer ns/item", "merge-8 us", "query us"],
+    );
+
+    let q = bench(
+        n,
+        |_| QuantileSketch::new(200),
+        |s, v, w| s.offer(v, w),
+        |a, b| a.merge(b),
+        |s| s.quantile(0.95),
+    );
+    t.row(vec![
+        "quantile (c=200)".into(),
+        format!("{:.1}", q.offer_ns),
+        format!("{:.1}", q.merge_us),
+        format!("{:.2}", q.query_us),
+    ]);
+
+    let h = bench(
+        n,
+        |_| HyperLogLog::new(12),
+        |s, v, _| s.offer(v),
+        |a, b| a.merge(b),
+        |s| s.estimate(),
+    );
+    t.row(vec![
+        "hyperloglog (p=12)".into(),
+        format!("{:.1}", h.offer_ns),
+        format!("{:.1}", h.merge_us),
+        format!("{:.2}", h.query_us),
+    ]);
+
+    let hh = bench(
+        n,
+        |_| HeavyHitters::new(64, 1024, 4, 7),
+        |s, v, w| s.offer((v as u64) % 1024, w),
+        |a, b| a.merge(b),
+        |s| s.top_k(10).first().map(|&(_, c)| c).unwrap_or(0.0),
+    );
+    t.row(vec![
+        "heavy-hitters (cm 1024x4)".into(),
+        format!("{:.1}", hh.offer_ns),
+        format!("{:.1}", hh.merge_us),
+        format!("{:.2}", hh.query_us),
+    ]);
+
+    t.print();
+}

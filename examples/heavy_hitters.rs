@@ -1,0 +1,136 @@
+//! Heavy hitters over a CAIDA-style source trace (paper §6.2 workload,
+//! extended to the sketch subsystem): per-window top-k sources under
+//! varying sampling fractions.
+//!
+//! ```bash
+//! cargo run --release --example heavy_hitters
+//! ```
+//!
+//! Part 1 runs `Query::TopK(10)` end-to-end (OASRS sampling → per-shard
+//! sketches → barrier-free merge → Count-Min-bounded counts) at fractions
+//! {0.8, 0.4, 0.1} and checks the true top-3 sources are recovered in every
+//! window at every fraction.  Part 2 uses the `HeavyHitters` sketch
+//! directly over 10 000 synthetic source IPs — the regime where the
+//! candidate set, not the stratum table, does the work.
+
+use streamapprox::budget::QueryBudget;
+use streamapprox::datasets::CaidaSourcesConfig;
+use streamapprox::engine::EngineKind;
+use streamapprox::prelude::*;
+use streamapprox::util::rng::Rng;
+use streamapprox::util::table::Table;
+
+fn main() {
+    // ---- Part 1: Query::TopK through the full pipeline --------------------
+    let cfg = CaidaSourcesConfig::default();
+    let items = cfg.generate(20_000);
+    println!(
+        "trace: {} flows over 20 s, {} sources, zipf({}) popularity\n",
+        items.len(),
+        cfg.sources,
+        cfg.exponent
+    );
+
+    let mut table = Table::new(
+        "top-10 sources by estimated flow count (last window, w = 10 s)",
+        &["rank", "80% sample", "40% sample", "10% sample", "exact"],
+    );
+
+    let mut per_fraction: Vec<Vec<(u64, f64)>> = Vec::new();
+    let mut exact_counts = vec![0.0f64; streamapprox::core::MAX_STRATA];
+    let mut recovered_everywhere = true;
+
+    for &fraction in &[0.8, 0.4, 0.1] {
+        let pipeline = PipelineBuilder::new()
+            .engine(EngineKind::Pipelined)
+            .sampler(SamplerKind::Oasrs)
+            .budget(QueryBudget::SamplingFraction(fraction))
+            .query(Query::TopK(10))
+            .window(WindowConfig::paper_default())
+            .seed(7)
+            .build_native();
+        let report = pipeline.run_items(&items).expect("pipeline run");
+
+        for w in &report.windows {
+            let exact = w.exact_per_stratum.as_ref().expect("exact counts");
+            let top = w.result.top_k.as_ref().expect("top-k");
+            let keys: Vec<u64> = top.iter().map(|&(k, _)| k).collect();
+            for &s in &streamapprox::query::top_k_strata(exact, 3) {
+                if !keys.contains(&(s as u64)) {
+                    recovered_everywhere = false;
+                    eprintln!(
+                        "MISS: fraction {fraction}: true top-3 source {s} absent in \
+                         window {}..{}",
+                        w.start_ms, w.end_ms
+                    );
+                }
+            }
+        }
+        let last = report.windows.last().expect("windows");
+        per_fraction.push(last.result.top_k.clone().expect("top-k"));
+
+        // exact counts of the same last window (identical across fractions)
+        let last_span = (last.start_ms, last.end_ms);
+        exact_counts.iter_mut().for_each(|c| *c = 0.0);
+        for it in &items {
+            if it.ts >= last_span.0 && it.ts < last_span.1 {
+                exact_counts[it.stratum as usize] += 1.0;
+            }
+        }
+    }
+
+    let exact_ranked = streamapprox::query::top_k_strata(&exact_counts, 10);
+    for rank in 0..10 {
+        let cell = |f: usize| -> String {
+            per_fraction[f]
+                .get(rank)
+                .map(|&(k, c)| format!("src{k:02} ({c:.0})"))
+                .unwrap_or_else(|| "-".into())
+        };
+        let e = exact_ranked[rank];
+        table.row(vec![
+            format!("{}", rank + 1),
+            cell(0),
+            cell(1),
+            cell(2),
+            format!("src{e:02} ({})", exact_counts[e]),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ntrue top-3 recovered in every window at every fraction: {}",
+        if recovered_everywhere { "YES" } else { "NO" }
+    );
+    assert!(recovered_everywhere, "acceptance: top-3 must always be recovered");
+
+    // ---- Part 2: the sketch directly over 10k source IPs ------------------
+    println!("\ndirect sketch: 10 000 synthetic source IPs, zipf(1.3), 500k flows");
+    let mut rng = Rng::seed_from_u64(99);
+    let popularity: Vec<f64> = (0..10_000).map(|i| 1.0 / (1.0 + i as f64).powf(1.3)).collect();
+    // Synthetic 32-bit addresses; index 0 is the heaviest talker.
+    let addr = |i: usize| 0x0A00_0000u64 + i as u64;
+
+    for &fraction in &[0.8, 0.4, 0.1] {
+        let mut hh = streamapprox::sketch::HeavyHitters::new(256, 2048, 4, 5);
+        let weight = 1.0 / fraction; // HT weight of a Bernoulli(fraction) sample
+        for _ in 0..500_000 {
+            let src = rng.categorical(&popularity);
+            if rng.bernoulli(fraction) {
+                hh.offer(addr(src), weight);
+            }
+        }
+        let top: Vec<String> = hh
+            .top_k(5)
+            .into_iter()
+            .map(|(k, c)| format!("{:08x}:{:.0}", k, c))
+            .collect();
+        let head_ok = (0..3).all(|i| hh.top_k(10).iter().any(|&(k, _)| k == addr(i)));
+        println!(
+            "  fraction {:>4}: top-5 = [{}]  (±{:.0} over-bound; true top-3 in top-10: {})",
+            format!("{}%", (fraction * 100.0) as u32),
+            top.join(", "),
+            hh.over_estimate_bound(),
+            if head_ok { "yes" } else { "NO" }
+        );
+    }
+}

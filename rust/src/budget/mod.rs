@@ -27,6 +27,9 @@ pub enum QueryBudget {
     SampleSizePerInterval(usize),
     /// Keep the relative error bound of query results under `target`
     /// (e.g. 0.01 = 1%), adapting the fraction from `initial_fraction`.
+    /// Only meaningful for the linear (CLT-bounded) queries; sketch-backed
+    /// queries have fraction-independent bounds, and [`crate::pipeline`]
+    /// rejects the combination.
     TargetRelativeError { target: f64, initial_fraction: f64 },
     /// Spend at most `ms_per_window` milliseconds of compute per window.
     LatencyPerWindowMs(f64),

@@ -70,9 +70,88 @@ impl CaidaConfig {
     }
 }
 
+/// CAIDA-style *per-source* trace for heavy-hitter workloads: flows are
+/// stratified by source ("source IP" bucketed into at most
+/// [`crate::core::MAX_STRATA`] strata) with Zipf-distributed popularity —
+/// the canonical skew of backbone source activity — and log-normal flow
+/// sizes.  Used by `Query::TopK` demos/tests: the head sources dominate, so
+/// top-k must recover them at any reasonable sampling fraction.
+#[derive(Debug, Clone)]
+pub struct CaidaSourcesConfig {
+    /// Number of distinct sources (strata); clamped to `MAX_STRATA`.
+    pub sources: usize,
+    /// Zipf exponent of source popularity (≥ ~1 → strong skew).
+    pub exponent: f64,
+    /// Flows per second of virtual time.
+    pub flows_per_sec: f64,
+    pub seed: u64,
+}
+
+impl Default for CaidaSourcesConfig {
+    fn default() -> Self {
+        Self {
+            sources: crate::core::MAX_STRATA,
+            exponent: 1.2,
+            flows_per_sec: 20_000.0,
+            seed: 2016,
+        }
+    }
+}
+
+impl CaidaSourcesConfig {
+    /// Normalized Zipf popularity of each source (descending by rank).
+    pub fn popularity(&self) -> Vec<f64> {
+        let n = self.sources.clamp(1, crate::core::MAX_STRATA);
+        let raw: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64).powf(self.exponent)).collect();
+        let total: f64 = raw.iter().sum();
+        raw.into_iter().map(|w| w / total).collect()
+    }
+
+    /// Generate `duration_ms` of trace, sorted by event time.
+    pub fn generate(&self, duration_ms: u64) -> Vec<Item> {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let pop = self.popularity();
+        let n = (self.flows_per_sec * duration_ms as f64 / 1000.0) as usize;
+        let mut items = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ts = rng.range_u64(0, duration_ms.max(1));
+            let src = rng.categorical(&pop);
+            let bytes = rng.log_normal(6.9, 1.5).min(1e7);
+            items.push(Item::new(src as StratumId, bytes, ts));
+        }
+        items.sort_by_key(|i| i.ts);
+        items
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sources_skew_is_zipf_ordered() {
+        let cfg = CaidaSourcesConfig::default();
+        let items = cfg.generate(10_000);
+        let mut counts = vec![0usize; crate::core::MAX_STRATA];
+        for it in &items {
+            counts[it.stratum as usize] += 1;
+        }
+        // the head source strictly dominates, and popularity decays by rank
+        assert!(counts[0] > counts[1] && counts[1] > counts[2]);
+        assert!(counts[0] as f64 > 3.0 * counts[8] as f64);
+        let pop = cfg.popularity();
+        assert!((pop.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sources_deterministic_and_sorted() {
+        let cfg = CaidaSourcesConfig { flows_per_sec: 2_000.0, ..Default::default() };
+        let a = cfg.generate(3_000);
+        let b = cfg.generate(3_000);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x == y));
+        assert!(a.windows(2).all(|w| w[0].ts <= w[1].ts));
+    }
 
     #[test]
     fn mix_shares_hold() {

@@ -9,5 +9,5 @@
 pub mod caida;
 pub mod taxi;
 
-pub use caida::CaidaConfig;
+pub use caida::{CaidaConfig, CaidaSourcesConfig};
 pub use taxi::TaxiConfig;

@@ -52,6 +52,7 @@ impl<'a> BatchedEngine<'a> {
         sampler_kind: SamplerKind,
         cost: &mut CostFunction,
     ) -> Result<RunReport> {
+        super::validate_budget(&self.query, cost)?;
         let interval = self.config.batch_interval_ms.min(self.window.slide_ms);
         let interval = gcd_fit(interval, self.window.slide_ms);
         let mut assembler = WindowAssembler::with_interval(self.window, interval);
@@ -98,7 +99,16 @@ impl<'a> BatchedEngine<'a> {
                     (None, None)
                 };
 
-                let rel = qr.relative_bound();
+                // Sketch-native bounds (rank ε, HLL RSE, CM over-bound) do
+                // not shrink as the sampling fraction grows, so feeding them
+                // to the accuracy-feedback loop would saturate it at 1.0;
+                // NaN leaves the controller untouched (cost/arrival EWMAs
+                // still update below).
+                let rel = if self.query.is_sketch_backed() {
+                    f64::NAN
+                } else {
+                    qr.relative_bound()
+                };
                 let arrived = ws.result.arrived();
                 let sampled = ws.result.sample.len();
                 report.windows.push(WindowReport {
@@ -167,6 +177,16 @@ pub(crate) fn exact_values(query: &Query, exact: &ExactAgg) -> (Option<f64>, Opt
         }
         // Histogram ground truth needs raw values; not tracked inline.
         Query::Histogram { .. } => (Some(exact.total_sum()), None),
+        // Quantile/Distinct ground truth also needs raw values (ExactAgg only
+        // keeps per-stratum count/sum); integration tests recompute it from
+        // the trace instead.
+        Query::Quantile(_) | Query::Distinct => (None, None),
+        // TopK: per-stratum arrival counts are exact; the scalar mirrors the
+        // approximate scalar (summed count of the true top-k strata).
+        Query::TopK(k) => (
+            Some(crate::query::top_k_mass(&exact.count, *k)),
+            Some(exact.count.to_vec()),
+        ),
     }
 }
 
@@ -252,6 +272,43 @@ mod tests {
     fn batch_interval_larger_than_slide_clamped() {
         let r = run(SamplerKind::Oasrs, 0.5, 1, 5_000, 4_000);
         assert!(!r.windows.is_empty());
+    }
+
+    #[test]
+    fn sketch_queries_run_through_batched_engine() {
+        let cfg = EngineConfig {
+            kind: super::super::EngineKind::Batched,
+            batch_interval_ms: 500,
+            workers: 2,
+            ..Default::default()
+        };
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let window = WindowConfig::new(2_000, 1_000);
+        let items = {
+            let mut v = StreamGenerator::new(&StreamConfig::gaussian_micro(100.0, 13))
+                .take_until(6_000);
+            v.sort_by_key(|i| i.ts);
+            v
+        };
+        for query in [crate::query::Query::Quantile(0.9), crate::query::Query::Distinct] {
+            let engine = BatchedEngine::new(&cfg, window, query, &exec);
+            let mut cost = CostFunction::new(QueryBudget::SamplingFraction(0.6));
+            let r = engine.run(&items, SamplerKind::Oasrs, &mut cost).unwrap();
+            assert!(!r.windows.is_empty());
+            for w in &r.windows {
+                assert!(w.result.value().is_finite(), "non-finite sketch result");
+            }
+        }
+        // TopK: exact per-stratum counts available -> accuracy loss finite
+        let engine = BatchedEngine::new(&cfg, window, crate::query::Query::TopK(2), &exec);
+        let mut cost = CostFunction::new(QueryBudget::SamplingFraction(0.6));
+        let r = engine.run(&items, SamplerKind::Oasrs, &mut cost).unwrap();
+        let loss = r.mean_accuracy_loss();
+        assert!(loss < 0.1, "top-k mass loss {loss}");
+        for w in &r.windows {
+            assert!(w.result.top_k.is_some());
+        }
     }
 
     #[test]

@@ -15,10 +15,30 @@ pub mod batched;
 pub mod pipelined;
 pub mod worker;
 
-use crate::core::EventTime;
-use crate::query::QueryResult;
+use crate::budget::{CostFunction, QueryBudget};
+use crate::core::{Error, EventTime, Result};
+use crate::query::{Query, QueryResult};
 
 pub use worker::IngestPool;
+
+/// Reject query/budget combinations the feedback loop cannot serve:
+/// sketch-native bounds (rank ε, HLL RSE, Count-Min over-bound) are set by
+/// the sketch configuration, not the sampling fraction, so an
+/// accuracy-target budget would silently freeze at its initial fraction.
+/// Called by both engines at the top of `run`.
+pub(crate) fn validate_budget(query: &Query, cost: &CostFunction) -> Result<()> {
+    if query.is_sketch_backed()
+        && matches!(cost.budget(), QueryBudget::TargetRelativeError { .. })
+    {
+        return Err(Error::Config(format!(
+            "TargetRelativeError budget cannot control the {} query: its \
+             bound is fixed by the sketch parameters, not the sampling \
+             fraction — use SamplingFraction or tune SketchParams instead",
+            query.label()
+        )));
+    }
+    Ok(())
+}
 
 /// Which processing model to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -183,6 +203,7 @@ mod tests {
             result: QueryResult {
                 scalar: Some(ConfidenceInterval { value, bound: 0.0, level: ConfidenceLevel::P95 }),
                 per_stratum: None,
+                top_k: None,
                 output: out,
             },
             exact_scalar: Some(exact),

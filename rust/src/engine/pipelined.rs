@@ -59,6 +59,7 @@ impl<'a> PipelinedEngine<'a> {
         sampler_kind: SamplerKind,
         cost: &mut CostFunction,
     ) -> Result<RunReport> {
+        super::validate_budget(&self.query, cost)?;
         let mut pool = IngestPool::new(
             sampler_kind,
             self.config.workers,
@@ -95,7 +96,14 @@ impl<'a> PipelinedEngine<'a> {
                         };
                         let arrived = ws.result.arrived();
                         let sampled = ws.result.sample.len();
-                        let rel = qr.relative_bound();
+                        // Sketch-native bounds are fraction-independent: NaN
+                        // keeps them out of the accuracy-feedback loop (the
+                        // controller ignores non-finite observations).
+                        let rel = if query.is_sketch_backed() {
+                            f64::NAN
+                        } else {
+                            qr.relative_bound()
+                        };
                         out.push(WindowReport {
                             start_ms: ws.start_ms,
                             end_ms: ws.end_ms,
@@ -224,6 +232,39 @@ mod tests {
             .sum();
         assert!(arrived_total > 0.0);
         assert!(r.items_processed > 0);
+    }
+
+    #[test]
+    fn sketch_queries_run_through_pipelined_engine() {
+        let cfg = EngineConfig {
+            kind: super::super::EngineKind::Pipelined,
+            workers: 2,
+            ..Default::default()
+        };
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let window = WindowConfig::new(2_000, 1_000);
+        let items =
+            StreamGenerator::new(&StreamConfig::gaussian_micro(100.0, 17)).take_until(6_000);
+        let engine = PipelinedEngine::new(&cfg, window, Query::TopK(3), &exec);
+        let mut cost = CostFunction::new(QueryBudget::SamplingFraction(0.5));
+        let r = engine.run(&items, SamplerKind::Oasrs, &mut cost).unwrap();
+        assert!(!r.windows.is_empty());
+        for w in &r.windows {
+            let top = w.result.top_k.as_ref().expect("top-k list");
+            assert!(!top.is_empty() && top.len() <= 3);
+            assert!(top.windows(2).all(|p| p[0].1 >= p[1].1), "unsorted top-k");
+        }
+        // weighted-reservoir sampler also flows through the pipelined path
+        // (plumbing only — value-biased sampling gives uncalibrated
+        // quantiles, see sampling/weighted.rs docs)
+        let engine = PipelinedEngine::new(&cfg, window, Query::Quantile(0.95), &exec);
+        let mut cost = CostFunction::new(QueryBudget::SamplingFraction(0.3));
+        let r = engine.run(&items, SamplerKind::WeightedRes, &mut cost).unwrap();
+        assert!(!r.windows.is_empty());
+        for w in &r.windows {
+            assert!(w.result.value().is_finite());
+        }
     }
 
     #[test]

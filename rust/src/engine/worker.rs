@@ -22,6 +22,7 @@ use crate::error::estimator::StrataState;
 use crate::sampling::oasrs::merge_worker_results;
 use crate::sampling::{
     NoopSampler, OasrsSampler, SampleResult, Sampler, SamplerKind, SrsSampler,
+    WeightedResSampler,
 };
 use crate::util::channel::{bounded, Receiver, Sender};
 use crate::util::rng::Rng;
@@ -32,6 +33,7 @@ pub enum WorkerSampler {
     Oasrs(OasrsSampler),
     Srs(SrsSampler),
     Sts(StsBatch),
+    WeightedRes(WeightedResSampler),
     Noop(NoopSampler),
 }
 
@@ -41,6 +43,9 @@ impl WorkerSampler {
             SamplerKind::Oasrs => WorkerSampler::Oasrs(OasrsSampler::new(fraction, seed)),
             SamplerKind::Srs => WorkerSampler::Srs(SrsSampler::new(fraction, seed)),
             SamplerKind::Sts => WorkerSampler::Sts(StsBatch::new(seed)),
+            SamplerKind::WeightedRes => {
+                WorkerSampler::WeightedRes(WeightedResSampler::new(fraction, seed))
+            }
             SamplerKind::None => WorkerSampler::Noop(NoopSampler::new()),
         }
     }
@@ -51,6 +56,7 @@ impl WorkerSampler {
             WorkerSampler::Oasrs(s) => s.offer(item),
             WorkerSampler::Srs(s) => s.offer(item),
             WorkerSampler::Sts(s) => s.offer(item),
+            WorkerSampler::WeightedRes(s) => s.offer(item),
             WorkerSampler::Noop(s) => s.offer(item),
         }
     }
@@ -59,6 +65,7 @@ impl WorkerSampler {
         match self {
             WorkerSampler::Oasrs(s) => s.finish_interval(),
             WorkerSampler::Srs(s) => s.finish_interval(),
+            WorkerSampler::WeightedRes(s) => s.finish_interval(),
             WorkerSampler::Noop(s) => s.finish_interval(),
             WorkerSampler::Sts(_) => panic!("STS requires the two-phase protocol"),
         }
@@ -68,6 +75,7 @@ impl WorkerSampler {
         match self {
             WorkerSampler::Oasrs(s) => s.set_fraction(f),
             WorkerSampler::Srs(s) => s.set_fraction(f),
+            WorkerSampler::WeightedRes(s) => s.set_fraction(f),
             WorkerSampler::Noop(s) => s.set_fraction(f),
             WorkerSampler::Sts(_) => {} // fraction applied via targets
         }
@@ -99,6 +107,8 @@ impl StsBatch {
             // shuffle-write half of Spark's groupBy.
             self.groups[s].push(item.value);
             self.counts[s] += 1;
+        } else {
+            crate::metrics::record_dropped_item();
         }
     }
 
@@ -439,6 +449,18 @@ mod tests {
         let r = p.finish_interval();
         let f = r.fraction();
         assert!((f - 0.3).abs() < 0.01, "fraction {f}");
+    }
+
+    #[test]
+    fn weighted_res_multi_worker_counts_everything() {
+        let mut p = IngestPool::new(SamplerKind::WeightedRes, 3, 0.2, 21);
+        for i in 0..9_000 {
+            p.offer(Item::new((i % 3) as u16, 1.0 + (i % 10) as f64, i as u64));
+        }
+        let r = p.finish_interval();
+        assert_eq!(r.arrived(), 9_000.0);
+        assert!(!r.sample.is_empty());
+        assert!(r.sample.len() < 9_000);
     }
 
     #[test]

@@ -1,8 +1,19 @@
-//! Confidence intervals from the "68-95-99.7" rule (paper §3.3).
+//! Confidence intervals from the "68-95-99.7" rule (paper §3.3), plus the
+//! *native* guarantees of the sketch subsystem surfaced in the same
+//! `output ± bound` shape.
 //!
 //! The approximate result falls within 1, 2, 3 standard deviations of the
 //! true result with probability 68% / 95% / 99.7%; the standard deviation is
 //! the square root of the estimated variance (Eq. 6 / Eq. 9).
+//!
+//! Sketch-backed queries do not go through the CLT: each sketch carries its
+//! own guarantee ([`crate::sketch`]), translated here into an interval —
+//! * quantiles: a deterministic rank-error ε maps to the value band
+//!   `[Q(q−ε), Q(q+ε)]` ([`ConfidenceInterval::for_quantile`]);
+//! * distinct counts: HyperLogLog's relative standard error scales with the
+//!   requested σ level ([`ConfidenceInterval::for_distinct`]);
+//! * heavy-hitter counts: Count-Min's one-sided `ε·W` over-estimate bound
+//!   ([`ConfidenceInterval::for_count_overestimate`]).
 
 use super::estimator::Estimate;
 
@@ -48,6 +59,40 @@ impl ConfidenceInterval {
     /// Interval for the MEAN estimate.
     pub fn for_mean(e: &Estimate, level: ConfidenceLevel) -> Self {
         Self { value: e.mean, bound: level.sigmas() * e.var_mean.max(0.0).sqrt(), level }
+    }
+
+    /// Interval for a quantile estimate from its rank-error band: `value` is
+    /// `Q(q)`, `lo`/`hi` are the sketch's `Q(q−ε)`/`Q(q+ε)`.  The band is a
+    /// deterministic guarantee of the sketch (not a CLT statement); the
+    /// half-width is the wider side so the interval always covers the band.
+    pub fn for_quantile(value: f64, lo: f64, hi: f64, level: ConfidenceLevel) -> Self {
+        let bound = (hi - value).max(value - lo).max(0.0);
+        Self { value, bound, level }
+    }
+
+    /// Interval for a HyperLogLog distinct-count estimate: the native
+    /// relative standard error (≈1.04/√m) scaled by the level's σ-multiple.
+    ///
+    /// **Covers sketch error only.** Over a *sampled* stream the estimate
+    /// counts distinct values among the selected items; values the sampler
+    /// never selected are invisible, so relative to the full stream the
+    /// value is a lower bound and the true distinct count can sit far above
+    /// `hi()`.  Only over an unsampled window (native execution, or heavy
+    /// keys certain to be selected) is this a calibrated two-sided interval.
+    pub fn for_distinct(estimate: f64, relative_std_error: f64, level: ConfidenceLevel) -> Self {
+        Self {
+            value: estimate,
+            bound: level.sigmas() * relative_std_error.max(0.0) * estimate.abs(),
+            level,
+        }
+    }
+
+    /// Interval for a Count-Min-backed count: the estimate never
+    /// under-counts and over-counts by at most `over_bound = ε·W` (with
+    /// probability ≥ 1 − e^−depth), so the bound is one-sided and
+    /// independent of the σ level.
+    pub fn for_count_overestimate(estimate: f64, over_bound: f64, level: ConfidenceLevel) -> Self {
+        Self { value: estimate, bound: over_bound.max(0.0), level }
     }
 
     /// Relative error bound (`bound / |value|`), `inf` when value is 0.
@@ -132,6 +177,35 @@ mod tests {
         assert_eq!(ci.relative(), 0.0);
         let ci2 = ConfidenceInterval { value: 0.0, bound: 1.0, level: ConfidenceLevel::P95 };
         assert!(ci2.relative().is_infinite());
+    }
+
+    #[test]
+    fn quantile_band_interval() {
+        let ci = ConfidenceInterval::for_quantile(50.0, 48.0, 55.0, ConfidenceLevel::P95);
+        assert_eq!(ci.value, 50.0);
+        assert_eq!(ci.bound, 5.0); // wider side
+        assert!(ci.contains(48.0) && ci.contains(55.0));
+        // degenerate band (point mass) yields a zero-width interval
+        let ci = ConfidenceInterval::for_quantile(1.0, 1.0, 1.0, ConfidenceLevel::P95);
+        assert_eq!(ci.bound, 0.0);
+    }
+
+    #[test]
+    fn distinct_interval_scales_with_level() {
+        let c68 = ConfidenceInterval::for_distinct(1000.0, 0.016, ConfidenceLevel::P68);
+        let c95 = ConfidenceInterval::for_distinct(1000.0, 0.016, ConfidenceLevel::P95);
+        assert!((c68.bound - 16.0).abs() < 1e-9);
+        assert!((c95.bound - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn count_overestimate_interval() {
+        let ci = ConfidenceInterval::for_count_overestimate(500.0, 12.5, ConfidenceLevel::P95);
+        assert_eq!(ci.value, 500.0);
+        assert_eq!(ci.bound, 12.5);
+        // negative bounds are clamped
+        let ci = ConfidenceInterval::for_count_overestimate(1.0, -3.0, ConfidenceLevel::P95);
+        assert_eq!(ci.bound, 0.0);
     }
 
     #[test]

@@ -115,6 +115,17 @@ pub struct Estimate {
     pub strata_sums: [f64; K],
 }
 
+impl Estimate {
+    /// Horvitz–Thompson weight of a sampled item from `stratum` (Eq. 1);
+    /// `1.0` for out-of-range ids so callers never scale by garbage.  This
+    /// is the weight the sketch subsystem attaches to each sampled item so
+    /// mergeable summaries estimate full-stream frequencies/distributions.
+    #[inline]
+    pub fn weight_for(&self, stratum: u16) -> f64 {
+        self.weights.get(stratum as usize).copied().unwrap_or(1.0)
+    }
+}
+
 /// Finish an estimate from combined partials and strata state.
 ///
 /// This is the exact arithmetic of the L2 graph (`model.py`), kept in sync by
@@ -271,5 +282,14 @@ mod tests {
         let items = vec![(0u16, 1.0), (99u16, 5.0)];
         let p = StrataPartials::from_sample(&items);
         assert_eq!(p.total_y(), 1.0);
+    }
+
+    #[test]
+    fn weight_for_accessor() {
+        let (p, st) = simple_case();
+        let e = estimate(&p, &st);
+        assert_eq!(e.weight_for(0), 2.0);
+        assert_eq!(e.weight_for(1), 1.0);
+        assert_eq!(e.weight_for(999), 1.0); // out of range -> neutral weight
     }
 }

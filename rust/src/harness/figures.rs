@@ -332,6 +332,64 @@ pub fn fig10(ctx: &Ctx) -> (Table, Table, Table) {
     case_study(ctx, "Fig 10: NYC taxi", &items, Query::PerStratumMean)
 }
 
+/// Sketch workloads — the three new query classes (quantile, distinct,
+/// top-k) over the CAIDA-style sources trace, swept across sampling
+/// fractions.  Reported per fraction: approximate value, native error
+/// bound, and (for top-k) whether the true top-3 sources were recovered —
+/// the acceptance gate of `examples/heavy_hitters.rs`.
+pub fn sketch_workloads(ctx: &Ctx) -> Table {
+    use crate::datasets::CaidaSourcesConfig;
+
+    let cfg = CaidaSourcesConfig::default();
+    let items = cfg.generate(ctx.scale.duration_ms);
+
+    let mut t = Table::new(
+        "Sketch workloads: quantile / distinct / top-k vs sampling fraction — CAIDA sources",
+        &["query", "10%", "40%", "80%"],
+    );
+    for (label, query) in [
+        ("p95 flow bytes", Query::Quantile(0.95)),
+        ("distinct flow sizes", Query::Distinct),
+        ("top-3 sources (mass)", Query::TopK(3)),
+    ] {
+        let mut row = vec![label.to_string()];
+        for &f in &[0.1, 0.4, 0.8] {
+            let m = crate::pipeline::PipelineBuilder::new()
+                .engine(crate::engine::EngineKind::Pipelined)
+                .sampler(crate::sampling::SamplerKind::Oasrs)
+                .budget(crate::budget::QueryBudget::SamplingFraction(f))
+                .query(query.clone())
+                .window(window_default())
+                .workers(ctx.scale.workers)
+                .track_exact(true)
+                .seed(101)
+                .build_with_handle(ctx.handle());
+            let r = m.run_items(&items).expect("run");
+            let last = r.windows.last().expect("windows");
+            let cell = match &query {
+                Query::TopK(_) => {
+                    let top = last.result.top_k.as_ref().expect("top-k");
+                    // grade against the *same window's* exact counts — the
+                    // window-local top-3 can differ from the whole-trace one
+                    let exact = last.exact_per_stratum.as_ref().expect("exact counts");
+                    let recovered = crate::query::top_k_strata(exact, 3)
+                        .iter()
+                        .all(|&s| top.iter().any(|&(k, _)| k as usize == s));
+                    format!(
+                        "{:.0} ({})",
+                        last.result.value(),
+                        if recovered { "top-3 ok" } else { "MISS" }
+                    )
+                }
+                _ => format!("{:.0} ±{:.0}", last.result.value(), last.result.scalar.map(|c| c.bound).unwrap_or(0.0)),
+            };
+            row.push(cell);
+        }
+        t.row(row);
+    }
+    t
+}
+
 /// Fig. 11 — total processing latency of both case-study datasets @60%.
 pub fn fig11(ctx: &Ctx) -> Table {
     let caida = CaidaConfig::default().generate(ctx.scale.duration_ms);

@@ -13,6 +13,22 @@
 //!   wrapping a Pallas kernel, AOT-lowered to HLO text in `artifacts/` and
 //!   executed through [`runtime`] (PJRT CPU). Python never runs at runtime.
 //!
+//! Within L3, query execution itself splits in two:
+//! * **linear queries** (sum/mean/count/per-stratum/histogram) run through
+//!   the compute service and the Horvitz–Thompson estimator (Eq. 1–9) with
+//!   CLT error bounds;
+//! * **sketch-backed queries** ([`sketch`]) — `Query::Quantile`,
+//!   `Query::Distinct`, `Query::TopK` — build mergeable, weight-aware
+//!   summaries (equi-depth quantile clusters, HyperLogLog, Count-Min +
+//!   space-saving) over the window sample.  Sketches merge associatively
+//!   with no barrier, mirroring the OASRS worker-merge protocol, and each
+//!   result carries the sketch's *native* guarantee (rank ε, HLL RSE,
+//!   Count-Min over-bound) as its confidence interval.
+//!
+//! Sampling designs: OASRS (the paper's contribution), Spark-style SRS/STS
+//! baselines, A-ExpJ weighted reservoirs ([`sampling::weighted`]) for
+//! value-proportional designs, and native (no sampling).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -41,6 +57,7 @@ pub mod pipeline;
 pub mod query;
 pub mod runtime;
 pub mod sampling;
+pub mod sketch;
 pub mod stream;
 pub mod util;
 pub mod window;
@@ -55,6 +72,7 @@ pub mod prelude {
     pub use crate::query::Query;
     pub use crate::runtime::{Backend, ComputeService};
     pub use crate::sampling::SamplerKind;
+    pub use crate::sketch::{HeavyHitters, HyperLogLog, QuantileSketch, SketchParams};
     pub use crate::stream::{StreamConfig, SubStreamSpec};
     pub use crate::window::WindowConfig;
 }

@@ -3,12 +3,14 @@
 //!
 //! ```text
 //! streamapprox info
-//! streamapprox run   [--engine batched|pipelined] [--sampler oasrs|srs|sts|none]
+//! streamapprox run   [--engine batched|pipelined]
+//!                    [--sampler oasrs|srs|sts|weighted|none]
 //!                    [--fraction 0.6] [--workers N] [--duration-ms 30000]
-//!                    [--query sum|mean|count|per-stratum-sum|per-stratum-mean]
+//!                    [--query sum|mean|count|per-stratum-sum|per-stratum-mean|
+//!                             quantile:<q>|distinct|topk:<k>]
 //!                    [--dataset micro|caida|taxi] [--backend xla|native]
 //! streamapprox bench --figure fig5a|fig5b|fig5c|fig6a|fig6bc|fig7a|fig7b|
-//!                             fig7c|fig8|fig9|fig10|fig11|all [--full]
+//!                             fig7c|fig8|fig9|fig10|fig11|sketch|all [--full]
 //! ```
 
 use std::collections::HashMap;
@@ -67,15 +69,44 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
     let sampler = match get("sampler", "oasrs").as_str() {
         "srs" => SamplerKind::Srs,
         "sts" => SamplerKind::Sts,
+        "weighted" => SamplerKind::WeightedRes,
         "none" => SamplerKind::None,
         _ => SamplerKind::Oasrs,
     };
-    let query = match get("query", "sum").as_str() {
-        "mean" => Query::Mean,
-        "count" => Query::Count,
-        "per-stratum-sum" => Query::PerStratumSum,
-        "per-stratum-mean" => Query::PerStratumMean,
-        _ => Query::Sum,
+    // `quantile:<q>` and `topk:<k>` carry a parameter after the colon; a
+    // malformed parameter is an error, not a silent fallback.
+    let query_arg = get("query", "sum");
+    let (query_name, query_param) = match query_arg.split_once(':') {
+        Some((name, param)) => (name, Some(param)),
+        None => (query_arg.as_str(), None),
+    };
+    const PLAIN_QUERIES: [&str; 6] =
+        ["sum", "mean", "count", "per-stratum-sum", "per-stratum-mean", "distinct"];
+    let query = match (query_name, query_param) {
+        ("sum", None) => Query::Sum,
+        ("mean", None) => Query::Mean,
+        ("count", None) => Query::Count,
+        ("per-stratum-sum", None) => Query::PerStratumSum,
+        ("per-stratum-mean", None) => Query::PerStratumMean,
+        ("distinct", None) => Query::Distinct,
+        ("quantile", Some(p)) => Query::Quantile(
+            p.parse()
+                .map_err(|e| format!("--query quantile:<q>: bad q {p:?} ({e})"))?,
+        ),
+        ("topk", Some(p)) => Query::TopK(
+            p.parse()
+                .map_err(|e| format!("--query topk:<k>: bad k {p:?} ({e})"))?,
+        ),
+        ("quantile", None) => {
+            return Err("--query quantile requires a parameter, e.g. quantile:0.95".into())
+        }
+        ("topk", None) => {
+            return Err("--query topk requires a parameter, e.g. topk:10".into())
+        }
+        (name, Some(p)) if PLAIN_QUERIES.contains(&name) => {
+            return Err(format!("--query {name} takes no parameter (got {p:?})").into())
+        }
+        (name, _) => return Err(format!("unknown --query {name:?} (see --help in source)").into()),
     };
     let fraction: f64 = get("fraction", "0.6").parse()?;
     let workers: usize = get("workers", "1").parse()?;
@@ -174,6 +205,9 @@ fn cmd_bench(flags: &HashMap<String, String>) {
     }
     if run("fig11") {
         figures::fig11(&ctx).print();
+    }
+    if run("sketch") {
+        figures::sketch_workloads(&ctx).print();
     }
 }
 

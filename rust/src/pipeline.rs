@@ -15,6 +15,7 @@ use crate::engine::{EngineConfig, EngineKind, RunReport};
 use crate::query::{Query, QueryExecutor};
 use crate::runtime::{Backend, ComputeHandle, ComputeService};
 use crate::sampling::SamplerKind;
+use crate::sketch::SketchParams;
 use crate::stream::{StreamConfig, StreamGenerator};
 use crate::window::WindowConfig;
 
@@ -31,6 +32,7 @@ pub struct PipelineBuilder {
     nodes: usize,
     track_exact: bool,
     seed: u64,
+    sketch: SketchParams,
 }
 
 impl Default for PipelineBuilder {
@@ -46,6 +48,7 @@ impl Default for PipelineBuilder {
             nodes: 1,
             track_exact: true,
             seed: 42,
+            sketch: SketchParams::default(),
         }
     }
 }
@@ -105,6 +108,13 @@ impl PipelineBuilder {
         self
     }
 
+    /// Tune the mergeable sketches behind `Query::Quantile` /
+    /// `Query::Distinct` / `Query::TopK` (accuracy ↔ space knobs).
+    pub fn sketch_params(mut self, params: SketchParams) -> Self {
+        self.sketch = params;
+        self
+    }
+
     /// Build with the pure-Rust compute backend (no artifacts needed).
     pub fn build_native(self) -> Pipeline {
         let svc = ComputeService::native();
@@ -141,7 +151,7 @@ impl PipelineBuilder {
             query: self.query,
             sampler: self.sampler,
             budget: self.budget,
-            executor: QueryExecutor::new(handle),
+            executor: QueryExecutor::new(handle).with_sketch_params(self.sketch),
             _service: service,
         }
     }
@@ -164,6 +174,10 @@ pub type PipelineReport = RunReport;
 
 impl Pipeline {
     /// Run over a pre-generated, event-time-sorted trace.
+    ///
+    /// Errors when the query/budget combination is invalid (sketch-backed
+    /// query under a `TargetRelativeError` budget — the engines validate
+    /// this, so direct engine users get the same rejection).
     pub fn run_items(&self, items: &[Item]) -> Result<RunReport> {
         let mut cost = CostFunction::new(self.budget.clone());
         match self.config.kind {
@@ -243,6 +257,39 @@ mod tests {
         let stream = StreamConfig::gaussian_micro(100.0, 6);
         assert!(!a.run_stream(&stream, 4_000).unwrap().windows.is_empty());
         assert!(!b.run_stream(&stream, 4_000).unwrap().windows.is_empty());
+    }
+
+    #[test]
+    fn accuracy_budget_rejected_for_sketch_queries() {
+        let p = PipelineBuilder::new()
+            .budget(QueryBudget::TargetRelativeError { target: 0.01, initial_fraction: 0.1 })
+            .query(Query::TopK(3))
+            .window(WindowConfig::tumbling(1_000))
+            .build_native();
+        let err = p.run_stream(&StreamConfig::gaussian_micro(100.0, 4), 2_000);
+        assert!(err.is_err(), "sketch query + accuracy budget must be rejected");
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("top-k"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn sketch_queries_end_to_end() {
+        let stream = StreamConfig::gaussian_micro(200.0, 8);
+        for query in [Query::Quantile(0.5), Query::Distinct, Query::TopK(3)] {
+            let p = PipelineBuilder::new()
+                .query(query.clone())
+                .window(WindowConfig::new(2_000, 1_000))
+                .sketch_params(crate::sketch::SketchParams {
+                    quantile_clusters: 128,
+                    ..Default::default()
+                })
+                .build_native();
+            let r = p.run_stream(&stream, 6_000).unwrap();
+            assert!(!r.windows.is_empty(), "{query:?} produced no windows");
+            for w in &r.windows {
+                assert!(w.result.value().is_finite(), "{query:?} non-finite value");
+            }
+        }
     }
 
     #[test]

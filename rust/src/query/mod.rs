@@ -1,13 +1,42 @@
-//! Approximate linear queries (paper §3.2): sum, mean, count, histogram and
-//! per-stratum aggregates, executed over a window sample through the
-//! compute service (XLA artifacts or the native executor) and annotated with
-//! error bounds (§3.3).
+//! Approximate queries over window samples.
+//!
+//! Two families share one executor:
+//!
+//! * **Linear queries** (paper §3.2) — sum, mean, count, histogram and
+//!   per-stratum aggregates, executed through the compute service (XLA
+//!   artifacts or the native executor) and annotated with CLT error bounds
+//!   (§3.3).
+//! * **Sketch-backed queries** (the [`crate::sketch`] subsystem) —
+//!   quantiles, distinct counts, and top-k heavy hitters.  Per window, the
+//!   sample is split into shards, one mergeable sketch is built per shard,
+//!   and the shards merge at the window boundary — the same no-barrier
+//!   associative combine the OASRS workers use.  Each result carries the
+//!   sketch's *native* guarantee (rank ε, HLL RSE, Count-Min over-bound) as
+//!   its [`ConfidenceInterval`].
+//!
+//! ```
+//! use streamapprox::prelude::*;
+//!
+//! // 95th-percentile of item values per window, with a rank-ε value band.
+//! let pipeline = PipelineBuilder::new()
+//!     .sampler(SamplerKind::Oasrs)
+//!     .query(Query::Quantile(0.95))
+//!     .window(WindowConfig::tumbling(1_000))
+//!     .build_native();
+//! let report = pipeline
+//!     .run_stream(&StreamConfig::gaussian_micro(200.0, 7), 4_000)
+//!     .unwrap();
+//! for w in &report.windows {
+//!     assert!(w.result.value().is_finite());
+//! }
+//! ```
 
 use crate::core::{Error, Result, MAX_STRATA};
 use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
-use crate::error::estimator::K;
+use crate::error::estimator::{estimate, StrataPartials, K};
 use crate::runtime::{ComputeHandle, WindowInput, WindowOutput};
 use crate::sampling::SampleResult;
+use crate::sketch::{HeavyHitters, HyperLogLog, QuantileSketch, SketchParams};
 
 /// A streaming query over the item values.
 #[derive(Debug, Clone, PartialEq)]
@@ -24,6 +53,16 @@ pub enum Query {
     PerStratumMean,
     /// Histogram of values over fixed buckets in [lo, hi).
     Histogram { lo: f64, hi: f64, buckets: usize },
+    /// Value at quantile q ∈ [0, 1] of the window's (weighted) value
+    /// distribution, with a rank-error-ε band (sketch-backed).
+    Quantile(f64),
+    /// Distinct values observed in the window sample (HyperLogLog-backed;
+    /// under sampling this is a lower bound on the stream's distinct count —
+    /// see `sketch::hll`).
+    Distinct,
+    /// The k heaviest sub-streams by estimated item count (Count-Min +
+    /// space-saving), with the Count-Min over-estimate bound.
+    TopK(usize),
 }
 
 impl Query {
@@ -35,6 +74,35 @@ impl Query {
         Query::Mean
     }
 
+    /// Quantile query, e.g. `Query::quantile(0.99)` for the p99.
+    ///
+    /// ```
+    /// use streamapprox::query::Query;
+    /// assert_eq!(Query::quantile(0.5).label(), "quantile");
+    /// ```
+    pub fn quantile(q: f64) -> Self {
+        Query::Quantile(q)
+    }
+
+    /// Top-k heavy-hitter query.
+    ///
+    /// ```
+    /// use streamapprox::prelude::*;
+    ///
+    /// let pipeline = PipelineBuilder::new()
+    ///     .query(Query::top_k(3))
+    ///     .window(WindowConfig::tumbling(1_000))
+    ///     .build_native();
+    /// let report = pipeline
+    ///     .run_stream(&StreamConfig::gaussian_micro(200.0, 9), 3_000)
+    ///     .unwrap();
+    /// let top = report.windows[0].result.top_k.as_ref().unwrap();
+    /// assert!(top.len() <= 3);
+    /// ```
+    pub fn top_k(k: usize) -> Self {
+        Query::TopK(k)
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             Query::Sum => "sum",
@@ -43,17 +111,28 @@ impl Query {
             Query::PerStratumSum => "per-stratum-sum",
             Query::PerStratumMean => "per-stratum-mean",
             Query::Histogram { .. } => "histogram",
+            Query::Quantile(_) => "quantile",
+            Query::Distinct => "distinct",
+            Query::TopK(_) => "top-k",
         }
+    }
+
+    /// True for the sketch-backed (non-linear) queries.
+    pub fn is_sketch_backed(&self) -> bool {
+        matches!(self, Query::Quantile(_) | Query::Distinct | Query::TopK(_))
     }
 }
 
 /// Result of a query over one window: `output ± error bound`.
 #[derive(Debug, Clone)]
 pub struct QueryResult {
-    /// Scalar result with CI (Sum/Mean/Count), if applicable.
+    /// Scalar result with CI (Sum/Mean/Count/Quantile/Distinct; for TopK,
+    /// the summed top-k mass with the Count-Min over-bound).
     pub scalar: Option<ConfidenceInterval>,
-    /// Per-stratum values (PerStratum* and Histogram queries).
+    /// Per-stratum values (PerStratum*, Histogram, and TopK queries).
     pub per_stratum: Option<Vec<f64>>,
+    /// Ranked `(key, estimated weight)` pairs — TopK queries only.
+    pub top_k: Option<Vec<(u64, f64)>>,
     /// The raw estimate backing the result.
     pub output: WindowOutput,
 }
@@ -74,11 +153,12 @@ impl QueryResult {
 pub struct QueryExecutor {
     compute: ComputeHandle,
     level: ConfidenceLevel,
+    sketch: SketchParams,
 }
 
 impl QueryExecutor {
     pub fn new(compute: ComputeHandle) -> Self {
-        Self { compute, level: ConfidenceLevel::P95 }
+        Self { compute, level: ConfidenceLevel::P95, sketch: SketchParams::default() }
     }
 
     pub fn with_level(mut self, level: ConfidenceLevel) -> Self {
@@ -86,8 +166,28 @@ impl QueryExecutor {
         self
     }
 
+    /// Tune the sketches built for Quantile/Distinct/TopK queries.
+    pub fn with_sketch_params(mut self, params: SketchParams) -> Self {
+        self.sketch = params;
+        self
+    }
+
+    pub fn sketch_params(&self) -> SketchParams {
+        self.sketch
+    }
+
     /// Run `query` over a window's merged sample.
     pub fn execute(&self, query: &Query, window: &SampleResult) -> Result<QueryResult> {
+        // Distinct reads only the raw sample values — none of the aggregate
+        // output — so skip the compute-service round trip (f32 conversion +
+        // cross-thread rendezvous / XLA execution) and finish the estimate
+        // locally with the same arithmetic the native executor uses.
+        if matches!(query, Query::Distinct) {
+            let partials = StrataPartials::from_sample(&window.sample);
+            let est = estimate(&partials, &window.state);
+            let output = WindowOutput { partials, estimate: est, executions: 0 };
+            return self.interpret(query, window, output);
+        }
         let input = WindowInput::from_sample(&window.sample, &window.state);
         let output = self.compute.aggregate(input)?;
         self.interpret(query, window, output)
@@ -105,22 +205,25 @@ impl QueryExecutor {
             Query::Sum => QueryResult {
                 scalar: Some(ConfidenceInterval::for_sum(est, self.level)),
                 per_stratum: None,
+                top_k: None,
                 output: output.clone(),
             },
             Query::Mean => QueryResult {
                 scalar: Some(ConfidenceInterval::for_mean(est, self.level)),
                 per_stratum: None,
+                top_k: None,
                 output: output.clone(),
             },
             Query::Count => {
                 // Arrival counters are exact (maintained outside the sample),
                 // so COUNT carries a zero-width bound.
                 let ci = ConfidenceInterval { value: est.total_c, bound: 0.0, level: self.level };
-                QueryResult { scalar: Some(ci), per_stratum: None, output: output.clone() }
+                QueryResult { scalar: Some(ci), per_stratum: None, top_k: None, output: output.clone() }
             }
             Query::PerStratumSum => QueryResult {
                 scalar: Some(ConfidenceInterval::for_sum(est, self.level)),
                 per_stratum: Some(est.strata_sums.to_vec()),
+                top_k: None,
                 output: output.clone(),
             },
             Query::PerStratumMean => {
@@ -134,6 +237,7 @@ impl QueryExecutor {
                 QueryResult {
                     scalar: Some(ConfidenceInterval::for_mean(est, self.level)),
                     per_stratum: Some(means),
+                    top_k: None,
                     output: output.clone(),
                 }
             }
@@ -155,12 +259,152 @@ impl QueryExecutor {
                 QueryResult {
                     scalar: Some(ConfidenceInterval::for_sum(est, self.level)),
                     per_stratum: Some(hist),
+                    top_k: None,
                     output: output.clone(),
+                }
+            }
+            Query::Quantile(q) => {
+                if !(0.0..=1.0).contains(q) {
+                    return Err(Error::Query(format!("quantile {q} outside [0, 1]")));
+                }
+                let sketch = self.build_quantile(window, &output);
+                let value = sketch.quantile(*q);
+                let eps = sketch.eps();
+                let lo = sketch.quantile((q - eps).max(0.0));
+                let hi = sketch.quantile((q + eps).min(1.0));
+                QueryResult {
+                    scalar: Some(ConfidenceInterval::for_quantile(value, lo, hi, self.level)),
+                    per_stratum: None,
+                    top_k: None,
+                    output,
+                }
+            }
+            Query::Distinct => {
+                let hll = self.build_hll(window);
+                // The interval bounds HLL sketch error only; under sampling
+                // the value is a lower bound on the stream's distinct count
+                // (unselected values are invisible — see
+                // ConfidenceInterval::for_distinct and sketch::hll docs).
+                let ci = ConfidenceInterval::for_distinct(
+                    hll.estimate(),
+                    hll.relative_std_error(),
+                    self.level,
+                );
+                QueryResult { scalar: Some(ci), per_stratum: None, top_k: None, output }
+            }
+            Query::TopK(k) => {
+                if *k == 0 {
+                    return Err(Error::Query("top-k with k = 0".into()));
+                }
+                let hh = self.build_heavy_hitters(window, &output);
+                let top = hh.top_k(*k);
+                // Scalar: summed top-k mass; each addend over-counts by at
+                // most the Count-Min bound, so the sum carries k of them.
+                let mass: f64 = top.iter().map(|&(_, c)| c).sum();
+                let ci = ConfidenceInterval::for_count_overestimate(
+                    mass,
+                    *k as f64 * hh.over_estimate_bound(),
+                    self.level,
+                );
+                // Per-stratum view: estimated count per stratum id.
+                let mut per_stratum = vec![0.0; MAX_STRATA];
+                for &(key, count) in &top {
+                    if (key as usize) < MAX_STRATA {
+                        per_stratum[key as usize] = count;
+                    }
+                }
+                QueryResult {
+                    scalar: Some(ci),
+                    per_stratum: Some(per_stratum),
+                    top_k: Some(top),
+                    output,
                 }
             }
         };
         Ok(result)
     }
+
+    /// Sharded sketch construction skeleton: the window sample is split
+    /// round-robin into `shards` shards, one sketch is built per shard, and
+    /// the shards merge — the same associative, barrier-free combine the
+    /// per-worker OASRS results use, exercised on every window.
+    fn build_sharded<S>(
+        &self,
+        sample: &[(u16, f64)],
+        mk: impl Fn() -> S,
+        mut feed: impl FnMut(&mut S, (u16, f64)),
+        merge: impl Fn(&mut S, &S),
+    ) -> S {
+        let shards = self.sketch.shards.max(1);
+        let mut parts: Vec<S> = (0..shards).map(|_| mk()).collect();
+        for (i, &item) in sample.iter().enumerate() {
+            feed(&mut parts[i % shards], item);
+        }
+        let mut merged = parts.remove(0);
+        for p in &parts {
+            merge(&mut merged, p);
+        }
+        merged
+    }
+
+    fn build_quantile(&self, window: &SampleResult, output: &WindowOutput) -> QuantileSketch {
+        let est = &output.estimate;
+        self.build_sharded(
+            &window.sample,
+            || QuantileSketch::new(self.sketch.quantile_clusters),
+            |sk, (s, v)| sk.offer(v, est.weight_for(s)),
+            |a, b| a.merge(b),
+        )
+    }
+
+    fn build_hll(&self, window: &SampleResult) -> HyperLogLog {
+        self.build_sharded(
+            &window.sample,
+            || HyperLogLog::new(self.sketch.hll_precision),
+            |sk, (_, v)| sk.offer(v),
+            |a, b| a.merge(b),
+        )
+    }
+
+    fn build_heavy_hitters(&self, window: &SampleResult, output: &WindowOutput) -> HeavyHitters {
+        let est = &output.estimate;
+        self.build_sharded(
+            &window.sample,
+            // Shared seed so per-shard Count-Mins are merge-compatible.
+            || {
+                HeavyHitters::new(
+                    self.sketch.topk_capacity,
+                    self.sketch.cm_width,
+                    self.sketch.cm_depth,
+                    0x70_4B,
+                )
+            },
+            // Key = sub-stream id; mass = HT weight, so the count estimates
+            // the stratum's arrivals in the full stream.
+            |sk, (s, _)| sk.offer(s as u64, est.weight_for(s)),
+            |a, b| a.merge(b),
+        )
+    }
+}
+
+/// Summed count of the `k` largest entries — the top-k ground-truth scalar
+/// shared by [`exact_eval`] and the engines' `exact_values`.
+pub fn top_k_mass(counts: &[f64], k: usize) -> f64 {
+    let mut ranked: Vec<f64> = counts.to_vec();
+    ranked.sort_by(|a, b| b.partial_cmp(a).expect("finite counts"));
+    ranked.iter().take(k).sum()
+}
+
+/// Indices of the `k` largest counts, largest first (index order breaks
+/// ties) — the exact top-k ranking shared by the harness, the integration
+/// tests, and the examples when grading recovery.
+pub fn top_k_strata(counts: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..counts.len()).collect();
+    idx.sort_by(|&a, &b| {
+        counts[b].partial_cmp(&counts[a]).expect("finite counts").then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
 }
 
 /// Exact (no-sampling) evaluation of a query over raw items — the ground
@@ -197,6 +441,35 @@ pub fn exact_eval(query: &Query, items: &[(u16, f64)]) -> (f64, Vec<f64>) {
                 }
             }
             (total_sum, hist)
+        }
+        Query::Quantile(q) => {
+            let mut vals: Vec<f64> = items
+                .iter()
+                .filter(|&&(s, _)| (s as usize) < MAX_STRATA)
+                .map(|&(_, v)| v)
+                .collect();
+            if vals.is_empty() {
+                return (f64::NAN, vec![]);
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).expect("finite values"));
+            let q = q.clamp(0.0, 1.0);
+            let idx = ((vals.len() - 1) as f64 * q).round() as usize;
+            (vals[idx.min(vals.len() - 1)], vec![])
+        }
+        Query::Distinct => {
+            let mut seen = std::collections::HashSet::new();
+            for &(s, v) in items {
+                if (s as usize) < MAX_STRATA {
+                    let v = if v == 0.0 { 0.0 } else { v };
+                    seen.insert(v.to_bits());
+                }
+            }
+            (seen.len() as f64, vec![])
+        }
+        Query::TopK(k) => {
+            // per-stratum item counts; scalar = summed count of the true
+            // top-k strata (mirrors the approximate scalar).
+            (top_k_mass(&count, *k), count.to_vec())
         }
     }
 }
@@ -315,5 +588,86 @@ mod tests {
         assert_eq!(accuracy_loss(0.0, 0.0), 0.0);
         assert!(accuracy_loss(1.0, 0.0).is_infinite());
         assert_eq!(accuracy_loss(99.0, 100.0), 0.01);
+    }
+
+    #[test]
+    fn quantile_query_on_full_sample() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        let r = exec.execute(&Query::Quantile(0.5), &w).unwrap();
+        let (exact, _) = exact_eval(&Query::Quantile(0.5), &items());
+        // full sample, coarse distribution (values 10..14 and 100..102);
+        // the median must land in the low cluster like the exact one
+        assert!((r.value() - exact).abs() < 5.0, "approx {} exact {exact}", r.value());
+        // high quantile lands in the stratum-1 cluster
+        let r99 = exec.execute(&Query::Quantile(0.99), &w).unwrap();
+        assert!(r99.value() > 90.0, "p99 {}", r99.value());
+        // band endpoints bracket the value
+        let ci = r.scalar.unwrap();
+        assert!(ci.bound >= 0.0);
+    }
+
+    #[test]
+    fn quantile_rejects_out_of_range() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        assert!(exec.execute(&Query::Quantile(-0.1), &w).is_err());
+        assert!(exec.execute(&Query::Quantile(1.5), &w).is_err());
+    }
+
+    #[test]
+    fn distinct_query_counts_unique_values() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items());
+        let r = exec.execute(&Query::Distinct, &w).unwrap();
+        let (exact, _) = exact_eval(&Query::Distinct, &items());
+        assert_eq!(exact, 8.0); // 5 values in stratum 0, 3 in stratum 1
+        assert!((r.value() - exact).abs() < 1.0, "distinct {} vs {exact}", r.value());
+    }
+
+    #[test]
+    fn top_k_query_ranks_strata() {
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let w = window_from_items(&items()); // 100 items stratum 0, 50 stratum 1
+        let r = exec.execute(&Query::TopK(2), &w).unwrap();
+        let top = r.top_k.as_ref().unwrap();
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, 0);
+        assert_eq!(top[1].0, 1);
+        assert!((top[0].1 - 100.0).abs() < 1.0, "top count {}", top[0].1);
+        let (exact_mass, _) = exact_eval(&Query::TopK(2), &items());
+        assert!((r.value() - exact_mass).abs() / exact_mass < 0.05);
+        assert!(exec.execute(&Query::TopK(0), &w).is_err());
+    }
+
+    #[test]
+    fn sketch_query_labels_and_predicates() {
+        assert_eq!(Query::quantile(0.9).label(), "quantile");
+        assert_eq!(Query::Distinct.label(), "distinct");
+        assert_eq!(Query::top_k(5).label(), "top-k");
+        assert!(Query::Quantile(0.5).is_sketch_backed());
+        assert!(Query::Distinct.is_sketch_backed());
+        assert!(Query::TopK(1).is_sketch_backed());
+        assert!(!Query::Sum.is_sketch_backed());
+    }
+
+    #[test]
+    fn exact_eval_sketch_variants() {
+        let items = vec![(0u16, 1.0), (0, 2.0), (0, 2.0), (1, 5.0), (99, 9.0)];
+        let (d, _) = exact_eval(&Query::Distinct, &items);
+        assert_eq!(d, 3.0); // 1, 2, 5 (out-of-range stratum ignored)
+        let (q, _) = exact_eval(&Query::Quantile(0.5), &items);
+        assert_eq!(q, 2.0);
+        let (mass, counts) = exact_eval(&Query::TopK(1), &items);
+        assert_eq!(mass, 3.0); // stratum 0 has 3 items
+        assert_eq!(counts[0], 3.0);
+        assert_eq!(counts[1], 1.0);
+        // empty input
+        let (q, _) = exact_eval(&Query::Quantile(0.5), &[]);
+        assert!(q.is_nan());
     }
 }

@@ -10,7 +10,9 @@
 //! [`super::service::ComputeService`] wraps it in a dedicated thread for the
 //! multi-worker coordinator.
 
-use crate::core::{Error, Result, MAX_STRATA};
+use crate::core::{Error, Result};
+#[cfg(any(feature = "xla", test))]
+use crate::core::MAX_STRATA;
 use crate::error::estimator::{estimate, Estimate, StrataPartials, StrataState, K};
 
 use super::manifest::Manifest;
@@ -64,18 +66,25 @@ pub struct WindowOutput {
     pub executions: u32,
 }
 
+#[cfg(feature = "xla")]
 struct CompiledVariant {
     n_items: usize,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// PJRT CPU engine holding compiled variants of the window-aggregation HLO.
+///
+/// Only compiled with the `xla` cfg-feature (the offline default build has
+/// no `xla` crate); without it a stub with the same API reports the backend
+/// as unavailable and callers fall back to [`RustExecutor`].
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     client: xla::PjRtClient,
     variants: Vec<CompiledVariant>,
     num_strata: usize,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Compile every variant in the manifest on a fresh PJRT CPU client.
     pub fn load(manifest: &Manifest) -> Result<Self> {
@@ -226,6 +235,38 @@ impl XlaEngine {
             None
         };
         Ok((partials, est))
+    }
+}
+
+/// API-compatible stub for builds without the `xla` cfg-feature: loading
+/// always fails with a descriptive error, so `Backend::Xla` degrades into
+/// the documented "artifacts unavailable" path and every caller's fallback
+/// to the native executor keeps working.
+#[cfg(not(feature = "xla"))]
+pub struct XlaEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaEngine {
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let _ = manifest;
+        Err(Error::Xla(
+            "built without the `xla` feature (offline build); use Backend::Native".into(),
+        ))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn max_capacity(&self) -> usize {
+        0
+    }
+
+    pub fn aggregate(&self, input: &WindowInput) -> Result<WindowOutput> {
+        let _ = input;
+        Err(Error::Xla("xla backend not compiled in".into()))
     }
 }
 

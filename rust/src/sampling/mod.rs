@@ -9,6 +9,9 @@
 //! * [`sts`] — Spark-style Stratified Sampling (`sampleByKey`): groupBy on
 //!   strata + per-stratum random-sort, batch-fashion, with the cross-worker
 //!   synchronization the paper blames for its poor scaling.
+//! * [`weighted`] — A-ExpJ weighted reservoir sampling (Efraimidis &
+//!   Spirakis `key = u^(1/w)` with exponential jumps): value-weighted
+//!   sub-streams sampled proportionally to the mass they carry.
 //! * native (no sampling) is represented by [`NoopSampler`].
 //!
 //! All samplers emit a [`SampleResult`] per interval: the selected items and
@@ -21,6 +24,7 @@ pub mod oasrs;
 pub mod reservoir;
 pub mod srs;
 pub mod sts;
+pub mod weighted;
 
 use crate::core::Item;
 use crate::error::estimator::StrataState;
@@ -29,6 +33,7 @@ pub use oasrs::OasrsSampler;
 pub use reservoir::Reservoir;
 pub use srs::SrsSampler;
 pub use sts::StsSampler;
+pub use weighted::{WeightedResSampler, WeightedReservoir};
 
 /// Which sampling algorithm a pipeline uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +44,8 @@ pub enum SamplerKind {
     Srs,
     /// Spark-style stratified sampling (`sampleByKey`/`sampleByKeyExact`).
     Sts,
+    /// A-ExpJ weighted reservoir sampling (value-weighted inclusion).
+    WeightedRes,
     /// No sampling — native execution.
     None,
 }
@@ -49,6 +56,7 @@ impl SamplerKind {
             SamplerKind::Oasrs => "streamapprox",
             SamplerKind::Srs => "spark-srs",
             SamplerKind::Sts => "spark-sts",
+            SamplerKind::WeightedRes => "weighted-res",
             SamplerKind::None => "native",
         }
     }
@@ -76,13 +84,26 @@ impl SampleResult {
     }
 
     /// Achieved sampling fraction.
+    ///
+    /// **Empty intervals**: when nothing arrived (`arrived() == 0`) the
+    /// fraction is defined as `0.0` rather than `NaN`/`inf`, so budget
+    /// feedback and metrics aggregation stay finite across idle intervals.
+    /// A non-empty sample with zero arrivals is impossible by construction
+    /// (every sampler counts an arrival before it can select the item);
+    /// this is asserted in debug builds.
     pub fn fraction(&self) -> f64 {
         let c = self.arrived();
         if c == 0.0 {
+            debug_assert!(self.sample.is_empty(), "sample without arrivals");
             0.0
         } else {
             self.sample.len() as f64 / c
         }
+    }
+
+    /// True when nothing arrived in the interval.
+    pub fn is_empty(&self) -> bool {
+        self.arrived() == 0.0 && self.sample.is_empty()
     }
 }
 
@@ -123,6 +144,9 @@ impl Sampler for NoopSampler {
             self.state.c[s] += 1.0;
             // capacity tracks arrivals so C_i <= N_i and Eq. (1) gives 1.
             self.state.n_cap[s] = self.state.c[s];
+        } else {
+            // Out-of-range strata used to vanish silently; surface them.
+            crate::metrics::record_dropped_item();
         }
     }
 
@@ -148,6 +172,7 @@ pub fn make_sampler(kind: SamplerKind, fraction: f64, seed: u64) -> Box<dyn Samp
         SamplerKind::Oasrs => Box::new(OasrsSampler::new(fraction, seed)),
         SamplerKind::Srs => Box::new(SrsSampler::new(fraction, seed)),
         SamplerKind::Sts => Box::new(StsSampler::new(fraction, seed)),
+        SamplerKind::WeightedRes => Box::new(WeightedResSampler::new(fraction, seed)),
         SamplerKind::None => Box::new(NoopSampler::new()),
     }
 }
@@ -188,7 +213,13 @@ mod tests {
 
     #[test]
     fn factory_returns_right_kinds() {
-        for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
+        for kind in [
+            SamplerKind::Oasrs,
+            SamplerKind::Srs,
+            SamplerKind::Sts,
+            SamplerKind::WeightedRes,
+            SamplerKind::None,
+        ] {
             let s = make_sampler(kind, 0.5, 1);
             assert_eq!(s.kind(), kind);
         }
@@ -197,8 +228,31 @@ mod tests {
     #[test]
     fn labels_match_paper_naming() {
         assert_eq!(SamplerKind::Oasrs.label(), "streamapprox");
+        assert_eq!(SamplerKind::WeightedRes.label(), "weighted-res");
         assert!(SamplerKind::Srs.is_batch_fashion());
         assert!(SamplerKind::Sts.is_batch_fashion());
         assert!(!SamplerKind::Oasrs.is_batch_fashion());
+        assert!(!SamplerKind::WeightedRes.is_batch_fashion());
+    }
+
+    #[test]
+    fn noop_counts_out_of_range_drops() {
+        let before = crate::metrics::dropped_items();
+        let mut s = NoopSampler::new();
+        s.offer(&Item::new(999, 1.0, 0));
+        s.offer(&Item::new(0, 1.0, 0));
+        // other tests may drop concurrently; the counter is monotone
+        assert!(crate::metrics::dropped_items() >= before + 1);
+        let r = s.finish_interval();
+        assert_eq!(r.sample.len(), 1);
+    }
+
+    #[test]
+    fn empty_interval_fraction_is_zero() {
+        let mut s = NoopSampler::new();
+        let r = s.finish_interval();
+        assert!(r.is_empty());
+        assert_eq!(r.fraction(), 0.0);
+        assert_eq!(r.arrived(), 0.0);
     }
 }

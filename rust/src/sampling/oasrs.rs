@@ -64,6 +64,10 @@ impl OasrsSampler {
     /// Capacity for stratum `s` given current knowledge (Algorithm 3's
     /// `getSampleSize` step).
     ///
+    /// SYNC CONTRACT: `sampling/weighted.rs` mirrors this rule (and the
+    /// EWMA/seed scaffolding) so OASRS and the weighted reservoir stay
+    /// comparable under identical budgets — change both together.
+    ///
     /// The total per-interval budget (`fraction ×` expected arrivals) is
     /// split **equally** across the known strata — the paper's design:
     /// StreamApprox "only maintains a sample of a fixed size for each
@@ -90,6 +94,7 @@ impl Sampler for OasrsSampler {
     fn offer(&mut self, item: &Item) {
         let s = item.stratum as usize;
         if s >= MAX_STRATA {
+            crate::metrics::record_dropped_item();
             return;
         }
         self.counters[s] += 1.0;

@@ -85,6 +85,7 @@ impl Sampler for SrsSampler {
     fn offer(&mut self, item: &Item) {
         let s = item.stratum as usize;
         if s >= MAX_STRATA {
+            crate::metrics::record_dropped_item();
             return;
         }
         // Batch fashion: buffer everything (this allocation churn is the

@@ -45,6 +45,8 @@ impl Sampler for StsSampler {
     fn offer(&mut self, item: &Item) {
         if (item.stratum as usize) < MAX_STRATA {
             self.batch.push((item.stratum, item.value));
+        } else {
+            crate::metrics::record_dropped_item();
         }
     }
 

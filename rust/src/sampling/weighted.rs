@@ -1,0 +1,490 @@
+//! Weighted reservoir sampling without replacement — **A-ExpJ**
+//! (Efraimidis & Spirakis 2006, "Weighted random sampling with a
+//! reservoir"), the exponential-jumps variant of Algorithm A-Res.
+//!
+//! Every item gets the key `u^(1/w)` (`u` uniform in (0,1), `w` its
+//! weight); the reservoir keeps the `k` largest keys, which yields a
+//! without-replacement sample where selection probability grows with
+//! weight.  The exponential-jump optimization skips ahead by
+//! `X = ln(r)/ln(T)` of *cumulative weight* (`T` = smallest resident key)
+//! instead of drawing a key per item, cutting RNG work from O(n) to
+//! O(k log(n/k)) — the trick the gtars/scatrs A-ExpJ sampler uses for
+//! scATAC-seq simulation streams.
+//!
+//! [`WeightedResSampler`] wraps per-stratum A-ExpJ reservoirs behind the
+//! [`Sampler`] trait (`SamplerKind::WeightedRes`) with OASRS-style adaptive
+//! capacities, using `|value|` as the item weight, so *value-weighted*
+//! sub-streams are sampled proportionally to the mass they carry — a
+//! *mass-focused* design: the sample concentrates on the items that
+//! dominate totals and heavy-hitter rankings instead of the lightweight
+//! bulk.
+//!
+//! **Estimator caveat — read before pairing with queries.**  The emitted
+//! [`SampleResult`] carries the same `(C_i, N_i)` bookkeeping as OASRS, so
+//! the downstream Eq. (1) weights treat the sample as if inclusion were
+//! uniform within a stratum.  It is not: inclusion probability grows with
+//! `|value|` and no `1/π` correction is applied.  Consequently
+//! * **linear estimates (SUM/MEAN) are biased upward**, and
+//! * **distribution estimates (`Query::Quantile`, histograms) are biased
+//!   toward heavy values** — the reported median of a 99%-light/1%-heavy
+//!   stratum will sit near the heavy values, regardless of the sketch's
+//!   rank-ε band (which bounds sketch error, not sampling bias).
+//!
+//! Use this sampler where over-representing mass is the point — `TopK`
+//! heavy-hitter recovery at tiny fractions, extreme-value probes (max-like
+//! statistics), or mass-weighted sub-sampling for offline analysis — and
+//! use OASRS/SRS for calibrated quantiles and linear aggregates.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::{Item, MAX_STRATA};
+use crate::error::estimator::StrataState;
+use crate::util::rng::Rng;
+
+use super::{SampleResult, Sampler, SamplerKind};
+
+/// Default capacity for a stratum never seen before (matches OASRS).
+const DEFAULT_CAP: usize = 64;
+/// EWMA smoothing for per-stratum arrival estimates (matches OASRS).
+const EWMA_ALPHA: f64 = 0.5;
+
+/// Resident ordered by key — reversed so the `BinaryHeap` (a max-heap)
+/// keeps the *minimum* key at the top, which is the only resident A-ExpJ
+/// ever evicts.  Keys are always finite in (0, 1), so `total_cmp` is a
+/// plain numeric order here.
+#[derive(Debug, Clone)]
+struct Keyed<T> {
+    key: f64,
+    item: T,
+}
+
+impl<T> PartialEq for Keyed<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key.total_cmp(&other.key) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for Keyed<T> {}
+
+impl<T> PartialOrd for Keyed<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Keyed<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smallest key = greatest element = heap top
+        other.key.total_cmp(&self.key)
+    }
+}
+
+/// Fixed-capacity A-ExpJ weighted reservoir over copyable items.
+#[derive(Debug, Clone)]
+pub struct WeightedReservoir<T: Copy> {
+    cap: usize,
+    /// Residents as a min-key-at-top heap, so eviction is O(log cap)
+    /// instead of a linear rescan per replacement.
+    buf: BinaryHeap<Keyed<T>>,
+    /// Cumulative weight consumed since the last accepted item.
+    acc: f64,
+    /// Cumulative-weight target at which the next item is processed.
+    jump: f64,
+    seen: u64,
+    weight_seen: f64,
+    rng: Rng,
+}
+
+impl<T: Copy> WeightedReservoir<T> {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        Self {
+            cap,
+            buf: BinaryHeap::with_capacity(cap.min(1024)),
+            acc: 0.0,
+            jump: 0.0,
+            seen: 0,
+            weight_seen: 0.0,
+            rng: Rng::seed_from_u64(seed),
+        }
+    }
+
+    #[inline]
+    fn unit(&mut self) -> f64 {
+        // keep u strictly inside (0, 1) so ln/pow never degenerate
+        self.rng.f64().clamp(1e-12, 1.0 - 1e-12)
+    }
+
+    /// Key = u^(1/w), computed in log space for numerical stability with
+    /// large weights, clamped inside (0, 1).
+    #[inline]
+    fn fresh_key(&mut self, w: f64) -> f64 {
+        let u = self.unit();
+        (u.ln() / w).exp().clamp(1e-300, 1.0 - 1e-12)
+    }
+
+    /// Smallest resident key T — the A-ExpJ threshold.
+    fn threshold(&self) -> f64 {
+        self.buf.peek().expect("non-empty reservoir").key
+    }
+
+    /// Exponential jump: how much cumulative weight to skip before the next
+    /// candidate (X = ln(r)/ln(T); both logs negative, quotient positive).
+    fn schedule_jump(&mut self) {
+        let t = self.threshold();
+        let r = self.unit();
+        self.acc = 0.0;
+        self.jump = r.ln() / t.ln();
+    }
+
+    /// Offer one item with weight `w > 0` (others ignored).
+    pub fn offer(&mut self, item: T, w: f64) {
+        if !(w > 0.0) || !w.is_finite() || self.cap == 0 {
+            return;
+        }
+        self.seen += 1;
+        self.weight_seen += w;
+
+        if self.buf.len() < self.cap {
+            let key = self.fresh_key(w);
+            self.buf.push(Keyed { key, item });
+            if self.buf.len() == self.cap {
+                self.schedule_jump();
+            }
+            return;
+        }
+
+        self.acc += w;
+        if self.acc < self.jump {
+            return; // skipped without an RNG draw — the ExpJ fast path
+        }
+
+        // Replacement draw conditioned on beating the threshold: the new key
+        // is uniform on (T^w, 1) raised to 1/w, i.e. guaranteed > T.
+        let t = self.threshold();
+        let tw = (w * t.ln()).exp(); // T^w in log space
+        let u = tw + (1.0 - tw) * self.unit();
+        let key = (u.ln() / w).exp().clamp(1e-300, 1.0 - 1e-12);
+        self.buf.pop();
+        self.buf.push(Keyed { key, item });
+        self.schedule_jump();
+    }
+
+    /// Residents (unordered).
+    pub fn items(&self) -> Vec<T> {
+        self.buf.iter().map(|k| k.item).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Items observed (with positive weight) so far.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Total weight observed so far.
+    pub fn weight_seen(&self) -> f64 {
+        self.weight_seen
+    }
+}
+
+/// Per-stratum A-ExpJ sampler behind the [`Sampler`] trait
+/// (`SamplerKind::WeightedRes`): OASRS-style adaptive per-stratum
+/// capacities, item weight `|value|` (zero-valued items get a tiny floor so
+/// they remain sampleable).
+#[derive(Debug)]
+pub struct WeightedResSampler {
+    fraction: f64,
+    reservoirs: Vec<Option<WeightedReservoir<f64>>>,
+    counters: [f64; MAX_STRATA],
+    ewma_arrivals: [f64; MAX_STRATA],
+    caps: [usize; MAX_STRATA],
+    seed: u64,
+    interval: u64,
+}
+
+impl WeightedResSampler {
+    pub fn new(fraction: f64, seed: u64) -> Self {
+        let mut reservoirs = Vec::with_capacity(MAX_STRATA);
+        reservoirs.resize_with(MAX_STRATA, || None);
+        Self {
+            fraction: fraction.clamp(1e-4, 1.0),
+            reservoirs,
+            counters: [0.0; MAX_STRATA],
+            ewma_arrivals: [0.0; MAX_STRATA],
+            caps: [0; MAX_STRATA],
+            seed,
+            interval: 0,
+        }
+    }
+
+    /// Same equal-split capacity rule as OASRS (`OasrsSampler::capacity_for`).
+    ///
+    /// SYNC CONTRACT: this function, `DEFAULT_CAP`/`EWMA_ALPHA`, the
+    /// per-stratum seed derivation in `offer`, and the EWMA update in
+    /// `finish_interval` deliberately mirror `sampling/oasrs.rs` so the two
+    /// samplers stay comparable under identical budgets.  If you change the
+    /// OASRS adaptivity rule, change it here too (and vice versa).
+    fn capacity_for(&self) -> usize {
+        let total: f64 = self.ewma_arrivals.iter().sum();
+        if total <= 0.0 {
+            return DEFAULT_CAP;
+        }
+        let active = self.ewma_arrivals.iter().filter(|&&x| x > 0.0).count().max(1);
+        ((self.fraction * total / active as f64).ceil() as usize).max(1)
+    }
+
+    pub fn fraction(&self) -> f64 {
+        self.fraction
+    }
+}
+
+impl Sampler for WeightedResSampler {
+    #[inline]
+    fn offer(&mut self, item: &Item) {
+        let s = item.stratum as usize;
+        if s >= MAX_STRATA {
+            crate::metrics::record_dropped_item();
+            return;
+        }
+        self.counters[s] += 1.0;
+        let w = item.value.abs().max(1e-12);
+        if let Some(res) = &mut self.reservoirs[s] {
+            res.offer(item.value, w);
+            return;
+        }
+        let cap = self.capacity_for();
+        self.caps[s] = cap;
+        let seed = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((s as u64) << 32)
+            .wrapping_add(self.interval);
+        let mut res = WeightedReservoir::new(cap, seed);
+        res.offer(item.value, w);
+        self.reservoirs[s] = Some(res);
+    }
+
+    fn finish_interval(&mut self) -> SampleResult {
+        let mut sample = Vec::new();
+        let mut state = StrataState::default();
+        for s in 0..MAX_STRATA {
+            let c = self.counters[s];
+            state.c[s] = c;
+            if let Some(res) = self.reservoirs[s].as_ref() {
+                state.n_cap[s] = self.caps[s] as f64;
+                for v in res.items() {
+                    sample.push((s as u16, v));
+                }
+            } else {
+                state.n_cap[s] = 0.0;
+            }
+            self.ewma_arrivals[s] = if self.interval == 0 && self.ewma_arrivals[s] == 0.0 {
+                c
+            } else {
+                EWMA_ALPHA * c + (1.0 - EWMA_ALPHA) * self.ewma_arrivals[s]
+            };
+        }
+        self.counters = [0.0; MAX_STRATA];
+        self.reservoirs.iter_mut().for_each(|r| *r = None);
+        self.caps = [0; MAX_STRATA];
+        self.interval += 1;
+        SampleResult { sample, state }
+    }
+
+    fn set_fraction(&mut self, fraction: f64) {
+        self.fraction = fraction.clamp(1e-4, 1.0);
+    }
+
+    fn kind(&self) -> SamplerKind {
+        SamplerKind::WeightedRes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_holds_capacity() {
+        let mut r = WeightedReservoir::new(10, 1);
+        for i in 0..5 {
+            r.offer(i as f64, 1.0);
+        }
+        assert_eq!(r.len(), 5);
+        for i in 5..10_000 {
+            r.offer(i as f64, 1.0);
+        }
+        assert_eq!(r.len(), 10);
+        assert_eq!(r.seen(), 10_000);
+    }
+
+    #[test]
+    fn zero_capacity_and_bad_weights() {
+        let mut r = WeightedReservoir::new(0, 2);
+        r.offer(1.0, 1.0);
+        assert!(r.is_empty());
+        let mut r = WeightedReservoir::new(4, 3);
+        r.offer(1.0, 0.0);
+        r.offer(1.0, -5.0);
+        r.offer(1.0, f64::NAN);
+        assert!(r.is_empty());
+        assert_eq!(r.seen(), 0);
+    }
+
+    #[test]
+    fn unit_weights_behave_uniformly() {
+        // With all weights equal, A-ExpJ degenerates to uniform reservoir
+        // sampling: per-item inclusion probability k/n.
+        let n = 200u32;
+        let cap = 20;
+        let trials = 3000;
+        let mut counts = vec![0u32; n as usize];
+        for t in 0..trials {
+            let mut r = WeightedReservoir::new(cap, 1000 + t as u64);
+            for i in 0..n {
+                r.offer(i as f64, 1.0);
+            }
+            for v in r.items() {
+                counts[v as usize] += 1;
+            }
+        }
+        let expect = trials as f64 * cap as f64 / n as f64; // 300
+        for (i, &c) in counts.iter().enumerate() {
+            let z = (c as f64 - expect) / (expect * (1.0 - cap as f64 / n as f64)).sqrt();
+            assert!(z.abs() < 5.0, "item {i}: count {c} (z={z:.2})");
+        }
+    }
+
+    #[test]
+    fn heavy_items_sampled_proportionally_more() {
+        // 1900 items of weight 1 + 100 of weight 10, cap 100: heavy items'
+        // inclusion rate must be several times the light items'.
+        let trials = 300;
+        let mut heavy_in = 0u32;
+        let mut light_in = 0u32;
+        for t in 0..trials {
+            let mut r = WeightedReservoir::new(100, 7 + t as u64);
+            for i in 0..2000u32 {
+                let heavy = i % 20 == 0; // 100 heavy
+                let w = if heavy { 10.0 } else { 1.0 };
+                r.offer(i as f64, w);
+            }
+            for v in r.items() {
+                if (v as u32) % 20 == 0 {
+                    heavy_in += 1;
+                } else {
+                    light_in += 1;
+                }
+            }
+        }
+        let heavy_rate = heavy_in as f64 / (trials as f64 * 100.0);
+        let light_rate = light_in as f64 / (trials as f64 * 1900.0);
+        assert!(
+            heavy_rate > 3.0 * light_rate,
+            "heavy {heavy_rate:.3} vs light {light_rate:.3}"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let collect = |seed| {
+            let mut r = WeightedReservoir::new(8, seed);
+            for i in 0..2000 {
+                r.offer(i as f64, 1.0 + (i % 7) as f64);
+            }
+            let mut v = r.items();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        assert_eq!(collect(42), collect(42));
+        assert_ne!(collect(42), collect(43));
+    }
+
+    #[test]
+    fn extreme_weights_stay_finite() {
+        let mut r = WeightedReservoir::new(4, 9);
+        r.offer(1.0, 1e-9);
+        r.offer(2.0, 1e9);
+        r.offer(3.0, 1.0);
+        for i in 0..1000 {
+            r.offer(i as f64, if i % 2 == 0 { 1e9 } else { 1e-9 });
+        }
+        assert_eq!(r.len(), 4);
+        for resident in r.buf.iter() {
+            assert!(resident.key > 0.0 && resident.key < 1.0 && resident.key.is_finite());
+        }
+    }
+
+    #[test]
+    fn sampler_trait_roundtrip() {
+        let mut s = WeightedResSampler::new(0.5, 11);
+        for i in 0..1000 {
+            s.offer(&Item::new((i % 3) as u16, 1.0 + i as f64, i));
+        }
+        let r = s.finish_interval();
+        assert_eq!(r.arrived(), 1000.0);
+        assert!(!r.sample.is_empty());
+        assert!(r.sample.len() <= 1000);
+        // interval isolation
+        let r2 = s.finish_interval();
+        assert_eq!(r2.arrived(), 0.0);
+        assert!(r2.sample.is_empty());
+    }
+
+    #[test]
+    fn sampler_adapts_capacity_like_oasrs() {
+        let mut s = WeightedResSampler::new(0.1, 12);
+        for i in 0..1000 {
+            s.offer(&Item::new(0, 1.0, i));
+        }
+        s.finish_interval(); // EWMA = 1000
+        for i in 0..1000 {
+            s.offer(&Item::new(0, 1.0, i));
+        }
+        let r = s.finish_interval();
+        assert_eq!(r.state.n_cap[0], 100.0); // 0.1 × 1000
+        let n0 = r.sample.len();
+        assert_eq!(n0, 100);
+    }
+
+    #[test]
+    fn sampler_prefers_heavy_values() {
+        // One stratum mixing value 1 and value 1000 items; the sample's
+        // share of heavy values must far exceed their population share.
+        let mut s = WeightedResSampler::new(0.05, 13);
+        let feed = |s: &mut WeightedResSampler| {
+            for i in 0..10_000u64 {
+                let v = if i % 100 == 0 { 1000.0 } else { 1.0 };
+                s.offer(&Item::new(0, v, i));
+            }
+        };
+        feed(&mut s);
+        s.finish_interval(); // warm-up capacities
+        feed(&mut s);
+        let r = s.finish_interval();
+        let heavy = r.sample.iter().filter(|&&(_, v)| v == 1000.0).count() as f64;
+        let share = heavy / r.sample.len() as f64;
+        // population share is 1%; with 100 heavy of 500 slots the ceiling is 20%
+        assert!(share > 0.1, "heavy share {share}");
+    }
+
+    #[test]
+    fn sampler_kind_and_fraction() {
+        let mut s = WeightedResSampler::new(0.4, 14);
+        assert_eq!(s.kind(), SamplerKind::WeightedRes);
+        assert_eq!(s.fraction(), 0.4);
+        s.set_fraction(2.0);
+        assert_eq!(s.fraction(), 1.0);
+    }
+}

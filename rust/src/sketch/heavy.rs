@@ -1,0 +1,391 @@
+//! Heavy hitters: Count-Min sketch + space-saving candidate set.
+//!
+//! [`CountMin`] (Cormode & Muthukrishnan 2005) answers weighted point
+//! queries with a one-sided guarantee: the estimate never under-counts,
+//! and over-counts by more than `ε·W` (ε = e/width, `W` = total offered
+//! weight) with probability at most `e^-depth`.  Counters are plain sums,
+//! so merging two Count-Mins with the same shape/seed is **exact** —
+//! element-wise addition equals the sketch of the concatenated stream.
+//!
+//! [`HeavyHitters`] pairs a Count-Min with a bounded space-saving candidate
+//! map (Metwally et al. 2005) so the top-k keys can be *enumerated* (a bare
+//! Count-Min can only be probed).  Candidates live in a `BTreeMap`, keeping
+//! every operation deterministic — same inputs, same seed, same top-k list,
+//! matching the repo's seeded-RNG discipline.
+//!
+//! Weights are Horvitz–Thompson weights: a sampled item of stratum `i`
+//! offered with weight `W_i` contributes its estimated share of the full
+//! stream, so per-window top-k over a sample estimates the true per-window
+//! top-k.
+
+use std::collections::BTreeMap;
+
+use super::hash64;
+
+/// Weighted Count-Min sketch.
+#[derive(Debug, Clone)]
+pub struct CountMin {
+    width: usize,
+    depth: usize,
+    /// depth × width counters, row-major.
+    counters: Vec<f64>,
+    /// Total offered weight W (the scale of the over-estimate bound).
+    total: f64,
+    /// Row-hash seed; merges require equal seeds.
+    seed: u64,
+}
+
+impl CountMin {
+    pub fn new(width: usize, depth: usize, seed: u64) -> Self {
+        let width = width.max(8);
+        let depth = depth.clamp(1, 16);
+        Self { width, depth, counters: vec![0.0; width * depth], total: 0.0, seed }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Native guarantee: over-estimate ≤ eps() · total_weight() with
+    /// probability ≥ 1 − e^−depth.
+    pub fn eps(&self) -> f64 {
+        std::f64::consts::E / self.width as f64
+    }
+
+    /// Total offered weight W.
+    pub fn total_weight(&self) -> f64 {
+        self.total
+    }
+
+    /// Absolute over-estimate bound ε·W.
+    pub fn over_estimate_bound(&self) -> f64 {
+        self.eps() * self.total
+    }
+
+    #[inline]
+    fn slot(&self, key: u64, row: usize) -> usize {
+        let h = hash64(key, self.seed.wrapping_add(0x9E37 * (row as u64 + 1)));
+        row * self.width + (h % self.width as u64) as usize
+    }
+
+    /// Add `weight` to `key` (non-positive / non-finite weights ignored).
+    #[inline]
+    pub fn add(&mut self, key: u64, weight: f64) {
+        if !(weight > 0.0) || !weight.is_finite() {
+            return;
+        }
+        for row in 0..self.depth {
+            let s = self.slot(key, row);
+            self.counters[s] += weight;
+        }
+        self.total += weight;
+    }
+
+    /// Point query: estimated total weight of `key` (never under-counts).
+    pub fn query(&self, key: u64) -> f64 {
+        let mut est = f64::INFINITY;
+        for row in 0..self.depth {
+            est = est.min(self.counters[self.slot(key, row)]);
+        }
+        if est.is_finite() {
+            est
+        } else {
+            0.0
+        }
+    }
+
+    /// Merge another Count-Min (same shape and seed): counters add, which is
+    /// exactly the sketch of the concatenated streams.
+    pub fn merge(&mut self, other: &CountMin) {
+        assert_eq!(
+            (self.width, self.depth, self.seed),
+            (other.width, other.depth, other.seed),
+            "CountMin shape/seed mismatch"
+        );
+        for (a, &b) in self.counters.iter_mut().zip(&other.counters) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+/// Top-k tracker: Count-Min for counts, space-saving map for enumeration.
+#[derive(Debug, Clone)]
+pub struct HeavyHitters {
+    cm: CountMin,
+    /// Candidate keys with their Count-Min estimates (deterministic order).
+    candidates: BTreeMap<u64, f64>,
+    capacity: usize,
+    /// Lower bound on the smallest candidate count.  Candidate counts only
+    /// ever grow, so a stale value stays a valid lower bound — newcomers
+    /// whose estimate is below it are rejected without the O(capacity) min
+    /// scan, which is the common case once the head stabilizes.
+    min_floor: f64,
+}
+
+impl HeavyHitters {
+    pub fn new(capacity: usize, cm_width: usize, cm_depth: usize, seed: u64) -> Self {
+        Self {
+            cm: CountMin::new(cm_width, cm_depth, seed),
+            candidates: BTreeMap::new(),
+            capacity: capacity.max(1),
+            min_floor: 0.0,
+        }
+    }
+
+    /// Offer one key occurrence with its Horvitz–Thompson weight.
+    pub fn offer(&mut self, key: u64, weight: f64) {
+        if !(weight > 0.0) || !weight.is_finite() {
+            return;
+        }
+        self.cm.add(key, weight);
+        if let Some(c) = self.candidates.get_mut(&key) {
+            *c += weight;
+            return;
+        }
+        let est = self.cm.query(key);
+        if self.candidates.len() < self.capacity {
+            // keep the floor a true lower bound even for below-floor inserts
+            // into a map that emptied below capacity (e.g. after a merge)
+            self.min_floor = self.min_floor.min(est);
+            self.candidates.insert(key, est);
+            return;
+        }
+        // Fast reject: at or below the floor the newcomer cannot beat the
+        // true minimum either.
+        if est <= self.min_floor {
+            return;
+        }
+        // Space-saving: displace the smallest candidate when the newcomer's
+        // estimated count exceeds it.
+        let (&min_key, &min_count) = self
+            .candidates
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite counts"))
+            .expect("non-empty candidates");
+        // The true minimum bounds every remaining count from below (a
+        // displacing newcomer enters with est > min_count).
+        self.min_floor = min_count;
+        if est > min_count {
+            self.candidates.remove(&min_key);
+            self.candidates.insert(key, est);
+        }
+    }
+
+    /// Merge another tracker: Count-Mins add exactly; the candidate set is
+    /// re-scored against the merged Count-Min and truncated back to
+    /// capacity, so merged top-k matches direct top-k up to the Count-Min
+    /// over-estimate bound.
+    pub fn merge(&mut self, other: &HeavyHitters) {
+        self.cm.merge(&other.cm);
+        let mut keys: Vec<u64> = self.candidates.keys().copied().collect();
+        keys.extend(other.candidates.keys().copied());
+        keys.sort_unstable();
+        keys.dedup();
+        let mut rescored: Vec<(u64, f64)> =
+            keys.into_iter().map(|k| (k, self.cm.query(k))).collect();
+        // keep the `capacity` largest (key asc as the deterministic tiebreak)
+        rescored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).expect("finite counts").then(a.0.cmp(&b.0))
+        });
+        rescored.truncate(self.capacity);
+        // The last kept entry is the new smallest count — an exact floor.
+        self.min_floor = rescored.last().map(|&(_, c)| c).unwrap_or(0.0);
+        self.candidates = rescored.into_iter().collect();
+    }
+
+    /// The k heaviest keys, `(key, estimated weight)`, heaviest first
+    /// (deterministic: ties break on key order).
+    pub fn top_k(&self, k: usize) -> Vec<(u64, f64)> {
+        let mut all: Vec<(u64, f64)> =
+            self.candidates.iter().map(|(&k, &c)| (k, c)).collect();
+        all.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).expect("finite counts").then(a.0.cmp(&b.0))
+        });
+        all.truncate(k);
+        all
+    }
+
+    /// Point query through the underlying Count-Min.
+    pub fn query(&self, key: u64) -> f64 {
+        self.cm.query(key)
+    }
+
+    /// Total offered weight W.
+    pub fn total_weight(&self) -> f64 {
+        self.cm.total_weight()
+    }
+
+    /// The Count-Min over-estimate bound ε·W each reported count carries.
+    pub fn over_estimate_bound(&self) -> f64 {
+        self.cm.over_estimate_bound()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn countmin_never_undercounts() {
+        let mut cm = CountMin::new(256, 4, 1);
+        let mut rng = Rng::seed_from_u64(2);
+        let mut truth: BTreeMap<u64, f64> = BTreeMap::new();
+        for _ in 0..20_000 {
+            let k = rng.range_u64(0, 500);
+            let w = rng.range_f64(0.5, 3.0);
+            cm.add(k, w);
+            *truth.entry(k).or_insert(0.0) += w;
+        }
+        for (&k, &t) in &truth {
+            let est = cm.query(k);
+            assert!(est + 1e-9 >= t, "undercount: key {k} est {est} true {t}");
+            assert!(
+                est <= t + 3.0 * cm.over_estimate_bound(),
+                "gross overcount: key {k}"
+            );
+        }
+    }
+
+    #[test]
+    fn countmin_merge_is_exact() {
+        let mut rng = Rng::seed_from_u64(3);
+        let mut whole = CountMin::new(128, 3, 9);
+        let mut a = CountMin::new(128, 3, 9);
+        let mut b = CountMin::new(128, 3, 9);
+        for i in 0..5_000 {
+            let k = rng.range_u64(0, 200);
+            let w = rng.range_f64(0.1, 2.0);
+            whole.add(k, w);
+            if i % 2 == 0 {
+                a.add(k, w);
+            } else {
+                b.add(k, w);
+            }
+        }
+        a.merge(&b);
+        // element-wise equal up to summation-order rounding
+        for (x, y) in a.counters.iter().zip(&whole.counters) {
+            assert!((x - y).abs() < 1e-6, "counter {x} vs {y}");
+        }
+        assert!((a.total - whole.total).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn countmin_merge_rejects_mismatch() {
+        let mut a = CountMin::new(128, 3, 1);
+        let b = CountMin::new(128, 3, 2);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn top_k_recovers_zipf_heads() {
+        // Zipf-ish stream over 1000 keys; the head keys must surface.
+        let mut rng = Rng::seed_from_u64(4);
+        let weights: Vec<f64> = (0..1000).map(|i| 1.0 / (1.0 + i as f64).powf(1.2)).collect();
+        let mut hh = HeavyHitters::new(32, 1024, 4, 5);
+        for _ in 0..100_000 {
+            let k = rng.categorical(&weights) as u64;
+            hh.offer(k, 1.0);
+        }
+        let top = hh.top_k(10);
+        assert_eq!(top.len(), 10);
+        let top_keys: Vec<u64> = top.iter().map(|&(k, _)| k).collect();
+        for want in 0..3u64 {
+            assert!(top_keys.contains(&want), "head key {want} missing from {top_keys:?}");
+        }
+        // counts sorted descending
+        assert!(top.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn merge_matches_direct_top_k() {
+        let mut rng = Rng::seed_from_u64(6);
+        let weights: Vec<f64> = (0..300).map(|i| 1.0 / (1.0 + i as f64).powf(1.5)).collect();
+        let mut direct = HeavyHitters::new(32, 1024, 4, 7);
+        let mut a = HeavyHitters::new(32, 1024, 4, 7);
+        let mut b = HeavyHitters::new(32, 1024, 4, 7);
+        for i in 0..60_000 {
+            let k = rng.categorical(&weights) as u64;
+            direct.offer(k, 1.0);
+            if i % 2 == 0 {
+                a.offer(k, 1.0);
+            } else {
+                b.offer(k, 1.0);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.total_weight(), direct.total_weight());
+        let top_direct: Vec<u64> = direct.top_k(5).into_iter().map(|(k, _)| k).collect();
+        let top_merged: Vec<u64> = a.top_k(5).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(top_direct, top_merged);
+        // merged counts agree with direct counts within the CM bound
+        for &(k, c) in &a.top_k(5) {
+            let d = direct.query(k);
+            assert!((c - d).abs() <= a.over_estimate_bound() + 1e-9, "key {k}: {c} vs {d}");
+        }
+    }
+
+    #[test]
+    fn weighted_offers_scale_counts() {
+        let mut hh = HeavyHitters::new(8, 512, 4, 8);
+        for _ in 0..100 {
+            hh.offer(1, 10.0); // heavy by weight
+            hh.offer(2, 1.0);
+        }
+        let top = hh.top_k(2);
+        assert_eq!(top[0].0, 1);
+        assert!((top[0].1 - 1000.0).abs() < 1e-6);
+        assert!((top[1].1 - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn capacity_bounds_candidates_and_keeps_heavies() {
+        let mut hh = HeavyHitters::new(4, 512, 4, 9);
+        // 100 distinct light keys then 3 heavy ones
+        for k in 0..100u64 {
+            hh.offer(k + 1000, 1.0);
+        }
+        for _ in 0..50 {
+            hh.offer(1, 5.0);
+            hh.offer(2, 5.0);
+            hh.offer(3, 5.0);
+        }
+        assert!(hh.candidates.len() <= 4);
+        let keys: Vec<u64> = hh.top_k(3).into_iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let build = || {
+            let mut rng = Rng::seed_from_u64(10);
+            let mut hh = HeavyHitters::new(16, 512, 4, 11);
+            for _ in 0..20_000 {
+                hh.offer(rng.range_u64(0, 100), rng.range_f64(0.5, 2.0));
+            }
+            hh.top_k(10)
+        };
+        assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn rejects_bad_weights() {
+        let mut hh = HeavyHitters::new(4, 512, 4, 12);
+        hh.offer(1, 0.0);
+        hh.offer(1, -1.0);
+        hh.offer(1, f64::NAN);
+        assert!(hh.top_k(1).is_empty());
+        assert_eq!(hh.total_weight(), 0.0);
+    }
+}

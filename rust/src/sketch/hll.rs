@@ -1,0 +1,203 @@
+//! HyperLogLog distinct counter (Flajolet et al. 2007).
+//!
+//! `m = 2^p` one-byte registers; each offered key is hashed to 64 bits, the
+//! top `p` bits pick a register, and the register keeps the maximum
+//! "position of the first 1-bit" of the remaining bits.  The harmonic-mean
+//! estimator has relative standard error ≈ `1.04/√m`; linear counting
+//! covers the small-cardinality range.
+//!
+//! **Merge is exact**: register-wise max of two HLLs equals the HLL of the
+//! union, so per-worker sketches combine at the window boundary with no
+//! barrier and no approximation penalty — the strongest mergeability of the
+//! three sketches.
+//!
+//! **Weights**: distinct counting is insensitive to multiplicity, so the
+//! Horvitz–Thompson weight of a sampled item is a no-op here — an item seen
+//! once counts once no matter how many originals it represents.  What
+//! sampling *does* cost is items never selected at all: over a sampled
+//! stream the estimate is therefore a lower bound on the true distinct
+//! count (tight for heavy keys, loose for singletons), which the query
+//! layer documents alongside the native RSE bound.
+
+use super::hash64;
+
+/// A 2^p-register HyperLogLog.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HyperLogLog {
+    p: u8,
+    regs: Vec<u8>,
+}
+
+impl HyperLogLog {
+    /// Precision `p` in [4, 18] (m = 2^p registers, RSE ≈ 1.04/2^(p/2)).
+    pub fn new(p: u8) -> Self {
+        let p = p.clamp(4, 18);
+        Self { p, regs: vec![0u8; 1usize << p] }
+    }
+
+    /// Number of registers m.
+    pub fn m(&self) -> usize {
+        self.regs.len()
+    }
+
+    pub fn precision(&self) -> u8 {
+        self.p
+    }
+
+    /// Native guarantee: relative standard error ≈ 1.04/√m.
+    pub fn relative_std_error(&self) -> f64 {
+        1.04 / (self.m() as f64).sqrt()
+    }
+
+    /// Offer an arbitrary 64-bit key.
+    #[inline]
+    pub fn offer_key(&mut self, key: u64) {
+        let h = hash64(key, 0x5EED_CAFE_F00D_D15C);
+        let idx = (h >> (64 - self.p)) as usize;
+        // rho = position of the leftmost 1 in the remaining 64-p bits.
+        let w = h << self.p;
+        let rho = (if w == 0 { (64 - self.p as u32) + 1 } else { w.leading_zeros() + 1 }) as u8;
+        if rho > self.regs[idx] {
+            self.regs[idx] = rho;
+        }
+    }
+
+    /// Offer a float value (distinct by exact bit pattern; `-0.0 == +0.0`).
+    #[inline]
+    pub fn offer(&mut self, value: f64) {
+        // normalize -0.0 so it does not count separately from 0.0
+        let v = if value == 0.0 { 0.0 } else { value };
+        self.offer_key(v.to_bits());
+    }
+
+    /// Merge another HLL (must share the precision). Exact union semantics.
+    pub fn merge(&mut self, other: &HyperLogLog) {
+        assert_eq!(self.p, other.p, "HLL precision mismatch");
+        for (a, &b) in self.regs.iter_mut().zip(&other.regs) {
+            if b > *a {
+                *a = b;
+            }
+        }
+    }
+
+    /// Estimated distinct count.
+    pub fn estimate(&self) -> f64 {
+        let m = self.m() as f64;
+        let alpha = match self.m() {
+            16 => 0.673,
+            32 => 0.697,
+            64 => 0.709,
+            _ => 0.7213 / (1.0 + 1.079 / m),
+        };
+        let mut inv_sum = 0.0;
+        let mut zeros = 0usize;
+        for &r in &self.regs {
+            inv_sum += 1.0 / (1u64 << r) as f64;
+            if r == 0 {
+                zeros += 1;
+            }
+        }
+        let raw = alpha * m * m / inv_sum;
+        if raw <= 2.5 * m && zeros > 0 {
+            // linear counting for the small range
+            m * (m / zeros as f64).ln()
+        } else {
+            raw
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regs.iter().all(|&r| r == 0)
+    }
+
+    /// Raw registers (tests / serialization).
+    pub fn registers(&self) -> &[u8] {
+        &self.regs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_estimates_zero() {
+        let h = HyperLogLog::new(10);
+        assert!(h.is_empty());
+        assert_eq!(h.estimate(), 0.0);
+    }
+
+    #[test]
+    fn small_range_exactish() {
+        let mut h = HyperLogLog::new(12);
+        for i in 0..100u64 {
+            h.offer_key(i);
+            h.offer_key(i); // duplicates must not count
+        }
+        let e = h.estimate();
+        assert!((e - 100.0).abs() < 5.0, "estimate {e}");
+    }
+
+    #[test]
+    fn large_range_within_rse() {
+        let mut h = HyperLogLog::new(12);
+        let n = 200_000u64;
+        for i in 0..n {
+            h.offer_key(i.wrapping_mul(0x2545F4914F6CDD1D));
+        }
+        let e = h.estimate();
+        let rel = (e - n as f64).abs() / n as f64;
+        // 4 sigma of the native RSE
+        assert!(rel < 4.0 * h.relative_std_error(), "rel {rel}");
+    }
+
+    #[test]
+    fn merge_is_exact_union() {
+        let mut a = HyperLogLog::new(10);
+        let mut b = HyperLogLog::new(10);
+        let mut whole = HyperLogLog::new(10);
+        let mut rng = Rng::seed_from_u64(3);
+        for i in 0..20_000 {
+            let k = rng.next_u64();
+            whole.offer_key(k);
+            if i % 2 == 0 {
+                a.offer_key(k);
+            } else {
+                b.offer_key(k);
+            }
+        }
+        a.merge(&b);
+        // register-exact, not just close
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_precision_mismatch() {
+        let mut a = HyperLogLog::new(10);
+        let b = HyperLogLog::new(12);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn float_offers_normalize_zero() {
+        let mut a = HyperLogLog::new(10);
+        a.offer(0.0);
+        a.offer(-0.0);
+        let e = a.estimate();
+        assert!((e - 1.0).abs() < 0.5, "estimate {e}");
+    }
+
+    #[test]
+    fn precision_clamped() {
+        assert_eq!(HyperLogLog::new(1).precision(), 4);
+        assert_eq!(HyperLogLog::new(30).precision(), 18);
+        assert_eq!(HyperLogLog::new(12).m(), 4096);
+    }
+
+    #[test]
+    fn rse_shrinks_with_precision() {
+        assert!(HyperLogLog::new(14).relative_std_error() < HyperLogLog::new(10).relative_std_error());
+    }
+}

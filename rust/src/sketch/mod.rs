@@ -1,0 +1,115 @@
+//! Mergeable, weight-aware stream summaries ("sketches").
+//!
+//! The estimator layer (`error::estimator`) answers *linear* queries —
+//! sums, means, counts — from a Horvitz–Thompson-weighted sample.  The
+//! paper's case studies also need *frequency* and *distribution* answers:
+//! top-k flows, distinct sources, latency quantiles.  This module supplies
+//! the three classic summaries for those workloads, all built to the same
+//! contract as [`crate::error::estimator::StrataPartials`]:
+//!
+//! * **associatively mergeable** — `merge(sketch(A), sketch(B))` answers
+//!   queries over `A ∪ B`, so per-worker / per-interval sketches combine at
+//!   the window boundary with no barrier, exactly like the OASRS merge
+//!   protocol in `engine::worker`;
+//! * **weight-aware** — every `offer` takes the item's Horvitz–Thompson
+//!   weight (Eq. 1, `W_i = C_i / N_i`), so sketches built over an
+//!   OASRS/SRS/STS/weighted-reservoir *sample* estimate properties of the
+//!   *full* stream;
+//! * **self-bounding** — each sketch reports its native error guarantee
+//!   (rank error ε, HLL relative standard error, Count-Min over-estimate
+//!   bound), surfaced as a [`crate::error::ConfidenceInterval`] next to the
+//!   CLT bounds of the linear queries.
+//!
+//! | sketch                | query                    | guarantee               |
+//! |-----------------------|--------------------------|-------------------------|
+//! | [`QuantileSketch`]    | `Query::Quantile(q)`     | rank error ≤ ε = 2/c    |
+//! | [`HyperLogLog`]       | `Query::Distinct`        | RSE ≈ 1.04/√m           |
+//! | [`HeavyHitters`]      | `Query::TopK(k)`         | over-count ≤ ε·W        |
+//!
+//! All three are deterministic for a fixed configuration/seed (the repo's
+//! seeded-RNG discipline): the quantile sketch uses no randomness at all,
+//! HLL is a pure hash fold, and heavy hitters keeps candidates in a
+//! `BTreeMap` so iteration order never depends on hasher state.
+
+pub mod heavy;
+pub mod hll;
+pub mod quantile;
+
+pub use heavy::{CountMin, HeavyHitters};
+pub use hll::HyperLogLog;
+pub use quantile::QuantileSketch;
+
+/// Tuning knobs for the per-window sketches built by
+/// [`crate::query::QueryExecutor`] (defaults match the paper-scale windows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SketchParams {
+    /// Equi-depth clusters kept by the quantile sketch; rank error
+    /// ε = 2/clusters (default 200 → ε = 1%).
+    pub quantile_clusters: usize,
+    /// HyperLogLog precision p (2^p registers); RSE ≈ 1.04/2^(p/2)
+    /// (default 12 → 4096 registers, ≈1.6%).
+    pub hll_precision: u8,
+    /// Count-Min width (over-estimate ≤ (e/width)·total-weight).
+    pub cm_width: usize,
+    /// Count-Min depth (failure probability e^-depth).
+    pub cm_depth: usize,
+    /// Space-saving candidate capacity of the heavy-hitters sketch.
+    pub topk_capacity: usize,
+    /// Shards a window sample is split into; one sketch per shard, merged
+    /// at the end — the same no-barrier merge the per-worker samplers use,
+    /// exercised on every window (the subsystem's per-worker merge
+    /// contract, kept hot on the production path by design).  This costs
+    /// `shards×` sketch state per window and a sequential merge; set `1`
+    /// to build a single sketch directly when that overhead matters more
+    /// than continuously exercising the merge path.
+    pub shards: usize,
+}
+
+impl Default for SketchParams {
+    fn default() -> Self {
+        Self {
+            quantile_clusters: 200,
+            hll_precision: 12,
+            cm_width: 1024,
+            cm_depth: 4,
+            topk_capacity: 64,
+            shards: 4,
+        }
+    }
+}
+
+/// SplitMix64 finalizer — the shared 64-bit mixer behind every sketch hash
+/// (same constants as `util::rng`'s seeder, salted per use).
+#[inline]
+pub(crate) fn hash64(x: u64, salt: u64) -> u64 {
+    let mut z = x ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash64_mixes_and_is_deterministic() {
+        assert_eq!(hash64(1, 2), hash64(1, 2));
+        assert_ne!(hash64(1, 2), hash64(2, 2));
+        assert_ne!(hash64(1, 2), hash64(1, 3));
+        // avalanche smoke: flipping one input bit flips ~half the output bits
+        let a = hash64(0x1234, 7);
+        let b = hash64(0x1235, 7);
+        let flipped = (a ^ b).count_ones();
+        assert!((16..=48).contains(&flipped), "poor avalanche: {flipped}");
+    }
+
+    #[test]
+    fn default_params_sane() {
+        let p = SketchParams::default();
+        assert!(p.quantile_clusters >= 8);
+        assert!((4..=18).contains(&p.hll_precision));
+        assert!(p.cm_width > 0 && p.cm_depth > 0);
+        assert!(p.shards >= 1);
+    }
+}

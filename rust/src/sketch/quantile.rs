@@ -1,0 +1,387 @@
+//! Weight-aware mergeable quantile sketch (GK/KLL-family).
+//!
+//! A bounded list of *equi-depth clusters* `(mean value, weight)` kept
+//! sorted by value — the deterministic cousin of KLL's compactors and of
+//! the merging t-digest: incoming `(value, weight)` pairs buffer until the
+//! buffer fills, then buffer + clusters are sorted and re-clustered
+//! greedily so no cluster (except unsplittable point masses) exceeds
+//! `total_weight / c`.  Quantile and rank queries interpolate the cluster
+//! midpoints, so any answer is off by at most one cluster of rank mass:
+//!
+//! * rank error ≤ 1/c per boundary; the sketch reports the conservative
+//!   guarantee **ε = 2/c** ([`QuantileSketch::eps`]) to absorb repeated
+//!   re-clustering during merges;
+//! * space is O(c); offer is amortized O(log c) (buffered sort);
+//! * fully deterministic — no RNG — so merge order changes answers only
+//!   within ε and identical inputs give identical sketches.
+//!
+//! Weights are the Horvitz–Thompson weights of Eq. (1): an item selected
+//! from stratum `i` is offered with weight `W_i`, which makes the sketch's
+//! cumulative-weight axis an estimate of the *full* stream's rank axis.
+
+/// Mergeable equi-depth quantile summary.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    /// Target number of clusters `c` (the accuracy knob).
+    clusters: usize,
+    /// Compressed clusters, sorted by mean value: `(mean, weight)`.
+    centroids: Vec<(f64, f64)>,
+    /// Uncompressed recent arrivals.
+    buffer: Vec<(f64, f64)>,
+    /// Total offered weight (the estimated population size).
+    total_weight: f64,
+    /// Exact extremes (kept so q=0 / q=1 are never interpolated away).
+    min: f64,
+    max: f64,
+}
+
+impl QuantileSketch {
+    /// Sketch with `clusters` equi-depth clusters (≥ 8; rank error ε = 2/c).
+    pub fn new(clusters: usize) -> Self {
+        let clusters = clusters.max(8);
+        Self {
+            clusters,
+            centroids: Vec::new(),
+            buffer: Vec::with_capacity(4 * clusters),
+            total_weight: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Sketch configured for a target rank error `eps` (ε = 2/c ⇒ c = 2/ε).
+    pub fn with_eps(eps: f64) -> Self {
+        let eps = eps.clamp(1e-4, 0.25);
+        Self::new((2.0 / eps).ceil() as usize)
+    }
+
+    /// The sketch's rank-error guarantee ε.
+    pub fn eps(&self) -> f64 {
+        2.0 / self.clusters as f64
+    }
+
+    /// Offer one item with its Horvitz–Thompson weight.  Non-finite values
+    /// and non-positive weights are ignored.
+    pub fn offer(&mut self, value: f64, weight: f64) {
+        if !value.is_finite() || !(weight > 0.0) || !weight.is_finite() {
+            return;
+        }
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+        self.total_weight += weight;
+        self.buffer.push((value, weight));
+        if self.buffer.len() >= 4 * self.clusters {
+            self.compress();
+        }
+    }
+
+    /// Merge another sketch into this one (A ∪ B semantics).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        self.buffer.extend_from_slice(&other.centroids);
+        self.buffer.extend_from_slice(&other.buffer);
+        self.total_weight += other.total_weight;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.compress();
+    }
+
+    /// Total offered weight (≈ population size under HT weighting).
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_weight <= 0.0
+    }
+
+    /// Exact minimum / maximum of all offered values.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Re-cluster `centroids + buffer` into ≤ ~c equi-depth clusters.
+    fn compress(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        let mut all = std::mem::take(&mut self.centroids);
+        all.append(&mut self.buffer);
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite values"));
+
+        let cap = self.total_weight / self.clusters as f64;
+        let mut out: Vec<(f64, f64)> = Vec::with_capacity(self.clusters + 8);
+        let mut acc_vw = 0.0; // Σ value·weight of the open cluster
+        let mut acc_w = 0.0; // Σ weight of the open cluster
+        for (v, w) in all {
+            if acc_w > 0.0 && acc_w + w > cap {
+                out.push((acc_vw / acc_w, acc_w));
+                acc_vw = 0.0;
+                acc_w = 0.0;
+            }
+            acc_vw += v * w;
+            acc_w += w;
+        }
+        if acc_w > 0.0 {
+            out.push((acc_vw / acc_w, acc_w));
+        }
+        self.centroids = out;
+    }
+
+    /// Clusters + pending buffer, sorted by value (query-time view).
+    /// `compress` leaves `centroids` sorted, so when the buffer is empty —
+    /// the state every merged sketch is in — queries borrow it directly
+    /// instead of cloning and re-sorting per call.
+    fn sorted_view(&self) -> std::borrow::Cow<'_, [(f64, f64)]> {
+        if self.buffer.is_empty() {
+            return std::borrow::Cow::Borrowed(&self.centroids);
+        }
+        let mut all = self.centroids.clone();
+        all.extend_from_slice(&self.buffer);
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite values"));
+        std::borrow::Cow::Owned(all)
+    }
+
+    /// Value at quantile `q ∈ [0, 1]` (midpoint interpolation between
+    /// cluster means; exact min/max at the endpoints).  NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let view = self.sorted_view();
+        let target = q * self.total_weight;
+
+        // Cumulative midpoints: cluster i's mean sits at rank
+        // (Σ_{j<i} w_j) + w_i/2.
+        let mut cum = 0.0;
+        let mut prev_mid = 0.0;
+        let mut prev_val = self.min;
+        for &(v, w) in view.iter() {
+            let mid = cum + w / 2.0;
+            if target <= mid {
+                let span = (mid - prev_mid).max(f64::MIN_POSITIVE);
+                let t = ((target - prev_mid) / span).clamp(0.0, 1.0);
+                return prev_val + t * (v - prev_val);
+            }
+            cum += w;
+            prev_mid = mid;
+            prev_val = v;
+        }
+        // Beyond the last midpoint: interpolate toward the exact max.
+        let span = (self.total_weight - prev_mid).max(f64::MIN_POSITIVE);
+        let t = ((target - prev_mid) / span).clamp(0.0, 1.0);
+        prev_val + t * (self.max - prev_val)
+    }
+
+    /// Estimated rank (CDF) of `value` in [0, 1].  NaN when empty.
+    pub fn rank(&self, value: f64) -> f64 {
+        if self.is_empty() {
+            return f64::NAN;
+        }
+        if value <= self.min {
+            return 0.0;
+        }
+        if value >= self.max {
+            return 1.0;
+        }
+        let view = self.sorted_view();
+        let mut cum = 0.0;
+        let mut prev_mid = 0.0;
+        let mut prev_val = self.min;
+        for &(v, w) in view.iter() {
+            let mid = cum + w / 2.0;
+            if value <= v {
+                let span = (v - prev_val).max(f64::MIN_POSITIVE);
+                let t = ((value - prev_val) / span).clamp(0.0, 1.0);
+                return (prev_mid + t * (mid - prev_mid)) / self.total_weight;
+            }
+            cum += w;
+            prev_mid = mid;
+            prev_val = v;
+        }
+        1.0
+    }
+
+    /// Current number of stored clusters (space check; ≤ ~2c + buffer).
+    pub fn n_clusters(&self) -> usize {
+        self.centroids.len() + self.buffer.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
+    }
+
+    #[test]
+    fn empty_sketch_is_nan() {
+        let s = QuantileSketch::new(64);
+        assert!(s.quantile(0.5).is_nan());
+        assert!(s.rank(1.0).is_nan());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn single_item() {
+        let mut s = QuantileSketch::new(64);
+        s.offer(42.0, 3.0);
+        assert_eq!(s.quantile(0.0), 42.0);
+        assert_eq!(s.quantile(0.5), 42.0);
+        assert_eq!(s.quantile(1.0), 42.0);
+        assert_eq!(s.total_weight(), 3.0);
+    }
+
+    #[test]
+    fn ignores_bad_inputs() {
+        let mut s = QuantileSketch::new(64);
+        s.offer(f64::NAN, 1.0);
+        s.offer(f64::INFINITY, 1.0);
+        s.offer(1.0, 0.0);
+        s.offer(1.0, -2.0);
+        s.offer(1.0, f64::NAN);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn rank_error_within_eps_uniform() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut s = QuantileSketch::new(100); // eps = 0.02
+        let mut vals: Vec<f64> = (0..50_000).map(|_| rng.range_f64(0.0, 1000.0)).collect();
+        for &v in &vals {
+            s.offer(v, 1.0);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &q in &[0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let approx = s.quantile(q);
+            // measure rank error against the exact data
+            let rank = vals.iter().filter(|&&v| v <= approx).count() as f64 / vals.len() as f64;
+            assert!(
+                (rank - q).abs() <= s.eps(),
+                "q={q}: rank {rank} vs eps {}",
+                s.eps()
+            );
+        }
+    }
+
+    #[test]
+    fn rank_error_within_eps_lognormal() {
+        // Heavy-tailed input — the shape that breaks equi-width histograms.
+        let mut rng = Rng::seed_from_u64(8);
+        let mut s = QuantileSketch::new(100);
+        let mut vals: Vec<f64> = (0..50_000).map(|_| rng.log_normal(6.9, 1.5)).collect();
+        for &v in &vals {
+            s.offer(v, 1.0);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &q in &[0.1, 0.5, 0.9, 0.99] {
+            let approx = s.quantile(q);
+            let rank = vals.iter().filter(|&&v| v <= approx).count() as f64 / vals.len() as f64;
+            assert!((rank - q).abs() <= s.eps(), "q={q}: rank {rank}");
+        }
+    }
+
+    #[test]
+    fn weights_shift_the_distribution() {
+        // 100 items at value 0 with weight 1, 100 at value 10 with weight 9:
+        // the weighted median must be 10.
+        let mut s = QuantileSketch::new(64);
+        for _ in 0..100 {
+            s.offer(0.0, 1.0);
+            s.offer(10.0, 9.0);
+        }
+        assert!(s.quantile(0.5) > 5.0);
+        assert!(s.quantile(0.05) < 1.0);
+        // rank of the boundary reflects the 10/90 weight split
+        let r = s.rank(5.0);
+        assert!((r - 0.1).abs() < 0.05, "rank {r}");
+    }
+
+    #[test]
+    fn merge_matches_direct_within_eps() {
+        let mut rng = Rng::seed_from_u64(9);
+        let vals: Vec<f64> = (0..40_000).map(|_| rng.normal(500.0, 100.0)).collect();
+        let mut direct = QuantileSketch::new(100);
+        let mut a = QuantileSketch::new(100);
+        let mut b = QuantileSketch::new(100);
+        for (i, &v) in vals.iter().enumerate() {
+            direct.offer(v, 1.0);
+            if i % 2 == 0 {
+                a.offer(v, 1.0);
+            } else {
+                b.offer(v, 1.0);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.total_weight(), direct.total_weight());
+        for &q in &[0.1, 0.5, 0.9] {
+            let dm = direct.quantile(q);
+            let mm = a.quantile(q);
+            // Compare through rank space: merged answer's rank in the direct
+            // sketch must be within the combined guarantee.
+            let r = direct.rank(mm);
+            assert!((r - q).abs() <= 2.0 * a.eps(), "q={q}: direct {dm} merged {mm} rank {r}");
+        }
+    }
+
+    #[test]
+    fn space_stays_bounded() {
+        let mut rng = Rng::seed_from_u64(10);
+        let mut s = QuantileSketch::new(50);
+        for _ in 0..100_000 {
+            s.offer(rng.f64(), rng.range_f64(0.5, 2.0));
+        }
+        // ≤ ~2c clusters + one buffer's worth
+        assert!(s.n_clusters() <= 2 * 50 + 4 * 50, "clusters {}", s.n_clusters());
+    }
+
+    #[test]
+    fn deterministic_no_rng() {
+        let build = || {
+            let mut s = QuantileSketch::new(64);
+            let mut rng = Rng::seed_from_u64(11);
+            for _ in 0..10_000 {
+                s.offer(rng.normal(0.0, 1.0), rng.range_f64(0.5, 4.0));
+            }
+            s
+        };
+        let (a, b) = (build(), build());
+        for &q in &[0.05, 0.5, 0.95] {
+            assert_eq!(a.quantile(q), b.quantile(q));
+        }
+    }
+
+    #[test]
+    fn endpoints_are_exact() {
+        let mut s = QuantileSketch::new(32);
+        let mut rng = Rng::seed_from_u64(12);
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for _ in 0..5_000 {
+            let v = rng.normal(0.0, 50.0);
+            lo = lo.min(v);
+            hi = hi.max(v);
+            s.offer(v, 1.0);
+        }
+        assert_eq!(s.quantile(0.0), lo);
+        assert_eq!(s.quantile(1.0), hi);
+        assert_eq!(s.min(), lo);
+        assert_eq!(s.max(), hi);
+    }
+
+    #[test]
+    fn exact_quantile_helper_sane() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(exact_quantile(&v, 0.5), 3.0);
+        assert_eq!(exact_quantile(&v, 0.0), 1.0);
+        assert_eq!(exact_quantile(&v, 1.0), 5.0);
+    }
+}

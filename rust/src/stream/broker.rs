@@ -108,9 +108,22 @@ impl Broker {
     }
 
     /// (produced, consumed) counters of a topic.
+    ///
+    /// Both counters are `Relaxed` atomics bumped on independent threads, so
+    /// a reader racing an in-flight hand-off can observe `consumed >
+    /// produced` for an instant; consumers of these stats must not subtract
+    /// them directly — use [`Broker::lag`], which saturates at zero.
     pub fn stats(&self, name: &str) -> Result<(u64, u64)> {
         let t = self.topic(name)?;
         Ok((t.produced.load(Ordering::Relaxed), t.consumed.load(Ordering::Relaxed)))
+    }
+
+    /// Consumer lag of a topic: `produced - consumed`, saturating at zero so
+    /// the momentary `consumed > produced` race (and the empty-topic case)
+    /// reads as 0 instead of wrapping to ~2^64.
+    pub fn lag(&self, name: &str) -> Result<u64> {
+        let (produced, consumed) = self.stats(name)?;
+        Ok(produced.saturating_sub(consumed))
     }
 
     /// Total items currently buffered in a topic (queue depth).
@@ -272,6 +285,25 @@ mod tests {
         let b = Broker::new();
         assert!(b.producer("nope").is_err());
         assert!(b.consumer("nope").is_err());
+        assert!(b.lag("nope").is_err());
+    }
+
+    #[test]
+    fn lag_saturates_and_tracks_depth() {
+        let b = Broker::new();
+        b.create_topic("t", TopicConfig::default()).unwrap();
+        // empty topic: zero lag, not underflow
+        assert_eq!(b.lag("t").unwrap(), 0);
+        let p = b.producer("t").unwrap();
+        for i in 0..10 {
+            p.send(item(0, i as f64)).unwrap();
+        }
+        assert_eq!(b.lag("t").unwrap(), 10);
+        let mut c = b.consumer("t").unwrap();
+        for _ in 0..10 {
+            c.poll();
+        }
+        assert_eq!(b.lag("t").unwrap(), 0);
     }
 
     #[test]

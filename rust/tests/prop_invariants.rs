@@ -9,6 +9,7 @@ use streamapprox::sampling::oasrs::merge_worker_results;
 use streamapprox::sampling::{
     make_sampler, OasrsSampler, Reservoir, SampleResult, Sampler, SamplerKind,
 };
+use streamapprox::sketch::{HeavyHitters, HyperLogLog, QuantileSketch};
 use streamapprox::util::rng::Rng;
 
 /// Mini property harness: run `prop` for `cases` seeds; panic with the seed
@@ -209,7 +210,13 @@ fn prop_estimator_unbiased_under_srs_subsampling() {
 #[test]
 fn prop_all_samplers_conserve_arrival_counts() {
     check(24, |rng| {
-        for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
+        for kind in [
+            SamplerKind::Oasrs,
+            SamplerKind::Srs,
+            SamplerKind::Sts,
+            SamplerKind::WeightedRes,
+            SamplerKind::None,
+        ] {
             let mut s = make_sampler(kind, rng.range_f64(0.05, 1.0), rng.next_u64());
             let strata = rng.range_usize(1, 8);
             let n = rng.range_usize(0, 2000);
@@ -232,7 +239,12 @@ fn prop_all_samplers_conserve_arrival_counts() {
 #[test]
 fn prop_sample_values_come_from_input() {
     check(24, |rng| {
-        for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts] {
+        for kind in [
+            SamplerKind::Oasrs,
+            SamplerKind::Srs,
+            SamplerKind::Sts,
+            SamplerKind::WeightedRes,
+        ] {
             let mut s = make_sampler(kind, 0.4, rng.next_u64());
             let items = random_items(rng, 500, 4);
             let mut allowed: std::collections::HashMap<u16, Vec<f64>> = Default::default();
@@ -272,6 +284,157 @@ fn prop_confidence_interval_scales_with_variance() {
         }
         if (c95 - 2.0 * c68).abs() > 1e-9 || (c997 - 3.0 * c68).abs() > 1e-9 {
             return Err("bounds not sigma-multiples".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Sketch mergeability: merge(sketch(A), sketch(B)) ≡ sketch(A ∪ B) for all
+// three sketches — exactly for HLL (register max) and Count-Min (counter
+// addition, up to summation rounding), within the rank guarantee for the
+// quantile sketch (re-clustering is the lossy step its ε already budgets).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hll_merge_equals_union_exactly() {
+    check(20, |rng| {
+        let mut whole = HyperLogLog::new(10);
+        let mut a = HyperLogLog::new(10);
+        let mut b = HyperLogLog::new(10);
+        let n = rng.range_usize(0, 20_000);
+        for _ in 0..n {
+            let k = rng.range_u64(0, 5_000);
+            whole.offer_key(k);
+            if rng.bernoulli(0.5) {
+                a.offer_key(k);
+            } else {
+                b.offer_key(k);
+            }
+        }
+        a.merge(&b);
+        if a != whole {
+            return Err("merged HLL registers differ from union HLL".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_countmin_merge_equals_union() {
+    check(20, |rng| {
+        let seed = rng.next_u64();
+        let mut whole = HeavyHitters::new(16, 256, 4, seed);
+        let mut a = HeavyHitters::new(16, 256, 4, seed);
+        let mut b = HeavyHitters::new(16, 256, 4, seed);
+        // skewed keys so a stable top-k exists
+        let weights: Vec<f64> = (0..100).map(|i| 1.0 / (1.0 + i as f64).powf(1.5)).collect();
+        let n = rng.range_usize(100, 20_000);
+        for _ in 0..n {
+            let k = rng.categorical(&weights) as u64;
+            let w = rng.range_f64(0.5, 2.0);
+            whole.offer(k, w);
+            if rng.bernoulli(0.5) {
+                a.offer(k, w);
+            } else {
+                b.offer(k, w);
+            }
+        }
+        a.merge(&b);
+        if (a.total_weight() - whole.total_weight()).abs() > 1e-6 * whole.total_weight().max(1.0) {
+            return Err(format!(
+                "merged weight {} != union weight {}",
+                a.total_weight(),
+                whole.total_weight()
+            ));
+        }
+        // point queries agree up to summation rounding (counters are sums)
+        for k in 0..20u64 {
+            let (qa, qw) = (a.query(k), whole.query(k));
+            if (qa - qw).abs() > 1e-6 * qw.max(1.0) {
+                return Err(format!("key {k}: merged {qa} != union {qw}"));
+            }
+        }
+        // the head of the distribution survives the merge identically
+        let ta: Vec<u64> = a.top_k(3).into_iter().map(|(k, _)| k).collect();
+        let tw: Vec<u64> = whole.top_k(3).into_iter().map(|(k, _)| k).collect();
+        if ta != tw {
+            return Err(format!("merged top-3 {ta:?} != union top-3 {tw:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantile_merge_within_guarantee() {
+    check(20, |rng| {
+        let mut whole = QuantileSketch::new(100);
+        let mut a = QuantileSketch::new(100);
+        let mut b = QuantileSketch::new(100);
+        let n = rng.range_usize(100, 20_000);
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = rng.normal(0.0, 100.0);
+            let w = rng.range_f64(0.5, 2.0);
+            vals.push((v, w));
+            whole.offer(v, w);
+            if rng.bernoulli(0.5) {
+                a.offer(v, w);
+            } else {
+                b.offer(v, w);
+            }
+        }
+        a.merge(&b);
+        if (a.total_weight() - whole.total_weight()).abs() > 1e-6 * whole.total_weight() {
+            return Err("merged weight differs".into());
+        }
+        // merged answers must agree with the directly-built sketch in rank
+        // space within the combined guarantee (each side contributes ≤ ε)
+        vals.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        let total_w: f64 = vals.iter().map(|&(_, w)| w).sum();
+        // tolerance: ε from each side plus the discrete-rank granularity of
+        // small inputs (one max-weight item of rank mass)
+        let tol = 2.0 * a.eps() + 2.0 / total_w;
+        for q in [0.1, 0.5, 0.9] {
+            let approx = a.quantile(q);
+            let rank: f64 = vals
+                .iter()
+                .filter(|&&(v, _)| v <= approx)
+                .map(|&(_, w)| w)
+                .sum::<f64>()
+                / total_w;
+            if (rank - q).abs() > tol {
+                return Err(format!("q={q}: merged rank {rank} beyond tolerance {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantile_sketch_rank_guarantee_holds() {
+    // Direct (unmerged) sketches honor ε on every distribution shape the
+    // generators produce.
+    check(20, |rng| {
+        let mut s = QuantileSketch::new(64);
+        let n = rng.range_usize(10, 10_000);
+        let heavy_tail = rng.bernoulli(0.5);
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = if heavy_tail { rng.log_normal(3.0, 1.5) } else { rng.normal(0.0, 10.0) };
+            vals.push(v);
+            s.offer(v, 1.0);
+        }
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        // ε plus the discrete-rank granularity of one item (dominates for
+        // n below the cluster count, where the sketch is actually exact)
+        let tol = s.eps() + 1.0 / n as f64;
+        for q in [0.25, 0.5, 0.75, 0.95] {
+            let approx = s.quantile(q);
+            let rank = vals.iter().filter(|&&v| v <= approx).count() as f64 / n as f64;
+            if (rank - q).abs() > tol {
+                return Err(format!("n={n} q={q}: rank {rank} beyond tolerance {tol}"));
+            }
         }
         Ok(())
     });

@@ -14,7 +14,9 @@ use streamapprox::runtime::{
 };
 
 fn artifacts_available() -> bool {
-    default_artifacts_dir().join("manifest.json").exists()
+    // needs both the compiled-in PJRT engine (`--features xla`) and the
+    // AOT artifacts on disk (`make artifacts`)
+    cfg!(feature = "xla") && default_artifacts_dir().join("manifest.json").exists()
 }
 
 fn test_input(n: usize, seed: u64) -> WindowInput {
