@@ -2,34 +2,56 @@
 //! algorithm at ingest, and the per-interval close cost.  This is the §Perf
 //! instrument for L3 — run before/after optimizations and record deltas in
 //! EXPERIMENTS.md §Perf.
+//!
+//! Besides the ASCII table it emits `BENCH_sampling_hotpath.json` (same
+//! numbers, machine-readable) so future PRs have a perf trajectory to
+//! compare against.  Knobs, all optional:
+//!
+//! * `BENCH_SMOKE=1` (or `--smoke`) — reduced iterations for CI.
+//! * `BENCH_CHECK=1` — before overwriting the JSON, compare against the
+//!   committed baseline and **exit non-zero if the OASRS per-item cost
+//!   regressed more than 3×** (a generous bound that tolerates CI noise
+//!   but catches accidental hot-path regressions).  Baselines whose
+//!   `provenance` is not `cargo-bench` (e.g. the bootstrap estimate
+//!   committed from an environment without a Rust toolchain) are skipped.
 
 use std::time::Instant;
 
 use streamapprox::core::Item;
 use streamapprox::engine::IngestPool;
 use streamapprox::sampling::SamplerKind;
+use streamapprox::util::json::{obj, parse, Value};
 use streamapprox::util::rng::Rng;
 use streamapprox::util::table::Table;
 
-fn bench_sampler(kind: SamplerKind, n_items: usize, intervals: usize) -> (f64, f64) {
-    let mut pool = IngestPool::new(kind, 1, 0.4, 7);
+const JSON_PATH: &str = "BENCH_sampling_hotpath.json";
+/// Smoke runs write here instead, so reduced-iteration numbers can never
+/// overwrite the committed full-run baseline.
+const SMOKE_JSON_PATH: &str = "BENCH_sampling_hotpath.smoke.json";
+/// Regression bound for `BENCH_CHECK`: fail when per-item cost exceeds
+/// baseline × 3.
+const REGRESSION_FACTOR: f64 = 3.0;
+
+fn bench_sampler(
+    kind: SamplerKind,
+    fraction: f64,
+    n_items: usize,
+    intervals: usize,
+) -> (f64, f64) {
+    let mut pool = IngestPool::new(kind, 1, fraction, 7);
     let mut rng = Rng::seed_from_u64(1);
     let items: Vec<Item> = (0..n_items)
         .map(|i| Item::new((rng.range_usize(0, 3)) as u16, rng.normal(100.0, 10.0), i as u64))
         .collect();
 
     // warm-up interval (locks OASRS capacities)
-    for &it in &items {
-        pool.offer(it);
-    }
+    pool.offer_slice(&items);
     pool.finish_interval();
 
     let t0 = Instant::now();
     let mut close_ns = 0u64;
     for _ in 0..intervals {
-        for &it in &items {
-            pool.offer(it);
-        }
+        pool.offer_slice(&items);
         let c0 = Instant::now();
         let r = pool.finish_interval();
         close_ns += c0.elapsed().as_nanos() as u64;
@@ -41,20 +63,136 @@ fn bench_sampler(kind: SamplerKind, n_items: usize, intervals: usize) -> (f64, f
     (per_item_ns, close_ms)
 }
 
+/// Compare fresh results against the committed baseline (if any); returns
+/// `false` on a regression beyond [`REGRESSION_FACTOR`].
+fn check_baseline(results: &[(String, f64, f64)]) -> bool {
+    let Ok(text) = std::fs::read_to_string(JSON_PATH) else {
+        eprintln!("perf check: no committed baseline at {JSON_PATH}; skipping");
+        return true;
+    };
+    let Ok(baseline) = parse(&text) else {
+        eprintln!("perf check: unparsable baseline at {JSON_PATH}; skipping");
+        return true;
+    };
+    if baseline.get("provenance").and_then(|v| v.as_str()) != Some("cargo-bench") {
+        eprintln!("perf check: baseline provenance is not cargo-bench; skipping");
+        return true;
+    }
+    let mut ok = true;
+    for (label, per_item_ns, _) in results {
+        // Only the OASRS rows are guarded — the paper's contribution is the
+        // one whose hot path this repo optimizes; the other samplers have
+        // intentionally expensive baseline cost signatures.
+        if !label.starts_with("Oasrs") {
+            continue;
+        }
+        let base = baseline
+            .get("samplers")
+            .and_then(|s| s.get(label))
+            .and_then(|s| s.get("per_item_ns"))
+            .and_then(|v| v.as_f64());
+        let Some(base) = base else { continue };
+        if *per_item_ns > base * REGRESSION_FACTOR {
+            eprintln!(
+                "perf check FAILED: {label} per-item {per_item_ns:.1} ns > \
+                 {REGRESSION_FACTOR}x baseline {base:.1} ns"
+            );
+            ok = false;
+        } else {
+            eprintln!(
+                "perf check ok: {label} per-item {per_item_ns:.1} ns vs baseline {base:.1} ns"
+            );
+        }
+    }
+    ok
+}
+
+fn write_json(
+    path: &str,
+    results: &[(String, f64, f64)],
+    mode: &str,
+    n: usize,
+    intervals: usize,
+) {
+    let samplers = Value::Obj(
+        results
+            .iter()
+            .map(|(label, per_item_ns, close_ms)| {
+                (
+                    label.clone(),
+                    obj(vec![
+                        ("per_item_ns", Value::Num(*per_item_ns)),
+                        ("close_ms", Value::Num(*close_ms)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = obj(vec![
+        ("bench", Value::Str("sampling_hotpath".into())),
+        ("provenance", Value::Str("cargo-bench".into())),
+        ("mode", Value::Str(mode.into())),
+        ("n_items", Value::Num(n as f64)),
+        ("intervals", Value::Num(intervals as f64)),
+        ("workers", Value::Num(1.0)),
+        ("samplers", samplers),
+    ]);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 fn main() {
-    let n = 200_000;
-    let intervals = 5;
+    let smoke = std::env::var("BENCH_SMOKE").is_ok()
+        || std::env::args().any(|a| a == "--smoke");
+    let check = std::env::var("BENCH_CHECK").is_ok();
+    let (n, intervals) = if smoke { (20_000, 2) } else { (200_000, 5) };
+
+    // (label, kind, fraction).  The Oasrs@f0.1 row is the acceptance
+    // metric for the slice-based ingest path; Oasrs@f0.01 is the regime
+    // where per-stratum streams run ~100x their reservoir capacity, so the
+    // Algorithm-L geometric skips engage and the per-item cost collapses
+    // to a decrement (see EXPERIMENTS.md §Perf for the regime analysis).
+    let configs: Vec<(&str, SamplerKind, f64)> = vec![
+        ("Oasrs", SamplerKind::Oasrs, 0.4),
+        ("Oasrs@f0.1", SamplerKind::Oasrs, 0.1),
+        ("Oasrs@f0.01", SamplerKind::Oasrs, 0.01),
+        ("Srs", SamplerKind::Srs, 0.4),
+        ("Sts", SamplerKind::Sts, 0.4),
+        ("WeightedRes", SamplerKind::WeightedRes, 0.4),
+        ("None", SamplerKind::None, 0.4),
+    ];
+
     let mut t = Table::new(
         format!("sampling hot path ({n} items/interval, {intervals} intervals, 1 worker)"),
-        &["sampler", "per-item (ns)", "interval close (ms)"],
+        &["sampler", "fraction", "per-item (ns)", "interval close (ms)"],
     );
-    for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
-        let (per_item, close) = bench_sampler(kind, n, intervals);
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    for (label, kind, fraction) in configs {
+        let (per_item, close) = bench_sampler(kind, fraction, n, intervals);
         t.row(vec![
-            format!("{kind:?}"),
+            label.to_string(),
+            format!("{fraction}"),
             format!("{per_item:.1}"),
             format!("{close:.2}"),
         ]);
+        results.push((label.to_string(), per_item, close));
     }
     t.print();
+
+    let ok = if check { check_baseline(&results) } else { true };
+    // Smoke numbers go to a side file and a failed regression check never
+    // overwrites the baseline — otherwise the next run would compare
+    // against the very numbers that just failed.
+    if smoke {
+        write_json(SMOKE_JSON_PATH, &results, "smoke", n, intervals);
+    } else if ok {
+        write_json(JSON_PATH, &results, "full", n, intervals);
+    } else {
+        eprintln!("regression check failed: leaving {JSON_PATH} untouched");
+    }
+    if !ok {
+        std::process::exit(1);
+    }
 }

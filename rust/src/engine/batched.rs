@@ -70,17 +70,23 @@ impl<'a> BatchedEngine<'a> {
         let mut idx = 0usize;
         loop {
             let batch_end = assembler.current_interval_end();
-            // Ingest every item of this batch (sampling at ingest for
+            // Ingest this batch's contiguous slice (sampling at ingest for
             // stream-fashion samplers; buffering for batch-fashion ones).
+            // The trace is event-time-sorted, so the batch is a range scan
+            // + one `offer_slice` — per-item dispatch amortizes over the
+            // whole batch.
+            let batch_start = idx;
             while idx < items.len() && items[idx].ts < batch_end {
-                let it = items[idx];
-                if self.config.track_exact {
+                idx += 1;
+            }
+            let batch_items = &items[batch_start..idx];
+            if self.config.track_exact {
+                for it in batch_items {
                     exact.add(it.stratum, it.value);
                 }
-                pool.offer(it);
-                idx += 1;
-                report.items_processed += 1;
             }
+            pool.offer_slice(batch_items);
+            report.items_processed += batch_items.len() as u64;
 
             // Close the batch: per-worker finish + merge (the per-batch
             // scheduling rendezvous).

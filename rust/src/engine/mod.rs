@@ -19,7 +19,7 @@ use crate::budget::{CostFunction, QueryBudget};
 use crate::core::{Error, EventTime, Result};
 use crate::query::{Query, QueryResult};
 
-pub use worker::IngestPool;
+pub use worker::{IngestPool, TransportStats};
 
 /// Reject query/budget combinations the feedback loop cannot serve:
 /// sketch-native bounds (rank ε, HLL RSE, Count-Min over-bound) are set by

@@ -128,15 +128,21 @@ impl<'a> PipelinedEngine<'a> {
             let mut next_interval_end = self.window.slide_ms;
             let mut idx = 0usize;
             loop {
+                // The trace is event-time-sorted: the interval is one range
+                // scan + one `offer_slice` (per-item dispatch amortizes
+                // across the whole interval feed).
+                let interval_start = idx;
                 while idx < items.len() && items[idx].ts < next_interval_end {
-                    let it = items[idx];
-                    if self.config.track_exact {
+                    idx += 1;
+                }
+                let interval_items = &items[interval_start..idx];
+                if self.config.track_exact {
+                    for it in interval_items {
                         exact.add(it.stratum, it.value);
                     }
-                    pool.offer(it);
-                    idx += 1;
-                    items_processed += 1;
                 }
+                pool.offer_slice(interval_items);
+                items_processed += interval_items.len() as u64;
                 let t0 = Instant::now();
                 let result = pool.finish_interval();
                 let close_ns = t0.elapsed().as_nanos() as u64;

@@ -10,10 +10,23 @@
 //!   between workers** (they never wait on each other's data).
 //! * **STS (`sampleByKeyExact`)** — two rounds with a true synchronization
 //!   barrier: a count pass (workers report exact per-stratum counts), a
-//!   coordinator-side merge + proportional target allocation (the "join" the
-//!   paper blames), then a sampling pass against the allocated targets.
+//!   coordinator-side merge + largest-remainder target allocation (the
+//!   "join" the paper blames), then a sampling pass against the allocated
+//!   targets.
 //!
-//! With `workers == 1` the pool runs inline (no threads, no channels) — the
+//! **Transport (two planes).**  Item traffic rides a lock-free SPSC ring
+//! per worker ([`crate::util::spsc`]): the coordinator pushes 512-item
+//! chunks, the worker drains them and hands the emptied buffers back
+//! through a second (return) ring, so steady-state ingest performs **zero
+//! heap allocations and takes zero locks** — buffers just circulate.
+//! Control messages (finish/counts/set-fraction) are rare rendezvous
+//! events and stay on the blocking MPMC channel; a worker always drains
+//! its data ring before acting on a control message, which preserves the
+//! chunks-before-finish ordering the single-threaded coordinator
+//! guarantees at send time.  [`TransportStats`] exposes the recycle hit
+//! rate so tests can assert the zero-allocation property.
+//!
+//! With `workers == 1` the pool runs inline (no threads, no rings) — the
 //! single-core configuration and the pipelined engine's sampling operator
 //! use this fast path.
 
@@ -24,8 +37,9 @@ use crate::sampling::{
     NoopSampler, OasrsSampler, SampleResult, Sampler, SamplerKind, SrsSampler,
     WeightedResSampler,
 };
-use crate::util::channel::{bounded, Receiver, Sender};
+use crate::util::channel::{bounded, Receiver, Sender, TryRecvError};
 use crate::util::rng::Rng;
+use crate::util::spsc::{self, spsc, SpscReceiver, SpscSender};
 
 /// Per-worker sampler instance (concrete dispatch; the STS two-phase
 /// protocol needs more than the `Sampler` trait exposes).
@@ -58,6 +72,20 @@ impl WorkerSampler {
             WorkerSampler::Sts(s) => s.offer(item),
             WorkerSampler::WeightedRes(s) => s.offer(item),
             WorkerSampler::Noop(s) => s.offer(item),
+        }
+    }
+
+    /// Batch offer: one enum dispatch per chunk, then the sampler's own
+    /// tight loop.  Behaviorally identical to per-item `offer` (same RNG
+    /// consumption), which the chunk-size determinism tests assert.
+    #[inline]
+    fn offer_slice(&mut self, items: &[Item]) {
+        match self {
+            WorkerSampler::Oasrs(s) => s.offer_slice(items),
+            WorkerSampler::Srs(s) => s.offer_slice(items),
+            WorkerSampler::Sts(s) => s.offer_slice(items),
+            WorkerSampler::WeightedRes(s) => s.offer_slice(items),
+            WorkerSampler::Noop(s) => s.offer_slice(items),
         }
     }
 
@@ -112,6 +140,15 @@ impl StsBatch {
         }
     }
 
+    /// Batch offer into the per-stratum groups (tight loop, one bounds
+    /// check pattern per item instead of a channel/enum round-trip).
+    #[inline]
+    pub fn offer_slice(&mut self, items: &[Item]) {
+        for item in items {
+            self.offer(item);
+        }
+    }
+
     /// Phase 1: exact local per-stratum counts (`sampleByKeyExact`'s count
     /// job).
     pub fn local_counts(&self) -> [usize; MAX_STRATA] {
@@ -147,30 +184,144 @@ impl StsBatch {
 }
 
 /// Items are shipped to workers in chunks (shuffle buffers), not one by
-/// one — a per-item channel rendezvous costs ~0.5 µs and would dominate
-/// every sampler; real engines batch their network transfers the same way.
+/// one — a per-item hand-off costs ~0.5 µs and would dominate every
+/// sampler; real engines batch their network transfers the same way.
 const CHUNK: usize = 512;
 
+/// Data-plane ring capacity per worker, in chunks (the backpressure bound:
+/// a coordinator more than `RING_CAP` chunks ahead of a worker blocks).
+const RING_CAP: usize = 16;
+
+/// Return-ring capacity: a worker holds at most `RING_CAP` queued chunks
+/// plus one being processed, so `RING_CAP + 2` guarantees every emptied
+/// buffer fits and none is ever dropped (which would force a fresh
+/// allocation later).
+const RETURN_RING_CAP: usize = RING_CAP + 2;
+
+/// Control-plane messages (rare rendezvous events — the chunk traffic rides
+/// the SPSC rings instead).
 enum Msg {
-    Chunk(Vec<Item>),
     /// Simple one-round finish (OASRS/SRS/native).
     Finish(Sender<SampleResult>),
     /// STS phase 1.
     Counts(Sender<[usize; MAX_STRATA]>),
     /// STS phase 2.
     FinishSts([usize; MAX_STRATA], Sender<SampleResult>),
-    SetFraction(f64),
+    /// Fraction update with an ack rendezvous: the coordinator waits for
+    /// every worker's ack before accepting more items, so no chunk shipped
+    /// *after* `set_fraction` can be ingested under the old fraction (the
+    /// old single-channel transport got that ordering for free; with a
+    /// separate data plane it must be explicit).
+    SetFraction(f64, Sender<()>),
+}
+
+/// Counters for the chunk transport (threaded pools only).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Chunks shipped to workers (including partial flush chunks).
+    pub chunks_sent: u64,
+    /// Chunk buffers obtained by recycling a drained one.
+    pub buffers_recycled: u64,
+    /// Chunk buffers obtained from the allocator (pool warm-up; steady
+    /// state must not grow this).
+    pub buffers_allocated: u64,
+}
+
+impl TransportStats {
+    /// Fraction of buffer acquisitions served by recycling.
+    pub fn recycle_hit_rate(&self) -> f64 {
+        let total = self.buffers_recycled + self.buffers_allocated;
+        if total == 0 {
+            0.0
+        } else {
+            self.buffers_recycled as f64 / total as f64
+        }
+    }
+}
+
+/// Coordinator side of the threaded transport: per-worker control channel +
+/// chunk ring + buffer-return ring, and the free-list of recycled buffers.
+struct ThreadedTransport {
+    ctrl_txs: Vec<Sender<Msg>>,
+    chunk_txs: Vec<SpscSender<Vec<Item>>>,
+    return_rxs: Vec<SpscReceiver<Vec<Item>>>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    /// Pending chunk being filled (shipped to workers round-robin).
+    buf: Vec<Item>,
+    /// Recycled chunk buffers ready for reuse.
+    free: Vec<Vec<Item>>,
+    next: usize,
+    stats: TransportStats,
+}
+
+impl ThreadedTransport {
+    #[inline]
+    fn offer(&mut self, item: Item) {
+        self.buf.push(item);
+        if self.buf.len() >= CHUNK {
+            self.ship_chunk();
+        }
+    }
+
+    fn offer_slice(&mut self, items: &[Item]) {
+        let mut rest = items;
+        while !rest.is_empty() {
+            // `buf` is always below CHUNK here (shipped eagerly), so at
+            // least one item fits: memcpy into the pending chunk.
+            let take = (CHUNK - self.buf.len()).min(rest.len());
+            self.buf.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if self.buf.len() >= CHUNK {
+                self.ship_chunk();
+            }
+        }
+    }
+
+    /// Ship the pending chunk to the next worker (round-robin) and swap in
+    /// a recycled buffer.  Blocking when the worker's ring is full — that
+    /// is the backpressure; `Err` only if the worker died, in which case
+    /// the chunk is dropped (matching the old channel semantics).
+    fn ship_chunk(&mut self) {
+        let fresh = self.take_buffer();
+        let chunk = std::mem::replace(&mut self.buf, fresh);
+        let w = self.next;
+        self.next = (self.next + 1) % self.chunk_txs.len();
+        self.stats.chunks_sent += 1;
+        let _ = self.chunk_txs[w].send(chunk);
+    }
+
+    /// Flush the pending partial chunk (interval close).
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            self.ship_chunk();
+        }
+    }
+
+    /// Acquire an empty chunk buffer: poll the return rings into the free
+    /// list (a few relaxed atomic loads when they are empty — amortized
+    /// over 512 items), then reuse.  The pool is pre-sized at construction
+    /// to cover the worst-case number of in-flight buffers (see
+    /// [`IngestPool::new`]), so the allocation branch is unreachable in
+    /// practice and kept only as a safety net.
+    fn take_buffer(&mut self) -> Vec<Item> {
+        for rx in &self.return_rxs {
+            while let Some(b) = rx.try_recv() {
+                self.free.push(b);
+            }
+        }
+        if let Some(b) = self.free.pop() {
+            self.stats.buffers_recycled += 1;
+            return b;
+        }
+        self.stats.buffers_allocated += 1;
+        Vec::with_capacity(CHUNK)
+    }
 }
 
 enum PoolImpl {
     /// Single worker, no threads.
     Inline(Box<WorkerSampler>),
-    Threaded {
-        txs: Vec<Sender<Msg>>,
-        joins: Vec<std::thread::JoinHandle<()>>,
-        /// Pending chunk being filled (flushed to workers round-robin).
-        buf: Vec<Item>,
-    },
+    Threaded(ThreadedTransport),
 }
 
 /// Parallel ingest + sampling pool.
@@ -178,8 +329,70 @@ pub struct IngestPool {
     kind: SamplerKind,
     fraction: f64,
     imp: PoolImpl,
-    next: usize,
     n_workers: usize,
+}
+
+/// Worker thread body: drain the data ring eagerly (recycling each emptied
+/// buffer), interleave control messages, and back off when idle.
+fn worker_loop(
+    mut sampler: WorkerSampler,
+    ctrl_rx: Receiver<Msg>,
+    chunk_rx: SpscReceiver<Vec<Item>>,
+    return_tx: SpscSender<Vec<Item>>,
+) {
+    let drain =
+        |sampler: &mut WorkerSampler| {
+            let mut any = false;
+            while let Some(mut chunk) = chunk_rx.try_recv() {
+                sampler.offer_slice(&chunk);
+                chunk.clear();
+                // A full return ring is impossible by capacity (see
+                // RETURN_RING_CAP) but degrade to dropping, not blocking.
+                let _ = return_tx.try_send(chunk);
+                any = true;
+            }
+            any
+        };
+    let mut idle = 0u32;
+    loop {
+        let mut worked = drain(&mut sampler);
+        match ctrl_rx.try_recv() {
+            Ok(msg) => {
+                // All chunks of the closing interval were pushed before the
+                // control message was sent: drain once more so the finish
+                // sees every item.
+                drain(&mut sampler);
+                match msg {
+                    Msg::Finish(reply) => {
+                        let _ = reply.send(sampler.finish_simple());
+                    }
+                    Msg::Counts(reply) => {
+                        if let WorkerSampler::Sts(s) = &sampler {
+                            let _ = reply.send(s.local_counts());
+                        }
+                    }
+                    Msg::FinishSts(targets, reply) => {
+                        if let WorkerSampler::Sts(s) = &mut sampler {
+                            let _ = reply.send(s.finish_with_targets(&targets));
+                        }
+                    }
+                    Msg::SetFraction(f, reply) => {
+                        sampler.set_fraction(f);
+                        let _ = reply.send(());
+                    }
+                }
+                worked = true;
+            }
+            Err(TryRecvError::Empty) => {}
+            Err(TryRecvError::Closed) => break,
+        }
+        if worked {
+            idle = 0;
+        } else {
+            spsc::backoff(idle);
+            idle = idle.saturating_add(1);
+        }
+    }
 }
 
 impl IngestPool {
@@ -188,46 +401,51 @@ impl IngestPool {
         let imp = if n == 1 {
             PoolImpl::Inline(Box::new(WorkerSampler::new(kind, fraction, seed)))
         } else {
-            let mut txs = Vec::new();
-            let mut joins = Vec::new();
+            let mut ctrl_txs = Vec::with_capacity(n);
+            let mut chunk_txs = Vec::with_capacity(n);
+            let mut return_rxs = Vec::with_capacity(n);
+            let mut joins = Vec::with_capacity(n);
             for w in 0..n {
-                let (tx, rx): (Sender<Msg>, Receiver<Msg>) = bounded(8192);
-                let mut sampler = WorkerSampler::new(kind, fraction, seed.wrapping_add(w as u64 * 7919));
+                let (ctrl_tx, ctrl_rx): (Sender<Msg>, Receiver<Msg>) = bounded(64);
+                let (chunk_tx, chunk_rx) = spsc::<Vec<Item>>(RING_CAP);
+                let (return_tx, return_rx) = spsc::<Vec<Item>>(RETURN_RING_CAP);
+                let sampler =
+                    WorkerSampler::new(kind, fraction, seed.wrapping_add(w as u64 * 7919));
                 joins.push(
                     std::thread::Builder::new()
                         .name(format!("sa-worker-{w}"))
-                        .spawn(move || {
-                            while let Some(msg) = rx.recv() {
-                                match msg {
-                                    Msg::Chunk(items) => {
-                                        for it in &items {
-                                            sampler.offer(it);
-                                        }
-                                    }
-                                    Msg::Finish(reply) => {
-                                        let _ = reply.send(sampler.finish_simple());
-                                    }
-                                    Msg::Counts(reply) => {
-                                        if let WorkerSampler::Sts(s) = &sampler {
-                                            let _ = reply.send(s.local_counts());
-                                        }
-                                    }
-                                    Msg::FinishSts(targets, reply) => {
-                                        if let WorkerSampler::Sts(s) = &mut sampler {
-                                            let _ = reply.send(s.finish_with_targets(&targets));
-                                        }
-                                    }
-                                    Msg::SetFraction(f) => sampler.set_fraction(f),
-                                }
-                            }
-                        })
+                        .spawn(move || worker_loop(sampler, ctrl_rx, chunk_rx, return_tx))
                         .expect("spawn worker"),
                 );
-                txs.push(tx);
+                ctrl_txs.push(ctrl_tx);
+                chunk_txs.push(chunk_tx);
+                return_rxs.push(return_rx);
             }
-            PoolImpl::Threaded { txs, joins, buf: Vec::with_capacity(CHUNK) }
+            // Pre-size the buffer pool so the data plane never allocates
+            // after construction, under any thread interleaving: at the
+            // moment a buffer is taken, at most RING_CAP queued + 1
+            // in-processing buffers per worker plus the pending chunk are
+            // unavailable, so RETURN_RING_CAP (= RING_CAP + 2) buffers per
+            // worker plus the pending one always leave a spare.
+            let pool_size = n * RETURN_RING_CAP;
+            let free: Vec<Vec<Item>> =
+                (0..pool_size).map(|_| Vec::with_capacity(CHUNK)).collect();
+            let stats = TransportStats {
+                buffers_allocated: (pool_size + 1) as u64,
+                ..Default::default()
+            };
+            PoolImpl::Threaded(ThreadedTransport {
+                ctrl_txs,
+                chunk_txs,
+                return_rxs,
+                joins,
+                buf: Vec::with_capacity(CHUNK),
+                free,
+                next: 0,
+                stats,
+            })
         };
-        Self { kind, fraction, imp, next: 0, n_workers: n }
+        Self { kind, fraction, imp, n_workers: n }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -238,38 +456,36 @@ impl IngestPool {
         self.kind
     }
 
+    /// Chunk-transport counters (`None` for the inline pool, which has no
+    /// transport).
+    pub fn transport_stats(&self) -> Option<TransportStats> {
+        match &self.imp {
+            PoolImpl::Inline(_) => None,
+            PoolImpl::Threaded(t) => Some(t.stats),
+        }
+    }
+
     /// Offer one item (chunk-round-robin partitioning across workers).
     #[inline]
     pub fn offer(&mut self, item: Item) {
         match &mut self.imp {
             PoolImpl::Inline(s) => s.offer(&item),
-            PoolImpl::Threaded { txs, buf, .. } => {
-                buf.push(item);
-                if buf.len() >= CHUNK {
-                    let chunk = std::mem::replace(buf, Vec::with_capacity(CHUNK));
-                    let w = self.next;
-                    self.next = (self.next + 1) % txs.len();
-                    let _ = txs[w].send(Msg::Chunk(chunk));
-                }
-            }
+            PoolImpl::Threaded(t) => t.offer(item),
         }
     }
 
-    /// Flush the pending partial chunk (interval close).
-    fn flush(&mut self) {
-        if let PoolImpl::Threaded { txs, buf, .. } = &mut self.imp {
-            if !buf.is_empty() {
-                let chunk = std::mem::replace(buf, Vec::with_capacity(CHUNK));
-                let w = self.next;
-                self.next = (self.next + 1) % txs.len();
-                let _ = txs[w].send(Msg::Chunk(chunk));
-            }
+    /// Offer a contiguous batch (the engines' per-interval feed).  Same
+    /// chunk boundaries and worker assignment as repeated [`Self::offer`]
+    /// calls, so seeded runs are chunk-size independent.
+    pub fn offer_slice(&mut self, items: &[Item]) {
+        match &mut self.imp {
+            PoolImpl::Inline(s) => s.offer_slice(items),
+            PoolImpl::Threaded(t) => t.offer_slice(items),
         }
     }
 
     /// Close the interval on every worker and merge their results.
     pub fn finish_interval(&mut self) -> SampleResult {
-        self.flush();
         match &mut self.imp {
             PoolImpl::Inline(s) => match s.as_mut() {
                 WorkerSampler::Sts(sts) => {
@@ -280,13 +496,14 @@ impl IngestPool {
                 }
                 other => other.finish_simple(),
             },
-            PoolImpl::Threaded { txs, .. } => {
+            PoolImpl::Threaded(t) => {
+                t.flush();
                 if self.kind == SamplerKind::Sts {
                     // Phase 1: count pass (synchronization barrier — the
                     // coordinator must gather every worker's counts before
                     // any worker may sample).
                     let mut replies = Vec::new();
-                    for tx in txs.iter() {
+                    for tx in t.ctrl_txs.iter() {
                         let (rtx, rrx) = bounded(1);
                         let _ = tx.send(Msg::Counts(rtx));
                         replies.push(rrx);
@@ -302,19 +519,15 @@ impl IngestPool {
                         }
                     }
                     let global_targets = proportional_targets(&global, self.fraction);
-                    // Phase 2: allocate targets proportionally to each
-                    // worker's local share, then sample.
+                    // Phase 2: split each stratum's global target across the
+                    // workers by largest remainder (sums exactly), then
+                    // sample.
+                    let worker_targets =
+                        allocate_worker_targets(&global_targets, &per_worker, &global);
                     let mut replies = Vec::new();
-                    for (w, tx) in txs.iter().enumerate() {
-                        let mut t = [0usize; MAX_STRATA];
-                        for s in 0..MAX_STRATA {
-                            if global[s] > 0 {
-                                t[s] = (global_targets[s] * per_worker[w][s] + global[s] / 2)
-                                    / global[s];
-                            }
-                        }
+                    for (w, tx) in t.ctrl_txs.iter().enumerate() {
                         let (rtx, rrx) = bounded(1);
-                        let _ = tx.send(Msg::FinishSts(t, rtx));
+                        let _ = tx.send(Msg::FinishSts(worker_targets[w], rtx));
                         replies.push(rrx);
                     }
                     merge_worker_results(
@@ -322,7 +535,7 @@ impl IngestPool {
                     )
                 } else {
                     let mut replies = Vec::new();
-                    for tx in txs.iter() {
+                    for tx in t.ctrl_txs.iter() {
                         let (rtx, rrx) = bounded(1);
                         let _ = tx.send(Msg::Finish(rtx));
                         replies.push(rrx);
@@ -335,14 +548,23 @@ impl IngestPool {
         }
     }
 
-    /// Update the sampling fraction for subsequent intervals.
+    /// Update the sampling fraction for subsequent intervals.  Blocks
+    /// until every worker has applied it (see [`Msg::SetFraction`]); the
+    /// engines call this between intervals, where the data rings are
+    /// already drained, so the rendezvous is a few idle-poll latencies.
     pub fn set_fraction(&mut self, fraction: f64) {
         self.fraction = fraction;
         match &mut self.imp {
             PoolImpl::Inline(s) => s.set_fraction(fraction),
-            PoolImpl::Threaded { txs, .. } => {
-                for tx in txs {
-                    let _ = tx.send(Msg::SetFraction(fraction));
+            PoolImpl::Threaded(t) => {
+                let mut acks = Vec::new();
+                for tx in &t.ctrl_txs {
+                    let (rtx, rrx) = bounded(1);
+                    let _ = tx.send(Msg::SetFraction(fraction, rtx));
+                    acks.push(rrx);
+                }
+                for ack in acks {
+                    let _ = ack.recv();
                 }
             }
         }
@@ -351,11 +573,11 @@ impl IngestPool {
 
 impl Drop for IngestPool {
     fn drop(&mut self) {
-        if let PoolImpl::Threaded { txs, joins, .. } = &mut self.imp {
-            for tx in txs.iter() {
+        if let PoolImpl::Threaded(t) = &mut self.imp {
+            for tx in t.ctrl_txs.iter() {
                 tx.close();
             }
-            for j in joins.drain(..) {
+            for j in t.joins.drain(..) {
                 let _ = j.join();
             }
         }
@@ -372,6 +594,69 @@ fn proportional_targets(counts: &[usize; MAX_STRATA], fraction: f64) -> [usize; 
         }
     }
     t
+}
+
+/// Split each stratum's global target across workers so the per-worker
+/// targets **sum exactly** to `global_targets[s]`.
+///
+/// Largest-remainder (Hamilton) allocation: every worker gets the floor of
+/// its proportional share `target · c_w / C`, then the leftover units go to
+/// the workers with the largest remainders (ties broken toward the lower
+/// worker index, so the allocation is deterministic).  Independent
+/// per-worker rounding — the previous scheme — can miss the global target
+/// by up to `n_workers / 2` items per stratum, which made
+/// `sampleByKeyExact` not actually exact under multi-worker runs.
+fn allocate_worker_targets(
+    global_targets: &[usize; MAX_STRATA],
+    per_worker: &[[usize; MAX_STRATA]],
+    global: &[usize; MAX_STRATA],
+) -> Vec<[usize; MAX_STRATA]> {
+    let n = per_worker.len();
+    let mut out = vec![[0usize; MAX_STRATA]; n];
+    for s in 0..MAX_STRATA {
+        let c_total = global[s] as u64;
+        let target = global_targets[s] as u64;
+        if c_total == 0 || target == 0 {
+            continue;
+        }
+        let mut assigned = 0u64;
+        let mut rems: Vec<(u64, usize)> = Vec::with_capacity(n);
+        for (w, counts) in per_worker.iter().enumerate() {
+            let num = target * counts[s] as u64;
+            let q = num / c_total;
+            out[w][s] = q as usize;
+            assigned += q;
+            rems.push((num % c_total, w));
+        }
+        let mut left = target.saturating_sub(assigned);
+        rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        for (_, w) in rems {
+            if left == 0 {
+                break;
+            }
+            if out[w][s] < per_worker[w][s] {
+                out[w][s] += 1;
+                left -= 1;
+            }
+        }
+        // Safety net: a worker can be capped by its local count; hand the
+        // leftovers to anyone with items to spare (capacity always suffices
+        // because target <= C).
+        while left > 0 {
+            let mut moved = false;
+            for (o, c) in out.iter_mut().zip(per_worker.iter()) {
+                if left > 0 && o[s] < c[s] {
+                    o[s] += 1;
+                    left -= 1;
+                    moved = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -416,8 +701,9 @@ mod tests {
         let r = p.finish_interval();
         let n0 = r.sample.iter().filter(|(s, _)| *s == 0).count() as f64;
         let n1 = r.sample.iter().filter(|(s, _)| *s == 1).count() as f64;
-        assert!((n0 - 4000.0).abs() <= 4.0, "n0 {n0}");
-        assert!((n1 - 1000.0).abs() <= 4.0, "n1 {n1}");
+        // largest-remainder allocation hits the global target exactly
+        assert_eq!(n0, 4000.0, "n0 {n0}");
+        assert_eq!(n1, 1000.0, "n1 {n1}");
         assert_eq!(r.state.c[0], 8000.0);
     }
 
@@ -482,6 +768,30 @@ mod tests {
     }
 
     #[test]
+    fn set_fraction_ack_applies_before_next_interval_chunks() {
+        // OASRS applies the fraction at ingest (capacities lock at the
+        // first offer of an interval), so the set_fraction ack rendezvous
+        // must land on every worker before the next interval's chunks do.
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 2, 0.5, 31);
+        for i in 0..20_000 {
+            p.offer(Item::new(0, 1.0, i));
+        }
+        p.finish_interval(); // per-worker EWMA = 10k
+        p.set_fraction(0.01);
+        for i in 0..20_000 {
+            p.offer(Item::new(0, 1.0, i));
+        }
+        let r = p.finish_interval();
+        // per worker: cap = 0.01 * 10k = 100 -> merged n_cap = 200; a
+        // worker that ingested under the stale 0.5 would report ~5000.
+        assert!(
+            r.state.n_cap[0] <= 300.0,
+            "stale fraction reached a worker: n_cap {}",
+            r.state.n_cap[0]
+        );
+    }
+
+    #[test]
     fn oasrs_no_sync_rare_stratum_kept_across_workers() {
         let mut p = IngestPool::new(SamplerKind::Oasrs, 4, 0.1, 9);
         for i in 0..100_000 {
@@ -493,6 +803,125 @@ mod tests {
         let r = p.finish_interval();
         let n2 = r.sample.iter().filter(|(s, _)| *s == 2).count();
         assert_eq!(n2, 8);
+    }
+
+    #[test]
+    fn offer_slice_matches_offer_threaded_counts() {
+        let items: Vec<Item> =
+            (0..7000).map(|i| Item::new((i % 5) as u16, i as f64, i as u64)).collect();
+        let mut a = IngestPool::new(SamplerKind::None, 3, 1.0, 10);
+        let mut b = IngestPool::new(SamplerKind::None, 3, 1.0, 10);
+        for &it in &items {
+            a.offer(it);
+        }
+        b.offer_slice(&items);
+        let (ra, rb) = (a.finish_interval(), b.finish_interval());
+        assert_eq!(ra.sample.len(), rb.sample.len());
+        assert_eq!(ra.state.c, rb.state.c);
+    }
+
+    #[test]
+    fn threaded_steady_state_reuses_buffers() {
+        // The zero-allocation acceptance check: the pool is pre-sized at
+        // construction, so every chunk ever shipped is served by a
+        // recycled buffer and the allocation counter never moves — under
+        // any worker/coordinator interleaving, not just lucky timing.
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 2, 0.5, 11);
+        let constructed = (2 * RETURN_RING_CAP + 1) as u64;
+        assert_eq!(p.transport_stats().unwrap().buffers_allocated, constructed);
+        let feed_interval = |p: &mut IngestPool| {
+            for i in 0..20 * CHUNK {
+                p.offer(Item::new((i % 4) as u16, i as f64, i as u64));
+            }
+            p.finish_interval();
+        };
+        feed_interval(&mut p);
+        let warm = p.transport_stats().unwrap();
+        assert!(warm.chunks_sent >= 20);
+        assert_eq!(warm.buffers_recycled, warm.chunks_sent);
+        for _ in 0..3 {
+            feed_interval(&mut p);
+        }
+        let now = p.transport_stats().unwrap();
+        assert_eq!(
+            now.buffers_allocated, constructed,
+            "ingest must never allocate chunk buffers after construction"
+        );
+        assert_eq!(now.buffers_recycled, now.chunks_sent);
+        assert!(now.recycle_hit_rate() > 0.5, "rate {}", now.recycle_hit_rate());
+    }
+
+    #[test]
+    fn inline_pool_has_no_transport_stats() {
+        let p = IngestPool::new(SamplerKind::Oasrs, 1, 0.5, 12);
+        assert!(p.transport_stats().is_none());
+    }
+
+    #[test]
+    fn largest_remainder_sums_exactly() {
+        // 5 workers, 3 items each, target 7: independent rounding gives
+        // round(7*3/15) = 1 per worker = 5 != 7; largest remainder hits 7.
+        let mut per_worker = vec![[0usize; MAX_STRATA]; 5];
+        let mut global = [0usize; MAX_STRATA];
+        for t in per_worker.iter_mut() {
+            t[0] = 3;
+        }
+        global[0] = 15;
+        let mut targets = [0usize; MAX_STRATA];
+        targets[0] = 7;
+        let out = allocate_worker_targets(&targets, &per_worker, &global);
+        let total: usize = out.iter().map(|t| t[0]).sum();
+        assert_eq!(total, 7);
+        for (w, t) in out.iter().enumerate() {
+            assert!(t[0] <= per_worker[w][0], "worker {w} over-allocated");
+        }
+    }
+
+    #[test]
+    fn largest_remainder_respects_local_counts_and_sums() {
+        // Randomized splits: the summed allocation always equals the global
+        // target and never exceeds a worker's local count.
+        let mut rng = Rng::seed_from_u64(99);
+        for _ in 0..500 {
+            let n = rng.range_usize(1, 9);
+            let mut per_worker = vec![[0usize; MAX_STRATA]; n];
+            let mut global = [0usize; MAX_STRATA];
+            for s in 0..4 {
+                for pw in per_worker.iter_mut() {
+                    let c = rng.range_usize(0, 50);
+                    pw[s] = c;
+                    global[s] += c;
+                }
+            }
+            let mut targets = [0usize; MAX_STRATA];
+            for s in 0..4 {
+                if global[s] > 0 {
+                    targets[s] = rng.range_usize(0, global[s] + 1);
+                }
+            }
+            let out = allocate_worker_targets(&targets, &per_worker, &global);
+            for s in 0..4 {
+                let total: usize = out.iter().map(|t| t[s]).sum();
+                assert_eq!(total, targets[s], "stratum {s}");
+                for (o, c) in out.iter().zip(per_worker.iter()) {
+                    assert!(o[s] <= c[s]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_sts_exact_total_sample_size() {
+        // sampleByKeyExact must be *exact*: the merged sample hits the
+        // global per-stratum target even when the count does not divide
+        // evenly across workers.
+        let mut p = IngestPool::new(SamplerKind::Sts, 4, 0.5, 13);
+        for i in 0..8001 {
+            p.offer(Item::new(0, i as f64, 0));
+        }
+        let r = p.finish_interval();
+        // target = round(0.5 * 8001) = 4001 (previously ±workers/2 off)
+        assert_eq!(r.sample.len(), 4001);
     }
 
     use crate::util::rng::Rng;

@@ -1,6 +1,8 @@
 //! Sampling algorithms (paper §2.4, §3.2, §4.1).
 //!
-//! * [`reservoir`] — classic reservoir sampling (Algorithm 1, Vitter '85).
+//! * [`reservoir`] — classic reservoir sampling (Algorithm 1, Vitter '85)
+//!   with an Algorithm-L geometric-skip fast path (Li '94) that engages
+//!   once skips are long enough to amortize their acceptance cost.
 //! * [`oasrs`] — **O**nline **A**daptive **S**tratified **R**eservoir
 //!   **S**ampling, the paper's contribution (Algorithm 3): per-stratum
 //!   reservoirs + arrival counters, weights by Eq. (1), no synchronization.
@@ -30,7 +32,7 @@ use crate::core::Item;
 use crate::error::estimator::StrataState;
 
 pub use oasrs::OasrsSampler;
-pub use reservoir::Reservoir;
+pub use reservoir::{Reservoir, ReservoirMode};
 pub use srs::SrsSampler;
 pub use sts::StsSampler;
 pub use weighted::{WeightedResSampler, WeightedReservoir};
@@ -112,6 +114,21 @@ pub trait Sampler: Send {
     /// Offer one arriving item.
     fn offer(&mut self, item: &Item);
 
+    /// Offer a contiguous batch of items.
+    ///
+    /// Semantically identical to calling [`Sampler::offer`] per item (the
+    /// chunk-size determinism tests assert exactly that), but lets
+    /// implementations amortize per-item overhead — one virtual/enum
+    /// dispatch per chunk instead of per item, buffer `reserve`s, and tight
+    /// monomorphic loops.  Implementations must keep the per-item RNG
+    /// consumption identical to the one-at-a-time path so seeded runs do
+    /// not depend on how the stream was chunked.
+    fn offer_slice(&mut self, items: &[Item]) {
+        for item in items {
+            self.offer(item);
+        }
+    }
+
     /// Close the current interval: emit the sample + strata bookkeeping and
     /// reset for the next interval.
     fn finish_interval(&mut self) -> SampleResult;
@@ -147,6 +164,15 @@ impl Sampler for NoopSampler {
         } else {
             // Out-of-range strata used to vanish silently; surface them.
             crate::metrics::record_dropped_item();
+        }
+    }
+
+    fn offer_slice(&mut self, items: &[Item]) {
+        // Native execution keeps everything: one reservation per chunk,
+        // then a tight push loop.
+        self.buf.reserve(items.len());
+        for item in items {
+            self.offer(item);
         }
     }
 

@@ -1,11 +1,55 @@
-//! Classic reservoir sampling (paper Algorithm 1; Vitter, TOMS '85).
+//! Classic reservoir sampling (paper Algorithm 1; Vitter, TOMS '85) with an
+//! Algorithm-L skip-ahead fast path (Li, TOMS '94).
 //!
 //! Maintains a uniform random sample of fixed capacity over a stream of
-//! unknown length: the first `cap` items fill the reservoir; the i-th item
-//! (i > cap) is accepted with probability `cap / i` and replaces a uniformly
+//! unknown length: the first `cap` items fill the reservoir; afterwards the
+//! i-th item is accepted with probability `cap / i` and replaces a uniformly
 //! random resident.
+//!
+//! Two operating modes produce the same inclusion distribution:
+//!
+//! * [`ReservoirMode::SkipAheadL`] (default) — Li's Algorithm L draws a
+//!   geometric *skip count* per acceptance instead of one uniform per item:
+//!   O(cap·log(n/cap)) RNG draws total, and the full-reservoir hot path of
+//!   `offer` is a single integer decrement.  Because one acceptance costs
+//!   several transcendentals (`ln`/`exp` for the threshold chain), skips
+//!   only pay for themselves once the mean gap between acceptances
+//!   (`seen / cap`) clears an amortization horizon; below it the mode runs
+//!   the cheap one-draw-per-item step and *engages* the skip chain at
+//!   `seen > ENGAGE_HORIZON · cap`, re-seeding the threshold with its exact
+//!   conditional distribution `W ~ Beta(cap, seen − cap + 1)` (the
+//!   acceptance probability after `seen` items under the uniform-keys
+//!   model).  The hybrid is exactly uniform in both phases — cross-checked
+//!   against draw-per-item by the chi-square tests — and never slower than
+//!   Algorithm 1, while long-stream regimes (`n ≫ cap`, e.g. heavy strata
+//!   under skewed arrivals or small sampling fractions) collapse to the
+//!   decrement-only path.
+//! * [`ReservoirMode::DrawPerItem`] — the classic Algorithm-1 body, one f64
+//!   draw per item, kept for cross-validation: the uniformity property
+//!   tests run both modes on the same seed budget and compare.
 
 use crate::util::rng::Rng;
+
+/// Sentinel skip meaning "never accept again" (degenerate `w`; practically
+/// unreachable but keeps the arithmetic total).
+const SKIP_FOREVER: u64 = u64::MAX;
+
+/// Engage Algorithm-L skips once `seen > ENGAGE_HORIZON * cap`, i.e. once
+/// the mean gap between acceptances exceeds ~16 items.  An acceptance costs
+/// ~4 transcendentals (≈30–60 ns) against ~2–3 ns per saved draw, so the
+/// break-even gap is ~12–20 items; 16 is conservative on both fast and slow
+/// libms.
+const ENGAGE_HORIZON: u64 = 16;
+
+/// Which acceptance algorithm a [`Reservoir`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReservoirMode {
+    /// Algorithm L skips with the dense-phase hybrid: o(1) RNG work per
+    /// item past the engagement horizon.
+    SkipAheadL,
+    /// Algorithm 1 (Vitter): one uniform draw per item.
+    DrawPerItem,
+}
 
 /// A fixed-capacity uniform reservoir over `T`.
 #[derive(Debug, Clone)]
@@ -14,22 +58,86 @@ pub struct Reservoir<T> {
     buf: Vec<T>,
     seen: u64,
     rng: Rng,
+    mode: ReservoirMode,
+    /// True once the Algorithm-L skip chain is running (SkipAheadL only).
+    engaged: bool,
+    /// Items still to reject before the next acceptance (engaged only).
+    skip: u64,
+    /// Algorithm L's threshold `W` — the current acceptance probability,
+    /// updated multiplicatively per acceptance.
+    w: f64,
 }
 
 impl<T> Reservoir<T> {
     /// Create a reservoir with capacity `cap` (>= 1 unless you want an
-    /// always-empty sampler, which is permitted for capacity 0).
+    /// always-empty sampler, which is permitted for capacity 0).  Uses the
+    /// Algorithm-L skip fast path.
     pub fn new(cap: usize, seed: u64) -> Self {
-        Self { cap, buf: Vec::with_capacity(cap.min(1024)), seen: 0, rng: Rng::seed_from_u64(seed) }
+        Self::with_mode(cap, seed, ReservoirMode::SkipAheadL)
     }
 
-    /// Offer one item (Algorithm 1 body).
+    /// Create a reservoir with an explicit acceptance algorithm.
+    pub fn with_mode(cap: usize, seed: u64, mode: ReservoirMode) -> Self {
+        Self {
+            cap,
+            buf: Vec::with_capacity(cap.min(1024)),
+            seen: 0,
+            rng: Rng::seed_from_u64(seed),
+            mode,
+            engaged: false,
+            skip: 0,
+            w: 1.0,
+        }
+    }
+
+    /// Uniform draw kept strictly inside (0, 1) so logarithms stay finite.
+    #[inline]
+    fn unit(&mut self) -> f64 {
+        self.rng.f64().clamp(f64::MIN_POSITIVE, 1.0 - f64::EPSILON / 2.0)
+    }
+
+    /// Start the Algorithm-L chain at the current position: the threshold
+    /// (= acceptance probability) after processing `i` items is exactly
+    /// `Beta(cap, i - cap + 1)` — one minus the cap-th largest of `i`
+    /// uniform keys.  `offer` has already counted the current,
+    /// not-yet-decided item, so the processed count here is `seen - 1` and
+    /// the second parameter is `(seen - 1) - cap + 1 = seen - cap`; the
+    /// current item then becomes the chain's first candidate.  At
+    /// `i == cap` this reduces to Li's `W = U^(1/cap)` initialization
+    /// (`Beta(cap, 1)` is the max-of-cap-uniforms law).
+    fn engage(&mut self) {
+        debug_assert!(self.cap > 0 && self.seen > self.cap as u64);
+        self.w = self.rng.beta(self.cap as f64, (self.seen - self.cap as u64) as f64);
+        self.engaged = true;
+        self.schedule_skip();
+    }
+
+    /// Geometric skip length `floor(ln U / ln(1 - w))` (Li's gap law).
+    fn schedule_skip(&mut self) {
+        let ln_1mw = (1.0 - self.w).max(0.0).ln();
+        if ln_1mw >= 0.0 {
+            // w underflowed to 0 (ln(1-w) == -0.0): acceptances have become
+            // astronomically rare; stop accepting rather than divide by zero.
+            self.skip = SKIP_FOREVER;
+            return;
+        }
+        let s = (self.unit().ln() / ln_1mw).floor();
+        // Non-negative by construction (both logs negative); saturate huge
+        // gaps.
+        self.skip = if s < SKIP_FOREVER as f64 { s as u64 } else { SKIP_FOREVER };
+    }
+
+    /// Offer one item.
     ///
-    /// Hot path: a single RNG draw per item.  `r` is uniform on [0, seen);
-    /// the item is accepted iff `r < cap`, and *conditioned on acceptance*
-    /// `r` is uniform on [0, cap) — so `floor(r)` doubles as the victim
-    /// index with no second draw (f64 has 53 bits; bias is ~2⁻⁵³ per item,
-    /// far below measurement noise — cross-checked by the uniformity test).
+    /// Hot path (full reservoir): the engaged SkipAheadL phase decrements
+    /// the pending skip count — no RNG draw, no float work; an acceptance
+    /// costs three draws (victim index, threshold update, next gap).  The
+    /// dense phase and DrawPerItem run the classic single draw per item:
+    /// `r` uniform on [0, seen); accept iff `r < cap`, and *conditioned on
+    /// acceptance* `r` is uniform on [0, cap) — so `floor(r)` doubles as
+    /// the victim index with no second draw (f64 has 53 bits; bias is
+    /// ~2⁻⁵³ per item, far below measurement noise — cross-checked by the
+    /// uniformity tests).
     #[inline]
     pub fn offer(&mut self, item: T) {
         self.seen += 1;
@@ -40,6 +148,34 @@ impl<T> Reservoir<T> {
         if self.cap == 0 {
             return;
         }
+        if self.mode == ReservoirMode::SkipAheadL {
+            if !self.engaged {
+                if self.seen > ENGAGE_HORIZON.saturating_mul(self.cap as u64) {
+                    // Seed the chain with the exact threshold for this
+                    // position; the current item becomes its first
+                    // candidate (skip 0 accepts it).
+                    self.engage();
+                } else {
+                    self.draw_per_item_step(item);
+                    return;
+                }
+            }
+            if self.skip > 0 {
+                self.skip -= 1;
+                return;
+            }
+            let victim = self.rng.range_usize(0, self.cap);
+            self.buf[victim] = item;
+            self.w *= (self.unit().ln() / self.cap as f64).exp();
+            self.schedule_skip();
+        } else {
+            self.draw_per_item_step(item);
+        }
+    }
+
+    /// Algorithm 1 body: one uniform over [0, seen), accept iff below cap.
+    #[inline]
+    fn draw_per_item_step(&mut self, item: T) {
         let r = self.rng.f64() * self.seen as f64;
         if r < self.cap as f64 {
             self.buf[r as usize] = item;
@@ -64,6 +200,16 @@ impl<T> Reservoir<T> {
         self.cap
     }
 
+    /// Acceptance algorithm this reservoir runs.
+    pub fn mode(&self) -> ReservoirMode {
+        self.mode
+    }
+
+    /// True once the geometric-skip chain is active (diagnostics/tests).
+    pub fn skip_engaged(&self) -> bool {
+        self.engaged
+    }
+
     /// Borrow the current sample.
     pub fn items(&self) -> &[T] {
         &self.buf
@@ -72,6 +218,9 @@ impl<T> Reservoir<T> {
     /// Take the sample and reset counters (new interval), keeping capacity.
     pub fn drain(&mut self) -> Vec<T> {
         self.seen = 0;
+        self.engaged = false;
+        self.skip = 0;
+        self.w = 1.0;
         std::mem::take(&mut self.buf)
     }
 
@@ -85,6 +234,12 @@ impl<T> Reservoir<T> {
             self.rng.shuffle(&mut self.buf);
             self.buf.truncate(cap);
         }
+        // The skip chain's threshold law is capacity-specific: drop back to
+        // the (exact-from-any-state) dense phase and let the horizon check
+        // re-engage against the new capacity.
+        self.engaged = false;
+        self.skip = 0;
+        self.w = 1.0;
     }
 }
 
@@ -94,69 +249,100 @@ mod tests {
 
     #[test]
     fn fills_up_to_capacity() {
-        let mut r = Reservoir::new(10, 1);
-        for i in 0..5 {
-            r.offer(i);
+        for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+            let mut r = Reservoir::with_mode(10, 1, mode);
+            for i in 0..5 {
+                r.offer(i);
+            }
+            assert_eq!(r.len(), 5);
+            assert_eq!(r.items(), &[0, 1, 2, 3, 4]);
+            for i in 5..100 {
+                r.offer(i);
+            }
+            assert_eq!(r.len(), 10);
+            assert_eq!(r.seen(), 100);
         }
-        assert_eq!(r.len(), 5);
-        assert_eq!(r.items(), &[0, 1, 2, 3, 4]);
-        for i in 5..100 {
-            r.offer(i);
-        }
-        assert_eq!(r.len(), 10);
-        assert_eq!(r.seen(), 100);
     }
 
     #[test]
     fn sample_is_subset_of_input() {
-        let mut r = Reservoir::new(16, 2);
-        for i in 0..1000u32 {
-            r.offer(i);
+        for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+            let mut r = Reservoir::with_mode(16, 2, mode);
+            for i in 0..5000u32 {
+                r.offer(i);
+            }
+            for &x in r.items() {
+                assert!(x < 5000);
+            }
+            // no duplicates possible when input has no duplicates
+            let mut v: Vec<u32> = r.items().to_vec();
+            v.sort();
+            v.dedup();
+            assert_eq!(v.len(), 16);
         }
-        for &x in r.items() {
-            assert!(x < 1000);
-        }
-        // no duplicates possible when input has no duplicates
-        let mut v: Vec<u32> = r.items().to_vec();
-        v.sort();
-        v.dedup();
-        assert_eq!(v.len(), 16);
     }
 
     #[test]
     fn inclusion_probability_is_uniform() {
-        // Each of 100 items should land in a cap-10 reservoir with p = 0.1;
-        // run 5000 trials and check per-item frequencies.
-        let n = 100u32;
-        let cap = 10;
+        // Each of 200 items should land in a cap-4 reservoir with p = 0.02;
+        // run 5000 trials and check per-item frequencies — in both modes.
+        // n/cap = 50 > ENGAGE_HORIZON, so the skip chain (including the
+        // Beta re-seeded engagement) is exercised, not just the dense
+        // phase.
+        let n = 200u32;
+        let cap = 4;
         let trials = 5000;
-        let mut counts = vec![0u32; n as usize];
-        for t in 0..trials {
-            let mut r = Reservoir::new(cap, t as u64);
-            for i in 0..n {
-                r.offer(i);
+        for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+            let mut counts = vec![0u32; n as usize];
+            for t in 0..trials {
+                let mut r = Reservoir::with_mode(cap, t as u64, mode);
+                for i in 0..n {
+                    r.offer(i);
+                }
+                for &x in r.items() {
+                    counts[x as usize] += 1;
+                }
             }
-            for &x in r.items() {
-                counts[x as usize] += 1;
+            let p = cap as f64 / n as f64;
+            let expect = trials as f64 * p; // 100
+            for (i, &c) in counts.iter().enumerate() {
+                let z = (c as f64 - expect) / (expect * (1.0 - p)).sqrt();
+                assert!(z.abs() < 5.0, "{mode:?} item {i}: count {c} (z={z:.2})");
             }
         }
-        let expect = trials as f64 * cap as f64 / n as f64; // 500
-        for (i, &c) in counts.iter().enumerate() {
-            let z = (c as f64 - expect) / (expect * (1.0 - 0.1)).sqrt();
-            assert!(z.abs() < 5.0, "item {i}: count {c} (z={z:.2})");
+    }
+
+    #[test]
+    fn skip_chain_engages_past_horizon() {
+        let mut r = Reservoir::new(4, 3);
+        for i in 0..64 {
+            r.offer(i);
         }
+        assert!(!r.skip_engaged(), "dense phase up to 16*cap");
+        for i in 64..80 {
+            r.offer(i);
+        }
+        assert!(r.skip_engaged(), "engaged past the horizon");
+        // draw-per-item never engages
+        let mut d = Reservoir::with_mode(4, 3, ReservoirMode::DrawPerItem);
+        for i in 0..1000 {
+            d.offer(i);
+        }
+        assert!(!d.skip_engaged());
     }
 
     #[test]
     fn drain_resets() {
         let mut r = Reservoir::new(4, 3);
-        for i in 0..20 {
+        for i in 0..200 {
             r.offer(i);
         }
+        assert!(r.skip_engaged());
         let s = r.drain();
         assert_eq!(s.len(), 4);
         assert_eq!(r.len(), 0);
         assert_eq!(r.seen(), 0);
+        assert!(!r.skip_engaged());
         for i in 0..2 {
             r.offer(i);
         }
@@ -165,12 +351,14 @@ mod tests {
 
     #[test]
     fn zero_capacity_never_stores() {
-        let mut r = Reservoir::new(0, 4);
-        for i in 0..100 {
-            r.offer(i);
+        for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+            let mut r = Reservoir::with_mode(0, 4, mode);
+            for i in 0..100 {
+                r.offer(i);
+            }
+            assert_eq!(r.len(), 0);
+            assert_eq!(r.seen(), 100);
         }
-        assert_eq!(r.len(), 0);
-        assert_eq!(r.seen(), 100);
     }
 
     #[test]
@@ -190,15 +378,54 @@ mod tests {
     }
 
     #[test]
+    fn set_capacity_keeps_sampling_after_shrink() {
+        // After shrinking onto a full buffer the skip state must restart
+        // against the new capacity and acceptances must keep happening.
+        let mut r = Reservoir::new(64, 6);
+        for i in 0..64 {
+            r.offer(i);
+        }
+        r.set_capacity(8);
+        let before: Vec<i32> = r.items().to_vec();
+        for i in 64..100_064 {
+            r.offer(i);
+        }
+        assert_eq!(r.len(), 8);
+        assert!(r.skip_engaged());
+        assert_ne!(r.items(), &before[..], "no acceptance in 100k offers");
+    }
+
+    #[test]
     fn deterministic_for_seed() {
-        let collect = |seed| {
-            let mut r = Reservoir::new(8, seed);
-            for i in 0..500 {
+        for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+            let collect = |seed| {
+                let mut r = Reservoir::with_mode(8, seed, mode);
+                for i in 0..2000 {
+                    r.offer(i);
+                }
+                r.items().to_vec()
+            };
+            assert_eq!(collect(42), collect(42));
+            assert_ne!(collect(42), collect(43));
+        }
+    }
+
+    #[test]
+    fn skip_mode_is_the_default() {
+        let r: Reservoir<u8> = Reservoir::new(4, 1);
+        assert_eq!(r.mode(), ReservoirMode::SkipAheadL);
+        // Below the horizon the two modes consume RNG identically, so the
+        // same seed produces the same residents.
+        let collect = |mode| {
+            let mut r = Reservoir::with_mode(8, 9, mode);
+            for i in 0..100 {
                 r.offer(i);
             }
             r.items().to_vec()
         };
-        assert_eq!(collect(42), collect(42));
-        assert_ne!(collect(42), collect(43));
+        assert_eq!(
+            collect(ReservoirMode::SkipAheadL),
+            collect(ReservoirMode::DrawPerItem)
+        );
     }
 }

@@ -94,6 +94,14 @@ impl Sampler for SrsSampler {
         self.counters[s] += 1.0;
     }
 
+    fn offer_slice(&mut self, items: &[Item]) {
+        // One buffer reservation per chunk, then a tight append loop.
+        self.batch.reserve(items.len());
+        for item in items {
+            self.offer(item);
+        }
+    }
+
     fn finish_interval(&mut self) -> SampleResult {
         let batch = std::mem::take(&mut self.batch);
         let n = batch.len();

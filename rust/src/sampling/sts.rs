@@ -50,6 +50,14 @@ impl Sampler for StsSampler {
         }
     }
 
+    fn offer_slice(&mut self, items: &[Item]) {
+        // One buffer reservation per chunk, then a tight append loop.
+        self.batch.reserve(items.len());
+        for item in items {
+            self.offer(item);
+        }
+    }
+
     fn finish_interval(&mut self) -> SampleResult {
         let batch = std::mem::take(&mut self.batch);
 

@@ -3,10 +3,12 @@
 //! The build environment is offline, so everything beyond `xla`/`anyhow`/
 //! `thiserror` is implemented here from scratch: a seedable statistical RNG
 //! ([`rng`]), a minimal JSON parser/writer ([`json`]), a bounded MPMC
-//! channel with blocking backpressure ([`channel`]), and ASCII table
-//! rendering for the benchmark harness ([`table`]).
+//! channel with blocking backpressure ([`channel`]), a lock-free SPSC ring
+//! for the ingest data plane ([`spsc`]), and ASCII table rendering for the
+//! benchmark harness ([`table`]).
 
 pub mod channel;
 pub mod json;
 pub mod rng;
+pub mod spsc;
 pub mod table;

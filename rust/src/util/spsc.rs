@@ -1,0 +1,307 @@
+//! Lock-free bounded single-producer/single-consumer ring.
+//!
+//! The data plane of the ingest pool: each worker gets one ring carrying
+//! item chunks coordinator→worker and one carrying drained buffers back
+//! worker→coordinator, so steady-state ingest crosses threads without a
+//! mutex, a condvar wakeup, or a heap allocation.  The classic
+//! Lamport/FastFlow design: monotonically increasing head/tail indices, the
+//! producer owns `tail`, the consumer owns `head`, and each side reads the
+//! other's index with `Acquire` against its own `Release` store.
+//!
+//! Blocking behavior is spin-then-yield-then-nap (no condvar — the point is
+//! that the hot path never takes a lock); the control plane stays on
+//! [`crate::util::channel`], whose blocking semantics fit rendezvous
+//! messages.  Either side closing (or dropping) wakes the other via the
+//! `closed` flag.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Error returned by [`SpscSender::send`] when the consumer is gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RingSendError<T>(pub T);
+
+struct Ring<T> {
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    cap: usize,
+    /// Next index to pop (owned by the consumer).
+    head: AtomicUsize,
+    /// Next index to push (owned by the producer).
+    tail: AtomicUsize,
+    closed: AtomicBool,
+}
+
+// The ring hands each `T` from exactly one thread to exactly one other
+// thread; slots are never aliased mutably (head/tail ordering partitions
+// them between the sides).
+unsafe impl<T: Send> Send for Ring<T> {}
+unsafe impl<T: Send> Sync for Ring<T> {}
+
+impl<T> Drop for Ring<T> {
+    fn drop(&mut self) {
+        // `&mut self` proves both sides are gone; drop whatever is queued.
+        let head = *self.head.get_mut();
+        let tail = *self.tail.get_mut();
+        for i in head..tail {
+            let slot = self.slots[i % self.cap].get();
+            unsafe { (*slot).assume_init_drop() };
+        }
+    }
+}
+
+/// Producing half (not cloneable — single producer).
+pub struct SpscSender<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Consuming half (not cloneable — single consumer).
+pub struct SpscReceiver<T> {
+    ring: Arc<Ring<T>>,
+}
+
+/// Create a bounded SPSC ring with capacity `cap` (>= 1).
+pub fn spsc<T>(cap: usize) -> (SpscSender<T>, SpscReceiver<T>) {
+    let cap = cap.max(1);
+    let slots: Box<[UnsafeCell<MaybeUninit<T>>]> =
+        (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+    let ring = Arc::new(Ring {
+        slots,
+        cap,
+        head: AtomicUsize::new(0),
+        tail: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+    });
+    (SpscSender { ring: ring.clone() }, SpscReceiver { ring })
+}
+
+/// Progressive backoff for the blocking paths: spin briefly (the common
+/// hand-off latency is tens of ns), then yield the core, then nap with the
+/// nap growing geometrically toward ~1 ms — a long-idle side wakes only
+/// ~1k times/sec instead of hot-polling, and the counter resets to
+/// spinning the moment work arrives.  Shared with the ingest workers' poll
+/// loop.
+#[inline]
+pub(crate) fn backoff(round: u32) {
+    if round < 64 {
+        std::hint::spin_loop();
+    } else if round < 256 {
+        std::thread::yield_now();
+    } else {
+        let exp = ((round - 256) / 32).min(4);
+        std::thread::sleep(std::time::Duration::from_micros(50u64 << exp));
+    }
+}
+
+impl<T> SpscSender<T> {
+    /// Non-blocking push; gives the value back when the ring is full or the
+    /// consumer is gone.
+    pub fn try_send(&self, value: T) -> Result<(), T> {
+        let ring = &*self.ring;
+        if ring.closed.load(Ordering::Relaxed) {
+            return Err(value);
+        }
+        let tail = ring.tail.load(Ordering::Relaxed); // own index
+        let head = ring.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= ring.cap {
+            return Err(value);
+        }
+        unsafe { (*ring.slots[tail % ring.cap].get()).write(value) };
+        ring.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Blocking push with backpressure; `Err` when the consumer is gone.
+    pub fn send(&self, value: T) -> Result<(), RingSendError<T>> {
+        let mut value = value;
+        let mut round = 0u32;
+        loop {
+            match self.try_send(value) {
+                Ok(()) => return Ok(()),
+                Err(v) => {
+                    if self.ring.closed.load(Ordering::Relaxed) {
+                        return Err(RingSendError(v));
+                    }
+                    value = v;
+                }
+            }
+            backoff(round);
+            round = round.saturating_add(1);
+        }
+    }
+
+    /// Mark the ring closed (the receiver drains what is buffered).
+    pub fn close(&self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+
+    /// Buffered item count (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let ring = &*self.ring;
+        ring.tail.load(Ordering::Relaxed).wrapping_sub(ring.head.load(Ordering::Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Drop for SpscSender<T> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl<T> SpscReceiver<T> {
+    /// Non-blocking pop; `None` when the ring is currently empty.
+    pub fn try_recv(&self) -> Option<T> {
+        let ring = &*self.ring;
+        let head = ring.head.load(Ordering::Relaxed); // own index
+        let tail = ring.tail.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let value = unsafe { (*ring.slots[head % ring.cap].get()).assume_init_read() };
+        ring.head.store(head.wrapping_add(1), Ordering::Release);
+        Some(value)
+    }
+
+    /// Blocking pop; `None` once the ring is closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut round = 0u32;
+        loop {
+            if let Some(v) = self.try_recv() {
+                return Some(v);
+            }
+            if self.ring.closed.load(Ordering::Acquire) {
+                // Re-check after observing the close so a final item pushed
+                // just before closing is not lost.
+                return self.try_recv();
+            }
+            backoff(round);
+            round = round.saturating_add(1);
+        }
+    }
+
+    /// True once closed with nothing left to drain.
+    pub fn is_terminated(&self) -> bool {
+        self.ring.closed.load(Ordering::Acquire)
+            && self.ring.head.load(Ordering::Relaxed)
+                == self.ring.tail.load(Ordering::Acquire)
+    }
+
+    /// Mark the ring closed from the consumer side (producer's next send
+    /// fails instead of blocking forever).
+    pub fn close(&self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl<T> Drop for SpscReceiver<T> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_roundtrip() {
+        let (tx, rx) = spsc(8);
+        for i in 0..5 {
+            tx.try_send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.try_recv(), Some(i));
+        }
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn full_ring_rejects() {
+        let (tx, rx) = spsc(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert_eq!(tx.try_send(3), Err(3));
+        assert_eq!(rx.try_recv(), Some(1));
+        tx.try_send(3).unwrap();
+        assert_eq!(tx.len(), 2);
+    }
+
+    #[test]
+    fn wraparound_many_times() {
+        let (tx, rx) = spsc(4);
+        for i in 0..1000 {
+            tx.try_send(i).unwrap();
+            assert_eq!(rx.try_recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let (tx, rx) = spsc(8);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        tx.close();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+        assert!(rx.is_terminated());
+    }
+
+    #[test]
+    fn sender_drop_closes() {
+        let (tx, rx) = spsc(4);
+        tx.try_send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(7));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn receiver_drop_fails_sends() {
+        let (tx, rx) = spsc(4);
+        drop(rx);
+        assert!(tx.send(1).is_err());
+        assert_eq!(tx.try_send(2), Err(2));
+    }
+
+    #[test]
+    fn cross_thread_conservation_with_backpressure() {
+        let (tx, rx) = spsc(4);
+        let n = 100_000usize;
+        let received = std::thread::scope(|scope| {
+            let consumer = scope.spawn(move || {
+                let mut got = Vec::with_capacity(n);
+                while let Some(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            });
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+            drop(tx); // close
+            consumer.join().unwrap()
+        });
+        assert_eq!(received, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn queued_items_dropped_on_ring_drop() {
+        // Drop both halves with items still queued: their destructors run
+        // (observable through Arc strong counts).
+        let marker = Arc::new(());
+        let (tx, rx) = spsc(8);
+        for _ in 0..5 {
+            tx.try_send(marker.clone()).unwrap();
+        }
+        assert_eq!(Arc::strong_count(&marker), 6);
+        drop(tx);
+        drop(rx);
+        assert_eq!(Arc::strong_count(&marker), 1);
+    }
+}

@@ -1,0 +1,247 @@
+//! Integration tests for the zero-allocation batch ingest path:
+//! Algorithm-L vs draw-per-item reservoir uniformity (chi-square),
+//! chunk-size independence of seeded results, `offer_slice` ≡ `offer`
+//! equivalence across every sampler kind, and the threaded transport's
+//! buffer-recycling guarantee.
+
+use streamapprox::core::Item;
+use streamapprox::engine::IngestPool;
+use streamapprox::sampling::{
+    make_sampler, Reservoir, ReservoirMode, SampleResult, SamplerKind,
+};
+use streamapprox::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Algorithm-L vs draw-per-item: same inclusion distribution
+// ---------------------------------------------------------------------------
+
+/// Per-item inclusion chi-square statistic for one reservoir mode: `trials`
+/// independent reservoirs over the same `n`-item stream, counting how often
+/// each item survives.
+fn inclusion_chi2(mode: ReservoirMode, n: usize, cap: usize, trials: u64) -> f64 {
+    let mut counts = vec![0u64; n];
+    for t in 0..trials {
+        let mut r = Reservoir::with_mode(cap, t.wrapping_mul(0x9E3779B9).wrapping_add(5), mode);
+        for i in 0..n {
+            r.offer(i);
+        }
+        for &x in r.items() {
+            counts[x] += 1;
+        }
+    }
+    let expect = trials as f64 * cap as f64 / n as f64;
+    counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expect;
+            d * d / expect
+        })
+        .sum()
+}
+
+#[test]
+fn chi_square_uniformity_skip_vs_draw_per_item() {
+    // Both acceptance algorithms must produce per-item inclusion counts
+    // consistent with uniform p = cap/n.  Same seed budget for both modes:
+    // 4000 trials of a 300-item stream into a cap-6 reservoir — n/cap = 50
+    // clears the skip-engagement horizon, so the dense phase, the Beta
+    // re-seeded switch, and the geometric-skip chain are all inside the
+    // tested region.  The statistic is ~chi2 with df = 299 (mean 299,
+    // sd ~24.5); [180, 420] is a ±~5 sigma acceptance band — failures
+    // indicate real non-uniformity, not noise.
+    let (n, cap, trials) = (300, 6, 4000);
+    for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+        let chi2 = inclusion_chi2(mode, n, cap, trials);
+        assert!(
+            (180.0..420.0).contains(&chi2),
+            "{mode:?}: chi-square {chi2:.1} outside uniformity band"
+        );
+    }
+}
+
+#[test]
+fn skip_reservoir_subset_and_size_invariants_hold() {
+    // Large-stream smoke for the skip path: correct size, items from the
+    // input, no duplicates.
+    let mut r = Reservoir::new(32, 77);
+    for i in 0..1_000_000u32 {
+        r.offer(i);
+    }
+    assert_eq!(r.len(), 32);
+    assert_eq!(r.seen(), 1_000_000);
+    let mut v: Vec<u32> = r.items().to_vec();
+    v.sort_unstable();
+    v.dedup();
+    assert_eq!(v.len(), 32);
+    assert!(v.iter().all(|&x| x < 1_000_000));
+}
+
+// ---------------------------------------------------------------------------
+// Chunk-size independence + offer_slice ≡ offer
+// ---------------------------------------------------------------------------
+
+fn trace(n: usize, strata: usize, seed: u64) -> Vec<Item> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|i| {
+            Item::new(
+                rng.range_usize(0, strata) as u16,
+                rng.normal(100.0, 25.0),
+                i as u64,
+            )
+        })
+        .collect()
+}
+
+fn assert_results_identical(a: &SampleResult, b: &SampleResult, tag: &str) {
+    assert_eq!(a.sample, b.sample, "{tag}: samples differ");
+    assert_eq!(a.state.c, b.state.c, "{tag}: arrival counters differ");
+    assert_eq!(a.state.n_cap, b.state.n_cap, "{tag}: capacities differ");
+}
+
+#[test]
+fn inline_pool_deterministic_across_chunk_sizes() {
+    // Same seed, same items: offering one-at-a-time, in 512-item chunks,
+    // or as one full slice must produce bit-identical SampleResults (two
+    // intervals each, so adaptive capacities are exercised too).
+    let kinds = [
+        SamplerKind::Oasrs,
+        SamplerKind::Srs,
+        SamplerKind::Sts,
+        SamplerKind::WeightedRes,
+        SamplerKind::None,
+    ];
+    let items = trace(10_000, 5, 42);
+    for kind in kinds {
+        let run = |chunk: usize| -> Vec<SampleResult> {
+            let mut pool = IngestPool::new(kind, 1, 0.3, 7);
+            let mut out = Vec::new();
+            for _ in 0..2 {
+                match chunk {
+                    0 => {
+                        for &it in &items {
+                            pool.offer(it);
+                        }
+                    }
+                    c => {
+                        for piece in items.chunks(c) {
+                            pool.offer_slice(piece);
+                        }
+                    }
+                }
+                out.push(pool.finish_interval());
+            }
+            out
+        };
+        let per_item = run(0);
+        let chunked = run(512);
+        let whole = run(items.len());
+        for i in 0..2 {
+            assert_results_identical(&per_item[i], &chunked[i], &format!("{kind:?}[512]"));
+            assert_results_identical(&per_item[i], &whole[i], &format!("{kind:?}[full]"));
+        }
+    }
+}
+
+#[test]
+fn offer_slice_equivalence_property_all_kinds() {
+    // Property over random seeds/shapes: a sampler fed via offer_slice with
+    // arbitrary chunking equals the same sampler fed item-at-a-time.
+    let kinds = [
+        SamplerKind::Oasrs,
+        SamplerKind::Srs,
+        SamplerKind::Sts,
+        SamplerKind::WeightedRes,
+        SamplerKind::None,
+    ];
+    for case in 0..10u64 {
+        let mut meta = Rng::seed_from_u64(1000 + case);
+        let n = meta.range_usize(1, 4000);
+        let strata = meta.range_usize(1, 8);
+        let fraction = meta.range_f64(0.05, 1.0);
+        let seed = meta.next_u64();
+        let items = trace(n, strata, 7_000 + case);
+        for kind in kinds {
+            let mut a = make_sampler(kind, fraction, seed);
+            for it in &items {
+                a.offer(it);
+            }
+            let mut b = make_sampler(kind, fraction, seed);
+            let mut rest = &items[..];
+            let mut chop = Rng::seed_from_u64(case);
+            while !rest.is_empty() {
+                let take = chop.range_usize(1, rest.len().min(700) + 1);
+                b.offer_slice(&rest[..take]);
+                rest = &rest[take..];
+            }
+            let (ra, rb) = (a.finish_interval(), b.finish_interval());
+            assert_results_identical(&ra, &rb, &format!("case {case} {kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn seeded_inline_runs_are_reproducible() {
+    // The acceptance determinism check: same seed + workers=1 -> identical
+    // SampleResult, run-to-run.
+    let items = trace(20_000, 4, 9);
+    let run = || {
+        let mut pool = IngestPool::new(SamplerKind::Oasrs, 1, 0.2, 123);
+        pool.offer_slice(&items);
+        let warm = pool.finish_interval();
+        pool.offer_slice(&items);
+        (warm, pool.finish_interval())
+    };
+    let (a1, a2) = run();
+    let (b1, b2) = run();
+    assert_results_identical(&a1, &b1, "warm-up interval");
+    assert_results_identical(&a2, &b2, "steady interval");
+}
+
+#[test]
+fn seeded_threaded_runs_are_reproducible() {
+    // Chunk round-robin + per-worker seeds are deterministic, so even the
+    // threaded pool reproduces exactly for a fixed worker count.
+    let items = trace(30_000, 4, 17);
+    let run = || {
+        let mut pool = IngestPool::new(SamplerKind::Oasrs, 3, 0.2, 321);
+        pool.offer_slice(&items);
+        pool.finish_interval()
+    };
+    let (a, b) = (run(), run());
+    assert_results_identical(&a, &b, "threaded");
+}
+
+// ---------------------------------------------------------------------------
+// Transport: zero allocations in steady state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn threaded_transport_zero_allocations_in_steady_state() {
+    let items = trace(25_000, 4, 23);
+    let mut pool = IngestPool::new(SamplerKind::Oasrs, 4, 0.3, 55);
+    // The buffer pool is pre-sized at construction; every chunk of every
+    // interval must be served by a recycled buffer.
+    let constructed = pool.transport_stats().expect("threaded pool has stats");
+    assert!(constructed.buffers_allocated > 0);
+    assert_eq!(constructed.chunks_sent, 0);
+    for _ in 0..5 {
+        pool.offer_slice(&items);
+        pool.finish_interval();
+    }
+    let steady = pool.transport_stats().unwrap();
+    assert_eq!(
+        steady.buffers_allocated, constructed.buffers_allocated,
+        "ingest must never allocate chunk buffers after construction"
+    );
+    assert_eq!(
+        steady.buffers_recycled, steady.chunks_sent,
+        "every shipped chunk must ride a recycled buffer"
+    );
+    assert!(steady.chunks_sent >= 5 * 25_000 / 512);
+    assert!(
+        steady.recycle_hit_rate() > 0.7,
+        "recycle hit rate {:.2} too low",
+        steady.recycle_hit_rate()
+    );
+}
