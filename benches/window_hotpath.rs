@@ -1,0 +1,270 @@
+//! Micro-benchmark of the window assembly hot path: per-slide merge cost of
+//! the incremental pane store vs the seed's merge-all-intervals fold, at
+//! window/slide ratios {4, 16, 64} with the slide (= pane) held fixed.
+//!
+//! The acceptance property (ISSUE 4): per-slide merge cost grows with the
+//! panes *evicted*, not with the window/slide *ratio* — flat across ratios
+//! at a fixed slide — while the merge-all reference degrades linearly in
+//! the ratio.  Three instruments:
+//!
+//! * `pane-store` — `WindowAssembler::push_interval_view` (deque
+//!   append/drain + ring-order meta fold, zero-copy emission);
+//! * `merge-all` — the seed's path, reconstructed from the public API:
+//!   clone every pane in the ring and `merge_worker_results` per slide;
+//! * `sketch-panes` — `PaneStore<QuantileSketch>` (two-stacks): per-slide
+//!   pane-sketch build + push + span aggregate, plus the *deterministic*
+//!   structural-merge counter, which is the noise-free flatness witness
+//!   (amortized ≤ 2 merges/slide at every ratio).
+//!
+//! Knobs: `BENCH_SMOKE=1` (reduced iterations, side JSON) and
+//! `BENCH_CHECK=1` (self-contained flatness/contrast assertions; exits
+//! non-zero on violation).  Emits `BENCH_window_hotpath.json`.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use streamapprox::sampling::oasrs::merge_worker_results;
+use streamapprox::sampling::SampleResult;
+use streamapprox::sketch::QuantileSketch;
+use streamapprox::util::json::{obj, Value};
+use streamapprox::util::rng::Rng;
+use streamapprox::util::table::Table;
+use streamapprox::window::{ExactAgg, PaneStore, WindowAssembler, WindowConfig};
+
+const JSON_PATH: &str = "BENCH_window_hotpath.json";
+const SMOKE_JSON_PATH: &str = "BENCH_window_hotpath.smoke.json";
+const SLIDE_MS: u64 = 1_000;
+const RATIOS: [usize; 3] = [4, 16, 64];
+
+/// Deterministic pane stream: every pane carries `items_per_pane` sampled
+/// items over 3 strata plus matching counters/ground truth.
+fn mk_panes(n: usize, items_per_pane: usize, seed: u64) -> Vec<(SampleResult, ExactAgg)> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let mut r = SampleResult::default();
+            let mut e = ExactAgg::default();
+            for _ in 0..items_per_pane {
+                let s = rng.range_usize(0, 3) as u16;
+                let v = rng.normal(100.0, 10.0);
+                r.sample.push((s, v));
+                e.add(s, v);
+            }
+            for s in 0..3 {
+                r.state.c[s] = (items_per_pane as f64 / 3.0).ceil() * 2.0;
+                r.state.n_cap[s] = (items_per_pane as f64 / 3.0).ceil();
+            }
+            (r, e)
+        })
+        .collect()
+}
+
+/// ns/slide through the incremental assembler (pane clone included, same as
+/// the reference, so the columns compare merge strategies, not allocators).
+fn bench_pane_store(panes: &[(SampleResult, ExactAgg)], ratio: usize) -> f64 {
+    let mut asm =
+        WindowAssembler::new(WindowConfig::new(SLIDE_MS * ratio as u64, SLIDE_MS));
+    let mut sink = 0usize;
+    let t0 = Instant::now();
+    for (r, e) in panes {
+        if let Some(v) = asm.push_interval_view(r.clone(), *e) {
+            sink += v.sample_len() + v.exact.total_count() as usize;
+        }
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / panes.len() as f64;
+    assert!(sink > 0, "views must emit");
+    ns
+}
+
+/// ns/slide through the seed's merge-all fold over the same ring.
+fn bench_merge_all(panes: &[(SampleResult, ExactAgg)], ratio: usize) -> f64 {
+    let mut ring: VecDeque<(SampleResult, ExactAgg)> = VecDeque::with_capacity(ratio);
+    let mut sink = 0usize;
+    let t0 = Instant::now();
+    for (r, e) in panes {
+        if ring.len() == ratio {
+            ring.pop_front();
+        }
+        ring.push_back((r.clone(), *e));
+        let merged = merge_worker_results(ring.iter().map(|(x, _)| x.clone()).collect());
+        let mut exact = ExactAgg::default();
+        for (_, pe) in &ring {
+            exact.merge(pe);
+        }
+        sink += merged.sample.len() + exact.total_count() as usize;
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / panes.len() as f64;
+    assert!(sink > 0);
+    ns
+}
+
+/// (ns/slide, structural merges/slide) for pane-level quantile sketches
+/// through the two-stacks store: build the pane sketch, push, aggregate.
+fn bench_sketch_panes(panes: &[(SampleResult, ExactAgg)], ratio: usize) -> (f64, f64) {
+    let mut store: PaneStore<QuantileSketch> = PaneStore::new(ratio);
+    let mut sink = 0usize;
+    let t0 = Instant::now();
+    for (r, _) in panes {
+        let mut sk = QuantileSketch::new(200);
+        for &(_, v) in &r.sample {
+            sk.offer(v, 1.0);
+        }
+        store.push(sk);
+        if let Some(agg) = store.aggregate() {
+            sink += agg.n_clusters();
+        }
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / panes.len() as f64;
+    assert!(sink > 0);
+    (ns, store.merge_ops() as f64 / panes.len() as f64)
+}
+
+struct Row {
+    ratio: usize,
+    pane_ns: f64,
+    mergeall_ns: f64,
+    sketch_ns: f64,
+    sketch_ops: f64,
+}
+
+fn check_flatness(rows: &[Row]) -> bool {
+    let mut ok = true;
+    let r4 = &rows[0];
+    let r64 = rows.last().expect("rows");
+    // Deterministic witness: two-stacks structural merges per slide are
+    // amortized ≤ 2 at every ratio (the seed pays `ratio` merges).
+    for r in rows {
+        if r.sketch_ops > 2.0 {
+            eprintln!(
+                "flatness check FAILED: ratio {} does {:.2} pane merges/slide (> 2 amortized)",
+                r.ratio, r.sketch_ops
+            );
+            ok = false;
+        }
+    }
+    // Timing witnesses (generous bounds for noisy runners): the pane store
+    // must stay within 8x of itself across a 16x ratio spread.  The bound
+    // is not 1x because the window *footprint* grows with the ratio (a
+    // ratio-64 window sample is ~0.5–2 MB and falls out of L1/L2), so the
+    // per-slide append/drain writes into cold cache lines and the constant
+    // drifts — a property of storing the span at all, paid far more
+    // heavily by the merge-all path, which re-touches the whole footprint
+    // every slide.  Items churned and merges per slide stay
+    // ratio-independent; the ops witness above is the exact algorithmic
+    // check, this one catches gross regressions…
+    if r64.pane_ns > 8.0 * r4.pane_ns {
+        eprintln!(
+            "flatness check FAILED: pane-store {:.0} ns/slide at ratio 64 vs {:.0} at ratio 4",
+            r64.pane_ns, r4.pane_ns
+        );
+        ok = false;
+    }
+    // …while the merge-all reference must show its linear degradation and
+    // lose clearly to the pane store at the top ratio.
+    if r64.mergeall_ns < 4.0 * r4.mergeall_ns {
+        eprintln!(
+            "contrast check FAILED: merge-all {:.0} ns/slide at ratio 64 vs {:.0} at ratio 4 \
+             (expected ~16x growth)",
+            r64.mergeall_ns, r4.mergeall_ns
+        );
+        ok = false;
+    }
+    if r64.pane_ns * 2.0 > r64.mergeall_ns {
+        eprintln!(
+            "contrast check FAILED: pane-store {:.0} ns/slide not clearly ahead of merge-all \
+             {:.0} at ratio 64",
+            r64.pane_ns, r64.mergeall_ns
+        );
+        ok = false;
+    }
+    if ok {
+        eprintln!(
+            "flatness ok: pane-store {:.0} -> {:.0} ns/slide across ratios 4 -> 64 \
+             (merge-all {:.0} -> {:.0}); sketch merges/slide {:.2} -> {:.2}",
+            r4.pane_ns, r64.pane_ns, r4.mergeall_ns, r64.mergeall_ns, r4.sketch_ops,
+            r64.sketch_ops
+        );
+    }
+    ok
+}
+
+fn write_json(path: &str, rows: &[Row], mode: &str, items_per_pane: usize, intervals: usize) {
+    let ratios = Value::Obj(
+        rows.iter()
+            .map(|r| {
+                (
+                    format!("{}", r.ratio),
+                    obj(vec![
+                        ("pane_store_ns_per_slide", Value::Num(r.pane_ns)),
+                        ("merge_all_ns_per_slide", Value::Num(r.mergeall_ns)),
+                        ("sketch_panes_ns_per_slide", Value::Num(r.sketch_ns)),
+                        ("sketch_merge_ops_per_slide", Value::Num(r.sketch_ops)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = obj(vec![
+        ("bench", Value::Str("window_hotpath".into())),
+        ("provenance", Value::Str("cargo-bench".into())),
+        ("mode", Value::Str(mode.into())),
+        ("slide_ms", Value::Num(SLIDE_MS as f64)),
+        ("items_per_pane", Value::Num(items_per_pane as f64)),
+        ("intervals", Value::Num(intervals as f64)),
+        ("ratios", ratios),
+    ]);
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let smoke =
+        std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
+    let check = std::env::var("BENCH_CHECK").is_ok();
+    let (items_per_pane, intervals) = if smoke { (500, 160) } else { (2_000, 640) };
+
+    let mut t = Table::new(
+        format!(
+            "window hot path ({items_per_pane} sampled items/pane, {intervals} slides, \
+             slide fixed at {SLIDE_MS} ms)"
+        ),
+        &[
+            "w/δ ratio",
+            "pane-store (ns/slide)",
+            "merge-all (ns/slide)",
+            "sketch-panes (ns/slide)",
+            "pane merges/slide",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &ratio in &RATIOS {
+        // fresh pane stream per ratio; warm-up = one full window span
+        let panes = mk_panes(intervals + ratio, items_per_pane, 42 + ratio as u64);
+        let pane_ns = bench_pane_store(&panes[..], ratio);
+        let mergeall_ns = bench_merge_all(&panes[..], ratio);
+        let (sketch_ns, sketch_ops) = bench_sketch_panes(&panes[..], ratio);
+        t.row(vec![
+            format!("{ratio}"),
+            format!("{pane_ns:.0}"),
+            format!("{mergeall_ns:.0}"),
+            format!("{sketch_ns:.0}"),
+            format!("{sketch_ops:.2}"),
+        ]);
+        rows.push(Row { ratio, pane_ns, mergeall_ns, sketch_ns, sketch_ops });
+    }
+    t.print();
+
+    let ok = if check { check_flatness(&rows) } else { true };
+    if smoke {
+        write_json(SMOKE_JSON_PATH, &rows, "smoke", items_per_pane, intervals);
+    } else if ok {
+        write_json(JSON_PATH, &rows, "full", items_per_pane, intervals);
+    } else {
+        eprintln!("flatness check failed: leaving {JSON_PATH} untouched");
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -16,6 +16,7 @@
 //!   times) and sizes the next interval's sample so the window's predicted
 //!   cost fits the budgeted time.
 
+use crate::error::bounds::ConfidenceInterval;
 use crate::error::feedback::FeedbackController;
 
 /// User-facing budget for a streaming query.
@@ -60,6 +61,9 @@ pub struct CostFunction {
     cost_per_item_ns: f64,
     /// EWMA of items arriving per interval.
     arrivals_per_interval: f64,
+    /// The last completed window's confidence interval (None before the
+    /// first window and for sketch-backed queries).
+    last_window_ci: Option<ConfidenceInterval>,
     fraction: f64,
 }
 
@@ -79,6 +83,7 @@ impl CostFunction {
             feedback,
             cost_per_item_ns: 0.0,
             arrivals_per_interval: 0.0,
+            last_window_ci: None,
             fraction,
         }
     }
@@ -92,6 +97,29 @@ impl CostFunction {
         self.fraction
     }
 
+    /// Feed one completed *window*'s observations, CI included — the
+    /// engines' entry point.  The accuracy loop observes the window-level
+    /// confidence interval (the user-facing `output ± bound` guarantee),
+    /// not any per-interval proxy; `None` (sketch-backed queries, empty
+    /// windows) leaves the accuracy controller untouched while the
+    /// cost/arrival EWMAs still update.
+    pub fn observe_window(
+        &mut self,
+        arrived: f64,
+        sampled: usize,
+        processing_ns: u64,
+        ci: Option<ConfidenceInterval>,
+    ) -> f64 {
+        self.last_window_ci = ci;
+        let rel = ci.map(|c| c.relative()).unwrap_or(f64::NAN);
+        self.observe_inner(arrived, sampled, processing_ns, rel, ci)
+    }
+
+    /// The last completed window's CI, as observed by the budget loop.
+    pub fn window_ci(&self) -> Option<ConfidenceInterval> {
+        self.last_window_ci
+    }
+
     /// Feed one window's observations: arrivals in the interval, sampled
     /// items, processing time, and the achieved relative error bound.
     /// Returns the fraction for the next interval.
@@ -101,6 +129,17 @@ impl CostFunction {
         sampled: usize,
         processing_ns: u64,
         rel_error: f64,
+    ) -> f64 {
+        self.observe_inner(arrived, sampled, processing_ns, rel_error, None)
+    }
+
+    fn observe_inner(
+        &mut self,
+        arrived: f64,
+        sampled: usize,
+        processing_ns: u64,
+        rel_error: f64,
+        ci: Option<ConfidenceInterval>,
     ) -> f64 {
         // Update cost model.
         if sampled > 0 {
@@ -129,7 +168,11 @@ impl CostFunction {
                 }
             }
             QueryBudget::TargetRelativeError { .. } => {
-                self.feedback.as_mut().expect("feedback exists").observe(rel_error)
+                let fb = self.feedback.as_mut().expect("feedback exists");
+                match &ci {
+                    Some(ci) => fb.observe_ci(ci),
+                    None => fb.observe(rel_error),
+                }
             }
             QueryBudget::LatencyPerWindowMs(ms) => {
                 // Pulsar-style token model: budget_ns / cost_per_item =
@@ -199,6 +242,36 @@ mod tests {
             cf.observe(100_000.0, 10_000, 100_000_000, 0.0); // 10 us/item
         }
         assert!(cf.fraction() < f_cheap);
+    }
+
+    #[test]
+    fn observe_window_drives_feedback_from_the_ci() {
+        use crate::error::bounds::ConfidenceLevel;
+        let mut cf = CostFunction::new(QueryBudget::TargetRelativeError {
+            target: 0.01,
+            initial_fraction: 0.2,
+        });
+        assert!(cf.window_ci().is_none());
+        // 5% relative width >> 1% target -> fraction grows
+        let ci = ConfidenceInterval { value: 100.0, bound: 5.0, level: ConfidenceLevel::P95 };
+        let f = cf.observe_window(1_000.0, 200, 1_000, Some(ci));
+        assert!(f > 0.2);
+        assert_eq!(cf.window_ci(), Some(ci));
+        // sketch-backed windows observe None: fraction untouched, CI cleared
+        let f2 = cf.observe_window(1_000.0, 200, 1_000, None);
+        assert_eq!(f2, f);
+        assert!(cf.window_ci().is_none());
+    }
+
+    #[test]
+    fn observe_window_updates_cost_model_for_latency_budget() {
+        let mut cf = CostFunction::new(QueryBudget::LatencyPerWindowMs(10.0));
+        // 1000 ns per item, 100k arrivals -> affordable 10k -> fraction 0.1;
+        // the window-level entry point must feed the same cost model
+        // (the pipelined engine used to report zeros here).
+        cf.observe_window(100_000.0, 50_000, 50_000_000, None);
+        let f = cf.fraction();
+        assert!((f - 0.1).abs() < 0.05, "fraction {f}");
     }
 
     #[test]

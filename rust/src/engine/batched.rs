@@ -20,7 +20,7 @@ use std::time::Instant;
 
 use crate::budget::CostFunction;
 use crate::core::{EventTime, Item, Result};
-use crate::query::{Query, QueryExecutor};
+use crate::query::{Query, QueryExecutor, SketchWindow};
 use crate::sampling::SamplerKind;
 use crate::window::{ExactAgg, WindowAssembler, WindowConfig};
 
@@ -56,6 +56,17 @@ impl<'a> BatchedEngine<'a> {
         let interval = self.config.batch_interval_ms.min(self.window.slide_ms);
         let interval = gcd_fit(interval, self.window.slide_ms);
         let mut assembler = WindowAssembler::with_interval(self.window, interval);
+        // Pane-level sketches for sketch-backed queries: one sketch per
+        // batch, merged incrementally at the window boundary.
+        let mut sketches = if self.config.sketch_panes {
+            SketchWindow::for_query(
+                &self.query,
+                self.executor.sketch_params(),
+                assembler.panes_per_window(),
+            )
+        } else {
+            None
+        };
         let mut pool = IngestPool::new(
             sampler_kind,
             self.config.workers,
@@ -94,9 +105,17 @@ impl<'a> BatchedEngine<'a> {
             let batch_result = pool.finish_interval();
             let batch_exact = std::mem::take(&mut exact);
 
-            if let Some(ws) = assembler.push_interval(batch_result, batch_exact) {
-                // The data-parallel job over the window sample.
-                let qr = self.executor.execute(&self.query, &ws.result)?;
+            if let Some(sw) = sketches.as_mut() {
+                sw.push_pane(&batch_result);
+            }
+            if let Some(ws) = assembler.push_interval_view(batch_result, batch_exact) {
+                // The data-parallel job over the window: pane sketches for
+                // sketch-backed queries, the zero-copy sample view for
+                // linear ones.
+                let qr = match &sketches {
+                    Some(sw) => self.executor.execute_sketch(&self.query, sw, &ws.state)?,
+                    None => self.executor.execute_view(&self.query, &ws)?,
+                };
                 let processing_ns = t0.elapsed().as_nanos() as u64;
 
                 let (exact_scalar, exact_ps) = if self.config.track_exact {
@@ -105,18 +124,14 @@ impl<'a> BatchedEngine<'a> {
                     (None, None)
                 };
 
-                // Sketch-native bounds (rank ε, HLL RSE, CM over-bound) do
-                // not shrink as the sampling fraction grows, so feeding them
-                // to the accuracy-feedback loop would saturate it at 1.0;
-                // NaN leaves the controller untouched (cost/arrival EWMAs
-                // still update below).
-                let rel = if self.query.is_sketch_backed() {
-                    f64::NAN
-                } else {
-                    qr.relative_bound()
-                };
-                let arrived = ws.result.arrived();
-                let sampled = ws.result.sample.len();
+                // Window-level CI for the feedback loop.  Sketch-native
+                // bounds (rank ε, HLL RSE, CM over-bound) do not shrink as
+                // the sampling fraction grows, so feeding them to the
+                // accuracy loop would saturate it at 1.0; None leaves the
+                // controller untouched (cost/arrival EWMAs still update).
+                let ci = if self.query.is_sketch_backed() { None } else { qr.scalar };
+                let arrived = ws.arrived();
+                let sampled = ws.sample_len();
                 report.windows.push(WindowReport {
                     start_ms: ws.start_ms,
                     end_ms: ws.end_ms,
@@ -128,8 +143,9 @@ impl<'a> BatchedEngine<'a> {
                     processing_ns,
                 });
 
-                // Budget feedback -> next interval's fraction.
-                let f = cost.observe(arrived, sampled, processing_ns, rel);
+                // Budget feedback -> next interval's fraction, driven by
+                // the *window's* confidence interval.
+                let f = cost.observe_window(arrived, sampled, processing_ns, ci);
                 pool.set_fraction(f);
             }
 

@@ -74,6 +74,11 @@ pub struct EngineConfig {
     pub track_exact: bool,
     /// Bounded queue capacity between pipelined operators.
     pub channel_capacity: usize,
+    /// Sketch-backed queries run over pane-level sketches merged through
+    /// the two-stacks store (O(panes evicted + 1) per slide) instead of a
+    /// per-window rebuild from the merged sample (O(window) per slide).
+    /// On by default; turn off to get the seed's per-window weighting.
+    pub sketch_panes: bool,
     pub seed: u64,
 }
 
@@ -86,6 +91,7 @@ impl Default for EngineConfig {
             nodes: 1,
             track_exact: true,
             channel_capacity: 16 * 1024,
+            sketch_panes: true,
             seed: 42,
         }
     }

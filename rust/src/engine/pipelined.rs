@@ -17,7 +17,8 @@ use std::time::Instant;
 
 use crate::budget::CostFunction;
 use crate::core::{Item, Result};
-use crate::query::{Query, QueryExecutor};
+use crate::error::bounds::ConfidenceInterval;
+use crate::query::{Query, QueryExecutor, SketchWindow};
 use crate::sampling::{SampleResult, SamplerKind};
 use crate::util::channel::bounded;
 use crate::window::{ExactAgg, WindowAssembler, WindowConfig};
@@ -40,6 +41,17 @@ struct IntervalMsg {
     exact: ExactAgg,
     /// ns spent closing the interval (sampling-side latency share).
     close_ns: u64,
+}
+
+/// Window-level observation flowing back from the query operator to the
+/// budget loop: the window's CI (None for sketch-backed queries, whose
+/// bounds are fraction-independent) plus the cost-model inputs the seed
+/// path used to zero out.
+struct WindowObs {
+    arrived: f64,
+    sampled: usize,
+    processing_ns: u64,
+    ci: Option<ConfidenceInterval>,
 }
 
 impl<'a> PipelinedEngine<'a> {
@@ -66,8 +78,11 @@ impl<'a> PipelinedEngine<'a> {
             cost.fraction(),
             self.config.seed,
         );
-        // Fraction updates flow back from the query operator.
-        let (frac_tx, frac_rx) = bounded::<f64>(64);
+        // Window-level observations flow back from the query operator.
+        // Sized to the interval channel: the consumer emits at most one
+        // observation per interval message, so this can never fill and
+        // silently drop a window the cost model now depends on.
+        let (frac_tx, frac_rx) = bounded::<WindowObs>(self.config.channel_capacity.max(64));
         let (tx, rx) = bounded::<IntervalMsg>(self.config.channel_capacity.max(2));
 
         let start = Instant::now();
@@ -79,31 +94,43 @@ impl<'a> PipelinedEngine<'a> {
             let executor = self.executor;
             let window_cfg = self.window;
             let track_exact = self.config.track_exact;
+            let sketch_panes = self.config.sketch_panes;
             let consumer = scope.spawn(move || -> Result<Vec<WindowReport>> {
                 let mut assembler = WindowAssembler::new(window_cfg);
+                // Pane-level sketches: one per slide interval, merged
+                // incrementally through the two-stacks store.
+                let mut sketches = if sketch_panes {
+                    SketchWindow::for_query(
+                        &query,
+                        executor.sketch_params(),
+                        assembler.panes_per_window(),
+                    )
+                } else {
+                    None
+                };
                 let mut out = Vec::new();
-                let mut cost_local: Option<f64> = None;
-                let _ = cost_local.take();
                 while let Some(msg) = rx.recv() {
                     let t0 = Instant::now();
-                    if let Some(ws) = assembler.push_interval(msg.result, msg.exact) {
-                        let qr = executor.execute(&query, &ws.result)?;
+                    if let Some(sw) = sketches.as_mut() {
+                        sw.push_pane(&msg.result);
+                    }
+                    if let Some(ws) = assembler.push_interval_view(msg.result, msg.exact) {
+                        let qr = match &sketches {
+                            Some(sw) => executor.execute_sketch(&query, sw, &ws.state)?,
+                            None => executor.execute_view(&query, &ws)?,
+                        };
                         let processing_ns = msg.close_ns + t0.elapsed().as_nanos() as u64;
                         let (exact_scalar, exact_ps) = if track_exact {
                             exact_values(&query, &ws.exact)
                         } else {
                             (None, None)
                         };
-                        let arrived = ws.result.arrived();
-                        let sampled = ws.result.sample.len();
-                        // Sketch-native bounds are fraction-independent: NaN
-                        // keeps them out of the accuracy-feedback loop (the
-                        // controller ignores non-finite observations).
-                        let rel = if query.is_sketch_backed() {
-                            f64::NAN
-                        } else {
-                            qr.relative_bound()
-                        };
+                        let arrived = ws.arrived();
+                        let sampled = ws.sample_len();
+                        // Sketch-native bounds are fraction-independent:
+                        // None keeps them out of the accuracy loop while the
+                        // cost/arrival EWMAs still observe the window.
+                        let ci = if query.is_sketch_backed() { None } else { qr.scalar };
                         out.push(WindowReport {
                             start_ms: ws.start_ms,
                             end_ms: ws.end_ms,
@@ -114,9 +141,13 @@ impl<'a> PipelinedEngine<'a> {
                             sampled,
                             processing_ns,
                         });
-                        // Report the observation upstream for the budget.
-                        let _ = frac_tx.try_send(rel);
-                        let _ = cost_local.replace(rel);
+                        // Report the window-level observation upstream.
+                        let _ = frac_tx.try_send(WindowObs {
+                            arrived,
+                            sampled,
+                            processing_ns,
+                            ci,
+                        });
                     }
                 }
                 Ok(out)
@@ -152,13 +183,19 @@ impl<'a> PipelinedEngine<'a> {
                     .map_err(|_| crate::core::Error::Stream("query operator died".into()))?;
                 next_interval_end += self.window.slide_ms;
 
-                // Apply any pending budget feedback (non-blocking).
-                let mut latest_rel = None;
-                while let Ok(rel) = frac_rx.try_recv() {
-                    latest_rel = Some(rel);
+                // Apply any pending budget feedback (non-blocking): every
+                // completed window's observation updates the cost model in
+                // order; the resulting fraction is applied once.
+                let mut latest = None;
+                while let Ok(obs) = frac_rx.try_recv() {
+                    latest = Some(cost.observe_window(
+                        obs.arrived,
+                        obs.sampled,
+                        obs.processing_ns,
+                        obs.ci,
+                    ));
                 }
-                if let Some(rel) = latest_rel {
-                    let f = cost.observe(0.0, 0, 0, rel);
+                if let Some(f) = latest {
                     pool.set_fraction(f);
                 }
 

@@ -65,8 +65,17 @@ impl ConfidenceInterval {
     /// `Q(q)`, `lo`/`hi` are the sketch's `Q(q−ε)`/`Q(q+ε)`.  The band is a
     /// deterministic guarantee of the sketch (not a CLT statement); the
     /// half-width is the wider side so the interval always covers the band.
+    ///
+    /// An empty-window sketch answers `NaN`: the interval then pins its
+    /// bound to zero (a NaN-valued, zero-width interval that `contains`
+    /// nothing and has NaN `relative`) instead of letting `NaN − NaN`
+    /// arithmetic decide by IEEE accident.
     pub fn for_quantile(value: f64, lo: f64, hi: f64, level: ConfidenceLevel) -> Self {
-        let bound = (hi - value).max(value - lo).max(0.0);
+        let bound = if value.is_finite() && lo.is_finite() && hi.is_finite() {
+            (hi - value).max(value - lo).max(0.0)
+        } else {
+            0.0
+        };
         Self { value, bound, level }
     }
 
@@ -95,8 +104,20 @@ impl ConfidenceInterval {
         Self { value: estimate, bound: over_bound.max(0.0), level }
     }
 
-    /// Relative error bound (`bound / |value|`), `inf` when value is 0.
+    /// Relative error bound (`bound / |value|`).
+    ///
+    /// Edge cases, pinned by tests (the feedback loop ignores any
+    /// non-finite observation, so every degenerate case must land on a
+    /// non-finite value rather than a spurious 0):
+    /// * zero-width interval at a non-zero value → `0.0` (a legitimately
+    ///   exact result, e.g. COUNT or a fully-sampled window);
+    /// * `0 ± 0` → `0.0`; `0 ± b` (b > 0) → `inf`;
+    /// * NaN value or NaN/inf bound (empty window, empty stratum sketch)
+    ///   → `NaN`.
     pub fn relative(&self) -> f64 {
+        if !self.value.is_finite() || !self.bound.is_finite() {
+            return f64::NAN;
+        }
         if self.value == 0.0 {
             if self.bound == 0.0 {
                 0.0
@@ -116,6 +137,11 @@ impl ConfidenceInterval {
         self.value + self.bound
     }
 
+    /// True when `truth` falls inside `[lo, hi]` (endpoints included, so a
+    /// zero-width interval contains exactly its value).  Any NaN — a NaN
+    /// truth, or a NaN value/bound from an empty window — can never attest
+    /// coverage: the comparisons are IEEE-false, and the calibration suite
+    /// pins that behavior.
     pub fn contains(&self, truth: f64) -> bool {
         truth >= self.lo() && truth <= self.hi()
     }
@@ -177,6 +203,77 @@ mod tests {
         assert_eq!(ci.relative(), 0.0);
         let ci2 = ConfidenceInterval { value: 0.0, bound: 1.0, level: ConfidenceLevel::P95 };
         assert!(ci2.relative().is_infinite());
+    }
+
+    #[test]
+    fn zero_width_interval_contains_exactly_its_value() {
+        let ci = ConfidenceInterval { value: 42.0, bound: 0.0, level: ConfidenceLevel::P95 };
+        assert!(ci.contains(42.0));
+        assert!(!ci.contains(42.0 + 1e-12));
+        assert!(!ci.contains(41.999999999999));
+        assert_eq!(ci.relative(), 0.0);
+    }
+
+    #[test]
+    fn nan_value_interval_is_inert() {
+        // Empty-window quantile: the sketch answers NaN.
+        let ci = ConfidenceInterval::for_quantile(
+            f64::NAN,
+            f64::NAN,
+            f64::NAN,
+            ConfidenceLevel::P95,
+        );
+        assert_eq!(ci.bound, 0.0, "NaN band must pin to zero width");
+        assert!(!ci.contains(0.0));
+        assert!(!ci.contains(f64::NAN));
+        assert!(ci.relative().is_nan(), "feedback must see non-finite, not 0");
+    }
+
+    #[test]
+    fn nan_or_inf_bound_never_attests_coverage() {
+        let ci = ConfidenceInterval { value: 10.0, bound: f64::NAN, level: ConfidenceLevel::P95 };
+        assert!(!ci.contains(10.0));
+        assert!(ci.relative().is_nan());
+        let ci = ConfidenceInterval {
+            value: 10.0,
+            bound: f64::INFINITY,
+            level: ConfidenceLevel::P95,
+        };
+        // an infinite bound technically covers everything finite…
+        assert!(ci.contains(1e300));
+        // …but reads as a non-finite (ignored) observation, not rel = 0
+        assert!(ci.relative().is_nan());
+    }
+
+    #[test]
+    fn empty_stratum_estimates_stay_finite() {
+        // An interval where a stratum arrived but nothing was selected
+        // (c > 0, y = 0, n_cap = 0) and another that never arrived: the
+        // estimate and both CIs must come out finite, not NaN.
+        let mut st = StrataState::default();
+        st.c[0] = 100.0; // arrived, never sampled
+        st.c[1] = 50.0; // arrived, fully sampled
+        st.n_cap[1] = 50.0;
+        let mut p = StrataPartials::default();
+        for i in 0..50 {
+            p.push(1, i as f64);
+        }
+        let e = estimate(&p, &st);
+        let sum_ci = ConfidenceInterval::for_sum(&e, ConfidenceLevel::P95);
+        let mean_ci = ConfidenceInterval::for_mean(&e, ConfidenceLevel::P95);
+        assert!(sum_ci.value.is_finite() && sum_ci.bound.is_finite());
+        assert!(mean_ci.value.is_finite() && mean_ci.bound.is_finite());
+        assert!(sum_ci.relative().is_finite());
+    }
+
+    #[test]
+    fn empty_window_estimate_yields_workable_interval() {
+        let e = estimate(&StrataPartials::default(), &StrataState::default());
+        let ci = ConfidenceInterval::for_sum(&e, ConfidenceLevel::P95);
+        assert_eq!(ci.value, 0.0);
+        assert_eq!(ci.bound, 0.0);
+        assert!(ci.contains(0.0));
+        assert_eq!(ci.relative(), 0.0);
     }
 
     #[test]

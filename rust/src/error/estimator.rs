@@ -122,8 +122,32 @@ impl Estimate {
     /// mergeable summaries estimate full-stream frequencies/distributions.
     #[inline]
     pub fn weight_for(&self, stratum: u16) -> f64 {
-        self.weights.get(stratum as usize).copied().unwrap_or(1.0)
+        weight_from(&self.weights, stratum)
     }
+}
+
+/// Weight of one stratum out of a per-stratum weight array, with the same
+/// out-of-range policy as [`Estimate::weight_for`]: `1.0` for ids past the
+/// array so callers never scale by garbage.  The single source of truth
+/// for that neutral-weight policy.
+#[inline]
+pub fn weight_from(weights: &[f64; K], stratum: u16) -> f64 {
+    weights.get(stratum as usize).copied().unwrap_or(1.0)
+}
+
+/// Per-stratum Horvitz–Thompson weights W_i (Eq. 1), computable from the
+/// counters alone: `W_i = C_i / N_i` when `C_i > N_i`, else 1 (and 1 for
+/// empty strata, so callers never scale by garbage).  Shared by
+/// [`estimate`] and the pane-level sketch builders, which weight each
+/// interval's items by that interval's own counters.
+pub fn weights_for(state: &StrataState) -> [f64; K] {
+    let mut weights = [1.0f64; K];
+    for i in 0..K {
+        if state.c[i] > state.n_cap[i] {
+            weights[i] = state.c[i] / state.n_cap[i].max(1.0);
+        }
+    }
+    weights
 }
 
 /// Finish an estimate from combined partials and strata state.
@@ -131,7 +155,7 @@ impl Estimate {
 /// This is the exact arithmetic of the L2 graph (`model.py`), kept in sync by
 /// the `runtime` integration tests.
 pub fn estimate(partials: &StrataPartials, state: &StrataState) -> Estimate {
-    let mut weights = [1.0f64; K];
+    let weights = weights_for(state);
     let mut strata_sums = [0.0f64; K];
     let mut total_sum = 0.0;
     let mut var_sum = 0.0;
@@ -140,15 +164,11 @@ pub fn estimate(partials: &StrataPartials, state: &StrataState) -> Estimate {
 
     for i in 0..K {
         let c = state.c[i];
-        let n_cap = state.n_cap[i];
         let y = partials.y[i];
         let s1 = partials.sum[i];
         let s2 = partials.sumsq[i];
 
-        // Eq. 1 — weight.
-        weights[i] = if c > n_cap { c / n_cap.max(1.0) } else { 1.0 };
-
-        // Eq. 2 — per-stratum estimated sum.
+        // Eq. 2 — per-stratum estimated sum (weights are Eq. 1 above).
         strata_sums[i] = s1 * weights[i];
         total_sum += strata_sums[i];
 

@@ -9,6 +9,19 @@
 //! factor.  Variance of a mean estimate shrinks ~1/Y, so to shrink the bound
 //! by ratio r the sample must grow by ~r²; the controller applies that model
 //! with damping to avoid oscillation under bursty arrivals.
+//!
+//! The engines feed the controller through [`FeedbackController::observe_ci`]
+//! with the completed **window's** confidence interval — the user-facing
+//! `output ± bound` over the full window span, as assembled by the pane
+//! store — not any per-interval proxy.  (An interval-level bound
+//! systematically over-states the window-level error by ~√(window/slide),
+//! which would drive the fraction high; observing the window keeps the loop
+//! honest for long-window/small-slide configurations.)
+
+use crate::error::bounds::ConfidenceInterval;
+
+/// Smoothing for the observed window-CI-width EWMA.
+const CI_WIDTH_EWMA: f64 = 0.4;
 
 /// Adaptive sample-size controller.
 #[derive(Debug, Clone)]
@@ -24,6 +37,10 @@ pub struct FeedbackController {
     max_fraction: f64,
     /// Number of adjustments made (for introspection / tests).
     adjustments: u64,
+    /// EWMA of observed window CI half-widths (introspection/metrics).
+    ci_width_ewma: f64,
+    /// Windows observed through [`Self::observe_ci`].
+    windows_observed: u64,
 }
 
 impl FeedbackController {
@@ -37,6 +54,8 @@ impl FeedbackController {
             min_fraction: 0.01,
             max_fraction: 1.0,
             adjustments: 0,
+            ci_width_ewma: 0.0,
+            windows_observed: 0,
         }
     }
 
@@ -65,6 +84,33 @@ impl FeedbackController {
 
     pub fn adjustments(&self) -> u64 {
         self.adjustments
+    }
+
+    /// EWMA of the window CI half-widths observed so far (0 before the
+    /// first window).
+    pub fn window_ci_width(&self) -> f64 {
+        self.ci_width_ewma
+    }
+
+    /// Windows whose CI has been observed.
+    pub fn windows_observed(&self) -> u64 {
+        self.windows_observed
+    }
+
+    /// Feed one completed window's confidence interval: record its width
+    /// and adjust the fraction from its relative half-width.  Non-finite
+    /// intervals (zero-valued windows) leave the fraction unchanged, like
+    /// [`Self::observe`].
+    pub fn observe_ci(&mut self, ci: &ConfidenceInterval) -> f64 {
+        if ci.bound.is_finite() {
+            self.windows_observed += 1;
+            self.ci_width_ewma = if self.windows_observed == 1 {
+                ci.bound
+            } else {
+                CI_WIDTH_EWMA * ci.bound + (1.0 - CI_WIDTH_EWMA) * self.ci_width_ewma
+            };
+        }
+        self.observe(ci.relative())
     }
 
     /// Feed the relative error bound observed on the last window; returns the
@@ -152,6 +198,28 @@ mod tests {
             f = c.observe(err);
         }
         assert!((f - 0.25).abs() < 0.05, "converged to {f}");
+    }
+
+    #[test]
+    fn observe_ci_tracks_window_width_and_adjusts() {
+        use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
+        let mut c = FeedbackController::new(0.01, 0.2);
+        let ci = ConfidenceInterval { value: 100.0, bound: 5.0, level: ConfidenceLevel::P95 };
+        let before = c.fraction();
+        let after = c.observe_ci(&ci); // 5% >> 1% target
+        assert!(after > before);
+        assert_eq!(c.window_ci_width(), 5.0);
+        assert_eq!(c.windows_observed(), 1);
+        // second window narrows: EWMA moves toward the new width
+        let ci2 = ConfidenceInterval { value: 100.0, bound: 1.0, level: ConfidenceLevel::P95 };
+        c.observe_ci(&ci2);
+        assert!(c.window_ci_width() < 5.0 && c.window_ci_width() > 1.0);
+        // zero-valued window: relative() is inf -> fraction unchanged, but
+        // the width is still recorded
+        let f = c.fraction();
+        let ci3 = ConfidenceInterval { value: 0.0, bound: 2.0, level: ConfidenceLevel::P95 };
+        assert_eq!(c.observe_ci(&ci3), f);
+        assert_eq!(c.windows_observed(), 3);
     }
 
     #[test]

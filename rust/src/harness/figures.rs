@@ -390,6 +390,66 @@ pub fn sketch_workloads(ctx: &Ctx) -> Table {
     t
 }
 
+/// Window scaling — the long-window/small-slide family the pane-store
+/// assembler opens (not a paper figure; the paper stops at w=20s, δ=10s).
+/// Fixed 500 ms slide, window/slide ratios {4, 16, 64}: per-slide assembler
+/// cost is O(panes evicted + 1), so throughput and window latency should
+/// stay flat as the ratio grows (the seed's merge-all path degraded
+/// linearly).  Table (a): linear SUM query on both engines.  Table (b):
+/// sliding p95 quantile through the pane-level sketch store — sliding
+/// sketch windows at ratios the per-window rebuild could not sustain.
+pub fn window_scaling(ctx: &Ctx) -> (Table, Table) {
+    const SLIDE_MS: u64 = 500;
+    const RATIOS: [u64; 3] = [4, 16, 64];
+
+    let items = micro_trace(ctx, 1000.0, 59);
+    let mut ta = Table::new(
+        "Window scaling (a): throughput | mean window latency — SUM, slide 500ms, ratio w/δ",
+        &["system", "ratio 4 (w=2s)", "ratio 16 (w=8s)", "ratio 64 (w=32s)"],
+    );
+    for sys in [System::SparkApprox, System::FlinkApprox] {
+        let mut row = vec![sys.label().to_string()];
+        for &ratio in &RATIOS {
+            let wc = WindowConfig::new(SLIDE_MS * ratio, SLIDE_MS);
+            let m = run_system(ctx, sys, &items, wc, Query::Sum, 0.6, SLIDE_MS, true);
+            row.push(format!(
+                "{} | {:.0}us",
+                fmt_throughput(m.summary.throughput),
+                m.summary.window_latency_ns / 1e3,
+            ));
+        }
+        ta.row(row);
+    }
+
+    let mut tb = Table::new(
+        "Window scaling (b): sliding p95 (pane sketches) — throughput | window latency",
+        &["system", "ratio 4 (w=2s)", "ratio 16 (w=8s)", "ratio 64 (w=32s)"],
+    );
+    for sys in [System::SparkApprox, System::FlinkApprox] {
+        let mut row = vec![sys.label().to_string()];
+        for &ratio in &RATIOS {
+            let wc = WindowConfig::new(SLIDE_MS * ratio, SLIDE_MS);
+            let m = run_system(
+                ctx,
+                sys,
+                &items,
+                wc,
+                Query::Quantile(0.95),
+                0.6,
+                SLIDE_MS,
+                false,
+            );
+            row.push(format!(
+                "{} | {:.0}us",
+                fmt_throughput(m.summary.throughput),
+                m.summary.window_latency_ns / 1e3,
+            ));
+        }
+        tb.row(row);
+    }
+    (ta, tb)
+}
+
 /// Fig. 11 — total processing latency of both case-study datasets @60%.
 pub fn fig11(ctx: &Ctx) -> Table {
     let caida = CaidaConfig::default().generate(ctx.scale.duration_ms);

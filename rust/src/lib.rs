@@ -74,5 +74,5 @@ pub mod prelude {
     pub use crate::sampling::SamplerKind;
     pub use crate::sketch::{HeavyHitters, HyperLogLog, QuantileSketch, SketchParams};
     pub use crate::stream::{StreamConfig, SubStreamSpec};
-    pub use crate::window::WindowConfig;
+    pub use crate::window::{Mergeable, PaneStore, WindowConfig, WindowView};
 }

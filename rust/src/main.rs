@@ -8,10 +8,15 @@
 //!                    [--fraction 0.6] [--workers N] [--duration-ms 30000]
 //!                    [--query sum|mean|count|per-stratum-sum|per-stratum-mean|
 //!                             quantile:<q>|distinct|topk:<k>]
+//!                    [--window <size_ms>:<slide_ms> | <size_ms>]
 //!                    [--dataset micro|caida|taxi] [--backend xla|native]
 //! streamapprox bench --figure fig5a|fig5b|fig5c|fig6a|fig6bc|fig7a|fig7b|
-//!                             fig7c|fig8|fig9|fig10|fig11|sketch|all [--full]
+//!                             fig7c|fig8|fig9|fig10|fig11|sketch|window|all
+//!                    [--full]
 //! ```
+//!
+//! `--window 60000:1000` runs a 60 s window sliding every second — the
+//! long-window/small-slide family the pane-store assembler makes viable.
 
 use std::collections::HashMap;
 
@@ -111,12 +116,41 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
     let fraction: f64 = get("fraction", "0.6").parse()?;
     let workers: usize = get("workers", "1").parse()?;
     let duration: u64 = get("duration-ms", "30000").parse()?;
+    // `--window <size_ms>:<slide_ms>` (or just `<size_ms>` for tumbling);
+    // default is the paper's w=10s δ=5s.
+    let window = match flags.get("window") {
+        None => WindowConfig::paper_default(),
+        Some(spec) => {
+            let (size, slide) = match spec.split_once(':') {
+                Some((size, slide)) => (
+                    size.parse()
+                        .map_err(|e| format!("--window: bad size {size:?} ({e})"))?,
+                    slide
+                        .parse()
+                        .map_err(|e| format!("--window: bad slide {slide:?} ({e})"))?,
+                ),
+                None => {
+                    let size: u64 = spec
+                        .parse()
+                        .map_err(|e| format!("--window: bad size {spec:?} ({e})"))?;
+                    (size, size)
+                }
+            };
+            if size == 0 || slide == 0 || size % slide != 0 {
+                return Err(format!(
+                    "--window: size must be a positive multiple of slide (got {size}:{slide})"
+                )
+                .into());
+            }
+            WindowConfig::new(size, slide)
+        }
+    };
     let builder = PipelineBuilder::new()
         .engine(engine)
         .sampler(sampler)
         .budget(QueryBudget::SamplingFraction(fraction))
         .query(query)
-        .window(WindowConfig::paper_default())
+        .window(window)
         .workers(workers);
     let pipeline = match get("backend", "xla").as_str() {
         "native" => builder.build_native(),
@@ -208,6 +242,11 @@ fn cmd_bench(flags: &HashMap<String, String>) {
     }
     if run("sketch") {
         figures::sketch_workloads(&ctx).print();
+    }
+    if run("window") {
+        let (a, b) = figures::window_scaling(&ctx);
+        a.print();
+        b.print();
     }
 }
 

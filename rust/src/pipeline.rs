@@ -31,6 +31,7 @@ pub struct PipelineBuilder {
     workers: usize,
     nodes: usize,
     track_exact: bool,
+    sketch_panes: bool,
     seed: u64,
     sketch: SketchParams,
 }
@@ -47,6 +48,7 @@ impl Default for PipelineBuilder {
             workers: 1,
             nodes: 1,
             track_exact: true,
+            sketch_panes: true,
             seed: 42,
             sketch: SketchParams::default(),
         }
@@ -103,6 +105,14 @@ impl PipelineBuilder {
         self
     }
 
+    /// Sketch-backed queries over pane-level sketches (two-stacks pane
+    /// store; the default) vs the seed's per-window sketch rebuild.  See
+    /// [`crate::query::SketchWindow`] for the weighting difference.
+    pub fn sketch_pane_windows(mut self, yes: bool) -> Self {
+        self.sketch_panes = yes;
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -143,6 +153,7 @@ impl PipelineBuilder {
             nodes: self.nodes,
             track_exact: self.track_exact,
             channel_capacity: 16 * 1024,
+            sketch_panes: self.sketch_panes,
             seed: self.seed,
         };
         Pipeline {
@@ -288,6 +299,48 @@ mod tests {
             assert!(!r.windows.is_empty(), "{query:?} produced no windows");
             for w in &r.windows {
                 assert!(w.result.value().is_finite(), "{query:?} non-finite value");
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_pane_and_per_window_paths_agree() {
+        // Same stream, same seeds: the pane-incremental path (default) and
+        // the seed's per-window rebuild must agree — exactly for Distinct
+        // (HLL register max is partition-invariant over the same item
+        // multiset), and within weighting-granularity slack for the
+        // weighted sketches (panes weight by interval counters, the
+        // per-window path by span counters).
+        let stream = StreamConfig::gaussian_micro(200.0, 12);
+        let mk = |query: Query, panes: bool| {
+            PipelineBuilder::new()
+                .query(query)
+                .window(WindowConfig::new(4_000, 1_000))
+                .sketch_pane_windows(panes)
+                .build_native()
+        };
+        for query in [Query::Quantile(0.95), Query::Distinct, Query::TopK(2)] {
+            let rp = mk(query.clone(), true).run_stream(&stream, 10_000).unwrap();
+            let rw = mk(query.clone(), false).run_stream(&stream, 10_000).unwrap();
+            assert_eq!(rp.windows.len(), rw.windows.len());
+            for (a, b) in rp.windows.iter().zip(rw.windows.iter()) {
+                assert_eq!(a.end_ms, b.end_ms);
+                let (va, vb) = (a.result.value(), b.result.value());
+                match &query {
+                    Query::Distinct => assert_eq!(va, vb, "distinct diverged"),
+                    Query::TopK(_) => {
+                        let ka: Vec<u64> =
+                            a.result.top_k.as_ref().unwrap().iter().map(|&(k, _)| k).collect();
+                        let kb: Vec<u64> =
+                            b.result.top_k.as_ref().unwrap().iter().map(|&(k, _)| k).collect();
+                        assert_eq!(ka, kb, "top-k ranking diverged");
+                        assert!((va - vb).abs() <= 0.2 * vb.abs().max(1.0), "{va} vs {vb}");
+                    }
+                    _ => {
+                        assert!(va.is_finite() && vb.is_finite());
+                        assert!((va - vb).abs() <= 0.25 * vb.abs().max(1.0), "{va} vs {vb}");
+                    }
+                }
             }
         }
     }

@@ -33,10 +33,15 @@
 
 use crate::core::{Error, Result, MAX_STRATA};
 use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
-use crate::error::estimator::{estimate, StrataPartials, K};
+use crate::error::estimator::{estimate, weight_from, weights_for, StrataPartials, StrataState, K};
 use crate::runtime::{ComputeHandle, WindowInput, WindowOutput};
 use crate::sampling::SampleResult;
 use crate::sketch::{HeavyHitters, HyperLogLog, QuantileSketch, SketchParams};
+use crate::window::{PaneStore, WindowView};
+
+/// Shared Count-Min row-hash seed: every per-shard and per-pane
+/// heavy-hitters sketch must use the same seed to stay merge-compatible.
+const HH_SEED: u64 = 0x70_4B;
 
 /// A streaming query over the item values.
 #[derive(Debug, Clone, PartialEq)]
@@ -176,21 +181,81 @@ impl QueryExecutor {
         self.sketch
     }
 
-    /// Run `query` over a window's merged sample.
+    /// Run `query` over a window's merged sample (single-slice adapter for
+    /// [`Self::execute_view`]).
     pub fn execute(&self, query: &Query, window: &SampleResult) -> Result<QueryResult> {
+        self.execute_view(query, &WindowView::from_result(window))
+    }
+
+    /// Run `query` over a completed window without materializing the
+    /// sample: the view's pane-ordered slices stream straight into the
+    /// compute input and sketch builders, so the per-slide cost of a query
+    /// does not include a span re-merge or clone.
+    pub fn execute_view(&self, query: &Query, view: &WindowView<'_>) -> Result<QueryResult> {
         // Distinct reads only the raw sample values — none of the aggregate
         // output — so skip the compute-service round trip (f32 conversion +
         // cross-thread rendezvous / XLA execution) and finish the estimate
         // locally with the same arithmetic the native executor uses.
         if matches!(query, Query::Distinct) {
-            let partials = StrataPartials::from_sample(&window.sample);
-            let est = estimate(&partials, &window.state);
+            let partials = StrataPartials::from_sample(view.iter());
+            let est = estimate(&partials, &view.state);
             let output = WindowOutput { partials, estimate: est, executions: 0 };
-            return self.interpret(query, window, output);
+            return self.interpret_view(query, view, output);
         }
-        let input = WindowInput::from_sample(&window.sample, &window.state);
+        let input = WindowInput::from_parts(&view.parts(), &view.state);
         let output = self.compute.aggregate(input)?;
-        self.interpret(query, window, output)
+        self.interpret_view(query, view, output)
+    }
+
+    /// Run a sketch-backed `query` over pane-level sketches instead of the
+    /// window sample: the [`SketchWindow`]'s two-stacks store hands back
+    /// the merged span sketch in O(1) merges, so long-window/small-slide
+    /// sketch queries cost O(pane) per slide, not O(window).  `state` is
+    /// the window's merged counters (for the output's weights/totals).
+    pub fn execute_sketch(
+        &self,
+        query: &Query,
+        sketches: &SketchWindow,
+        state: &StrataState,
+    ) -> Result<QueryResult> {
+        let est = estimate(&StrataPartials::default(), state);
+        let output =
+            WindowOutput { partials: StrataPartials::default(), estimate: est, executions: 0 };
+        match (query, &sketches.panes) {
+            (Query::Quantile(q), SketchPanes::Quantile(store)) => {
+                if !(0.0..=1.0).contains(q) {
+                    return Err(Error::Query(format!("quantile {q} outside [0, 1]")));
+                }
+                let sk = store
+                    .aggregate()
+                    .unwrap_or_else(|| QuantileSketch::new(sketches.params.quantile_clusters));
+                Ok(self.quantile_result(*q, &sk, output))
+            }
+            (Query::Distinct, SketchPanes::Distinct(store)) => {
+                let hll = store
+                    .aggregate()
+                    .unwrap_or_else(|| HyperLogLog::new(sketches.params.hll_precision));
+                Ok(self.distinct_result(&hll, output))
+            }
+            (Query::TopK(k), SketchPanes::TopK(store)) => {
+                if *k == 0 {
+                    return Err(Error::Query("top-k with k = 0".into()));
+                }
+                let hh = store.aggregate().unwrap_or_else(|| {
+                    HeavyHitters::new(
+                        sketches.params.topk_capacity,
+                        sketches.params.cm_width,
+                        sketches.params.cm_depth,
+                        HH_SEED,
+                    )
+                });
+                Ok(self.topk_result(*k, &hh, output))
+            }
+            _ => Err(Error::Query(format!(
+                "sketch panes do not match the {} query",
+                query.label()
+            ))),
+        }
     }
 
     /// Interpret a compute output under a query (separated for tests).
@@ -198,6 +263,16 @@ impl QueryExecutor {
         &self,
         query: &Query,
         window: &SampleResult,
+        output: WindowOutput,
+    ) -> Result<QueryResult> {
+        self.interpret_view(query, &WindowView::from_result(window), output)
+    }
+
+    /// Interpret a compute output under a query over a window view.
+    pub fn interpret_view(
+        &self,
+        query: &Query,
+        view: &WindowView<'_>,
         output: WindowOutput,
     ) -> Result<QueryResult> {
         let est = &output.estimate;
@@ -229,7 +304,7 @@ impl QueryExecutor {
             Query::PerStratumMean => {
                 let mut means = vec![0.0; MAX_STRATA];
                 for s in 0..K {
-                    let c = window.state.c[s];
+                    let c = view.state.c[s];
                     if c > 0.0 {
                         means[s] = est.strata_sums[s] / c;
                     }
@@ -249,7 +324,7 @@ impl QueryExecutor {
                 // stratum i represents W_i originals.
                 let mut hist = vec![0.0; *buckets];
                 let width = (hi - lo) / *buckets as f64;
-                for &(s, v) in &window.sample {
+                for &(s, v) in view.iter() {
                     let w = est.weights[s as usize];
                     if v >= *lo && v < *hi {
                         let b = ((v - lo) / width) as usize;
@@ -267,61 +342,80 @@ impl QueryExecutor {
                 if !(0.0..=1.0).contains(q) {
                     return Err(Error::Query(format!("quantile {q} outside [0, 1]")));
                 }
-                let sketch = self.build_quantile(window, &output);
-                let value = sketch.quantile(*q);
-                let eps = sketch.eps();
-                let lo = sketch.quantile((q - eps).max(0.0));
-                let hi = sketch.quantile((q + eps).min(1.0));
-                QueryResult {
-                    scalar: Some(ConfidenceInterval::for_quantile(value, lo, hi, self.level)),
-                    per_stratum: None,
-                    top_k: None,
-                    output,
-                }
+                let sketch = self.build_quantile(view, &output);
+                self.quantile_result(*q, &sketch, output)
             }
             Query::Distinct => {
-                let hll = self.build_hll(window);
-                // The interval bounds HLL sketch error only; under sampling
-                // the value is a lower bound on the stream's distinct count
-                // (unselected values are invisible — see
-                // ConfidenceInterval::for_distinct and sketch::hll docs).
-                let ci = ConfidenceInterval::for_distinct(
-                    hll.estimate(),
-                    hll.relative_std_error(),
-                    self.level,
-                );
-                QueryResult { scalar: Some(ci), per_stratum: None, top_k: None, output }
+                let hll = self.build_hll(view);
+                self.distinct_result(&hll, output)
             }
             Query::TopK(k) => {
                 if *k == 0 {
                     return Err(Error::Query("top-k with k = 0".into()));
                 }
-                let hh = self.build_heavy_hitters(window, &output);
-                let top = hh.top_k(*k);
-                // Scalar: summed top-k mass; each addend over-counts by at
-                // most the Count-Min bound, so the sum carries k of them.
-                let mass: f64 = top.iter().map(|&(_, c)| c).sum();
-                let ci = ConfidenceInterval::for_count_overestimate(
-                    mass,
-                    *k as f64 * hh.over_estimate_bound(),
-                    self.level,
-                );
-                // Per-stratum view: estimated count per stratum id.
-                let mut per_stratum = vec![0.0; MAX_STRATA];
-                for &(key, count) in &top {
-                    if (key as usize) < MAX_STRATA {
-                        per_stratum[key as usize] = count;
-                    }
-                }
-                QueryResult {
-                    scalar: Some(ci),
-                    per_stratum: Some(per_stratum),
-                    top_k: Some(top),
-                    output,
-                }
+                let hh = self.build_heavy_hitters(view, &output);
+                self.topk_result(*k, &hh, output)
             }
         };
         Ok(result)
+    }
+
+    /// Quantile result with its rank-ε value band (shared by the
+    /// window-sample and pane-sketch paths).
+    fn quantile_result(
+        &self,
+        q: f64,
+        sketch: &QuantileSketch,
+        output: WindowOutput,
+    ) -> QueryResult {
+        let value = sketch.quantile(q);
+        let eps = sketch.eps();
+        let lo = sketch.quantile((q - eps).max(0.0));
+        let hi = sketch.quantile((q + eps).min(1.0));
+        QueryResult {
+            scalar: Some(ConfidenceInterval::for_quantile(value, lo, hi, self.level)),
+            per_stratum: None,
+            top_k: None,
+            output,
+        }
+    }
+
+    /// Distinct-count result.  The interval bounds HLL sketch error only;
+    /// under sampling the value is a lower bound on the stream's distinct
+    /// count (unselected values are invisible — see
+    /// `ConfidenceInterval::for_distinct` and `sketch::hll` docs).
+    fn distinct_result(&self, hll: &HyperLogLog, output: WindowOutput) -> QueryResult {
+        let ci = ConfidenceInterval::for_distinct(
+            hll.estimate(),
+            hll.relative_std_error(),
+            self.level,
+        );
+        QueryResult { scalar: Some(ci), per_stratum: None, top_k: None, output }
+    }
+
+    /// Top-k result: summed top-k mass as the scalar (each addend
+    /// over-counts by at most the Count-Min bound, so the sum carries k of
+    /// them) plus the per-stratum count view.
+    fn topk_result(&self, k: usize, hh: &HeavyHitters, output: WindowOutput) -> QueryResult {
+        let top = hh.top_k(k);
+        let mass: f64 = top.iter().map(|&(_, c)| c).sum();
+        let ci = ConfidenceInterval::for_count_overestimate(
+            mass,
+            k as f64 * hh.over_estimate_bound(),
+            self.level,
+        );
+        let mut per_stratum = vec![0.0; MAX_STRATA];
+        for &(key, count) in &top {
+            if (key as usize) < MAX_STRATA {
+                per_stratum[key as usize] = count;
+            }
+        }
+        QueryResult {
+            scalar: Some(ci),
+            per_stratum: Some(per_stratum),
+            top_k: Some(top),
+            output,
+        }
     }
 
     /// Sharded sketch construction skeleton: the window sample is split
@@ -330,14 +424,14 @@ impl QueryExecutor {
     /// per-worker OASRS results use, exercised on every window.
     fn build_sharded<S>(
         &self,
-        sample: &[(u16, f64)],
+        view: &WindowView<'_>,
         mk: impl Fn() -> S,
         mut feed: impl FnMut(&mut S, (u16, f64)),
         merge: impl Fn(&mut S, &S),
     ) -> S {
         let shards = self.sketch.shards.max(1);
         let mut parts: Vec<S> = (0..shards).map(|_| mk()).collect();
-        for (i, &item) in sample.iter().enumerate() {
+        for (i, &item) in view.iter().enumerate() {
             feed(&mut parts[i % shards], item);
         }
         let mut merged = parts.remove(0);
@@ -347,36 +441,36 @@ impl QueryExecutor {
         merged
     }
 
-    fn build_quantile(&self, window: &SampleResult, output: &WindowOutput) -> QuantileSketch {
+    fn build_quantile(&self, view: &WindowView<'_>, output: &WindowOutput) -> QuantileSketch {
         let est = &output.estimate;
         self.build_sharded(
-            &window.sample,
+            view,
             || QuantileSketch::new(self.sketch.quantile_clusters),
             |sk, (s, v)| sk.offer(v, est.weight_for(s)),
             |a, b| a.merge(b),
         )
     }
 
-    fn build_hll(&self, window: &SampleResult) -> HyperLogLog {
+    fn build_hll(&self, view: &WindowView<'_>) -> HyperLogLog {
         self.build_sharded(
-            &window.sample,
+            view,
             || HyperLogLog::new(self.sketch.hll_precision),
             |sk, (_, v)| sk.offer(v),
             |a, b| a.merge(b),
         )
     }
 
-    fn build_heavy_hitters(&self, window: &SampleResult, output: &WindowOutput) -> HeavyHitters {
+    fn build_heavy_hitters(&self, view: &WindowView<'_>, output: &WindowOutput) -> HeavyHitters {
         let est = &output.estimate;
         self.build_sharded(
-            &window.sample,
+            view,
             // Shared seed so per-shard Count-Mins are merge-compatible.
             || {
                 HeavyHitters::new(
                     self.sketch.topk_capacity,
                     self.sketch.cm_width,
                     self.sketch.cm_depth,
-                    0x70_4B,
+                    HH_SEED,
                 )
             },
             // Key = sub-stream id; mass = HT weight, so the count estimates
@@ -384,6 +478,111 @@ impl QueryExecutor {
             |sk, (s, _)| sk.offer(s as u64, est.weight_for(s)),
             |a, b| a.merge(b),
         )
+    }
+}
+
+/// Pane-level sketch windowing: one mergeable sketch per sampling interval,
+/// held in a two-stacks [`PaneStore`] so the merged span sketch costs
+/// O(panes evicted + 1) merges per slide — constant-size aggregates, flat
+/// across window/slide ratios.  This is what makes sliding windows over
+/// sketch queries sustainable in the long-window/small-slide regime
+/// (network monitoring, taxi case study) where rebuilding a sketch from
+/// the whole window sample per slide would cost O(window).
+///
+/// Each pane's items are weighted by that interval's own Horvitz–Thompson
+/// weights (Eq. 1 from the interval's counters): an interval's selected
+/// items represent that interval's arrivals, so the merged sketch estimates
+/// the full span.  (The per-window path, `QueryExecutor::execute_view`,
+/// weights by the merged span counters instead; both are consistent
+/// estimators and the engines choose via `EngineConfig::sketch_panes`.)
+#[derive(Debug, Clone)]
+pub struct SketchWindow {
+    params: SketchParams,
+    panes: SketchPanes,
+}
+
+#[derive(Debug, Clone)]
+enum SketchPanes {
+    Quantile(PaneStore<QuantileSketch>),
+    Distinct(PaneStore<HyperLogLog>),
+    TopK(PaneStore<HeavyHitters>),
+}
+
+impl SketchWindow {
+    /// Pane store for a sketch-backed query spanning `panes_per_window`
+    /// sampling intervals; `None` for linear queries.
+    pub fn for_query(query: &Query, params: SketchParams, panes_per_window: usize) -> Option<Self> {
+        let cap = panes_per_window.max(1);
+        let panes = match query {
+            Query::Quantile(_) => SketchPanes::Quantile(PaneStore::new(cap)),
+            Query::Distinct => SketchPanes::Distinct(PaneStore::new(cap)),
+            Query::TopK(_) => SketchPanes::TopK(PaneStore::new(cap)),
+            _ => return None,
+        };
+        Some(Self { params, panes })
+    }
+
+    /// Build this interval's pane sketch from its sample result and push it
+    /// into the ring (evicting the expired pane).  O(interval sample) work.
+    pub fn push_pane(&mut self, interval: &SampleResult) {
+        // Eq. 1 weights come from the interval's own counters; only the
+        // weighted sketches compute them (distinct counting is
+        // multiplicity-insensitive, so its path skips the work).
+        match &mut self.panes {
+            SketchPanes::Quantile(store) => {
+                let weights = weights_for(&interval.state);
+                let mut sk = QuantileSketch::new(self.params.quantile_clusters);
+                for &(s, v) in &interval.sample {
+                    sk.offer(v, weight_from(&weights, s));
+                }
+                store.push(sk);
+            }
+            SketchPanes::Distinct(store) => {
+                let mut sk = HyperLogLog::new(self.params.hll_precision);
+                for &(_, v) in &interval.sample {
+                    sk.offer(v);
+                }
+                store.push(sk);
+            }
+            SketchPanes::TopK(store) => {
+                let weights = weights_for(&interval.state);
+                let mut sk = HeavyHitters::new(
+                    self.params.topk_capacity,
+                    self.params.cm_width,
+                    self.params.cm_depth,
+                    HH_SEED,
+                );
+                for &(s, _) in &interval.sample {
+                    sk.offer(s as u64, weight_from(&weights, s));
+                }
+                store.push(sk);
+            }
+        }
+    }
+
+    /// Panes currently held.
+    pub fn len(&self) -> usize {
+        match &self.panes {
+            SketchPanes::Quantile(s) => s.len(),
+            SketchPanes::Distinct(s) => s.len(),
+            SketchPanes::TopK(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Structural pane merges performed so far — the deterministic
+    /// flatness instrument: amortized ≤ 2 per slide at any window/slide
+    /// ratio (the unit tests pin this; `benches/window_hotpath.rs` asserts
+    /// the same property on the underlying [`PaneStore`]).
+    pub fn merge_ops(&self) -> u64 {
+        match &self.panes {
+            SketchPanes::Quantile(s) => s.merge_ops(),
+            SketchPanes::Distinct(s) => s.merge_ops(),
+            SketchPanes::TopK(s) => s.merge_ops(),
+        }
     }
 }
 
@@ -669,5 +868,48 @@ mod tests {
         // empty input
         let (q, _) = exact_eval(&Query::Quantile(0.5), &[]);
         assert!(q.is_nan());
+    }
+
+    #[test]
+    fn sketch_window_panes_slide_and_stay_flat() {
+        // Pane-level sketch windowing over a 4-pane ring: per-slide
+        // structural merges stay ≤ 2 amortized regardless of how many
+        // panes have flowed through, and execute_sketch answers from the
+        // merged span.
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let query = Query::TopK(2);
+        let mut sw = SketchWindow::for_query(&query, SketchParams::default(), 4)
+            .expect("sketch-backed query");
+        assert!(sw.is_empty());
+        assert!(SketchWindow::for_query(&Query::Sum, SketchParams::default(), 4).is_none());
+
+        let mut pushes = 0u64;
+        for round in 0..20 {
+            // stratum 0 twice as heavy as stratum 1
+            let pane = window_from_items(&[
+                (0, 1.0),
+                (0, 2.0),
+                (1, 3.0),
+                (0, 4.0 + round as f64),
+            ]);
+            sw.push_pane(&pane);
+            pushes += 1;
+            assert!(sw.len() <= 4);
+            let window_state = pane.state; // counters of one pane suffice here
+            let qr = exec.execute_sketch(&query, &sw, &window_state).unwrap();
+            let top = qr.top_k.expect("top-k list");
+            assert_eq!(top[0].0, 0, "heaviest stratum must lead");
+        }
+        assert_eq!(sw.len(), 4);
+        assert!(
+            sw.merge_ops() <= 2 * pushes,
+            "{} structural merges for {pushes} pushes",
+            sw.merge_ops()
+        );
+        // mismatched query/panes is an error, not a panic
+        assert!(exec
+            .execute_sketch(&Query::Distinct, &sw, &crate::error::estimator::StrataState::default())
+            .is_err());
     }
 }

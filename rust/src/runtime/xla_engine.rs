@@ -33,11 +33,21 @@ pub struct WindowInput {
 impl WindowInput {
     /// Build from (stratum, value) pairs + counters.
     pub fn from_sample(sample: &[(u16, f64)], state: &StrataState) -> Self {
-        let mut ids = Vec::with_capacity(sample.len());
-        let mut values = Vec::with_capacity(sample.len());
-        for &(s, v) in sample {
-            ids.push(s as i32);
-            values.push(v as f32);
+        Self::from_parts(&[sample], state)
+    }
+
+    /// Build from a window sample held as several contiguous slices in pane
+    /// order (the window assembler's zero-copy [`crate::window::WindowView`]
+    /// hands its deque halves straight here — no per-slide re-merge).
+    pub fn from_parts(parts: &[&[(u16, f64)]], state: &StrataState) -> Self {
+        let len = parts.iter().map(|p| p.len()).sum();
+        let mut ids = Vec::with_capacity(len);
+        let mut values = Vec::with_capacity(len);
+        for part in parts {
+            for &(s, v) in *part {
+                ids.push(s as i32);
+                values.push(v as f32);
+            }
         }
         Self { ids, values, c: state.c, n_cap: state.n_cap }
     }

@@ -156,15 +156,15 @@ impl Sampler for OasrsSampler {
 
 /// Combine per-worker OASRS results for one interval (paper §3.2
 /// "Distributed execution"): samples concatenate, arrival counters and
-/// capacities add — no synchronization during the interval.
+/// capacities add — no synchronization during the interval.  This is an
+/// in-order fold over the [`crate::window::Mergeable`] impl of
+/// [`SampleResult`]; the window pane store runs the same combine
+/// incrementally.
 pub fn merge_worker_results(parts: Vec<SampleResult>) -> SampleResult {
+    use crate::window::Mergeable;
     let mut merged = SampleResult::default();
-    for part in parts {
-        merged.sample.extend(part.sample);
-        for s in 0..MAX_STRATA {
-            merged.state.c[s] += part.state.c[s];
-            merged.state.n_cap[s] += part.state.n_cap[s];
-        }
+    for part in &parts {
+        merged.merge_from(part);
     }
     merged
 }

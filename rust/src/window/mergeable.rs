@@ -1,0 +1,152 @@
+//! The [`Mergeable`] trait: one associative-combine contract for everything
+//! a window pane can hold.
+//!
+//! The paper's distributed-execution argument (§3.2) and its windowing
+//! (§2.2) rest on the same algebraic fact: per-worker and per-interval
+//! summaries combine associatively, so results can be assembled in any
+//! grouping without coordination.  Before this trait the repo encoded that
+//! fact four separate times (OASRS worker merge, `ExactAgg::merge`, the
+//! estimator partials, each sketch's `merge`); the pane store
+//! ([`super::pane::PaneStore`]) and the window assembler now program
+//! against the one trait instead.
+//!
+//! **Contract.**  `a.merge_from(&b)` must fold `b` into `a` where `a`
+//! precedes `b` in stream order, and the fold must be *associative as an
+//! operation on summaries*: merging panes in any grouping that preserves
+//! their order answers queries over the concatenated stream.  Exactness of
+//! that associativity differs by payload and is what the property tests in
+//! `rust/tests/prop_invariants.rs` pin down:
+//!
+//! * sample concatenation and integral counters (`SampleResult`,
+//!   [`ExactAgg`] counts, Count-Min/HLL registers) are **bit-exactly**
+//!   associative;
+//! * floating-point *value* sums ([`ExactAgg::sum`],
+//!   [`StrataPartials`] sums) are associative up to rounding — bit-exact
+//!   only when the summed values are exactly representable (integral), a
+//!   distinction the window assembler honors by folding ground-truth metas
+//!   in ring order (see `super` docs);
+//! * the quantile sketch re-clusters on merge, so answers move within its
+//!   rank-ε guarantee rather than bit-identically.
+//!
+//! Commutativity is NOT part of the contract (sample concatenation is
+//! order-sensitive); payloads that happen to commute (HLL register max,
+//! Count-Min counter sums) are tested as such where it matters.
+
+use crate::error::estimator::StrataPartials;
+use crate::sampling::SampleResult;
+use crate::sketch::{CountMin, HeavyHitters, HyperLogLog, QuantileSketch};
+
+use super::ExactAgg;
+
+/// Order-preserving associative combine of two summaries (see module docs).
+pub trait Mergeable {
+    /// Fold `other` into `self`; `self` precedes `other` in stream order.
+    fn merge_from(&mut self, other: &Self);
+}
+
+impl Mergeable for ExactAgg {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
+    }
+}
+
+impl Mergeable for StrataPartials {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
+    }
+}
+
+/// Interval/worker sample results combine exactly as the OASRS distributed
+/// merge (paper §3.2): samples concatenate in order, arrival counters and
+/// capacities add.  [`crate::sampling::oasrs::merge_worker_results`] is a
+/// fold over this impl.
+impl Mergeable for SampleResult {
+    fn merge_from(&mut self, other: &Self) {
+        self.sample.extend_from_slice(&other.sample);
+        for s in 0..crate::core::MAX_STRATA {
+            self.state.c[s] += other.state.c[s];
+            self.state.n_cap[s] += other.state.n_cap[s];
+        }
+    }
+}
+
+impl Mergeable for QuantileSketch {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
+    }
+}
+
+impl Mergeable for HyperLogLog {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
+    }
+}
+
+impl Mergeable for CountMin {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
+    }
+}
+
+impl Mergeable for HeavyHitters {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge(other);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_result_merge_matches_worker_merge() {
+        let mk = |c0: f64, items: &[(u16, f64)]| {
+            let mut r = SampleResult::default();
+            r.state.c[0] = c0;
+            r.state.n_cap[0] = c0;
+            r.sample.extend_from_slice(items);
+            r
+        };
+        let a = mk(2.0, &[(0, 1.0), (0, 2.0)]);
+        let b = mk(3.0, &[(0, 5.0)]);
+        let mut via_trait = a.clone();
+        via_trait.merge_from(&b);
+        let via_fn =
+            crate::sampling::oasrs::merge_worker_results(vec![a.clone(), b.clone()]);
+        assert_eq!(via_trait.sample, via_fn.sample);
+        assert_eq!(via_trait.state, via_fn.state);
+        // order preserved: a's items first
+        assert_eq!(via_trait.sample[0], (0, 1.0));
+        assert_eq!(via_trait.sample[2], (0, 5.0));
+    }
+
+    #[test]
+    fn exact_agg_merge_from_adds() {
+        let mut a = ExactAgg::default();
+        a.add(0, 2.0);
+        let mut b = ExactAgg::default();
+        b.add(0, 3.0);
+        b.add(1, 7.0);
+        a.merge_from(&b);
+        assert_eq!(a.count[0], 2.0);
+        assert_eq!(a.sum[0], 5.0);
+        assert_eq!(a.sum[1], 7.0);
+    }
+
+    #[test]
+    fn hll_merge_from_is_union() {
+        let mut a = HyperLogLog::new(10);
+        let mut b = HyperLogLog::new(10);
+        let mut u = HyperLogLog::new(10);
+        for i in 0..500 {
+            if i % 2 == 0 {
+                a.offer(i as f64);
+            } else {
+                b.offer(i as f64);
+            }
+            u.offer(i as f64);
+        }
+        a.merge_from(&b);
+        assert_eq!(a, u);
+    }
+}

@@ -1,24 +1,54 @@
-//! Sliding-window computation (paper §2.2, §3.1).
+//! Sliding-window computation (paper §2.2, §3.1) — incremental pane store.
 //!
-//! Both engines sample per *interval* — the batch interval on the batched
-//! engine (Spark samples at every batch), the slide interval on the
-//! pipelined engine (Flink samples at every slide) — and a window result
-//! merges the intervals covering the window span.  The merge is the same
-//! associative combine as distributed execution: arrival counters and
-//! capacities add, samples concatenate.
+//! Both engines sample per *interval* (pane): the batch interval on the
+//! batched engine (Spark samples at every batch), the slide interval on the
+//! pipelined engine (Flink samples at every slide).  A window result is the
+//! associative combine of the panes covering the window span — the same
+//! merge law as distributed execution (arrival counters and capacities add,
+//! samples concatenate), now expressed once as the [`Mergeable`] trait.
 //!
-//! The assembler also carries exact per-interval aggregates (per-stratum
-//! count/sum computed before sampling) so accuracy loss can be measured per
-//! window without a second native run.
+//! **The seed's assembler re-merged every pane on every slide** —
+//! O(window/slide) combines and a full clone of every pane's sample per
+//! emission, the hot spot ROADMAP flagged once ingest went zero-allocation.
+//! This module replaces it with incremental structures sized to the payload:
+//!
+//! * **Window sample** (grows with the span): maintained *in place* in a
+//!   pane-ordered deque — push appends the new pane's items, eviction
+//!   drains the expired pane's prefix.  Per slide that is O(items of panes
+//!   evicted + items of the pane pushed), independent of the window/slide
+//!   ratio; emission borrows the deque ([`WindowView`]) instead of cloning
+//!   the span.  Counter blocks (`C_i`, `N_i`) and the exact ground truth
+//!   are *re-folded in ring order* at emission — a deliberate exception
+//!   (2 cache lines per pane): addition of arbitrary `f64` sums is only
+//!   associative up to rounding, so folding in the seed's exact order keeps
+//!   window results **byte-identical** to the reference path for every
+//!   sampler and trace (the equivalence tests below assert it), at a cost
+//!   that is noise next to the sample churn.
+//! * **Constant-size [`Mergeable`] payloads** (sketches, counter blocks):
+//!   the two-stacks [`PaneStore`] gives O(panes evicted + 1) amortized
+//!   merges per slide — the structure behind pane-level sketch windowing
+//!   (`query::SketchWindow`) and the `window_hotpath` bench's flatness
+//!   guarantee.
+//!
+//! The seed implementation is kept, verbatim, behind `cfg(test)` as
+//! [`reference::ReferenceAssembler`]: the property tests drive both
+//! assemblers with identical seeded pane streams and assert byte-identical
+//! windows.
 
 use std::collections::VecDeque;
 
 use crate::core::{EventTime, MAX_STRATA};
-use crate::sampling::oasrs::merge_worker_results;
+use crate::error::estimator::StrataState;
 use crate::sampling::SampleResult;
 
+pub mod mergeable;
+pub mod pane;
+
+pub use mergeable::Mergeable;
+pub use pane::PaneStore;
+
 /// Exact per-interval aggregates (pre-sampling ground truth).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExactAgg {
     pub count: [f64; MAX_STRATA],
     pub sum: [f64; MAX_STRATA],
@@ -91,7 +121,8 @@ impl WindowConfig {
     }
 }
 
-/// A completed window's merged sample + ground truth.
+/// A completed window's merged sample + ground truth (owned snapshot; the
+/// engines use the zero-copy [`WindowView`] instead).
 #[derive(Debug, Clone)]
 pub struct WindowSample {
     /// Window end (exclusive) in virtual ms.
@@ -106,17 +137,101 @@ pub struct WindowSample {
     pub intervals: usize,
 }
 
-/// Assembles per-interval [`SampleResult`]s into sliding windows.
+/// Zero-copy view of a completed window: the sample is borrowed from the
+/// assembler's pane deque (as up to two contiguous slices, in pane order)
+/// instead of cloned per slide.  Counter blocks and ground truth are small
+/// `Copy` values.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowView<'a> {
+    /// Window end (exclusive) in virtual ms.
+    pub end_ms: EventTime,
+    /// Window start (inclusive).
+    pub start_ms: EventTime,
+    /// Number of intervals merged (fewer at stream start).
+    pub intervals: usize,
+    /// The window's sample in pane order, as the deque's two halves.
+    parts: [&'a [(u16, f64)]; 2],
+    /// Merged per-stratum counters over the span (ring-order fold).
+    pub state: StrataState,
+    /// Merged exact aggregates over the span (ring-order fold).
+    pub exact: ExactAgg,
+}
+
+impl<'a> WindowView<'a> {
+    /// View over a single already-merged result (adapter for callers that
+    /// hold a [`SampleResult`], e.g. `QueryExecutor::execute`).
+    pub fn from_result(result: &'a SampleResult) -> Self {
+        Self {
+            end_ms: 0,
+            start_ms: 0,
+            intervals: 1,
+            parts: [result.sample.as_slice(), &[]],
+            state: result.state,
+            exact: ExactAgg::default(),
+        }
+    }
+
+    /// The sample's contiguous halves, in pane order.
+    pub fn parts(&self) -> [&'a [(u16, f64)]; 2] {
+        self.parts
+    }
+
+    /// Iterate the window sample in pane order.
+    pub fn iter(
+        &self,
+    ) -> std::iter::Chain<std::slice::Iter<'a, (u16, f64)>, std::slice::Iter<'a, (u16, f64)>>
+    {
+        self.parts[0].iter().chain(self.parts[1].iter())
+    }
+
+    /// Items in the window sample.
+    pub fn sample_len(&self) -> usize {
+        self.parts[0].len() + self.parts[1].len()
+    }
+
+    /// Items that arrived in the window span.
+    pub fn arrived(&self) -> f64 {
+        self.state.total_c()
+    }
+
+    /// Materialize an owned [`SampleResult`] (tests / compatibility; the
+    /// production path never does this per slide).
+    pub fn to_sample_result(&self) -> SampleResult {
+        let mut sample = Vec::with_capacity(self.sample_len());
+        sample.extend_from_slice(self.parts[0]);
+        sample.extend_from_slice(self.parts[1]);
+        SampleResult { sample, state: self.state }
+    }
+}
+
+/// Per-pane bookkeeping the assembler keeps for eviction and emission.
+#[derive(Debug, Clone, Copy)]
+struct PaneMeta {
+    sample_len: usize,
+    state: StrataState,
+    exact: ExactAgg,
+}
+
+/// Assembles per-interval [`SampleResult`]s into sliding windows,
+/// incrementally (see module docs for the cost model).
 ///
-/// `interval_ms` is the sampling cadence (batch interval or slide interval);
-/// it must divide the slide.  A window is emitted whenever an interval ends
-/// on a slide boundary.
+/// `interval_ms` is the sampling cadence (batch interval or slide
+/// interval); it must divide the slide.  A window is emitted whenever an
+/// interval ends on a slide boundary.
 #[derive(Debug)]
 pub struct WindowAssembler {
     config: WindowConfig,
     interval_ms: EventTime,
-    /// Ring of the most recent interval results (newest at back).
-    ring: VecDeque<(SampleResult, ExactAgg)>,
+    /// Ring of pane metadata (newest at back).
+    panes: VecDeque<PaneMeta>,
+    /// Concatenated window sample in pane order: extended on push, drained
+    /// on eviction — never re-merged.
+    sample: VecDeque<(u16, f64)>,
+    /// Monotone mask of strata that have ever carried a non-zero counter or
+    /// ground-truth entry: the emission fold skips the all-zero strata (a
+    /// skipped stratum folds to exactly `+0.0`, which is also what adding
+    /// its `+0.0` entries in order would produce, so byte-identity holds).
+    active: [bool; MAX_STRATA],
     /// End time of the next interval to close.
     next_interval_end: EventTime,
 }
@@ -140,7 +255,9 @@ impl WindowAssembler {
         Self {
             config,
             interval_ms,
-            ring: VecDeque::with_capacity(ring_cap),
+            panes: VecDeque::with_capacity(ring_cap),
+            sample: VecDeque::new(),
+            active: [false; MAX_STRATA],
             next_interval_end: interval_ms,
         }
     }
@@ -153,23 +270,50 @@ impl WindowAssembler {
         self.interval_ms
     }
 
+    /// Panes a full window spans.
+    pub fn panes_per_window(&self) -> usize {
+        (self.config.size_ms / self.interval_ms) as usize
+    }
+
     /// End time of the interval currently being filled.
     pub fn current_interval_end(&self) -> EventTime {
         self.next_interval_end
     }
 
-    /// Push the result of the interval ending at `current_interval_end()`.
-    /// Returns the completed window when that end lies on a slide boundary.
-    pub fn push_interval(
+    /// Push the result of the interval ending at `current_interval_end()`;
+    /// returns a zero-copy view of the completed window when that end lies
+    /// on a slide boundary.
+    ///
+    /// Cost per call: O(items evicted + items pushed) deque work plus, on
+    /// emission, a fold of the active strata's counters per pane in the
+    /// ring (the exactness anchor — see module docs); never a re-merge or
+    /// clone of the span's sample.
+    pub fn push_interval_view(
         &mut self,
         result: SampleResult,
         exact: ExactAgg,
-    ) -> Option<WindowSample> {
-        let cap = (self.config.size_ms / self.interval_ms) as usize;
-        if self.ring.len() == cap {
-            self.ring.pop_front();
+    ) -> Option<WindowView<'_>> {
+        let cap = self.panes_per_window();
+        if self.panes.len() == cap {
+            let old = self.panes.pop_front().expect("ring non-empty at cap");
+            self.sample.drain(..old.sample_len);
         }
-        self.ring.push_back((result, exact));
+        let meta = PaneMeta {
+            sample_len: result.sample.len(),
+            state: result.state,
+            exact,
+        };
+        for s in 0..MAX_STRATA {
+            if meta.state.c[s] != 0.0
+                || meta.state.n_cap[s] != 0.0
+                || meta.exact.count[s] != 0.0
+                || meta.exact.sum[s] != 0.0
+            {
+                self.active[s] = true;
+            }
+        }
+        self.sample.extend(result.sample);
+        self.panes.push_back(meta);
 
         let end = self.next_interval_end;
         self.next_interval_end += self.interval_ms;
@@ -178,19 +322,114 @@ impl WindowAssembler {
             return None;
         }
 
-        let merged = merge_worker_results(self.ring.iter().map(|(r, _)| r.clone()).collect());
+        // Ring-order fold of the constant-size metas, restricted to the
+        // active strata.  Each per-stratum accumulator sees its additions
+        // in exactly the reference re-merge's pane order, so counters AND
+        // ground-truth sums come out byte-identical (f64 addition is not
+        // associative; order is the spec).  Skipped strata are `+0.0`
+        // everywhere, which is also what folding them would produce.
+        let mut state = StrataState::default();
         let mut exact_merged = ExactAgg::default();
-        for (_, e) in &self.ring {
-            exact_merged.merge(e);
+        for s in 0..MAX_STRATA {
+            if !self.active[s] {
+                continue;
+            }
+            for meta in &self.panes {
+                state.c[s] += meta.state.c[s];
+                state.n_cap[s] += meta.state.n_cap[s];
+                exact_merged.count[s] += meta.exact.count[s];
+                exact_merged.sum[s] += meta.exact.sum[s];
+            }
         }
-        let intervals = self.ring.len();
-        Some(WindowSample {
+
+        let intervals = self.panes.len();
+        let (a, b) = self.sample.as_slices();
+        Some(WindowView {
             end_ms: end,
             start_ms: end.saturating_sub(intervals as EventTime * self.interval_ms),
-            result: merged,
-            exact: exact_merged,
             intervals,
+            parts: [a, b],
+            state,
+            exact: exact_merged,
         })
+    }
+
+    /// Owned-snapshot variant of [`Self::push_interval_view`] (clones the
+    /// window sample; kept for tests and simple callers).
+    pub fn push_interval(
+        &mut self,
+        result: SampleResult,
+        exact: ExactAgg,
+    ) -> Option<WindowSample> {
+        let view = self.push_interval_view(result, exact)?;
+        Some(WindowSample {
+            end_ms: view.end_ms,
+            start_ms: view.start_ms,
+            result: view.to_sample_result(),
+            exact: view.exact,
+            intervals: view.intervals,
+        })
+    }
+}
+
+/// The seed's merge-all-intervals assembler, kept verbatim as the
+/// equivalence oracle for the incremental pane path (tests only).
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::*;
+    use crate::sampling::oasrs::merge_worker_results;
+
+    pub struct ReferenceAssembler {
+        config: WindowConfig,
+        interval_ms: EventTime,
+        ring: VecDeque<(SampleResult, ExactAgg)>,
+        next_interval_end: EventTime,
+    }
+
+    impl ReferenceAssembler {
+        pub fn with_interval(config: WindowConfig, interval_ms: EventTime) -> Self {
+            let ring_cap = (config.size_ms / interval_ms) as usize;
+            Self {
+                config,
+                interval_ms,
+                ring: VecDeque::with_capacity(ring_cap),
+                next_interval_end: interval_ms,
+            }
+        }
+
+        pub fn push_interval(
+            &mut self,
+            result: SampleResult,
+            exact: ExactAgg,
+        ) -> Option<WindowSample> {
+            let cap = (self.config.size_ms / self.interval_ms) as usize;
+            if self.ring.len() == cap {
+                self.ring.pop_front();
+            }
+            self.ring.push_back((result, exact));
+
+            let end = self.next_interval_end;
+            self.next_interval_end += self.interval_ms;
+
+            if end % self.config.slide_ms != 0 {
+                return None;
+            }
+
+            let merged =
+                merge_worker_results(self.ring.iter().map(|(r, _)| r.clone()).collect());
+            let mut exact_merged = ExactAgg::default();
+            for (_, e) in &self.ring {
+                exact_merged.merge(e);
+            }
+            let intervals = self.ring.len();
+            Some(WindowSample {
+                end_ms: end,
+                start_ms: end.saturating_sub(intervals as EventTime * self.interval_ms),
+                result: merged,
+                exact: exact_merged,
+                intervals,
+            })
+        }
     }
 }
 
@@ -308,5 +547,231 @@ mod tests {
         f.add(3, 2.0);
         e.merge(&f);
         assert_eq!(e.sum[3], 3.0);
+    }
+
+    #[test]
+    fn view_matches_owned_snapshot() {
+        let mut a = WindowAssembler::new(WindowConfig::new(2_000, 1_000));
+        let mut b = WindowAssembler::new(WindowConfig::new(2_000, 1_000));
+        for i in 0..5 {
+            let r = result_with(10.0 + i as f64, 4 + i);
+            let e = exact_with(10.0 + i as f64);
+            let owned = a.push_interval(r.clone(), e);
+            let view = b.push_interval_view(r, e);
+            match (owned, view) {
+                (Some(ws), Some(v)) => {
+                    assert_eq!(ws.start_ms, v.start_ms);
+                    assert_eq!(ws.end_ms, v.end_ms);
+                    assert_eq!(ws.intervals, v.intervals);
+                    assert_eq!(ws.result.sample, v.to_sample_result().sample);
+                    assert_eq!(ws.result.state, v.state);
+                    assert_eq!(ws.exact, v.exact);
+                    assert_eq!(ws.result.sample.len(), v.sample_len());
+                    assert_eq!(ws.result.arrived(), v.arrived());
+                }
+                (None, None) => {}
+                _ => panic!("owned/view emission cadence diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn view_iter_and_parts_cover_sample_in_order() {
+        let mut w = WindowAssembler::new(WindowConfig::new(3_000, 1_000));
+        w.push_interval_view(result_with(2.0, 2), ExactAgg::default());
+        w.push_interval_view(result_with(3.0, 3), ExactAgg::default());
+        let v = w.push_interval_view(result_with(4.0, 4), ExactAgg::default()).unwrap();
+        let via_iter: Vec<(u16, f64)> = v.iter().copied().collect();
+        assert_eq!(via_iter.len(), 9);
+        assert_eq!(via_iter, v.to_sample_result().sample);
+        let [p0, p1] = v.parts();
+        assert_eq!(p0.len() + p1.len(), 9);
+    }
+
+    #[test]
+    fn from_result_adapter() {
+        let r = result_with(7.0, 3);
+        let v = WindowView::from_result(&r);
+        assert_eq!(v.sample_len(), 3);
+        assert_eq!(v.arrived(), 7.0);
+        assert_eq!(v.to_sample_result().sample, r.sample);
+        assert_eq!(v.state, r.state);
+    }
+
+    // --- pane-store vs merge-all-intervals equivalence (the tentpole's
+    //     byte-identity acceptance gate) -------------------------------
+
+    use crate::core::Item;
+    use crate::sampling::{make_sampler, SamplerKind};
+    use crate::stream::{StreamConfig, StreamGenerator};
+
+    /// Drive one sampler over a seeded trace at `interval_ms` cadence and
+    /// feed the identical pane stream to both assemblers; every emitted
+    /// window must match byte-for-byte (f64 bits, sample order, counters,
+    /// ground truth).
+    fn assert_equivalent(
+        kind: SamplerKind,
+        config: WindowConfig,
+        interval_ms: EventTime,
+        stream: &StreamConfig,
+        duration_ms: EventTime,
+        fraction: f64,
+        seed: u64,
+    ) {
+        let items: Vec<Item> = StreamGenerator::new(stream).take_until(duration_ms);
+        let mut sampler = make_sampler(kind, fraction, seed);
+        let mut incremental = WindowAssembler::with_interval(config, interval_ms);
+        let mut oracle = reference::ReferenceAssembler::with_interval(config, interval_ms);
+
+        let mut idx = 0usize;
+        let mut windows = 0usize;
+        loop {
+            let end = incremental.current_interval_end();
+            let start = idx;
+            while idx < items.len() && items[idx].ts < end {
+                idx += 1;
+            }
+            let mut exact = ExactAgg::default();
+            for it in &items[start..idx] {
+                exact.add(it.stratum, it.value);
+            }
+            sampler.offer_slice(&items[start..idx]);
+            let result = sampler.finish_interval();
+
+            let want = oracle.push_interval(result.clone(), exact);
+            let got = incremental.push_interval(result, exact);
+            match (got, want) {
+                (Some(g), Some(w)) => {
+                    windows += 1;
+                    assert_eq!(g.start_ms, w.start_ms, "{kind:?}");
+                    assert_eq!(g.end_ms, w.end_ms, "{kind:?}");
+                    assert_eq!(g.intervals, w.intervals, "{kind:?}");
+                    // byte-identical: Vec<(u16, f64)> / [f64; K] PartialEq
+                    // is bitwise for non-NaN values
+                    assert_eq!(g.result.sample, w.result.sample, "{kind:?}");
+                    assert_eq!(g.result.state, w.result.state, "{kind:?}");
+                    assert_eq!(g.exact, w.exact, "{kind:?}");
+                }
+                (None, None) => {}
+                _ => panic!("{kind:?}: emission cadence diverged"),
+            }
+            if idx >= items.len() {
+                break;
+            }
+        }
+        assert!(windows >= 2, "{kind:?}: too few windows ({windows}) to prove anything");
+    }
+
+    /// Light trace so ratio-64 spans stay fast in debug test runs.
+    fn light_stream(seed: u64) -> StreamConfig {
+        use crate::stream::{Distribution, SubStreamSpec};
+        StreamConfig {
+            substreams: vec![
+                SubStreamSpec::new(0, Distribution::Gaussian { mu: 10.0, sigma: 5.0 }, 800.0),
+                SubStreamSpec::new(1, Distribution::Gaussian { mu: 1000.0, sigma: 50.0 }, 200.0),
+                SubStreamSpec::new(2, Distribution::Gaussian { mu: 10000.0, sigma: 500.0 }, 50.0),
+            ],
+            seed,
+        }
+    }
+
+    #[test]
+    fn equivalence_all_samplers_sliding() {
+        // Gaussian (non-integral) values on purpose: the ring-order fold
+        // makes even the f64 ground-truth sums bit-equal.
+        for kind in [
+            SamplerKind::Oasrs,
+            SamplerKind::Srs,
+            SamplerKind::Sts,
+            SamplerKind::WeightedRes,
+            SamplerKind::None,
+        ] {
+            assert_equivalent(
+                kind,
+                WindowConfig::new(2_000, 1_000),
+                1_000,
+                &light_stream(11),
+                8_000,
+                0.4,
+                7,
+            );
+        }
+    }
+
+    #[test]
+    fn equivalence_across_window_slide_ratios() {
+        // The long-window/small-slide family the seed could not sustain:
+        // ratios 4 / 16 / 64 at a fixed 250 ms slide.
+        for (size, seeds) in [(1_000u64, 21u64), (4_000, 22), (16_000, 23)] {
+            assert_equivalent(
+                SamplerKind::Oasrs,
+                WindowConfig::new(size, 250),
+                250,
+                &light_stream(seeds),
+                20_000,
+                0.3,
+                seeds,
+            );
+        }
+    }
+
+    #[test]
+    fn equivalence_sub_slide_batched_cadence() {
+        // Batched-engine shape: panes at 250 ms feeding 1 s slides.
+        assert_equivalent(
+            SamplerKind::Oasrs,
+            WindowConfig::new(4_000, 1_000),
+            250,
+            &light_stream(31),
+            12_000,
+            0.5,
+            31,
+        );
+        assert_equivalent(
+            SamplerKind::Srs,
+            WindowConfig::new(4_000, 1_000),
+            500,
+            &light_stream(33),
+            12_000,
+            0.6,
+            33,
+        );
+    }
+
+    #[test]
+    fn equivalence_fraction_changes_mid_stream() {
+        // Adaptive-budget shape: the fraction moves between intervals.
+        let items: Vec<Item> =
+            StreamGenerator::new(&light_stream(41)).take_until(10_000);
+        let config = WindowConfig::new(3_000, 1_000);
+        let mut sampler = make_sampler(SamplerKind::Oasrs, 0.6, 5);
+        let mut incremental = WindowAssembler::new(config);
+        let mut oracle = reference::ReferenceAssembler::with_interval(config, 1_000);
+        let mut idx = 0;
+        for k in 0..10u64 {
+            let end = incremental.current_interval_end();
+            let start = idx;
+            while idx < items.len() && items[idx].ts < end {
+                idx += 1;
+            }
+            let mut exact = ExactAgg::default();
+            for it in &items[start..idx] {
+                exact.add(it.stratum, it.value);
+            }
+            sampler.offer_slice(&items[start..idx]);
+            sampler.set_fraction(0.1 + 0.08 * (k % 7) as f64);
+            let result = sampler.finish_interval();
+            let want = oracle.push_interval(result.clone(), exact);
+            let got = incremental.push_interval(result, exact);
+            match (got, want) {
+                (Some(g), Some(w)) => {
+                    assert_eq!(g.result.sample, w.result.sample);
+                    assert_eq!(g.result.state, w.result.state);
+                    assert_eq!(g.exact, w.exact);
+                }
+                (None, None) => {}
+                _ => panic!("cadence diverged"),
+            }
+        }
     }
 }

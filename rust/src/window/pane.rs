@@ -1,0 +1,250 @@
+//! Two-stacks pane store: sliding-window aggregation over any
+//! [`Mergeable`] payload in O(panes evicted + 1) amortized merges per
+//! slide.
+//!
+//! The store keeps the last `capacity` panes (one pane per sampling
+//! interval) and answers "merge of everything currently held" without
+//! re-combining the whole span.  It is the classic two-stacks queue
+//! aggregation (prefix/suffix scheme — cf. SABER/FlinkCEP-style sliding
+//! aggregation and "the marriage of incremental and approximate
+//! computing", Krishnan '16, PAPERS.md) adapted to the repo's pane ring:
+//!
+//! * a **back** stack receives new panes and maintains one running
+//!   prefix aggregate (`back_agg`) — one merge per push;
+//! * a **front** stack holds the older panes with precomputed *suffix*
+//!   aggregates; evicting the oldest pane is a pop.  When the front
+//!   empties, the back flips over: panes move across, each picking up the
+//!   suffix aggregate of the panes behind it — `len(back)` merges paid
+//!   once per `len(back)` evictions, so amortized one merge per evicted
+//!   pane;
+//! * the window aggregate is `front_suffix · back_prefix` — one merge,
+//!   order-preserving, so any associative payload (samples, counters,
+//!   sketches) gets the same answer as a left-to-right re-merge of the
+//!   span, without the O(window/slide) combine the seed assembler paid.
+//!
+//! The amortized merge count per push is ≤ 3 **independent of the window/
+//! slide ratio** — the property the `window_hotpath` bench pins (the seed
+//! path re-merged all `ratio` panes per slide).  [`PaneStore::merge_ops`]
+//! exposes the structural merge counter so tests and benches can assert
+//! flatness deterministically instead of by timing.
+//!
+//! Payload sizing caveat: per-slide cost is O(merges × payload size).  For
+//! constant-size payloads (sketches, counter blocks) that is O(1) per
+//! slide; for growing payloads like a raw window sample the assembler uses
+//! its in-place deque instead (see `super` docs for the split).
+
+use super::mergeable::Mergeable;
+
+/// Sliding ring of the most recent `capacity` panes with two-stacks
+/// incremental aggregation.
+#[derive(Debug, Clone)]
+pub struct PaneStore<T: Mergeable + Clone> {
+    capacity: usize,
+    /// Older panes: `(pane, suffix aggregate of this pane and everything
+    /// newer up to the flip point)`, oldest at the top (= `Vec` end).
+    front: Vec<(T, T)>,
+    /// Newer panes in arrival order.
+    back: Vec<T>,
+    /// Running aggregate of `back` (None when `back` is empty).
+    back_agg: Option<T>,
+    /// Structural merges performed (push folds + flip folds).
+    merges: u64,
+}
+
+impl<T: Mergeable + Clone> PaneStore<T> {
+    /// Store holding the last `capacity` panes (capacity ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "pane store capacity must be positive");
+        Self {
+            capacity,
+            front: Vec::with_capacity(capacity),
+            back: Vec::with_capacity(capacity),
+            back_agg: None,
+            merges: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Panes currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.front.len() + self.back.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.front.is_empty() && self.back.is_empty()
+    }
+
+    /// Structural merges performed so far (push + flip; queries are counted
+    /// by the caller — one merge per [`PaneStore::aggregate`] that touches
+    /// both stacks).
+    pub fn merge_ops(&self) -> u64 {
+        self.merges
+    }
+
+    /// Push the newest pane, evicting the oldest when full.  One merge
+    /// (plus amortized one per evicted pane).
+    pub fn push(&mut self, pane: T) {
+        if self.len() == self.capacity {
+            self.evict_one();
+        }
+        match &mut self.back_agg {
+            Some(agg) => {
+                agg.merge_from(&pane);
+                self.merges += 1;
+            }
+            None => self.back_agg = Some(pane.clone()),
+        }
+        self.back.push(pane);
+    }
+
+    /// Drop the oldest pane.  Amortized one merge: a flip moves each back
+    /// pane across exactly once per residence.
+    fn evict_one(&mut self) {
+        if self.front.is_empty() {
+            while let Some(pane) = self.back.pop() {
+                let agg = match self.front.last() {
+                    Some((_, newer_suffix)) => {
+                        let mut a = pane.clone();
+                        a.merge_from(newer_suffix);
+                        self.merges += 1;
+                        a
+                    }
+                    None => pane.clone(),
+                };
+                self.front.push((pane, agg));
+            }
+            self.back_agg = None;
+        }
+        self.front.pop();
+    }
+
+    /// Merge of every pane currently held, in arrival order (`None` when
+    /// empty).  At most one merge (suffix · prefix), never a span re-merge.
+    pub fn aggregate(&self) -> Option<T> {
+        match (self.front.last(), &self.back_agg) {
+            (Some((_, suffix)), Some(prefix)) => {
+                let mut a = suffix.clone();
+                a.merge_from(prefix);
+                Some(a)
+            }
+            (Some((_, suffix)), None) => Some(suffix.clone()),
+            (None, Some(prefix)) => Some(prefix.clone()),
+            (None, None) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Order-sensitive test payload: a sequence of pane ids.  Concatenation
+    /// is associative but not commutative, so any ordering or grouping bug
+    /// in the store shows up as a wrong sequence, not a masked sum.
+    #[derive(Debug, Clone, PartialEq)]
+    struct Seq(Vec<u32>);
+
+    impl Mergeable for Seq {
+        fn merge_from(&mut self, other: &Self) {
+            self.0.extend_from_slice(&other.0);
+        }
+    }
+
+    #[test]
+    fn aggregate_equals_ordered_remerge_for_every_capacity() {
+        for cap in [1usize, 2, 3, 4, 7, 16, 64] {
+            let mut store = PaneStore::new(cap);
+            let mut ring: Vec<u32> = Vec::new();
+            for i in 0..300u32 {
+                store.push(Seq(vec![i]));
+                ring.push(i);
+                if ring.len() > cap {
+                    ring.remove(0);
+                }
+                let got = store.aggregate().expect("non-empty");
+                assert_eq!(got.0, ring, "cap {cap} at push {i}");
+                assert_eq!(store.len(), ring.len());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_store() {
+        let store: PaneStore<Seq> = PaneStore::new(4);
+        assert!(store.is_empty());
+        assert!(store.aggregate().is_none());
+        assert_eq!(store.merge_ops(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        let _ = PaneStore::<Seq>::new(0);
+    }
+
+    #[test]
+    fn amortized_merges_independent_of_capacity() {
+        // The tentpole property: structural merges per push stay ≤ 2
+        // amortized (1 push-fold + ≤ 1 flip-fold) at EVERY window/slide
+        // ratio; with the query's single suffix·prefix merge that is ≤ 3
+        // per slide, vs the seed's `capacity` merges per slide.
+        let pushes = 10_000u64;
+        let mut per_cap = Vec::new();
+        for cap in [4usize, 16, 64] {
+            let mut store = PaneStore::new(cap);
+            for i in 0..pushes {
+                store.push(Seq(vec![i as u32]));
+                let _ = store.aggregate();
+            }
+            let ops = store.merge_ops();
+            // exactly 2·(cap−1)/cap per push in steady state (measured
+            // 1.50 / 1.87 / 1.97 for caps 4/16/64): bounded by 2, never a
+            // factor of the ratio.
+            assert!(
+                ops <= 2 * pushes,
+                "cap {cap}: {ops} structural merges for {pushes} pushes"
+            );
+            per_cap.push(ops);
+        }
+        // Flat across ratios: a 16x capacity spread moves the merge count
+        // by < 1.5x (the seed path's count scales with the capacity itself).
+        let max = *per_cap.iter().max().unwrap();
+        let min = *per_cap.iter().min().unwrap();
+        assert!(2 * max <= 3 * min, "merge counts scale with ratio: {per_cap:?}");
+    }
+
+    #[test]
+    fn partial_window_aggregates_what_is_there() {
+        let mut store = PaneStore::new(8);
+        store.push(Seq(vec![1]));
+        store.push(Seq(vec![2]));
+        assert_eq!(store.aggregate().unwrap().0, vec![1, 2]);
+        assert_eq!(store.len(), 2);
+    }
+
+    #[test]
+    fn works_with_exact_agg_panes() {
+        use crate::window::ExactAgg;
+        let mut store = PaneStore::new(3);
+        let mut direct: Vec<ExactAgg> = Vec::new();
+        for i in 0..10 {
+            let mut e = ExactAgg::default();
+            e.add((i % 4) as u16, i as f64); // integral values: exact sums
+            store.push(e);
+            direct.push(e);
+            if direct.len() > 3 {
+                direct.remove(0);
+            }
+            let mut want = ExactAgg::default();
+            for d in &direct {
+                want.merge(d);
+            }
+            let got = store.aggregate().unwrap();
+            assert_eq!(got.count, want.count);
+            assert_eq!(got.sum, want.sum);
+        }
+    }
+}

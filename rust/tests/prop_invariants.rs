@@ -11,6 +11,7 @@ use streamapprox::sampling::{
 };
 use streamapprox::sketch::{HeavyHitters, HyperLogLog, QuantileSketch};
 use streamapprox::util::rng::Rng;
+use streamapprox::window::{ExactAgg, Mergeable, PaneStore};
 
 /// Mini property harness: run `prop` for `cases` seeds; panic with the seed
 /// on the first failure.
@@ -506,6 +507,300 @@ fn prop_channel_conserves_items_under_contention() {
         });
         if total != producers * per {
             return Err(format!("got {total} != {}", producers * per));
+        }
+        Ok(())
+    });
+}
+
+// --- Mergeable trait laws (window/mergeable.rs) ------------------------
+//
+// Exactness is payload-specific and stated per test: sample concatenation
+// and integral counters are bit-exactly associative; f64 *value* sums are
+// associative only up to rounding (bit-exact on integral values);
+// commutativity of per-component f64 addition is always bit-exact, but
+// sample concatenation is order-sensitive by design.
+
+/// Random interval result: integral arrival/capacity counters (the real
+/// samplers produce integral counts; SRS's fractional capacities are
+/// covered by the window-level equivalence tests, which fold in ring
+/// order), float or integral sample values by choice.
+fn random_sample_result(rng: &mut Rng, integral_values: bool) -> SampleResult {
+    let mut r = SampleResult::default();
+    for s in 0..4u16 {
+        let arrived = rng.range_usize(0, 40);
+        let selected = rng.range_usize(0, arrived + 1);
+        r.state.c[s as usize] = arrived as f64;
+        r.state.n_cap[s as usize] = selected as f64;
+        for _ in 0..selected {
+            let v = if integral_values {
+                rng.range_usize(0, 1000) as f64
+            } else {
+                rng.normal(100.0, 30.0)
+            };
+            r.sample.push((s, v));
+        }
+    }
+    r
+}
+
+#[test]
+fn prop_mergeable_sample_result_associative_bitexact() {
+    // (a·b)·c == a·(b·c) bit-for-bit: concatenation is exactly associative
+    // and the counters are integral, so addition is exact.  Values are
+    // arbitrary floats — they are only ever concatenated.
+    check(50, |rng| {
+        let a = random_sample_result(rng, false);
+        let b = random_sample_result(rng, false);
+        let c = random_sample_result(rng, false);
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+        if left.sample != right.sample {
+            return Err("sample association diverged".into());
+        }
+        if left.state != right.state {
+            return Err("state association diverged".into());
+        }
+        // and the fold through merge_worker_results agrees
+        let fold = merge_worker_results(vec![a, b, c]);
+        if fold.sample != left.sample || fold.state != left.state {
+            return Err("merge_worker_results fold diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mergeable_sample_result_commutes_up_to_permutation() {
+    // a·b and b·a hold the same multiset of samples and bit-identical
+    // counters (f64 addition commutes exactly); the *order* differs, which
+    // is why commutativity is not part of the Mergeable contract.
+    check(50, |rng| {
+        let a = random_sample_result(rng, false);
+        let b = random_sample_result(rng, false);
+        let mut ab = a.clone();
+        ab.merge_from(&b);
+        let mut ba = b.clone();
+        ba.merge_from(&a);
+        if ab.state != ba.state {
+            return Err("counter addition failed to commute bitwise".into());
+        }
+        let canon = |r: &SampleResult| {
+            let mut v: Vec<(u16, u64)> =
+                r.sample.iter().map(|&(s, x)| (s, x.to_bits())).collect();
+            v.sort_unstable();
+            v
+        };
+        if canon(&ab) != canon(&ba) {
+            return Err("sample multisets diverged".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mergeable_exact_agg_laws() {
+    check(50, |rng| {
+        let mk_float = |rng: &mut Rng| {
+            let mut e = ExactAgg::default();
+            for _ in 0..rng.range_usize(0, 60) {
+                e.add(rng.range_usize(0, 5) as u16, rng.normal(50.0, 20.0));
+            }
+            e
+        };
+        // commutativity is bit-exact even for float sums
+        let a = mk_float(rng);
+        let b = mk_float(rng);
+        let mut ab = a;
+        ab.merge_from(&b);
+        let mut ba = b;
+        ba.merge_from(&a);
+        if ab != ba {
+            return Err("ExactAgg merge failed to commute bitwise".into());
+        }
+        // associativity is bit-exact on integral values…
+        let mk_int = |rng: &mut Rng| {
+            let mut e = ExactAgg::default();
+            for _ in 0..rng.range_usize(0, 60) {
+                e.add(rng.range_usize(0, 5) as u16, rng.range_usize(0, 1000) as f64);
+            }
+            e
+        };
+        let (x, y, z) = (mk_int(rng), mk_int(rng), mk_int(rng));
+        let mut left = x;
+        left.merge_from(&y);
+        left.merge_from(&z);
+        let mut yz = y;
+        yz.merge_from(&z);
+        let mut right = x;
+        right.merge_from(&yz);
+        if left != right {
+            return Err("ExactAgg integral association diverged".into());
+        }
+        // …and up to rounding on floats
+        let (x, y, z) = (mk_float(rng), mk_float(rng), mk_float(rng));
+        let mut left = x;
+        left.merge_from(&y);
+        left.merge_from(&z);
+        let mut yz = y;
+        yz.merge_from(&z);
+        let mut right = x;
+        right.merge_from(&yz);
+        for s in 0..MAX_STRATA {
+            let (l, r) = (left.sum[s], right.sum[s]);
+            if (l - r).abs() > 1e-9 * (1.0 + l.abs()) {
+                return Err(format!("float association off beyond rounding: {l} vs {r}"));
+            }
+            if left.count[s] != right.count[s] {
+                return Err("counts are integral and must associate exactly".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mergeable_hll_assoc_and_commut_bitexact() {
+    // Register-wise max is exactly associative AND commutative.
+    check(30, |rng| {
+        let mk = |rng: &mut Rng| {
+            let mut h = HyperLogLog::new(8);
+            for _ in 0..rng.range_usize(0, 500) {
+                h.offer_key(rng.range_u64(0, 10_000));
+            }
+            h
+        };
+        let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+        if left != right {
+            return Err("HLL association diverged".into());
+        }
+        let mut ab = a.clone();
+        ab.merge_from(&b);
+        let mut ba = b.clone();
+        ba.merge_from(&a);
+        if ab != ba {
+            return Err("HLL merge failed to commute".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mergeable_heavy_hitters_grouping_invariant() {
+    // With integral weights and capacity above the key-domain size, the
+    // Count-Min counters and the rescored candidate set are identical
+    // under any merge grouping or order.
+    check(30, |rng| {
+        let mk = |rng: &mut Rng| {
+            let mut h = HeavyHitters::new(64, 128, 3, 0xBEEF);
+            for _ in 0..rng.range_usize(0, 300) {
+                h.offer(rng.range_u64(0, 16), rng.range_usize(1, 5) as f64);
+            }
+            h
+        };
+        let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+        if left.top_k(16) != right.top_k(16) {
+            return Err("heavy-hitters association diverged".into());
+        }
+        let mut ab = a.clone();
+        ab.merge_from(&b);
+        let mut ba = b.clone();
+        ba.merge_from(&a);
+        if ab.top_k(16) != ba.top_k(16) {
+            return Err("heavy-hitters merge failed to commute".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mergeable_quantile_grouping_within_guarantee() {
+    // Quantile sketches re-cluster on merge, so grouping changes answers
+    // only within the rank-ε guarantee — the law is approximate by design.
+    check(20, |rng| {
+        let mut parts: Vec<QuantileSketch> = Vec::new();
+        let mut all: Vec<f64> = Vec::new();
+        for _ in 0..4 {
+            let mut sk = QuantileSketch::new(100); // ε = 0.02
+            for _ in 0..rng.range_usize(50, 400) {
+                let v = rng.normal(100.0, 30.0);
+                sk.offer(v, 1.0);
+                all.push(v);
+            }
+            parts.push(sk);
+        }
+        let mut left = parts[0].clone();
+        for p in &parts[1..] {
+            left.merge_from(p);
+        }
+        let mut right = parts[3].clone();
+        for p in parts[..3].iter().rev() {
+            let mut q = p.clone();
+            q.merge_from(&right);
+            right = q;
+        }
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &q in &[0.1, 0.5, 0.9] {
+            for sk in [&left, &right] {
+                let v = sk.quantile(q);
+                let rank = all.iter().filter(|&&x| x <= v).count() as f64 / all.len() as f64;
+                if (rank - q).abs() > 2.0 * sk.eps() + 0.01 {
+                    return Err(format!("q={q}: rank {rank} beyond guarantee"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pane_store_equals_merge_all_ring() {
+    // The two-stacks pane store must agree byte-for-byte with the seed's
+    // merge-every-pane-per-slide fold over the same sliding ring, at every
+    // ring size and step (integral counters ⇒ every addition is exact;
+    // samples only concatenate).
+    check(25, |rng| {
+        let cap = rng.range_usize(1, 12);
+        let mut store: PaneStore<SampleResult> = PaneStore::new(cap);
+        let mut ring: std::collections::VecDeque<SampleResult> = Default::default();
+        let steps = rng.range_usize(cap.max(2), 40);
+        for _ in 0..steps {
+            let pane = random_sample_result(rng, false);
+            ring.push_back(pane.clone());
+            if ring.len() > cap {
+                ring.pop_front();
+            }
+            store.push(pane);
+            let want = merge_worker_results(ring.iter().cloned().collect());
+            let got = store.aggregate().expect("non-empty store");
+            if got.sample != want.sample {
+                return Err(format!("sample diverged at ring size {}", ring.len()));
+            }
+            if got.state != want.state {
+                return Err(format!("state diverged at ring size {}", ring.len()));
+            }
+        }
+        // merge-op accounting: amortized ≤ 2 structural merges per push
+        if store.merge_ops() > 2 * steps as u64 {
+            return Err(format!("{} merges for {steps} pushes", store.merge_ops()));
         }
         Ok(())
     });
