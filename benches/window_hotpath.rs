@@ -16,6 +16,13 @@
 //!   structural-merge counter, which is the noise-free flatness witness
 //!   (amortized ≤ 2 merges/slide at every ratio).
 //!
+//! A second section validates **quantile merge drift** (ISSUE 5): at pane
+//! ratios {64, 256, 1024} the two-stacks store's merged span sketch is
+//! compared against the exact rank of the span's raw values; BENCH_CHECK
+//! asserts the observed rank error stays within the sketch's *reported*
+//! `eps()` — the honest, depth-aware bound the bounded-drift compaction
+//! discipline maintains.
+//!
 //! Knobs: `BENCH_SMOKE=1` (reduced iterations, side JSON) and
 //! `BENCH_CHECK=1` (self-contained flatness/contrast assertions; exits
 //! non-zero on violation).  Emits `BENCH_window_hotpath.json`.
@@ -35,6 +42,11 @@ const JSON_PATH: &str = "BENCH_window_hotpath.json";
 const SMOKE_JSON_PATH: &str = "BENCH_window_hotpath.smoke.json";
 const SLIDE_MS: u64 = 1_000;
 const RATIOS: [usize; 3] = [4, 16, 64];
+/// Long-window ratios for the quantile-drift validation (the regime the
+/// ROADMAP flagged as unprofiled for cluster-quality drift).
+const DRIFT_RATIOS: [usize; 3] = [64, 256, 1024];
+/// Quantiles probed by the drift check.
+const DRIFT_QS: [f64; 6] = [0.05, 0.25, 0.5, 0.75, 0.95, 0.99];
 
 /// Deterministic pane stream: every pane carries `items_per_pane` sampled
 /// items over 3 strata plus matching counters/ground truth.
@@ -127,6 +139,74 @@ struct Row {
     sketch_ops: f64,
 }
 
+struct DriftRow {
+    ratio: usize,
+    max_rank_err: f64,
+    reported_eps: f64,
+    merge_depth: u32,
+}
+
+/// Drive `ratio + ratio/2` panes of heavy-tailed values through a
+/// two-stacks quantile-pane store and measure the merged span sketch's
+/// worst rank error against the exact values of the final window span.
+fn bench_quantile_drift(ratio: usize, per_pane: usize, seed: u64) -> DriftRow {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut store: PaneStore<QuantileSketch> = PaneStore::new(ratio);
+    let mut window_vals: VecDeque<Vec<f64>> = VecDeque::with_capacity(ratio + 1);
+    for _ in 0..(ratio + ratio / 2) {
+        let mut sk = QuantileSketch::new(200);
+        let mut vals = Vec::with_capacity(per_pane);
+        for _ in 0..per_pane {
+            let v = rng.log_normal(6.9, 1.5);
+            sk.offer(v, 1.0);
+            vals.push(v);
+        }
+        store.push(sk);
+        window_vals.push_back(vals);
+        if window_vals.len() > ratio {
+            window_vals.pop_front();
+        }
+    }
+    let agg = store.aggregate().expect("non-empty span");
+    let mut all: Vec<f64> = window_vals.iter().flatten().copied().collect();
+    all.sort_by(|a, b| a.partial_cmp(b).expect("finite values"));
+    let mut max_err = 0.0f64;
+    for &q in &DRIFT_QS {
+        let v = agg.quantile(q);
+        let rank = all.partition_point(|&x| x <= v) as f64 / all.len() as f64;
+        max_err = max_err.max((rank - q).abs());
+    }
+    DriftRow {
+        ratio,
+        max_rank_err: max_err,
+        reported_eps: agg.eps(),
+        merge_depth: agg.merge_depth(),
+    }
+}
+
+fn check_drift(rows: &[DriftRow]) -> bool {
+    let mut ok = true;
+    for r in rows {
+        if r.max_rank_err > r.reported_eps {
+            eprintln!(
+                "drift check FAILED: ratio {}: observed rank error {:.4} exceeds reported \
+                 eps {:.4} (merge depth {})",
+                r.ratio, r.max_rank_err, r.reported_eps, r.merge_depth
+            );
+            ok = false;
+        }
+    }
+    if ok {
+        let last = rows.last().expect("rows");
+        eprintln!(
+            "drift ok: worst rank error {:.4} <= reported eps {:.4} at ratio {} \
+             (merge depth {})",
+            last.max_rank_err, last.reported_eps, last.ratio, last.merge_depth
+        );
+    }
+    ok
+}
+
 fn check_flatness(rows: &[Row]) -> bool {
     let mut ok = true;
     let r4 = &rows[0];
@@ -188,7 +268,14 @@ fn check_flatness(rows: &[Row]) -> bool {
     ok
 }
 
-fn write_json(path: &str, rows: &[Row], mode: &str, items_per_pane: usize, intervals: usize) {
+fn write_json(
+    path: &str,
+    rows: &[Row],
+    drift: &[DriftRow],
+    mode: &str,
+    items_per_pane: usize,
+    intervals: usize,
+) {
     let ratios = Value::Obj(
         rows.iter()
             .map(|r| {
@@ -204,6 +291,21 @@ fn write_json(path: &str, rows: &[Row], mode: &str, items_per_pane: usize, inter
             })
             .collect(),
     );
+    let drift_obj = Value::Obj(
+        drift
+            .iter()
+            .map(|r| {
+                (
+                    format!("{}", r.ratio),
+                    obj(vec![
+                        ("max_rank_err", Value::Num(r.max_rank_err)),
+                        ("reported_eps", Value::Num(r.reported_eps)),
+                        ("merge_depth", Value::Num(r.merge_depth as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
     let doc = obj(vec![
         ("bench", Value::Str("window_hotpath".into())),
         ("provenance", Value::Str("cargo-bench".into())),
@@ -212,6 +314,7 @@ fn write_json(path: &str, rows: &[Row], mode: &str, items_per_pane: usize, inter
         ("items_per_pane", Value::Num(items_per_pane as f64)),
         ("intervals", Value::Num(intervals as f64)),
         ("ratios", ratios),
+        ("quantile_drift", drift_obj),
     ]);
     match std::fs::write(path, doc.to_string()) {
         Ok(()) => println!("wrote {path}"),
@@ -256,13 +359,43 @@ fn main() {
     }
     t.print();
 
-    let ok = if check { check_flatness(&rows) } else { true };
+    // Quantile merge drift at long-window ratios: the merged span sketch's
+    // worst observed rank error vs its reported (depth-aware) eps.  Same
+    // pane size in smoke and full mode — the drift sweep is cheap next to
+    // the timing loops, and shrinking panes below the compaction buffer
+    // (4c) would silently validate the raw-buffer path instead of the
+    // summary-of-summaries path the check exists for.
+    let drift_per_pane = 1_000;
+    let mut dt = Table::new(
+        format!(
+            "quantile merge drift ({drift_per_pane} values/pane, lognormal, 200 clusters, \
+             quantiles {DRIFT_QS:?})"
+        ),
+        &["w/δ ratio", "max rank err", "reported eps", "merge depth"],
+    );
+    let mut drift_rows = Vec::new();
+    for &ratio in &DRIFT_RATIOS {
+        let row = bench_quantile_drift(ratio, drift_per_pane, 7_000 + ratio as u64);
+        dt.row(vec![
+            format!("{ratio}"),
+            format!("{:.4}", row.max_rank_err),
+            format!("{:.4}", row.reported_eps),
+            format!("{}", row.merge_depth),
+        ]);
+        drift_rows.push(row);
+    }
+    dt.print();
+
+    let mut ok = if check { check_flatness(&rows) } else { true };
+    if check {
+        ok &= check_drift(&drift_rows);
+    }
     if smoke {
-        write_json(SMOKE_JSON_PATH, &rows, "smoke", items_per_pane, intervals);
+        write_json(SMOKE_JSON_PATH, &rows, &drift_rows, "smoke", items_per_pane, intervals);
     } else if ok {
-        write_json(JSON_PATH, &rows, "full", items_per_pane, intervals);
+        write_json(JSON_PATH, &rows, &drift_rows, "full", items_per_pane, intervals);
     } else {
-        eprintln!("flatness check failed: leaving {JSON_PATH} untouched");
+        eprintln!("flatness/drift check failed: leaving {JSON_PATH} untouched");
     }
     if !ok {
         std::process::exit(1);

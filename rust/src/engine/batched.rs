@@ -57,7 +57,8 @@ impl<'a> BatchedEngine<'a> {
         let interval = gcd_fit(interval, self.window.slide_ms);
         let mut assembler = WindowAssembler::with_interval(self.window, interval);
         // Pane-level sketches for sketch-backed queries: one sketch per
-        // batch, merged incrementally at the window boundary.
+        // batch, built by the ingest workers (spec registered below) and
+        // merged incrementally at the window boundary.
         let mut sketches = if self.config.sketch_panes {
             SketchWindow::for_query(
                 &self.query,
@@ -67,12 +68,24 @@ impl<'a> BatchedEngine<'a> {
         } else {
             None
         };
+        // Long-window spill: with pre-built pane sketches the window's
+        // sample deque has no reader, so past the configured ratio the
+        // assembler keeps only pane summaries.
+        if sketches.is_some() && self.config.spills_at(assembler.panes_per_window()) {
+            assembler.spill_samples();
+        }
         let mut pool = IngestPool::new(
             sampler_kind,
             self.config.workers,
             cost.fraction(),
             self.config.seed,
         );
+        // Sketch registration is a control-plane message on the pool: the
+        // acked rendezvous orders it before every chunk of the run.
+        if let Some(sw) = &sketches {
+            pool.register_sketches(&[sw.spec()]);
+        }
+        let query_builds_at_start = self.executor.query_time_sketch_builds();
 
         let mut report = RunReport::default();
         let mut exact = ExactAgg::default();
@@ -100,13 +113,20 @@ impl<'a> BatchedEngine<'a> {
             report.items_processed += batch_items.len() as u64;
 
             // Close the batch: per-worker finish + merge (the per-batch
-            // scheduling rendezvous).
+            // scheduling rendezvous).  Registered pane sketches come back
+            // pre-built from the workers.
             let t0 = Instant::now();
-            let batch_result = pool.finish_interval();
+            let (batch_result, mut pane_sketches) = pool.finish_interval_with_sketches();
             let batch_exact = std::mem::take(&mut exact);
 
             if let Some(sw) = sketches.as_mut() {
-                sw.push_pane(&batch_result);
+                // The engines register exactly one spec; pop() would
+                // silently mispair if that ever changed.
+                debug_assert!(pane_sketches.len() <= 1, "one registered spec per engine run");
+                match pane_sketches.pop() {
+                    Some(pane) => sw.push_prebuilt(pane),
+                    None => sw.push_pane(&batch_result),
+                }
             }
             if let Some(ws) = assembler.push_interval_view(batch_result, batch_exact) {
                 // The data-parallel job over the window: pane sketches for
@@ -155,6 +175,12 @@ impl<'a> BatchedEngine<'a> {
         }
 
         report.wall_ns = start.elapsed().as_nanos() as u64;
+        report.sketch_ingest = sketches.as_ref().map(|sw| {
+            super::SketchIngestStats::collect(
+                sw,
+                self.executor.query_time_sketch_builds().saturating_sub(query_builds_at_start),
+            )
+        });
         Ok(report)
     }
 }
@@ -321,6 +347,11 @@ mod tests {
             for w in &r.windows {
                 assert!(w.result.value().is_finite(), "non-finite sketch result");
             }
+            // streaming ingest: every pane arrived pre-built, zero rebuilt
+            let stats = r.sketch_ingest.expect("sketch run must report provenance");
+            assert!(stats.prebuilt_panes > 0);
+            assert_eq!(stats.rebuilt_panes, 0);
+            assert_eq!(stats.query_time_builds, 0);
         }
         // TopK: exact per-stratum counts available -> accuracy loss finite
         let engine = BatchedEngine::new(&cfg, window, crate::query::Query::TopK(2), &exec);

@@ -19,7 +19,37 @@ use crate::budget::{CostFunction, QueryBudget};
 use crate::core::{Error, EventTime, Result};
 use crate::query::{Query, QueryResult};
 
-pub use worker::{IngestPool, TransportStats};
+pub use worker::{IngestPool, TransportStats, WorkerFinish};
+
+/// Provenance counters for the pane-sketch path of one run — the
+/// acceptance witness of the streaming sketch ingest tentpole: on the
+/// default path every pane arrives pre-built from the ingest workers and
+/// both `rebuilt_panes` and `query_time_builds` stay at zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SketchIngestStats {
+    /// Pane sketches that arrived pre-built from the ingest workers.
+    pub prebuilt_panes: u64,
+    /// Pane sketches rebuilt from interval samples at the window operator
+    /// (the fallback when the pool had no registration).
+    pub rebuilt_panes: u64,
+    /// Sketches constructed at query time by the executor during this run
+    /// (the per-window rebuild path; counts this engine's executor only —
+    /// sharing one executor across concurrent runs mixes the deltas).
+    pub query_time_builds: u64,
+}
+
+impl SketchIngestStats {
+    /// Snapshot a run's pane provenance from its window (the executor's
+    /// build delta is filled in by the engine, which owns the snapshot
+    /// taken at run start) — the one place the stats shape is assembled.
+    pub(crate) fn collect(sw: &crate::query::SketchWindow, query_time_builds: u64) -> Self {
+        Self {
+            prebuilt_panes: sw.prebuilt_panes(),
+            rebuilt_panes: sw.rebuilt_panes(),
+            query_time_builds,
+        }
+    }
+}
 
 /// Reject query/budget combinations the feedback loop cannot serve:
 /// sketch-native bounds (rank ε, HLL RSE, Count-Min over-bound) are set by
@@ -79,7 +109,22 @@ pub struct EngineConfig {
     /// per-window rebuild from the merged sample (O(window) per slide).
     /// On by default; turn off to get the seed's per-window weighting.
     pub sketch_panes: bool,
+    /// Window/slide (pane) ratio at or above which a sketch-backed query's
+    /// window spills its sample deque to compressed pane summaries
+    /// (counters + ground truth + lengths; the items are dropped — pane
+    /// sketches arrive pre-built, so nothing reads them).  Long-window
+    /// state then stays O(ratio × summary) instead of O(window sample).
+    /// Linear queries never spill (they execute over the sample).
+    pub spill_ratio: usize,
     pub seed: u64,
+}
+
+impl EngineConfig {
+    /// Whether a sketch-query window of `panes_per_window` panes spills its
+    /// sample deque — the single home of the threshold semantics.
+    pub(crate) fn spills_at(&self, panes_per_window: usize) -> bool {
+        panes_per_window >= self.spill_ratio
+    }
 }
 
 impl Default for EngineConfig {
@@ -92,6 +137,7 @@ impl Default for EngineConfig {
             track_exact: true,
             channel_capacity: 16 * 1024,
             sketch_panes: true,
+            spill_ratio: 128,
             seed: 42,
         }
     }
@@ -131,6 +177,9 @@ pub struct RunReport {
     pub windows: Vec<WindowReport>,
     pub items_processed: u64,
     pub wall_ns: u64,
+    /// Pane-sketch provenance (None for linear queries or when
+    /// `sketch_panes` is off).
+    pub sketch_ingest: Option<SketchIngestStats>,
 }
 
 impl RunReport {
@@ -226,6 +275,7 @@ mod tests {
             windows: vec![dummy_report(101.0, 100.0, 1000), dummy_report(99.0, 100.0, 3000)],
             items_processed: 1_000_000,
             wall_ns: 500_000_000, // 0.5 s
+            sketch_ingest: None,
         };
         assert!((r.throughput() - 2_000_000.0).abs() < 1.0);
         assert!((r.mean_accuracy_loss() - 0.01).abs() < 1e-12);

@@ -18,14 +18,15 @@ use std::time::Instant;
 use crate::budget::CostFunction;
 use crate::core::{Item, Result};
 use crate::error::bounds::ConfidenceInterval;
-use crate::query::{Query, QueryExecutor, SketchWindow};
+use crate::query::{sketch_spec_for, Query, QueryExecutor, SketchWindow};
 use crate::sampling::{SampleResult, SamplerKind};
+use crate::sketch::PaneSketch;
 use crate::util::channel::bounded;
 use crate::window::{ExactAgg, WindowAssembler, WindowConfig};
 
 use super::batched::exact_values;
 use super::worker::IngestPool;
-use super::{EngineConfig, RunReport, WindowReport};
+use super::{EngineConfig, RunReport, SketchIngestStats, WindowReport};
 
 /// Pipelined engine over a finite, event-time-sorted trace.
 pub struct PipelinedEngine<'a> {
@@ -39,6 +40,9 @@ pub struct PipelinedEngine<'a> {
 struct IntervalMsg {
     result: SampleResult,
     exact: ExactAgg,
+    /// The interval's pane sketch, pre-built by the ingest workers (None
+    /// when no sketch query is registered on the pool).
+    sketch: Option<PaneSketch>,
     /// ns spent closing the interval (sampling-side latency share).
     close_ns: u64,
 }
@@ -78,6 +82,18 @@ impl<'a> PipelinedEngine<'a> {
             cost.fraction(),
             self.config.seed,
         );
+        // Streaming sketch ingest: register the query's sketch spec on the
+        // pool (acked control-plane rendezvous — orders before every chunk)
+        // so interval closes return pre-built pane sketches.
+        let sketch_spec = if self.config.sketch_panes {
+            sketch_spec_for(&self.query, self.executor.sketch_params())
+        } else {
+            None
+        };
+        if let Some(spec) = sketch_spec {
+            pool.register_sketches(&[spec]);
+        }
+        let query_builds_at_start = self.executor.query_time_sketch_builds();
         // Window-level observations flow back from the query operator.
         // Sized to the interval channel: the consumer emits at most one
         // observation per interval message, so this can never fill and
@@ -88,18 +104,19 @@ impl<'a> PipelinedEngine<'a> {
         let start = Instant::now();
         let mut items_processed = 0u64;
 
-        let windows = std::thread::scope(|scope| -> Result<Vec<WindowReport>> {
+        type ConsumerOut = (Vec<WindowReport>, Option<SketchIngestStats>);
+        let (windows, pane_stats) = std::thread::scope(|scope| -> Result<ConsumerOut> {
             // Window/query operator: runs concurrently with ingest.
             let query = self.query.clone();
             let executor = self.executor;
             let window_cfg = self.window;
-            let track_exact = self.config.track_exact;
-            let sketch_panes = self.config.sketch_panes;
-            let consumer = scope.spawn(move || -> Result<Vec<WindowReport>> {
+            let config = self.config;
+            let consumer = scope.spawn(move || -> Result<ConsumerOut> {
                 let mut assembler = WindowAssembler::new(window_cfg);
-                // Pane-level sketches: one per slide interval, merged
+                // Pane-level sketches: one per slide interval, arriving
+                // pre-built from the ingest workers and merged
                 // incrementally through the two-stacks store.
-                let mut sketches = if sketch_panes {
+                let mut sketches = if config.sketch_panes {
                     SketchWindow::for_query(
                         &query,
                         executor.sketch_params(),
@@ -108,11 +125,20 @@ impl<'a> PipelinedEngine<'a> {
                 } else {
                     None
                 };
+                // Long-window spill: pane sketches make the sample deque
+                // readerless, so past the ratio threshold keep summaries
+                // only.
+                if sketches.is_some() && config.spills_at(assembler.panes_per_window()) {
+                    assembler.spill_samples();
+                }
                 let mut out = Vec::new();
                 while let Some(msg) = rx.recv() {
                     let t0 = Instant::now();
                     if let Some(sw) = sketches.as_mut() {
-                        sw.push_pane(&msg.result);
+                        match msg.sketch {
+                            Some(pane) => sw.push_prebuilt(pane),
+                            None => sw.push_pane(&msg.result),
+                        }
                     }
                     if let Some(ws) = assembler.push_interval_view(msg.result, msg.exact) {
                         let qr = match &sketches {
@@ -120,7 +146,7 @@ impl<'a> PipelinedEngine<'a> {
                             None => executor.execute_view(&query, &ws)?,
                         };
                         let processing_ns = msg.close_ns + t0.elapsed().as_nanos() as u64;
-                        let (exact_scalar, exact_ps) = if track_exact {
+                        let (exact_scalar, exact_ps) = if config.track_exact {
                             exact_values(&query, &ws.exact)
                         } else {
                             (None, None)
@@ -150,7 +176,11 @@ impl<'a> PipelinedEngine<'a> {
                         });
                     }
                 }
-                Ok(out)
+                // Executor build-delta is filled in by the engine after the
+                // join (it owns the run-start snapshot).
+                let pane_stats =
+                    sketches.map(|sw| SketchIngestStats::collect(&sw, 0));
+                Ok((out, pane_stats))
             });
 
             // Source + sampling operator (this thread): forward items
@@ -175,10 +205,17 @@ impl<'a> PipelinedEngine<'a> {
                 pool.offer_slice(interval_items);
                 items_processed += interval_items.len() as u64;
                 let t0 = Instant::now();
-                let result = pool.finish_interval();
+                let (result, mut pane_sketches) = pool.finish_interval_with_sketches();
                 let close_ns = t0.elapsed().as_nanos() as u64;
-                let msg =
-                    IntervalMsg { result, exact: std::mem::take(&mut exact), close_ns };
+                // The engines register exactly one spec; pop() would
+                // silently mispair if that ever changed.
+                debug_assert!(pane_sketches.len() <= 1, "one registered spec per engine run");
+                let msg = IntervalMsg {
+                    result,
+                    exact: std::mem::take(&mut exact),
+                    sketch: pane_sketches.pop(),
+                    close_ns,
+                };
                 tx.send(msg)
                     .map_err(|_| crate::core::Error::Stream("query operator died".into()))?;
                 next_interval_end += self.window.slide_ms;
@@ -213,6 +250,13 @@ impl<'a> PipelinedEngine<'a> {
             windows,
             items_processed,
             wall_ns: start.elapsed().as_nanos() as u64,
+            sketch_ingest: pane_stats.map(|mut stats| {
+                stats.query_time_builds = self
+                    .executor
+                    .query_time_sketch_builds()
+                    .saturating_sub(query_builds_at_start);
+                stats
+            }),
         })
     }
 }
@@ -298,6 +342,11 @@ mod tests {
             assert!(!top.is_empty() && top.len() <= 3);
             assert!(top.windows(2).all(|p| p[0].1 >= p[1].1), "unsorted top-k");
         }
+        // streaming ingest provenance: panes pre-built by the pool workers
+        let stats = r.sketch_ingest.expect("sketch run must report provenance");
+        assert!(stats.prebuilt_panes > 0);
+        assert_eq!(stats.rebuilt_panes, 0);
+        assert_eq!(stats.query_time_builds, 0);
         // weighted-reservoir sampler also flows through the pipelined path
         // (plumbing only — value-biased sampling gives uncalibrated
         // quantiles, see sampling/weighted.rs docs)

@@ -19,12 +19,26 @@
 //! chunks, the worker drains them and hands the emptied buffers back
 //! through a second (return) ring, so steady-state ingest performs **zero
 //! heap allocations and takes zero locks** — buffers just circulate.
-//! Control messages (finish/counts/set-fraction) are rare rendezvous
-//! events and stay on the blocking MPMC channel; a worker always drains
-//! its data ring before acting on a control message, which preserves the
-//! chunks-before-finish ordering the single-threaded coordinator
-//! guarantees at send time.  [`TransportStats`] exposes the recycle hit
-//! rate so tests can assert the zero-allocation property.
+//! Control messages (finish/counts/set-fraction/register-sketches) are
+//! rare rendezvous events and stay on the blocking MPMC channel; a worker
+//! always drains its data ring before acting on a control message, which
+//! preserves the chunks-before-finish ordering the single-threaded
+//! coordinator guarantees at send time.  [`TransportStats`] exposes the
+//! recycle hit rate so tests can assert the zero-allocation property.
+//!
+//! **Streaming sketch ingest.**  A sketch-backed query registers its
+//! [`SketchSpec`] on the pool ([`IngestPool::register_sketches`]) over the
+//! same acked rendezvous as `set_fraction`, so registration orders before
+//! any subsequent chunk.  From then on every interval close returns, next
+//! to the merged sample, one **pre-built [`PaneSketch`] per spec**: each
+//! worker folds its own finished interval sample into a sketch partial
+//! (Horvitz–Thompson weights from its local counters — sample membership
+//! and weights only finalize at close, so that is the earliest the fold
+//! is sound for reservoir samplers) and the coordinator merges the
+//! partials through the same barrier-free associative combine as the
+//! sample results.  Pane sketches therefore arrive at the window operator
+//! already built: the per-pane O(interval sample) sketch construction
+//! moves off the query path and parallelizes across the ingest workers.
 //!
 //! With `workers == 1` the pool runs inline (no threads, no rings) — the
 //! single-core configuration and the pipelined engine's sampling operator
@@ -37,6 +51,7 @@ use crate::sampling::{
     NoopSampler, OasrsSampler, SampleResult, Sampler, SamplerKind, SrsSampler,
     WeightedResSampler,
 };
+use crate::sketch::{PaneSketch, SketchSpec};
 use crate::util::channel::{bounded, Receiver, Sender, TryRecvError};
 use crate::util::rng::Rng;
 use crate::util::spsc::{self, spsc, SpscReceiver, SpscSender};
@@ -198,21 +213,38 @@ const RING_CAP: usize = 16;
 /// allocation later).
 const RETURN_RING_CAP: usize = RING_CAP + 2;
 
+/// One worker's interval close: the local sample plus one pre-built
+/// sketch partial per registered spec (empty when nothing is registered).
+pub struct WorkerFinish {
+    pub result: SampleResult,
+    pub sketches: Vec<PaneSketch>,
+}
+
 /// Control-plane messages (rare rendezvous events — the chunk traffic rides
 /// the SPSC rings instead).
 enum Msg {
     /// Simple one-round finish (OASRS/SRS/native).
-    Finish(Sender<SampleResult>),
+    Finish(Sender<WorkerFinish>),
     /// STS phase 1.
     Counts(Sender<[usize; MAX_STRATA]>),
     /// STS phase 2.
-    FinishSts([usize; MAX_STRATA], Sender<SampleResult>),
+    FinishSts([usize; MAX_STRATA], Sender<WorkerFinish>),
     /// Fraction update with an ack rendezvous: the coordinator waits for
     /// every worker's ack before accepting more items, so no chunk shipped
     /// *after* `set_fraction` can be ingested under the old fraction (the
     /// old single-channel transport got that ordering for free; with a
     /// separate data plane it must be explicit).
     SetFraction(f64, Sender<()>),
+    /// Sketch-registration update, same acked rendezvous discipline as
+    /// `SetFraction`: no chunk shipped after `register_sketches` can close
+    /// into an interval that lacks the registered partials.
+    RegisterSketches(Vec<SketchSpec>, Sender<()>),
+}
+
+/// The worker-side sketch fold: one partial per registered spec, built
+/// from the finished interval's sample with the interval's own HT weights.
+fn build_partials(specs: &[SketchSpec], result: &SampleResult) -> Vec<PaneSketch> {
+    specs.iter().map(|spec| spec.build(result)).collect()
 }
 
 /// Counters for the chunk transport (threaded pools only).
@@ -330,6 +362,9 @@ pub struct IngestPool {
     fraction: f64,
     imp: PoolImpl,
     n_workers: usize,
+    /// Registered per-query sketch specs (the inline pool builds partials
+    /// from these at close; threaded workers hold their own copy).
+    specs: Vec<SketchSpec>,
 }
 
 /// Worker thread body: drain the data ring eagerly (recycling each emptied
@@ -353,6 +388,7 @@ fn worker_loop(
             }
             any
         };
+    let mut specs: Vec<SketchSpec> = Vec::new();
     let mut idle = 0u32;
     loop {
         let mut worked = drain(&mut sampler);
@@ -364,7 +400,9 @@ fn worker_loop(
                 drain(&mut sampler);
                 match msg {
                     Msg::Finish(reply) => {
-                        let _ = reply.send(sampler.finish_simple());
+                        let result = sampler.finish_simple();
+                        let sketches = build_partials(&specs, &result);
+                        let _ = reply.send(WorkerFinish { result, sketches });
                     }
                     Msg::Counts(reply) => {
                         if let WorkerSampler::Sts(s) = &sampler {
@@ -373,11 +411,17 @@ fn worker_loop(
                     }
                     Msg::FinishSts(targets, reply) => {
                         if let WorkerSampler::Sts(s) = &mut sampler {
-                            let _ = reply.send(s.finish_with_targets(&targets));
+                            let result = s.finish_with_targets(&targets);
+                            let sketches = build_partials(&specs, &result);
+                            let _ = reply.send(WorkerFinish { result, sketches });
                         }
                     }
                     Msg::SetFraction(f, reply) => {
                         sampler.set_fraction(f);
+                        let _ = reply.send(());
+                    }
+                    Msg::RegisterSketches(new_specs, reply) => {
+                        specs = new_specs;
                         let _ = reply.send(());
                     }
                 }
@@ -445,7 +489,7 @@ impl IngestPool {
                 stats,
             })
         };
-        Self { kind, fraction, imp, n_workers: n }
+        Self { kind, fraction, imp, n_workers: n, specs: Vec::new() }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -484,21 +528,39 @@ impl IngestPool {
         }
     }
 
-    /// Close the interval on every worker and merge their results.
+    /// Close the interval on every worker and merge their results
+    /// (sketch-partial-free view of
+    /// [`Self::finish_interval_with_sketches`]).
     pub fn finish_interval(&mut self) -> SampleResult {
+        self.finish_interval_with_sketches().0
+    }
+
+    /// Close the interval on every worker and merge their results *and*
+    /// their pre-built sketch partials — one merged [`PaneSketch`] per
+    /// registered spec, in registration order (empty when nothing is
+    /// registered).  Worker partials fold in worker order, the same
+    /// barrier-free associative combine as the samples, so a single-worker
+    /// pool returns a sketch byte-identical to rebuilding from the merged
+    /// interval result.
+    pub fn finish_interval_with_sketches(&mut self) -> (SampleResult, Vec<PaneSketch>) {
         match &mut self.imp {
-            PoolImpl::Inline(s) => match s.as_mut() {
-                WorkerSampler::Sts(sts) => {
-                    // Single worker: counts -> proportional targets -> sample.
-                    let counts = sts.local_counts();
-                    let targets = proportional_targets(&counts, self.fraction);
-                    sts.finish_with_targets(&targets)
-                }
-                other => other.finish_simple(),
-            },
+            PoolImpl::Inline(s) => {
+                let result = match s.as_mut() {
+                    WorkerSampler::Sts(sts) => {
+                        // Single worker: counts -> proportional targets ->
+                        // sample.
+                        let counts = sts.local_counts();
+                        let targets = proportional_targets(&counts, self.fraction);
+                        sts.finish_with_targets(&targets)
+                    }
+                    other => other.finish_simple(),
+                };
+                let sketches = build_partials(&self.specs, &result);
+                (result, sketches)
+            }
             PoolImpl::Threaded(t) => {
                 t.flush();
-                if self.kind == SamplerKind::Sts {
+                let finishes: Vec<WorkerFinish> = if self.kind == SamplerKind::Sts {
                     // Phase 1: count pass (synchronization barrier — the
                     // coordinator must gather every worker's counts before
                     // any worker may sample).
@@ -530,9 +592,7 @@ impl IngestPool {
                         let _ = tx.send(Msg::FinishSts(worker_targets[w], rtx));
                         replies.push(rrx);
                     }
-                    merge_worker_results(
-                        replies.into_iter().filter_map(|r| r.recv()).collect(),
-                    )
+                    replies.into_iter().filter_map(|r| r.recv()).collect()
                 } else {
                     let mut replies = Vec::new();
                     for tx in t.ctrl_txs.iter() {
@@ -540,10 +600,45 @@ impl IngestPool {
                         let _ = tx.send(Msg::Finish(rtx));
                         replies.push(rrx);
                     }
-                    merge_worker_results(
-                        replies.into_iter().filter_map(|r| r.recv()).collect(),
-                    )
+                    replies.into_iter().filter_map(|r| r.recv()).collect()
+                };
+                // Merge samples and sketch partials in worker order — the
+                // same grouping, so weights and concatenation stay aligned.
+                let mut sketches: Vec<PaneSketch> = Vec::new();
+                let mut results = Vec::with_capacity(finishes.len());
+                for f in finishes {
+                    if sketches.is_empty() {
+                        sketches = f.sketches;
+                    } else {
+                        debug_assert_eq!(sketches.len(), f.sketches.len());
+                        for (acc, part) in sketches.iter_mut().zip(&f.sketches) {
+                            acc.merge_same(part);
+                        }
+                    }
+                    results.push(f.result);
                 }
+                (merge_worker_results(results), sketches)
+            }
+        }
+    }
+
+    /// Register the sketch specs every interval close should pre-build
+    /// partials for (one [`PaneSketch`] per spec per close).  Blocks until
+    /// every worker has applied the registration — the same acked
+    /// rendezvous as [`Self::set_fraction`], so registration orders before
+    /// any chunk shipped afterwards.  Replaces any previous registration;
+    /// an empty slice unregisters.
+    pub fn register_sketches(&mut self, specs: &[SketchSpec]) {
+        self.specs = specs.to_vec();
+        if let PoolImpl::Threaded(t) = &mut self.imp {
+            let mut acks = Vec::new();
+            for tx in &t.ctrl_txs {
+                let (rtx, rrx) = bounded(1);
+                let _ = tx.send(Msg::RegisterSketches(self.specs.clone(), rtx));
+                acks.push(rrx);
+            }
+            for ack in acks {
+                let _ = ack.recv();
             }
         }
     }
@@ -907,6 +1002,118 @@ mod tests {
                     assert!(o[s] <= c[s]);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn unregistered_pool_returns_no_sketches() {
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 2, 0.5, 40);
+        feed(&mut p, 2_000, 3);
+        let (r, sks) = p.finish_interval_with_sketches();
+        assert_eq!(r.arrived(), 2_000.0);
+        assert!(sks.is_empty());
+    }
+
+    #[test]
+    fn inline_prebuilt_sketch_is_byte_identical_to_rebuild() {
+        use crate::sketch::SketchSpec;
+        // Two identical single-worker pools: one registered, one not.  The
+        // worker-built pane sketch must equal rebuilding from the merged
+        // interval result bit-for-bit (the tentpole's single-worker
+        // acceptance gate at the pool level).
+        let specs = [
+            SketchSpec::Quantile { clusters: 64 },
+            SketchSpec::Distinct { precision: 10 },
+            SketchSpec::TopK { capacity: 16, cm_width: 256, cm_depth: 4, seed: 0x70_4B },
+        ];
+        let mut registered = IngestPool::new(SamplerKind::Oasrs, 1, 0.4, 41);
+        let mut plain = IngestPool::new(SamplerKind::Oasrs, 1, 0.4, 41);
+        registered.register_sketches(&specs);
+        for interval in 0..3 {
+            for i in 0..5_000u64 {
+                let it = Item::new((i % 4) as u16, (i * 7 % 1000) as f64, interval * 5_000 + i);
+                registered.offer(it);
+                plain.offer(it);
+            }
+            let (ra, sks) = registered.finish_interval_with_sketches();
+            let rb = plain.finish_interval();
+            assert_eq!(ra.sample, rb.sample, "registration changed the sample");
+            assert_eq!(ra.state, rb.state);
+            assert_eq!(sks.len(), specs.len());
+            for (spec, built) in specs.iter().zip(&sks) {
+                assert!(built.matches(spec));
+                assert_eq!(*built, spec.build(&rb), "worker-built != rebuild");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_partials_merge_to_consistent_sketches() {
+        use crate::sketch::{PaneSketch, SketchSpec};
+        // 3 workers, registered quantile + top-k.  Partials merge through
+        // the same associative combine as the samples; per-stratum sketch
+        // mass must match the arrival counters exactly (Σ HT weights of a
+        // stratum's sample = C_i for count-based samplers).
+        let specs = [
+            SketchSpec::Quantile { clusters: 100 },
+            SketchSpec::TopK { capacity: 16, cm_width: 1024, cm_depth: 4, seed: 0x70_4B },
+        ];
+        let mut p = IngestPool::new(SamplerKind::Oasrs, 3, 0.3, 42);
+        p.register_sketches(&specs);
+        // warm-up interval so OASRS capacities are sized
+        feed(&mut p, 30_000, 4);
+        p.finish_interval();
+        feed(&mut p, 30_000, 4);
+        let (r, sks) = p.finish_interval_with_sketches();
+        assert_eq!(sks.len(), 2);
+        let arrived = r.arrived();
+        match &sks[0] {
+            PaneSketch::Quantile(sk) => {
+                assert!(
+                    (sk.total_weight() - arrived).abs() <= 1e-6 * arrived,
+                    "quantile mass {} vs arrivals {arrived}",
+                    sk.total_weight()
+                );
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match &sks[1] {
+            PaneSketch::TopK(hh) => {
+                assert!((hh.total_weight() - arrived).abs() <= 1e-6 * arrived);
+                for (key, count) in hh.top_k(4) {
+                    let c = r.state.c[key as usize];
+                    assert!(
+                        (count - c).abs() <= 1e-6 * c.max(1.0),
+                        "stratum {key}: sketch count {count} vs arrivals {c}"
+                    );
+                }
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // next interval: partials reset
+        let (_, sks2) = p.finish_interval_with_sketches();
+        match &sks2[0] {
+            PaneSketch::Quantile(sk) => assert!(sk.is_empty()),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn registration_orders_before_subsequent_chunks() {
+        use crate::sketch::{PaneSketch, SketchSpec};
+        // Register mid-stream: every item offered after the (acked)
+        // registration must be captured in the next close's partials.
+        let mut p = IngestPool::new(SamplerKind::None, 2, 1.0, 43);
+        feed(&mut p, 1_000, 2);
+        p.finish_interval();
+        p.register_sketches(&[SketchSpec::Quantile { clusters: 32 }]);
+        feed(&mut p, 4_000, 2);
+        let (r, sks) = p.finish_interval_with_sketches();
+        assert_eq!(r.sample.len(), 4_000);
+        match &sks[0] {
+            // native sampler: weight 1 per item — the partials saw all 4000
+            PaneSketch::Quantile(sk) => assert_eq!(sk.total_weight(), 4_000.0),
+            other => panic!("wrong kind: {other:?}"),
         }
     }
 

@@ -140,11 +140,24 @@ pub fn weight_from(weights: &[f64; K], stratum: u16) -> f64 {
 /// empty strata, so callers never scale by garbage).  Shared by
 /// [`estimate`] and the pane-level sketch builders, which weight each
 /// interval's items by that interval's own counters.
+///
+/// **Arrived-but-unsampled strata** (`C_i > 0`, `N_i = 0`): there is no
+/// selected item to carry the stratum's mass, so any non-zero weight would
+/// either be scaled onto nothing or — worse — a non-finite `C_i / 0` that
+/// [`crate::sketch::QuantileSketch::offer`] silently drops.  The weight is
+/// pinned to an explicit `0.0` and the loss is surfaced through
+/// [`crate::metrics::zero_weight_strata`], so an undercount from a
+/// mis-sized sampler is observable instead of vanishing.
 pub fn weights_for(state: &StrataState) -> [f64; K] {
     let mut weights = [1.0f64; K];
     for i in 0..K {
         if state.c[i] > state.n_cap[i] {
-            weights[i] = state.c[i] / state.n_cap[i].max(1.0);
+            if state.n_cap[i] > 0.0 {
+                weights[i] = state.c[i] / state.n_cap[i];
+            } else {
+                weights[i] = 0.0;
+                crate::metrics::record_zero_weight_stratum();
+            }
         }
     }
     weights
@@ -302,6 +315,31 @@ mod tests {
         let items = vec![(0u16, 1.0), (99u16, 5.0)];
         let p = StrataPartials::from_sample(&items);
         assert_eq!(p.total_y(), 1.0);
+    }
+
+    #[test]
+    fn zero_sample_stratum_gets_zero_weight_and_is_counted() {
+        let before = crate::metrics::zero_weight_strata();
+        let mut st = StrataState::default();
+        st.c[0] = 50.0; // arrived, sampled nothing (n_cap stays 0)
+        st.c[1] = 10.0;
+        st.n_cap[1] = 10.0;
+        let w = weights_for(&st);
+        assert_eq!(w[0], 0.0, "unobservable stratum must weigh 0, not C/max(N,1)");
+        assert_eq!(w[1], 1.0);
+        // other tests may tick concurrently; the counter is monotone
+        assert!(crate::metrics::zero_weight_strata() >= before + 1);
+        // the estimate over such a state stays finite and simply lacks the
+        // unobservable stratum's mass
+        let e = estimate(&StrataPartials::default(), &st);
+        assert!(e.sum.is_finite() && e.var_sum.is_finite());
+        assert_eq!(e.weights[0], 0.0);
+        // a sketch fed through these weights drops nothing silently: the
+        // zero weight is rejected by offer() while the counter above has
+        // already surfaced the loss
+        let mut sk = crate::sketch::QuantileSketch::new(16);
+        sk.offer(1.0, w[0]);
+        assert!(sk.is_empty());
     }
 
     #[test]

@@ -98,11 +98,17 @@ impl FeedbackController {
     }
 
     /// Feed one completed window's confidence interval: record its width
-    /// and adjust the fraction from its relative half-width.  Non-finite
-    /// intervals (zero-valued windows) leave the fraction unchanged, like
-    /// [`Self::observe`].
+    /// and adjust the fraction from its relative half-width.
+    ///
+    /// A non-finite interval — NaN value (an all-empty-pane window's
+    /// sketch answers NaN, and `for_quantile` then pins the band to a
+    /// NaN-valued, zero-width interval) or a NaN/inf bound — is **not an
+    /// observation**: it must touch neither the width EWMA (where a NaN
+    /// would stick forever, and a spurious 0.0 would drag the EWMA down
+    /// on every idle window) nor the fraction.  The fraction path was
+    /// always guarded through `relative()`; the EWMA now skips too.
     pub fn observe_ci(&mut self, ci: &ConfidenceInterval) -> f64 {
-        if ci.bound.is_finite() {
+        if ci.value.is_finite() && ci.bound.is_finite() {
             self.windows_observed += 1;
             self.ci_width_ewma = if self.windows_observed == 1 {
                 ci.bound
@@ -220,6 +226,34 @@ mod tests {
         let ci3 = ConfidenceInterval { value: 0.0, bound: 2.0, level: ConfidenceLevel::P95 };
         assert_eq!(c.observe_ci(&ci3), f);
         assert_eq!(c.windows_observed(), 3);
+    }
+
+    #[test]
+    fn non_finite_window_ci_never_poisons_the_loop() {
+        use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
+        // ISSUE 5 satellite: the empty-window path (sketch answers NaN →
+        // NaN-valued zero-width CI) and any NaN/inf bound must be skipped
+        // entirely — EWMA, window counter, and fraction all untouched.
+        let mut c = FeedbackController::new(0.01, 0.3);
+        let good = ConfidenceInterval { value: 10.0, bound: 1.0, level: ConfidenceLevel::P95 };
+        c.observe_ci(&good);
+        let (f, w, n) = (c.fraction(), c.window_ci_width(), c.windows_observed());
+        assert!(w.is_finite() && n == 1);
+        for bad in [
+            ConfidenceInterval { value: f64::NAN, bound: 0.0, level: ConfidenceLevel::P95 },
+            ConfidenceInterval { value: f64::NAN, bound: f64::NAN, level: ConfidenceLevel::P95 },
+            ConfidenceInterval { value: 5.0, bound: f64::NAN, level: ConfidenceLevel::P95 },
+            ConfidenceInterval { value: 5.0, bound: f64::INFINITY, level: ConfidenceLevel::P95 },
+        ] {
+            c.observe_ci(&bad);
+            assert_eq!(c.fraction(), f, "fraction moved on {bad:?}");
+            assert_eq!(c.window_ci_width(), w, "EWMA moved on {bad:?}");
+            assert_eq!(c.windows_observed(), n, "counter moved on {bad:?}");
+            assert!(c.window_ci_width().is_finite(), "EWMA poisoned by {bad:?}");
+        }
+        // a later finite window is observed normally
+        c.observe_ci(&good);
+        assert_eq!(c.windows_observed(), 2);
     }
 
     #[test]

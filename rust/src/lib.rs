@@ -72,7 +72,9 @@ pub mod prelude {
     pub use crate::query::Query;
     pub use crate::runtime::{Backend, ComputeService};
     pub use crate::sampling::SamplerKind;
-    pub use crate::sketch::{HeavyHitters, HyperLogLog, QuantileSketch, SketchParams};
+    pub use crate::sketch::{
+        HeavyHitters, HyperLogLog, PaneSketch, QuantileSketch, SketchParams, SketchSpec,
+    };
     pub use crate::stream::{StreamConfig, SubStreamSpec};
     pub use crate::window::{Mergeable, PaneStore, WindowConfig, WindowView};
 }

@@ -26,6 +26,28 @@ pub fn dropped_items() -> u64 {
     DROPPED_ITEMS.load(Ordering::Relaxed)
 }
 
+/// Observations of an arrived-but-unsampled stratum: every weight
+/// computation (`estimator::weights_for`) that meets a stratum with
+/// `C_i > 0` but `N_i = 0` pins its weight to 0 and ticks this counter.
+/// One underlying undercount event is therefore observed several times —
+/// once per sketch build, estimate, or window query that touches the
+/// interval — so treat this as a *signal* (zero vs growing), not an event
+/// count; any steady growth means a sampler is sizing some stratum's
+/// reservoir to zero, an undercount that used to be silent.
+static ZERO_WEIGHT_STRATA: AtomicU64 = AtomicU64::new(0);
+
+/// Record one arrived-but-unsampled stratum observation.
+#[inline]
+pub fn record_zero_weight_stratum() {
+    ZERO_WEIGHT_STRATA.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total arrived-but-unsampled stratum observations since process start
+/// (monotone; process-wide).
+pub fn zero_weight_strata() -> u64 {
+    ZERO_WEIGHT_STRATA.load(Ordering::Relaxed)
+}
+
 /// Summary statistics over repeated runs of the same configuration.
 #[derive(Debug, Clone, Default)]
 pub struct RunSummary {
@@ -122,6 +144,7 @@ mod tests {
             windows: vec![],
             items_processed: items,
             wall_ns: wall,
+            sketch_ingest: None,
         };
         let s = summarize(&[mk(1000, 1_000_000_000), mk(2000, 1_000_000_000)]);
         assert_eq!(s.runs, 2);

@@ -32,6 +32,7 @@ pub struct PipelineBuilder {
     nodes: usize,
     track_exact: bool,
     sketch_panes: bool,
+    spill_ratio: usize,
     seed: u64,
     sketch: SketchParams,
 }
@@ -49,6 +50,7 @@ impl Default for PipelineBuilder {
             nodes: 1,
             track_exact: true,
             sketch_panes: true,
+            spill_ratio: 128,
             seed: 42,
             sketch: SketchParams::default(),
         }
@@ -113,6 +115,16 @@ impl PipelineBuilder {
         self
     }
 
+    /// Window/slide ratio at or above which sketch-backed queries spill
+    /// the window's sample deque to compressed pane summaries (the pane
+    /// sketches arrive pre-built from the ingest workers, so the sample
+    /// has no reader on that path).  Default 128; set 1 to always spill,
+    /// `usize::MAX` to never.
+    pub fn sample_spill_ratio(mut self, ratio: usize) -> Self {
+        self.spill_ratio = ratio.max(1);
+        self
+    }
+
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -154,6 +166,7 @@ impl PipelineBuilder {
             track_exact: self.track_exact,
             channel_capacity: 16 * 1024,
             sketch_panes: self.sketch_panes,
+            spill_ratio: self.spill_ratio,
             seed: self.seed,
         };
         Pipeline {

@@ -31,12 +31,16 @@
 //! }
 //! ```
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::core::{Error, Result, MAX_STRATA};
 use crate::error::bounds::{ConfidenceInterval, ConfidenceLevel};
-use crate::error::estimator::{estimate, weight_from, weights_for, StrataPartials, StrataState, K};
+use crate::error::estimator::{estimate, StrataPartials, StrataState, K};
 use crate::runtime::{ComputeHandle, WindowInput, WindowOutput};
 use crate::sampling::SampleResult;
-use crate::sketch::{HeavyHitters, HyperLogLog, QuantileSketch, SketchParams};
+use crate::sketch::{
+    HeavyHitters, HyperLogLog, PaneSketch, QuantileSketch, SketchParams, SketchSpec,
+};
 use crate::window::{PaneStore, WindowView};
 
 /// Shared Count-Min row-hash seed: every per-shard and per-pane
@@ -159,11 +163,26 @@ pub struct QueryExecutor {
     compute: ComputeHandle,
     level: ConfidenceLevel,
     sketch: SketchParams,
+    /// Query-time sketch constructions (the per-window rebuild path).  The
+    /// streaming ingest path keeps this at zero — pane sketches arrive
+    /// pre-built from the workers — and the engines report the per-run
+    /// delta as the acceptance witness ([`crate::engine::SketchIngestStats`]).
+    sketch_builds: AtomicU64,
 }
 
 impl QueryExecutor {
     pub fn new(compute: ComputeHandle) -> Self {
-        Self { compute, level: ConfidenceLevel::P95, sketch: SketchParams::default() }
+        Self {
+            compute,
+            level: ConfidenceLevel::P95,
+            sketch: SketchParams::default(),
+            sketch_builds: AtomicU64::new(0),
+        }
+    }
+
+    /// Sketches built at query time by this executor so far (monotone).
+    pub fn query_time_sketch_builds(&self) -> u64 {
+        self.sketch_builds.load(Ordering::Relaxed)
     }
 
     pub fn with_level(mut self, level: ConfidenceLevel) -> Self {
@@ -210,51 +229,50 @@ impl QueryExecutor {
     /// Run a sketch-backed `query` over pane-level sketches instead of the
     /// window sample: the [`SketchWindow`]'s two-stacks store hands back
     /// the merged span sketch in O(1) merges, so long-window/small-slide
-    /// sketch queries cost O(pane) per slide, not O(window).  `state` is
-    /// the window's merged counters (for the output's weights/totals).
+    /// sketch queries cost O(pane) per slide, not O(window) — and with the
+    /// streaming ingest path the panes themselves arrive pre-built from
+    /// the workers, so this method performs **zero sketch construction**.
+    /// `state` is the window's merged counters (for the output's
+    /// weights/totals).
     pub fn execute_sketch(
         &self,
         query: &Query,
         sketches: &SketchWindow,
         state: &StrataState,
     ) -> Result<QueryResult> {
-        let est = estimate(&StrataPartials::default(), state);
-        let output =
-            WindowOutput { partials: StrataPartials::default(), estimate: est, executions: 0 };
-        match (query, &sketches.panes) {
-            (Query::Quantile(q), SketchPanes::Quantile(store)) => {
+        // Fail fast on bad arguments or a query/pane kind mismatch before
+        // paying the span-sketch aggregate (a clone + merge).
+        match (query, &sketches.spec) {
+            (Query::Quantile(q), SketchSpec::Quantile { .. }) => {
                 if !(0.0..=1.0).contains(q) {
                     return Err(Error::Query(format!("quantile {q} outside [0, 1]")));
                 }
-                let sk = store
-                    .aggregate()
-                    .unwrap_or_else(|| QuantileSketch::new(sketches.params.quantile_clusters));
-                Ok(self.quantile_result(*q, &sk, output))
             }
-            (Query::Distinct, SketchPanes::Distinct(store)) => {
-                let hll = store
-                    .aggregate()
-                    .unwrap_or_else(|| HyperLogLog::new(sketches.params.hll_precision));
-                Ok(self.distinct_result(&hll, output))
-            }
-            (Query::TopK(k), SketchPanes::TopK(store)) => {
+            (Query::Distinct, SketchSpec::Distinct { .. }) => {}
+            (Query::TopK(k), SketchSpec::TopK { .. }) => {
                 if *k == 0 {
                     return Err(Error::Query("top-k with k = 0".into()));
                 }
-                let hh = store.aggregate().unwrap_or_else(|| {
-                    HeavyHitters::new(
-                        sketches.params.topk_capacity,
-                        sketches.params.cm_width,
-                        sketches.params.cm_depth,
-                        HH_SEED,
-                    )
-                });
-                Ok(self.topk_result(*k, &hh, output))
             }
-            _ => Err(Error::Query(format!(
-                "sketch panes do not match the {} query",
-                query.label()
-            ))),
+            _ => {
+                return Err(Error::Query(format!(
+                    "sketch panes do not match the {} query",
+                    query.label()
+                )))
+            }
+        }
+        let est = estimate(&StrataPartials::default(), state);
+        let output =
+            WindowOutput { partials: StrataPartials::default(), estimate: est, executions: 0 };
+        match (query, &sketches.aggregate()) {
+            (Query::Quantile(q), PaneSketch::Quantile(sk)) => {
+                Ok(self.quantile_result(*q, sk, output))
+            }
+            (Query::Distinct, PaneSketch::Distinct(hll)) => {
+                Ok(self.distinct_result(hll, output))
+            }
+            (Query::TopK(k), PaneSketch::TopK(hh)) => Ok(self.topk_result(*k, hh, output)),
+            _ => unreachable!("query/spec agreement checked above"),
         }
     }
 
@@ -421,7 +439,9 @@ impl QueryExecutor {
     /// Sharded sketch construction skeleton: the window sample is split
     /// round-robin into `shards` shards, one sketch is built per shard, and
     /// the shards merge — the same associative, barrier-free combine the
-    /// per-worker OASRS results use, exercised on every window.
+    /// per-worker OASRS results use, exercised on every window.  This is
+    /// the *query-time rebuild* path (each call ticks the build-count
+    /// witness); the streaming ingest path never reaches it.
     fn build_sharded<S>(
         &self,
         view: &WindowView<'_>,
@@ -429,6 +449,7 @@ impl QueryExecutor {
         mut feed: impl FnMut(&mut S, (u16, f64)),
         merge: impl Fn(&mut S, &S),
     ) -> S {
+        self.sketch_builds.fetch_add(1, Ordering::Relaxed);
         let shards = self.sketch.shards.max(1);
         let mut parts: Vec<S> = (0..shards).map(|_| mk()).collect();
         for (i, &item) in view.iter().enumerate() {
@@ -481,6 +502,24 @@ impl QueryExecutor {
     }
 }
 
+/// The [`SketchSpec`] a query registers on the ingest pool, with the
+/// process-wide Count-Min seed filled in; `None` for linear queries.  The
+/// single source of truth for query → sketch-shape mapping (shared by
+/// [`SketchWindow::for_query`] and the engines' pool registration).
+pub fn sketch_spec_for(query: &Query, params: SketchParams) -> Option<SketchSpec> {
+    match query {
+        Query::Quantile(_) => Some(SketchSpec::Quantile { clusters: params.quantile_clusters }),
+        Query::Distinct => Some(SketchSpec::Distinct { precision: params.hll_precision }),
+        Query::TopK(_) => Some(SketchSpec::TopK {
+            capacity: params.topk_capacity,
+            cm_width: params.cm_width,
+            cm_depth: params.cm_depth,
+            seed: HH_SEED,
+        }),
+        _ => None,
+    }
+}
+
 /// Pane-level sketch windowing: one mergeable sketch per sampling interval,
 /// held in a two-stacks [`PaneStore`] so the merged span sketch costs
 /// O(panes evicted + 1) merges per slide — constant-size aggregates, flat
@@ -488,6 +527,18 @@ impl QueryExecutor {
 /// sketch queries sustainable in the long-window/small-slide regime
 /// (network monitoring, taxi case study) where rebuilding a sketch from
 /// the whole window sample per slide would cost O(window).
+///
+/// Panes arrive on one of two paths, counted separately as the acceptance
+/// witness of the streaming ingest tentpole:
+///
+/// * **[`SketchWindow::push_prebuilt`]** — the production path: the ingest
+///   pool's workers built the pane sketch at interval close (spec
+///   registered via [`crate::engine::IngestPool::register_sketches`]) and
+///   it lands here with zero query-side construction;
+/// * **[`SketchWindow::push_pane`]** — the rebuild fallback: fold the
+///   interval's sample into a fresh sketch here.  Same fold, same weights
+///   ([`SketchSpec::build`]), so single-worker runs produce byte-identical
+///   panes on either path.
 ///
 /// Each pane's items are weighted by that interval's own Horvitz–Thompson
 /// weights (Eq. 1 from the interval's counters): an interval's selected
@@ -497,76 +548,71 @@ impl QueryExecutor {
 /// estimators and the engines choose via `EngineConfig::sketch_panes`.)
 #[derive(Debug, Clone)]
 pub struct SketchWindow {
-    params: SketchParams,
-    panes: SketchPanes,
-}
-
-#[derive(Debug, Clone)]
-enum SketchPanes {
-    Quantile(PaneStore<QuantileSketch>),
-    Distinct(PaneStore<HyperLogLog>),
-    TopK(PaneStore<HeavyHitters>),
+    spec: SketchSpec,
+    panes: PaneStore<PaneSketch>,
+    prebuilt: u64,
+    rebuilt: u64,
 }
 
 impl SketchWindow {
     /// Pane store for a sketch-backed query spanning `panes_per_window`
     /// sampling intervals; `None` for linear queries.
     pub fn for_query(query: &Query, params: SketchParams, panes_per_window: usize) -> Option<Self> {
-        let cap = panes_per_window.max(1);
-        let panes = match query {
-            Query::Quantile(_) => SketchPanes::Quantile(PaneStore::new(cap)),
-            Query::Distinct => SketchPanes::Distinct(PaneStore::new(cap)),
-            Query::TopK(_) => SketchPanes::TopK(PaneStore::new(cap)),
-            _ => return None,
-        };
-        Some(Self { params, panes })
+        let spec = sketch_spec_for(query, params)?;
+        Some(Self {
+            spec,
+            panes: PaneStore::new(panes_per_window.max(1)),
+            prebuilt: 0,
+            rebuilt: 0,
+        })
+    }
+
+    /// The spec to register on the ingest pool so panes arrive pre-built.
+    pub fn spec(&self) -> SketchSpec {
+        self.spec
+    }
+
+    /// Push a worker-built pane sketch into the ring (evicting the expired
+    /// pane).  O(1) sketch constructions — the pane was built at ingest.
+    /// Panics when the sketch kind does not match the registered query (a
+    /// control-plane protocol bug, not a data error).
+    pub fn push_prebuilt(&mut self, pane: PaneSketch) {
+        assert!(
+            pane.matches(&self.spec),
+            "pre-built pane sketch does not match the registered query spec"
+        );
+        self.prebuilt += 1;
+        self.panes.push(pane);
     }
 
     /// Build this interval's pane sketch from its sample result and push it
-    /// into the ring (evicting the expired pane).  O(interval sample) work.
+    /// into the ring (evicting the expired pane).  O(interval sample) work
+    /// on the query side — the fallback when the pool has no registration.
     pub fn push_pane(&mut self, interval: &SampleResult) {
-        // Eq. 1 weights come from the interval's own counters; only the
-        // weighted sketches compute them (distinct counting is
-        // multiplicity-insensitive, so its path skips the work).
-        match &mut self.panes {
-            SketchPanes::Quantile(store) => {
-                let weights = weights_for(&interval.state);
-                let mut sk = QuantileSketch::new(self.params.quantile_clusters);
-                for &(s, v) in &interval.sample {
-                    sk.offer(v, weight_from(&weights, s));
-                }
-                store.push(sk);
-            }
-            SketchPanes::Distinct(store) => {
-                let mut sk = HyperLogLog::new(self.params.hll_precision);
-                for &(_, v) in &interval.sample {
-                    sk.offer(v);
-                }
-                store.push(sk);
-            }
-            SketchPanes::TopK(store) => {
-                let weights = weights_for(&interval.state);
-                let mut sk = HeavyHitters::new(
-                    self.params.topk_capacity,
-                    self.params.cm_width,
-                    self.params.cm_depth,
-                    HH_SEED,
-                );
-                for &(s, _) in &interval.sample {
-                    sk.offer(s as u64, weight_from(&weights, s));
-                }
-                store.push(sk);
-            }
-        }
+        self.rebuilt += 1;
+        self.panes.push(self.spec.build(interval));
+    }
+
+    /// Merged sketch over every pane currently held (the spec's empty
+    /// sketch for a pane-less window), at most one sketch merge and zero
+    /// sketch builds.
+    pub fn aggregate(&self) -> PaneSketch {
+        self.panes.aggregate().unwrap_or_else(|| self.spec.empty())
+    }
+
+    /// Panes pushed pre-built from the ingest workers.
+    pub fn prebuilt_panes(&self) -> u64 {
+        self.prebuilt
+    }
+
+    /// Panes rebuilt from interval samples on the query side.
+    pub fn rebuilt_panes(&self) -> u64 {
+        self.rebuilt
     }
 
     /// Panes currently held.
     pub fn len(&self) -> usize {
-        match &self.panes {
-            SketchPanes::Quantile(s) => s.len(),
-            SketchPanes::Distinct(s) => s.len(),
-            SketchPanes::TopK(s) => s.len(),
-        }
+        self.panes.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -578,11 +624,7 @@ impl SketchWindow {
     /// ratio (the unit tests pin this; `benches/window_hotpath.rs` asserts
     /// the same property on the underlying [`PaneStore`]).
     pub fn merge_ops(&self) -> u64 {
-        match &self.panes {
-            SketchPanes::Quantile(s) => s.merge_ops(),
-            SketchPanes::Distinct(s) => s.merge_ops(),
-            SketchPanes::TopK(s) => s.merge_ops(),
-        }
+        self.panes.merge_ops()
     }
 }
 
@@ -911,5 +953,97 @@ mod tests {
         assert!(exec
             .execute_sketch(&Query::Distinct, &sw, &crate::error::estimator::StrataState::default())
             .is_err());
+    }
+
+    #[test]
+    fn prebuilt_and_rebuilt_panes_agree_and_are_counted() {
+        // The two pane paths — worker-built (push_prebuilt) and query-side
+        // rebuild (push_pane) — must produce identical stores for the same
+        // interval stream, and the provenance counters must tell them apart.
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let query = Query::Quantile(0.5);
+        let params = SketchParams::default();
+        let mut via_prebuilt = SketchWindow::for_query(&query, params, 3).unwrap();
+        let mut via_rebuild = SketchWindow::for_query(&query, params, 3).unwrap();
+        let spec = via_prebuilt.spec();
+        let mut last_state = crate::error::estimator::StrataState::default();
+        for round in 0..8 {
+            let pane = window_from_items(&[
+                (0, round as f64),
+                (0, 10.0 + round as f64),
+                (1, 100.0),
+            ]);
+            via_prebuilt.push_prebuilt(spec.build(&pane)); // "from the worker"
+            via_rebuild.push_pane(&pane);
+            last_state = pane.state;
+        }
+        assert_eq!(via_prebuilt.prebuilt_panes(), 8);
+        assert_eq!(via_prebuilt.rebuilt_panes(), 0);
+        assert_eq!(via_rebuild.prebuilt_panes(), 0);
+        assert_eq!(via_rebuild.rebuilt_panes(), 8);
+        assert_eq!(via_prebuilt.aggregate(), via_rebuild.aggregate());
+        let qa = exec.execute_sketch(&query, &via_prebuilt, &last_state).unwrap();
+        let qb = exec.execute_sketch(&query, &via_rebuild, &last_state).unwrap();
+        assert_eq!(qa.value().to_bits(), qb.value().to_bits());
+    }
+
+    #[test]
+    fn execute_sketch_performs_zero_query_time_builds() {
+        // The build-count witness at the executor level: pane-store queries
+        // never construct a sketch, the per-window rebuild path does.
+        let svc = ComputeService::native();
+        let exec = QueryExecutor::new(svc.handle());
+        let query = Query::Quantile(0.9);
+        let mut sw = SketchWindow::for_query(&query, SketchParams::default(), 4).unwrap();
+        let spec = sw.spec();
+        let mut state = crate::error::estimator::StrataState::default();
+        for i in 0..6 {
+            let pane = window_from_items(&[(0, i as f64), (0, 2.0 * i as f64)]);
+            sw.push_prebuilt(spec.build(&pane));
+            state = pane.state;
+        }
+        let before = exec.query_time_sketch_builds();
+        for _ in 0..10 {
+            exec.execute_sketch(&query, &sw, &state).unwrap();
+        }
+        assert_eq!(
+            exec.query_time_sketch_builds(),
+            before,
+            "execute_sketch built a sketch at query time"
+        );
+        // contrast: the per-window path ticks the witness once per window
+        let w = window_from_items(&[(0, 1.0), (0, 2.0), (1, 3.0)]);
+        exec.execute(&query, &w).unwrap();
+        assert_eq!(exec.query_time_sketch_builds(), before + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match the registered query")]
+    fn prebuilt_kind_mismatch_panics() {
+        let mut sw =
+            SketchWindow::for_query(&Query::Quantile(0.5), SketchParams::default(), 2).unwrap();
+        let wrong = crate::sketch::SketchSpec::Distinct { precision: 8 }
+            .build(&SampleResult::default());
+        sw.push_prebuilt(wrong);
+    }
+
+    #[test]
+    fn sketch_spec_for_maps_queries() {
+        let p = SketchParams::default();
+        assert!(matches!(
+            sketch_spec_for(&Query::Quantile(0.5), p),
+            Some(SketchSpec::Quantile { clusters }) if clusters == p.quantile_clusters
+        ));
+        assert!(matches!(
+            sketch_spec_for(&Query::Distinct, p),
+            Some(SketchSpec::Distinct { precision }) if precision == p.hll_precision
+        ));
+        assert!(matches!(
+            sketch_spec_for(&Query::TopK(3), p),
+            Some(SketchSpec::TopK { seed, .. }) if seed == HH_SEED
+        ));
+        assert!(sketch_spec_for(&Query::Sum, p).is_none());
+        assert!(sketch_spec_for(&Query::Mean, p).is_none());
     }
 }

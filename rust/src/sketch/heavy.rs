@@ -8,22 +8,32 @@
 //! element-wise addition equals the sketch of the concatenated stream.
 //!
 //! [`HeavyHitters`] pairs a Count-Min with a bounded space-saving candidate
-//! map (Metwally et al. 2005) so the top-k keys can be *enumerated* (a bare
-//! Count-Min can only be probed).  Candidates live in a `BTreeMap`, keeping
+//! set (Metwally et al. 2005) so the top-k keys can be *enumerated* (a bare
+//! Count-Min can only be probed).  Candidates live in a `BTreeSet`, keeping
 //! every operation deterministic — same inputs, same seed, same top-k list,
 //! matching the repo's seeded-RNG discipline.
+//!
+//! **Count semantics are merge-history-independent.**  Every reported count
+//! — `top_k`, `query` — is the Count-Min estimate *at query time*.  Count-Min
+//! counters add exactly under merge, so the same stream yields the same
+//! counts no matter whether or when partials were merged (an earlier design
+//! seeded candidates with a Count-Min estimate and then accumulated exact
+//! weights onto them, which made the counts depend on the merge schedule —
+//! candidates now carry no counts at all).  Only the candidate *membership*
+//! is history-dependent, as inherent to space-saving; heavy keys survive
+//! every schedule.
 //!
 //! Weights are Horvitz–Thompson weights: a sampled item of stratum `i`
 //! offered with weight `W_i` contributes its estimated share of the full
 //! stream, so per-window top-k over a sample estimates the true per-window
 //! top-k.
 
-use std::collections::BTreeMap;
+use std::collections::BTreeSet;
 
 use super::hash64;
 
 /// Weighted Count-Min sketch.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CountMin {
     width: usize,
     depth: usize,
@@ -113,12 +123,14 @@ impl CountMin {
     }
 }
 
-/// Top-k tracker: Count-Min for counts, space-saving map for enumeration.
-#[derive(Debug, Clone)]
+/// Top-k tracker: Count-Min for counts, space-saving set for enumeration.
+#[derive(Debug, Clone, PartialEq)]
 pub struct HeavyHitters {
     cm: CountMin,
-    /// Candidate keys with their Count-Min estimates (deterministic order).
-    candidates: BTreeMap<u64, f64>,
+    /// Candidate keys only — every count (reporting *and* eviction) comes
+    /// fresh from the Count-Min at use time, so nothing here can go stale
+    /// or depend on merge history (see module docs).
+    candidates: BTreeSet<u64>,
     capacity: usize,
     /// Lower bound on the smallest candidate count.  Candidate counts only
     /// ever grow, so a stale value stays a valid lower bound — newcomers
@@ -131,7 +143,7 @@ impl HeavyHitters {
     pub fn new(capacity: usize, cm_width: usize, cm_depth: usize, seed: u64) -> Self {
         Self {
             cm: CountMin::new(cm_width, cm_depth, seed),
-            candidates: BTreeMap::new(),
+            candidates: BTreeSet::new(),
             capacity: capacity.max(1),
             min_floor: 0.0,
         }
@@ -143,16 +155,15 @@ impl HeavyHitters {
             return;
         }
         self.cm.add(key, weight);
-        if let Some(c) = self.candidates.get_mut(&key) {
-            *c += weight;
+        if self.candidates.contains(&key) {
             return;
         }
         let est = self.cm.query(key);
         if self.candidates.len() < self.capacity {
             // keep the floor a true lower bound even for below-floor inserts
-            // into a map that emptied below capacity (e.g. after a merge)
+            // into a set that emptied below capacity (e.g. after a merge)
             self.min_floor = self.min_floor.min(est);
-            self.candidates.insert(key, est);
+            self.candidates.insert(key);
             return;
         }
         // Fast reject: at or below the floor the newcomer cannot beat the
@@ -161,18 +172,35 @@ impl HeavyHitters {
             return;
         }
         // Space-saving: displace the smallest candidate when the newcomer's
-        // estimated count exceeds it.
-        let (&min_key, &min_count) = self
-            .candidates
-            .iter()
-            .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite counts"))
-            .expect("non-empty candidates");
-        // The true minimum bounds every remaining count from below (a
-        // displacing newcomer enters with est > min_count).
-        self.min_floor = min_count;
+        // estimated count exceeds it.  Scored live against the Count-Min so
+        // the eviction decision cannot depend on merge history; BTreeSet
+        // iteration is key-ascending, so ties keep the lowest key —
+        // deterministic.  The scan costs O(capacity · cm_depth) probes, so
+        // it also harvests the *second*-lowest count: after a displacement
+        // the new true minimum is min(second, newcomer), a tighter floor
+        // than the evicted count, which fast-rejects more of the following
+        // newcomers and keeps the scan off the common path.
+        let mut min_key = 0u64;
+        let mut min_count = f64::INFINITY;
+        let mut second = f64::INFINITY;
+        for &k in self.candidates.iter() {
+            let c = self.cm.query(k);
+            if c < min_count {
+                second = min_count;
+                min_count = c;
+                min_key = k;
+            } else if c < second {
+                second = c;
+            }
+        }
         if est > min_count {
             self.candidates.remove(&min_key);
-            self.candidates.insert(key, est);
+            self.candidates.insert(key);
+            // every survivor scored >= second; the newcomer entered at est
+            self.min_floor = second.min(est);
+        } else {
+            // the true minimum bounds every count from below
+            self.min_floor = min_count;
         }
     }
 
@@ -182,12 +210,11 @@ impl HeavyHitters {
     /// over-estimate bound.
     pub fn merge(&mut self, other: &HeavyHitters) {
         self.cm.merge(&other.cm);
-        let mut keys: Vec<u64> = self.candidates.keys().copied().collect();
-        keys.extend(other.candidates.keys().copied());
-        keys.sort_unstable();
-        keys.dedup();
-        let mut rescored: Vec<(u64, f64)> =
-            keys.into_iter().map(|k| (k, self.cm.query(k))).collect();
+        let mut rescored: Vec<(u64, f64)> = self
+            .candidates
+            .union(&other.candidates)
+            .map(|&k| (k, self.cm.query(k)))
+            .collect();
         // keep the `capacity` largest (key asc as the deterministic tiebreak)
         rescored.sort_by(|a, b| {
             b.1.partial_cmp(&a.1).expect("finite counts").then(a.0.cmp(&b.0))
@@ -195,14 +222,16 @@ impl HeavyHitters {
         rescored.truncate(self.capacity);
         // The last kept entry is the new smallest count — an exact floor.
         self.min_floor = rescored.last().map(|&(_, c)| c).unwrap_or(0.0);
-        self.candidates = rescored.into_iter().collect();
+        self.candidates = rescored.into_iter().map(|(k, _)| k).collect();
     }
 
     /// The k heaviest keys, `(key, estimated weight)`, heaviest first
-    /// (deterministic: ties break on key order).
+    /// (deterministic: ties break on key order).  Counts are the live
+    /// Count-Min estimates, so merged and direct sketches report identical
+    /// counts for any common candidate (Count-Min merge is exact).
     pub fn top_k(&self, k: usize) -> Vec<(u64, f64)> {
         let mut all: Vec<(u64, f64)> =
-            self.candidates.iter().map(|(&k, &c)| (k, c)).collect();
+            self.candidates.iter().map(|&key| (key, self.cm.query(key))).collect();
         all.sort_by(|a, b| {
             b.1.partial_cmp(&a.1).expect("finite counts").then(a.0.cmp(&b.0))
         });
@@ -377,6 +406,89 @@ mod tests {
             hh.top_k(10)
         };
         assert_eq!(build(), build());
+    }
+
+    #[test]
+    fn merge_history_does_not_change_counts() {
+        // ISSUE 5 satellite regression: the same stream, three merge
+        // schedules — never merged, merged once at the end, merged every
+        // quarter.  Reported top-k counts must agree within the Count-Min
+        // over-bound regardless of schedule; since Count-Min counters add
+        // exactly, they in fact agree to summation rounding.
+        let mut rng = Rng::seed_from_u64(14);
+        let weights: Vec<f64> = (0..400).map(|i| 1.0 / (1.0 + i as f64).powf(1.4)).collect();
+        let stream: Vec<(u64, f64)> = (0..80_000)
+            .map(|_| (rng.categorical(&weights) as u64, rng.range_f64(0.5, 2.0)))
+            .collect();
+
+        let mut direct = HeavyHitters::new(32, 1024, 4, 15);
+        for &(k, w) in &stream {
+            direct.offer(k, w);
+        }
+
+        // merged once: two halves
+        let mut halves = HeavyHitters::new(32, 1024, 4, 15);
+        {
+            let mut tail = HeavyHitters::new(32, 1024, 4, 15);
+            for (i, &(k, w)) in stream.iter().enumerate() {
+                if i < stream.len() / 2 {
+                    halves.offer(k, w);
+                } else {
+                    tail.offer(k, w);
+                }
+            }
+            halves.merge(&tail);
+        }
+
+        // merged repeatedly: fold quarters into a running accumulator
+        let mut running = HeavyHitters::new(32, 1024, 4, 15);
+        for chunk in stream.chunks(stream.len() / 4) {
+            let mut part = HeavyHitters::new(32, 1024, 4, 15);
+            for &(k, w) in chunk {
+                part.offer(k, w);
+            }
+            running.merge(&part);
+        }
+
+        for merged in [&halves, &running] {
+            assert!(
+                (merged.total_weight() - direct.total_weight()).abs()
+                    <= 1e-6 * direct.total_weight(),
+                "total weight drifted across merge schedules"
+            );
+            for &(k, c) in &merged.top_k(10) {
+                let d = direct.query(k);
+                // the hard guarantee of the issue…
+                assert!(
+                    (c - d).abs() <= direct.over_estimate_bound() + 1e-9,
+                    "key {k}: merged count {c} vs direct {d} beyond over-bound"
+                );
+                // …and the sharper property the unified semantics buys:
+                // counts are Count-Min estimates and Count-Min merge is
+                // exact, so the schedules agree to rounding.
+                assert!(
+                    (c - d).abs() <= 1e-6 * d.max(1.0),
+                    "key {k}: merged count {c} != direct {d}"
+                );
+            }
+            // the head of the distribution is schedule-independent
+            let tm: Vec<u64> = merged.top_k(5).into_iter().map(|(k, _)| k).collect();
+            let td: Vec<u64> = direct.top_k(5).into_iter().map(|(k, _)| k).collect();
+            assert_eq!(tm, td, "top-5 ranking depends on merge schedule");
+        }
+    }
+
+    #[test]
+    fn offer_path_counts_match_cm_estimates() {
+        // The unified semantics: reported counts ARE the Count-Min
+        // estimates, on the pure-offer path too.
+        let mut hh = HeavyHitters::new(8, 512, 4, 16);
+        for i in 0..1000u64 {
+            hh.offer(i % 8, 1.0 + (i % 3) as f64);
+        }
+        for (k, c) in hh.top_k(8) {
+            assert_eq!(c, hh.query(k), "stored count diverged from CM estimate");
+        }
     }
 
     #[test]

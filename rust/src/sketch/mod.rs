@@ -35,6 +35,9 @@ pub mod heavy;
 pub mod hll;
 pub mod quantile;
 
+use crate::error::estimator::{weight_from, weights_for};
+use crate::sampling::SampleResult;
+
 pub use heavy::{CountMin, HeavyHitters};
 pub use hll::HyperLogLog;
 pub use quantile::QuantileSketch;
@@ -78,6 +81,115 @@ impl Default for SketchParams {
     }
 }
 
+/// Full configuration of one pane/worker sketch — everything a remote
+/// ingest worker needs to build a partial that merges bit-compatibly with
+/// every other worker's (shape, precision, and the shared Count-Min
+/// row-hash seed travel together).  This is the payload of the ingest
+/// pool's sketch-registration control message: registering a sketch-backed
+/// query sends the spec to every worker over the acked control plane, and
+/// from then on interval closes return pre-built [`PaneSketch`] partials.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchSpec {
+    /// Equi-depth quantile sketch with `clusters` clusters.
+    Quantile { clusters: usize },
+    /// HyperLogLog with precision `p` (2^p registers).
+    Distinct { precision: u8 },
+    /// Count-Min + space-saving top-k tracker.  `seed` is the Count-Min
+    /// row-hash seed — identical across workers or the partials refuse to
+    /// merge.
+    TopK { capacity: usize, cm_width: usize, cm_depth: usize, seed: u64 },
+}
+
+impl SketchSpec {
+    /// An empty sketch of this spec (the identity of the merge).
+    pub fn empty(&self) -> PaneSketch {
+        match *self {
+            SketchSpec::Quantile { clusters } => {
+                PaneSketch::Quantile(QuantileSketch::new(clusters))
+            }
+            SketchSpec::Distinct { precision } => {
+                PaneSketch::Distinct(HyperLogLog::new(precision))
+            }
+            SketchSpec::TopK { capacity, cm_width, cm_depth, seed } => {
+                PaneSketch::TopK(HeavyHitters::new(capacity, cm_width, cm_depth, seed))
+            }
+        }
+    }
+
+    /// Build a pane sketch from one finished interval result: every
+    /// sampled item is offered with its Horvitz–Thompson weight from the
+    /// interval's *own* counters (Eq. 1).  This is the fold the ingest
+    /// workers run at interval close — and, run over a merged interval
+    /// result, the query-side rebuild it replaces, so single-worker runs
+    /// produce byte-identical sketches on either path.
+    pub fn build(&self, interval: &SampleResult) -> PaneSketch {
+        let mut pane = self.empty();
+        pane.offer_interval(interval);
+        pane
+    }
+}
+
+/// One pane's (or one worker's partial) mergeable sketch, tagged by kind so
+/// partials travel through channels and merge without the caller tracking
+/// the query type.  Merging mismatched kinds is a logic error and panics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PaneSketch {
+    Quantile(QuantileSketch),
+    Distinct(HyperLogLog),
+    TopK(HeavyHitters),
+}
+
+impl PaneSketch {
+    /// Fold one interval's weighted sample into this sketch (see
+    /// [`SketchSpec::build`]).  Distinct counting is
+    /// multiplicity-insensitive, so its path skips the weight computation.
+    pub fn offer_interval(&mut self, interval: &SampleResult) {
+        match self {
+            PaneSketch::Quantile(sk) => {
+                let weights = weights_for(&interval.state);
+                for &(s, v) in &interval.sample {
+                    sk.offer(v, weight_from(&weights, s));
+                }
+            }
+            PaneSketch::Distinct(sk) => {
+                for &(_, v) in &interval.sample {
+                    sk.offer(v);
+                }
+            }
+            PaneSketch::TopK(sk) => {
+                let weights = weights_for(&interval.state);
+                for &(s, _) in &interval.sample {
+                    sk.offer(s as u64, weight_from(&weights, s));
+                }
+            }
+        }
+    }
+
+    /// Merge a same-kind sketch into this one (the barrier-free combine
+    /// the coordinator runs over worker partials).  Panics on a kind
+    /// mismatch — specs are registered process-wide, so mismatched
+    /// partials indicate a protocol bug, not bad data.
+    pub fn merge_same(&mut self, other: &PaneSketch) {
+        match (self, other) {
+            (PaneSketch::Quantile(a), PaneSketch::Quantile(b)) => a.merge(b),
+            (PaneSketch::Distinct(a), PaneSketch::Distinct(b)) => a.merge(b),
+            (PaneSketch::TopK(a), PaneSketch::TopK(b)) => a.merge(b),
+            _ => panic!("pane sketch kind mismatch"),
+        }
+    }
+
+    /// Does this sketch belong to `spec`'s family?  (Shape/seed equality
+    /// is asserted by the underlying merge.)
+    pub fn matches(&self, spec: &SketchSpec) -> bool {
+        matches!(
+            (self, spec),
+            (PaneSketch::Quantile(_), SketchSpec::Quantile { .. })
+                | (PaneSketch::Distinct(_), SketchSpec::Distinct { .. })
+                | (PaneSketch::TopK(_), SketchSpec::TopK { .. })
+        )
+    }
+}
+
 /// SplitMix64 finalizer — the shared 64-bit mixer behind every sketch hash
 /// (same constants as `util::rng`'s seeder, salted per use).
 #[inline]
@@ -111,5 +223,95 @@ mod tests {
         assert!((4..=18).contains(&p.hll_precision));
         assert!(p.cm_width > 0 && p.cm_depth > 0);
         assert!(p.shards >= 1);
+    }
+
+    fn interval_result() -> SampleResult {
+        // stratum 0 undersampled 2x (C=6, N=3), stratum 1 fully sampled
+        let mut state = crate::error::estimator::StrataState::default();
+        state.c[0] = 6.0;
+        state.n_cap[0] = 3.0;
+        state.c[1] = 1.0;
+        state.n_cap[1] = 1.0;
+        SampleResult { sample: vec![(0, 1.0), (0, 2.0), (0, 3.0), (1, 10.0)], state }
+    }
+
+    #[test]
+    fn spec_build_applies_interval_ht_weights() {
+        let r = interval_result();
+        let quantile = SketchSpec::Quantile { clusters: 32 }.build(&r);
+        match quantile {
+            PaneSketch::Quantile(sk) => {
+                // 3 items at weight 2 + 1 item at weight 1
+                assert_eq!(sk.total_weight(), 7.0);
+                assert_eq!(sk.min(), 1.0);
+                assert_eq!(sk.max(), 10.0);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let topk = SketchSpec::TopK { capacity: 8, cm_width: 64, cm_depth: 3, seed: 9 }.build(&r);
+        match topk {
+            PaneSketch::TopK(hh) => {
+                let top = hh.top_k(2);
+                assert_eq!(top[0].0, 0);
+                assert!((top[0].1 - 6.0).abs() < 1e-9, "stratum-0 mass {}", top[0].1);
+                assert!((top[1].1 - 1.0).abs() < 1e-9);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let distinct = SketchSpec::Distinct { precision: 10 }.build(&r);
+        match distinct {
+            PaneSketch::Distinct(hll) => {
+                assert!((hll.estimate() - 4.0).abs() < 0.5);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_build_equals_empty_plus_offer_interval() {
+        let r = interval_result();
+        for spec in [
+            SketchSpec::Quantile { clusters: 16 },
+            SketchSpec::Distinct { precision: 8 },
+            SketchSpec::TopK { capacity: 4, cm_width: 32, cm_depth: 2, seed: 1 },
+        ] {
+            let built = spec.build(&r);
+            let mut manual = spec.empty();
+            manual.offer_interval(&r);
+            assert_eq!(built, manual);
+            assert!(built.matches(&spec));
+        }
+    }
+
+    #[test]
+    fn pane_sketch_partials_merge_like_one_interval() {
+        // Two worker partials of the same spec merge into the sketch of the
+        // combined stream (HLL/CM exactly; quantile within guarantee).
+        let spec = SketchSpec::Distinct { precision: 10 };
+        let mut a = spec.empty();
+        let mut b = spec.empty();
+        let mut whole = spec.empty();
+        for i in 0..1000 {
+            let mut state = crate::error::estimator::StrataState::default();
+            state.c[0] = 1.0;
+            state.n_cap[0] = 1.0;
+            let r = SampleResult { sample: vec![(0, i as f64)], state };
+            whole.offer_interval(&r);
+            if i % 2 == 0 {
+                a.offer_interval(&r);
+            } else {
+                b.offer_interval(&r);
+            }
+        }
+        a.merge_same(&b);
+        assert_eq!(a, whole, "HLL partial merge must equal the union");
+    }
+
+    #[test]
+    #[should_panic(expected = "kind mismatch")]
+    fn pane_sketch_kind_mismatch_panics() {
+        let mut q = SketchSpec::Quantile { clusters: 8 }.empty();
+        let d = SketchSpec::Distinct { precision: 8 }.empty();
+        q.merge_same(&d);
     }
 }

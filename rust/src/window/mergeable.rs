@@ -34,7 +34,7 @@
 
 use crate::error::estimator::StrataPartials;
 use crate::sampling::SampleResult;
-use crate::sketch::{CountMin, HeavyHitters, HyperLogLog, QuantileSketch};
+use crate::sketch::{CountMin, HeavyHitters, HyperLogLog, PaneSketch, QuantileSketch};
 
 use super::ExactAgg;
 
@@ -91,6 +91,16 @@ impl Mergeable for CountMin {
 impl Mergeable for HeavyHitters {
     fn merge_from(&mut self, other: &Self) {
         self.merge(other);
+    }
+}
+
+/// Kind-tagged pane sketches merge through their inner sketch's combine;
+/// a kind mismatch is a protocol bug and panics (see
+/// [`PaneSketch::merge_same`]).  This is what lets `PaneStore<PaneSketch>`
+/// hold whichever sketch the registered query needs.
+impl Mergeable for PaneSketch {
+    fn merge_from(&mut self, other: &Self) {
+        self.merge_same(other);
     }
 }
 

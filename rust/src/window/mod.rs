@@ -149,8 +149,14 @@ pub struct WindowView<'a> {
     pub start_ms: EventTime,
     /// Number of intervals merged (fewer at stream start).
     pub intervals: usize,
-    /// The window's sample in pane order, as the deque's two halves.
+    /// The window's sample in pane order, as the deque's two halves (both
+    /// empty when the assembler spilled the sample — see
+    /// [`WindowAssembler::spill_samples`]).
     parts: [&'a [(u16, f64)]; 2],
+    /// Items the window's panes sampled — equal to the parts' total length
+    /// except under spill, where the items are gone but the count (from
+    /// the per-pane summaries) is still exact.
+    sample_len: usize,
     /// Merged per-stratum counters over the span (ring-order fold).
     pub state: StrataState,
     /// Merged exact aggregates over the span (ring-order fold).
@@ -166,6 +172,7 @@ impl<'a> WindowView<'a> {
             start_ms: 0,
             intervals: 1,
             parts: [result.sample.as_slice(), &[]],
+            sample_len: result.sample.len(),
             state: result.state,
             exact: ExactAgg::default(),
         }
@@ -184,9 +191,9 @@ impl<'a> WindowView<'a> {
         self.parts[0].iter().chain(self.parts[1].iter())
     }
 
-    /// Items in the window sample.
+    /// Items the window's panes sampled (see the field docs for spill).
     pub fn sample_len(&self) -> usize {
-        self.parts[0].len() + self.parts[1].len()
+        self.sample_len
     }
 
     /// Items that arrived in the window span.
@@ -232,6 +239,15 @@ pub struct WindowAssembler {
     /// skipped stratum folds to exactly `+0.0`, which is also what adding
     /// its `+0.0` entries in order would produce, so byte-identity holds).
     active: [bool; MAX_STRATA],
+    /// Spill mode: pane samples are dropped at push and the window carries
+    /// only the constant-size pane summaries (counters, ground truth,
+    /// sample length).  For sketch-backed queries over pre-built pane
+    /// sketches the sample deque is dead weight — at window/slide ratios
+    /// in the thousands it is the dominant state — so the engines switch
+    /// it off past `EngineConfig::spill_ratio`.  Views then emit empty
+    /// `parts` (never consumed on that path) while `sample_len`, counters,
+    /// and ground truth stay exact.
+    spill: bool,
     /// End time of the next interval to close.
     next_interval_end: EventTime,
 }
@@ -258,8 +274,22 @@ impl WindowAssembler {
             panes: VecDeque::with_capacity(ring_cap),
             sample: VecDeque::new(),
             active: [false; MAX_STRATA],
+            spill: false,
             next_interval_end: interval_ms,
         }
+    }
+
+    /// Switch to spill mode (drop pane samples, keep pane summaries) —
+    /// must be called before the first pane arrives.  See the field docs
+    /// for when this is sound.
+    pub fn spill_samples(&mut self) {
+        assert!(self.panes.is_empty(), "spill mode must be set before the first pane");
+        self.spill = true;
+    }
+
+    /// True when pane samples are being spilled to summaries.
+    pub fn spills(&self) -> bool {
+        self.spill
     }
 
     pub fn config(&self) -> WindowConfig {
@@ -296,7 +326,9 @@ impl WindowAssembler {
         let cap = self.panes_per_window();
         if self.panes.len() == cap {
             let old = self.panes.pop_front().expect("ring non-empty at cap");
-            self.sample.drain(..old.sample_len);
+            if !self.spill {
+                self.sample.drain(..old.sample_len);
+            }
         }
         let meta = PaneMeta {
             sample_len: result.sample.len(),
@@ -312,7 +344,9 @@ impl WindowAssembler {
                 self.active[s] = true;
             }
         }
-        self.sample.extend(result.sample);
+        if !self.spill {
+            self.sample.extend(result.sample);
+        }
         self.panes.push_back(meta);
 
         let end = self.next_interval_end;
@@ -343,12 +377,18 @@ impl WindowAssembler {
         }
 
         let intervals = self.panes.len();
+        let sample_len = if self.spill {
+            self.panes.iter().map(|m| m.sample_len).sum()
+        } else {
+            self.sample.len()
+        };
         let (a, b) = self.sample.as_slices();
         Some(WindowView {
             end_ms: end,
             start_ms: end.saturating_sub(intervals as EventTime * self.interval_ms),
             intervals,
             parts: [a, b],
+            sample_len,
             state,
             exact: exact_merged,
         })
@@ -596,6 +636,42 @@ mod tests {
         assert_eq!(v.arrived(), 7.0);
         assert_eq!(v.to_sample_result().sample, r.sample);
         assert_eq!(v.state, r.state);
+    }
+
+    #[test]
+    fn spilled_assembler_keeps_summaries_exact_and_drops_samples() {
+        let cfg = WindowConfig::new(4_000, 1_000);
+        let mut full = WindowAssembler::new(cfg);
+        let mut spilled = WindowAssembler::new(cfg);
+        spilled.spill_samples();
+        assert!(spilled.spills() && !full.spills());
+        for i in 0..12 {
+            let r = result_with(20.0 + i as f64, 3 + i);
+            let e = exact_with(20.0 + i as f64);
+            let a = full.push_interval_view(r.clone(), e);
+            let b = spilled.push_interval_view(r, e);
+            match (a, b) {
+                (Some(va), Some(vb)) => {
+                    // summaries byte-identical; items gone but counted
+                    assert_eq!(va.state, vb.state);
+                    assert_eq!(va.exact, vb.exact);
+                    assert_eq!(va.sample_len(), vb.sample_len());
+                    assert_eq!(va.arrived(), vb.arrived());
+                    assert_eq!(vb.parts()[0].len() + vb.parts()[1].len(), 0);
+                    assert!(va.sample_len() > 0);
+                }
+                (None, None) => {}
+                _ => panic!("emission cadence diverged under spill"),
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before the first pane")]
+    fn spill_after_first_pane_rejected() {
+        let mut w = WindowAssembler::new(WindowConfig::tumbling(1_000));
+        w.push_interval_view(result_with(1.0, 1), ExactAgg::default());
+        w.spill_samples();
     }
 
     // --- pane-store vs merge-all-intervals equivalence (the tentpole's

@@ -1,0 +1,188 @@
+//! Acceptance tests for the streaming sketch ingest path (ISSUE 5):
+//!
+//! * sketch queries over a ratio-64 sliding window perform **zero
+//!   query-time sketch builds** — pane sketches arrive pre-built from the
+//!   ingest workers (witnessed by `RunReport::sketch_ingest` /
+//!   `QueryExecutor::query_time_sketch_builds`);
+//! * for single-worker runs the worker-built pane sketch is
+//!   **byte-identical** to the rebuild-per-query path's sketch;
+//! * multi-worker partials merge to sketches whose per-stratum mass
+//!   matches the merged arrival counters exactly;
+//! * sample-deque spill past the configured ratio changes no sketch
+//!   answer (the panes carry the query; the samples had no reader).
+
+use streamapprox::budget::QueryBudget;
+use streamapprox::core::Item;
+use streamapprox::engine::{EngineKind, IngestPool};
+use streamapprox::prelude::*;
+use streamapprox::query::sketch_spec_for;
+use streamapprox::util::rng::Rng;
+
+/// Ratio-64 sliding window: 16 s window, 250 ms slide.
+fn ratio_64() -> WindowConfig {
+    WindowConfig::new(16_000, 250)
+}
+
+#[test]
+fn ratio_64_sketch_queries_build_nothing_at_query_time() {
+    let stream = StreamConfig::gaussian_micro(500.0, 31);
+    for engine in [EngineKind::Pipelined, EngineKind::Batched] {
+        for query in [Query::Quantile(0.9), Query::Distinct, Query::TopK(3)] {
+            let p = PipelineBuilder::new()
+                .engine(engine)
+                .sampler(SamplerKind::Oasrs)
+                .budget(QueryBudget::SamplingFraction(0.4))
+                .query(query.clone())
+                .window(ratio_64())
+                .seed(5)
+                .build_native();
+            let r = p.run_stream(&stream, 24_000).unwrap();
+            assert!(r.windows.len() >= 32, "{engine:?}/{query:?}: {} windows", r.windows.len());
+            let stats = r.sketch_ingest.expect("sketch run must report provenance");
+            assert!(
+                stats.prebuilt_panes >= 64,
+                "{engine:?}/{query:?}: only {} pre-built panes",
+                stats.prebuilt_panes
+            );
+            assert_eq!(
+                stats.rebuilt_panes, 0,
+                "{engine:?}/{query:?}: panes were rebuilt at the window operator"
+            );
+            assert_eq!(
+                stats.query_time_builds, 0,
+                "{engine:?}/{query:?}: sketches were built at query time"
+            );
+        }
+    }
+}
+
+#[test]
+fn linear_queries_report_no_sketch_provenance() {
+    let p = PipelineBuilder::new()
+        .query(Query::Sum)
+        .window(WindowConfig::new(2_000, 1_000))
+        .build_native();
+    let r = p.run_stream(&StreamConfig::gaussian_micro(200.0, 7), 4_000).unwrap();
+    assert!(r.sketch_ingest.is_none());
+}
+
+#[test]
+fn single_worker_prebuilt_equals_rebuild_byte_for_byte() {
+    // The tentpole's byte-identity acceptance gate: one worker, same seed —
+    // the pool's worker-built pane sketch must equal the rebuild from the
+    // merged interval result bit-for-bit, for every sketch family, across
+    // several intervals and a mid-stream fraction change.
+    let specs = [
+        sketch_spec_for(&Query::Quantile(0.5), SketchParams::default()).unwrap(),
+        sketch_spec_for(&Query::Distinct, SketchParams::default()).unwrap(),
+        sketch_spec_for(&Query::TopK(4), SketchParams::default()).unwrap(),
+    ];
+    for kind in [SamplerKind::Oasrs, SamplerKind::Srs, SamplerKind::Sts, SamplerKind::None] {
+        let mut registered = IngestPool::new(kind, 1, 0.5, 77);
+        let mut plain = IngestPool::new(kind, 1, 0.5, 77);
+        registered.register_sketches(&specs);
+        let mut rng = Rng::seed_from_u64(99);
+        for interval in 0..4u64 {
+            if interval == 2 {
+                registered.set_fraction(0.2);
+                plain.set_fraction(0.2);
+            }
+            for i in 0..4_000u64 {
+                let it = Item::new(
+                    (i % 5) as u16,
+                    rng.normal(100.0, 25.0),
+                    interval * 4_000 + i,
+                );
+                registered.offer(it);
+                plain.offer(it);
+            }
+            let (ra, built) = registered.finish_interval_with_sketches();
+            let rb = plain.finish_interval();
+            assert_eq!(ra.sample, rb.sample, "{kind:?}: registration perturbed sampling");
+            assert_eq!(ra.state, rb.state, "{kind:?}");
+            assert_eq!(built.len(), specs.len(), "{kind:?}");
+            for (spec, pane) in specs.iter().zip(&built) {
+                assert_eq!(
+                    *pane,
+                    spec.build(&rb),
+                    "{kind:?}: worker-built pane sketch != query-side rebuild"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_worker_partials_carry_exact_stratum_mass() {
+    // Worker partials weight by worker-local counters; for count-based
+    // samplers Σ(HT weights of a stratum's sample) = C_i exactly, so the
+    // merged sketch's per-stratum mass must match the merged counters to
+    // rounding — the cross-worker consistency gate.
+    let spec = sketch_spec_for(&Query::TopK(8), SketchParams::default()).unwrap();
+    let mut pool = IngestPool::new(SamplerKind::Oasrs, 4, 0.25, 13);
+    pool.register_sketches(&[spec]);
+    let mut rng = Rng::seed_from_u64(14);
+    // warm-up interval sizes the OASRS reservoirs
+    for i in 0..40_000u64 {
+        pool.offer(Item::new((i % 6) as u16, rng.f64(), i));
+    }
+    pool.finish_interval();
+    for i in 0..40_000u64 {
+        pool.offer(Item::new((i % 6) as u16, rng.f64(), 40_000 + i));
+    }
+    let (r, sketches) = pool.finish_interval_with_sketches();
+    assert_eq!(sketches.len(), 1);
+    match &sketches[0] {
+        PaneSketch::TopK(hh) => {
+            let arrived = r.arrived();
+            assert!((hh.total_weight() - arrived).abs() <= 1e-6 * arrived);
+            for (key, count) in hh.top_k(6) {
+                let c = r.state.c[key as usize];
+                assert!(
+                    (count - c).abs() <= 1e-6 * c.max(1.0),
+                    "stratum {key}: sketch mass {count} vs merged counter {c}"
+                );
+            }
+        }
+        other => panic!("wrong pane kind: {other:?}"),
+    }
+}
+
+#[test]
+fn spill_changes_no_sketch_answer() {
+    // Always-spill vs never-spill over the same seeded stream: sketch
+    // results, window spans, and sampled counts must be identical — the
+    // spilled sample deque had no reader on the sketch path.
+    let stream = StreamConfig::gaussian_micro(400.0, 23);
+    let run = |spill_ratio: usize| {
+        let p = PipelineBuilder::new()
+            .engine(EngineKind::Pipelined)
+            .sampler(SamplerKind::Oasrs)
+            .budget(QueryBudget::SamplingFraction(0.5))
+            .query(Query::Quantile(0.95))
+            .window(WindowConfig::new(8_000, 500)) // ratio 16
+            .sample_spill_ratio(spill_ratio)
+            .seed(3)
+            .build_native();
+        p.run_stream(&stream, 16_000).unwrap()
+    };
+    let spilled = run(1); // ratio 16 >= 1 -> spills
+    let kept = run(usize::MAX); // never spills
+    assert_eq!(spilled.windows.len(), kept.windows.len());
+    assert!(spilled.windows.len() >= 16);
+    for (a, b) in spilled.windows.iter().zip(kept.windows.iter()) {
+        assert_eq!(a.end_ms, b.end_ms);
+        assert_eq!(a.sampled, b.sampled, "spill lost the sampled count");
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(
+            a.result.value().to_bits(),
+            b.result.value().to_bits(),
+            "window {}..{}: spill changed the sketch answer",
+            a.start_ms,
+            a.end_ms
+        );
+    }
+    let stats = spilled.sketch_ingest.unwrap();
+    assert_eq!(stats.rebuilt_panes, 0);
+    assert_eq!(stats.query_time_builds, 0);
+}
