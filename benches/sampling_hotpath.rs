@@ -179,9 +179,60 @@ fn main() {
         ]);
         results.push((label.to_string(), per_item, close));
     }
+
+    // Observability-overhead rows: the same OASRS hot path with the metrics
+    // registry enabled vs disabled (tracing stays off in both — its default).
+    // This bench is its own process, so toggling the process-global flag is
+    // safe here (library tests must never do this).  Labels deliberately do
+    // NOT start with "Oasrs": the baseline regression guard above keys on
+    // that prefix and these rows measure the obs plane, not the sampler.
+    // Interleaved on/off pairs so drift (thermal, cache) hits both equally.
+    let (mut on_item, mut on_close, mut off_item, mut off_close) = (0.0, 0.0, 0.0, 0.0);
+    let rounds = if smoke { 1 } else { 3 };
+    for _ in 0..rounds {
+        streamapprox::obs::set_metrics_enabled(true);
+        let (a, b) = bench_sampler(SamplerKind::Oasrs, 0.1, n, intervals);
+        streamapprox::obs::set_metrics_enabled(false);
+        let (c, d) = bench_sampler(SamplerKind::Oasrs, 0.1, n, intervals);
+        on_item += a / rounds as f64;
+        on_close += b / rounds as f64;
+        off_item += c / rounds as f64;
+        off_close += d / rounds as f64;
+    }
+    streamapprox::obs::set_metrics_enabled(true);
+    for (label, item, close) in [
+        ("ObsOn (Oasrs 10%)", on_item, on_close),
+        ("ObsOff (Oasrs 10%)", off_item, off_close),
+    ] {
+        t.row(vec![
+            label.to_string(),
+            "0.1".to_string(),
+            format!("{item:.1}"),
+            format!("{close:.2}"),
+        ]);
+        results.push((label.to_string(), item, close));
+    }
     t.print();
 
-    let ok = if check { check_baseline(&results) } else { true };
+    let mut ok = if check { check_baseline(&results) } else { true };
+    if check {
+        // Instrumentation-overhead gate: registry-enabled per-item cost must
+        // stay within 5% of the uninstrumented path (+0.5 ns absolute slack
+        // so sub-ns timer noise cannot fail a ~2 ns measurement).
+        let budget = off_item * 1.05 + 0.5;
+        if on_item > budget {
+            eprintln!(
+                "obs overhead check FAILED: instrumented {on_item:.2} ns/item > \
+                 5% budget over uninstrumented {off_item:.2} ns/item"
+            );
+            ok = false;
+        } else {
+            eprintln!(
+                "obs overhead check ok: instrumented {on_item:.2} ns/item vs \
+                 uninstrumented {off_item:.2} ns/item"
+            );
+        }
+    }
     // Smoke numbers go to a side file and a failed regression check never
     // overwrites the baseline — otherwise the next run would compare
     // against the very numbers that just failed.

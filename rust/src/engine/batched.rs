@@ -83,9 +83,10 @@ impl<'a> BatchedEngine<'a> {
         // Sketch registration is a control-plane message on the pool: the
         // acked rendezvous orders it before every chunk of the run.
         if let Some(sw) = &sketches {
-            pool.register_sketches(&[sw.spec()]);
+            pool.register_sketches(&[sw.spec()])?;
         }
         let query_builds_at_start = self.executor.query_time_sketch_builds();
+        let obs_start = crate::obs::global().snapshot();
 
         let mut report = RunReport::default();
         let mut exact = ExactAgg::default();
@@ -116,7 +117,12 @@ impl<'a> BatchedEngine<'a> {
             // scheduling rendezvous).  Registered pane sketches come back
             // pre-built from the workers.
             let t0 = Instant::now();
-            let (batch_result, mut pane_sketches) = pool.finish_interval_with_sketches();
+            let (batch_result, mut pane_sketches) = {
+                let _sp = crate::obs::trace::span("interval_close");
+                pool.finish_interval_with_sketches()
+            };
+            crate::obs_histogram!("interval_close_ns", "whole interval close (drain+merge+partials)")
+                .record_elapsed(t0);
             let batch_exact = std::mem::take(&mut exact);
 
             if let Some(sw) = sketches.as_mut() {
@@ -129,6 +135,8 @@ impl<'a> BatchedEngine<'a> {
                 }
             }
             if let Some(ws) = assembler.push_interval_view(batch_result, batch_exact) {
+                let emit_t0 = crate::obs::metrics_enabled().then(Instant::now);
+                let _sp = crate::obs::trace::span("window_emit");
                 // The data-parallel job over the window: pane sketches for
                 // sketch-backed queries, the zero-copy sample view for
                 // linear ones.
@@ -137,6 +145,10 @@ impl<'a> BatchedEngine<'a> {
                     None => self.executor.execute_view(&self.query, &ws)?,
                 };
                 let processing_ns = t0.elapsed().as_nanos() as u64;
+                if let Some(emit_t0) = emit_t0 {
+                    crate::obs_histogram!("window_emit_ns", "query execution + report emit at a slide boundary")
+                        .record_elapsed(emit_t0);
+                }
 
                 let (exact_scalar, exact_ps) = if self.config.track_exact {
                     exact_values(&self.query, &ws.exact)
@@ -181,6 +193,7 @@ impl<'a> BatchedEngine<'a> {
                 self.executor.query_time_sketch_builds().saturating_sub(query_builds_at_start),
             )
         });
+        report.metrics = Some(crate::obs::global().snapshot().delta(&obs_start));
         Ok(report)
     }
 }

@@ -180,6 +180,11 @@ pub struct RunReport {
     /// Pane-sketch provenance (None for linear queries or when
     /// `sketch_panes` is off).
     pub sketch_ingest: Option<SketchIngestStats>,
+    /// Per-run observability delta (end-of-run registry snapshot minus the
+    /// one taken at run start): ingest/transport/close/window/query series
+    /// attributed to this run even though the registry is process-global.
+    /// See [`crate::obs`] for the metrics reference.
+    pub metrics: Option<crate::obs::MetricsSnapshot>,
 }
 
 impl RunReport {
@@ -276,6 +281,7 @@ mod tests {
             items_processed: 1_000_000,
             wall_ns: 500_000_000, // 0.5 s
             sketch_ingest: None,
+            metrics: None,
         };
         assert!((r.throughput() - 2_000_000.0).abs() < 1.0);
         assert!((r.mean_accuracy_loss() - 0.01).abs() < 1e-12);

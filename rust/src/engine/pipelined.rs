@@ -91,9 +91,10 @@ impl<'a> PipelinedEngine<'a> {
             None
         };
         if let Some(spec) = sketch_spec {
-            pool.register_sketches(&[spec]);
+            pool.register_sketches(&[spec])?;
         }
         let query_builds_at_start = self.executor.query_time_sketch_builds();
+        let obs_start = crate::obs::global().snapshot();
         // Window-level observations flow back from the query operator.
         // Sized to the interval channel: the consumer emits at most one
         // observation per interval message, so this can never fill and
@@ -141,11 +142,17 @@ impl<'a> PipelinedEngine<'a> {
                         }
                     }
                     if let Some(ws) = assembler.push_interval_view(msg.result, msg.exact) {
+                        let emit_t0 = crate::obs::metrics_enabled().then(Instant::now);
+                        let _sp = crate::obs::trace::span("window_emit");
                         let qr = match &sketches {
                             Some(sw) => executor.execute_sketch(&query, sw, &ws.state)?,
                             None => executor.execute_view(&query, &ws)?,
                         };
                         let processing_ns = msg.close_ns + t0.elapsed().as_nanos() as u64;
+                        if let Some(emit_t0) = emit_t0 {
+                            crate::obs_histogram!("window_emit_ns", "query execution + report emit at a slide boundary")
+                                .record_elapsed(emit_t0);
+                        }
                         let (exact_scalar, exact_ps) = if config.track_exact {
                             exact_values(&query, &ws.exact)
                         } else {
@@ -205,8 +212,13 @@ impl<'a> PipelinedEngine<'a> {
                 pool.offer_slice(interval_items);
                 items_processed += interval_items.len() as u64;
                 let t0 = Instant::now();
-                let (result, mut pane_sketches) = pool.finish_interval_with_sketches();
+                let (result, mut pane_sketches) = {
+                    let _sp = crate::obs::trace::span("interval_close");
+                    pool.finish_interval_with_sketches()
+                };
                 let close_ns = t0.elapsed().as_nanos() as u64;
+                crate::obs_histogram!("interval_close_ns", "whole interval close (drain+merge+partials)")
+                    .record(close_ns);
                 // The engines register exactly one spec; pop() would
                 // silently mispair if that ever changed.
                 debug_assert!(pane_sketches.len() <= 1, "one registered spec per engine run");
@@ -257,6 +269,7 @@ impl<'a> PipelinedEngine<'a> {
                     .saturating_sub(query_builds_at_start);
                 stats
             }),
+            metrics: Some(crate::obs::global().snapshot().delta(&obs_start)),
         })
     }
 }
@@ -347,10 +360,20 @@ mod tests {
         assert!(stats.prebuilt_panes > 0);
         assert_eq!(stats.rebuilt_panes, 0);
         assert_eq!(stats.query_time_builds, 0);
-        // weighted-reservoir sampler also flows through the pipelined path
-        // (plumbing only — value-biased sampling gives uncalibrated
-        // quantiles, see sampling/weighted.rs docs)
+        // weighted-reservoir + sketch query is now rejected up front: the
+        // A-ExpJ value-biased inclusion probabilities are not modeled by the
+        // count-based HT weights the sketch fold uses, so the registration
+        // fails with a descriptive config error instead of silently serving
+        // uncalibrated quantiles (closes the ROADMAP calibration residual).
         let engine = PipelinedEngine::new(&cfg, window, Query::Quantile(0.95), &exec);
+        let mut cost = CostFunction::new(QueryBudget::SamplingFraction(0.3));
+        let err = engine
+            .run(&items, SamplerKind::WeightedRes, &mut cost)
+            .expect_err("WeightedRes + sketch query must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("WeightedRes"), "msg: {msg}");
+        // WeightedRes still runs linear queries through the pipelined path.
+        let engine = PipelinedEngine::new(&cfg, window, Query::Sum, &exec);
         let mut cost = CostFunction::new(QueryBudget::SamplingFraction(0.3));
         let r = engine.run(&items, SamplerKind::WeightedRes, &mut cost).unwrap();
         assert!(!r.windows.is_empty());

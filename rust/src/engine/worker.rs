@@ -44,8 +44,9 @@
 //! single-core configuration and the pipelined engine's sampling operator
 //! use this fast path.
 
-use crate::core::{Item, MAX_STRATA};
+use crate::core::{Error, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
+use crate::obs;
 use crate::sampling::oasrs::merge_worker_results;
 use crate::sampling::{
     NoopSampler, OasrsSampler, SampleResult, Sampler, SamplerKind, SrsSampler,
@@ -173,6 +174,7 @@ impl StsBatch {
     /// Phase 2: sample exactly `targets[s]` items per stratum from the local
     /// groups by full random sort, then reset for the next interval.
     pub fn finish_with_targets(&mut self, targets: &[usize; MAX_STRATA]) -> SampleResult {
+        let t0 = obs::metrics_enabled().then(std::time::Instant::now);
         let mut sample = Vec::new();
         let mut state = StrataState::default();
         for s in 0..MAX_STRATA {
@@ -194,6 +196,13 @@ impl StsBatch {
             g.clear();
         }
         self.counts = [0; MAX_STRATA];
+        if let Some(t0) = t0 {
+            crate::obs_histogram!(
+                "close_sts_sort_ns",
+                "STS full-random-sort sampling pass at interval close"
+            )
+            .record_elapsed(t0);
+        }
         SampleResult { sample, state }
     }
 }
@@ -244,7 +253,19 @@ enum Msg {
 /// The worker-side sketch fold: one partial per registered spec, built
 /// from the finished interval's sample with the interval's own HT weights.
 fn build_partials(specs: &[SketchSpec], result: &SampleResult) -> Vec<PaneSketch> {
-    specs.iter().map(|spec| spec.build(result)).collect()
+    if specs.is_empty() {
+        return Vec::new();
+    }
+    let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+    let partials = specs.iter().map(|spec| spec.build(result)).collect();
+    if let Some(t0) = t0 {
+        crate::obs_histogram!(
+            "close_sketch_build_ns",
+            "sketch-partial build from one interval sample"
+        )
+        .record_elapsed(t0);
+    }
+    partials
 }
 
 /// Counters for the chunk transport (threaded pools only).
@@ -319,7 +340,19 @@ impl ThreadedTransport {
         let w = self.next;
         self.next = (self.next + 1) % self.chunk_txs.len();
         self.stats.chunks_sent += 1;
+        crate::obs_counter!(
+            "transport_chunks_sent_total",
+            "512-item chunks shipped over the SPSC data rings"
+        )
+        .inc();
         let _ = self.chunk_txs[w].send(chunk);
+        // Per-chunk occupancy probe of the ring just written (a relaxed
+        // load pair) — "which worker's ring is backing up" on a live run.
+        crate::obs_gauge!(
+            "ingest_ring_occupancy",
+            "chunks queued on the most recently shipped worker ring"
+        )
+        .set(self.chunk_txs[w].len() as f64);
     }
 
     /// Flush the pending partial chunk (interval close).
@@ -343,9 +376,19 @@ impl ThreadedTransport {
         }
         if let Some(b) = self.free.pop() {
             self.stats.buffers_recycled += 1;
+            crate::obs_counter!(
+                "transport_buffers_recycled_total",
+                "chunk buffers reused from the return rings"
+            )
+            .inc();
             return b;
         }
         self.stats.buffers_allocated += 1;
+        crate::obs_counter!(
+            "transport_buffers_allocated_total",
+            "chunk buffers freshly allocated (pool misses)"
+        )
+        .inc();
         Vec::with_capacity(CHUNK)
     }
 }
@@ -400,6 +443,7 @@ fn worker_loop(
                 drain(&mut sampler);
                 match msg {
                     Msg::Finish(reply) => {
+                        let _sp = obs::trace::span("worker_finish");
                         let result = sampler.finish_simple();
                         let sketches = build_partials(&specs, &result);
                         let _ = reply.send(WorkerFinish { result, sketches });
@@ -411,6 +455,7 @@ fn worker_loop(
                     }
                     Msg::FinishSts(targets, reply) => {
                         if let WorkerSampler::Sts(s) = &mut sampler {
+                            let _sp = obs::trace::span("worker_finish_sts");
                             let result = s.finish_with_targets(&targets);
                             let sketches = build_partials(&specs, &result);
                             let _ = reply.send(WorkerFinish { result, sketches });
@@ -433,6 +478,15 @@ fn worker_loop(
         if worked {
             idle = 0;
         } else {
+            if idle >= 256 {
+                // Nap-tier backoff rounds (>= 50 µs apart, so the counter
+                // tick is amortized into the nap itself).
+                crate::obs_counter!(
+                    "ingest_backoff_naps_total",
+                    "worker idle-loop naps (sleep-tier backoff rounds)"
+                )
+                .inc();
+            }
             spsc::backoff(idle);
             idle = idle.saturating_add(1);
         }
@@ -522,9 +576,17 @@ impl IngestPool {
     /// chunk boundaries and worker assignment as repeated [`Self::offer`]
     /// calls, so seeded runs are chunk-size independent.
     pub fn offer_slice(&mut self, items: &[Item]) {
+        let t0 = obs::metrics_enabled().then(std::time::Instant::now);
         match &mut self.imp {
             PoolImpl::Inline(s) => s.offer_slice(items),
             PoolImpl::Threaded(t) => t.offer_slice(items),
+        }
+        if let Some(t0) = t0 {
+            crate::obs_histogram!(
+                "ingest_offer_ns",
+                "wall time of one offer_slice call (per slice, never per item)"
+            )
+            .record_elapsed(t0);
         }
     }
 
@@ -543,6 +605,27 @@ impl IngestPool {
     /// pool returns a sketch byte-identical to rebuilding from the merged
     /// interval result.
     pub fn finish_interval_with_sketches(&mut self) -> (SampleResult, Vec<PaneSketch>) {
+        let (result, sketches) = self.finish_impl();
+        // Interval-close accounting: one counter batch per interval, zero
+        // per-item cost.  RNG draws equal items offered for the per-item
+        // rate samplers (OASRS/SRS draw once per offer).
+        let arrived = result.arrived() as u64;
+        crate::obs_counter!("ingest_items_total", "items offered to the sampling plane").add(arrived);
+        crate::obs_counter!("ingest_accepts_total", "sampled items surviving admission")
+            .add(result.sample.len() as u64);
+        crate::obs_counter!("ingest_rng_draws_total", "sampler RNG draws (one per offered item)")
+            .add(arrived);
+        if let PoolImpl::Threaded(t) = &self.imp {
+            crate::obs_gauge!(
+                "transport_recycle_hit_rate",
+                "fraction of buffer acquisitions served by recycling (0.0 when idle)"
+            )
+            .set(t.stats.recycle_hit_rate());
+        }
+        (result, sketches)
+    }
+
+    fn finish_impl(&mut self) -> (SampleResult, Vec<PaneSketch>) {
         match &mut self.imp {
             PoolImpl::Inline(s) => {
                 let result = match s.as_mut() {
@@ -628,9 +711,30 @@ impl IngestPool {
     /// rendezvous as [`Self::set_fraction`], so registration orders before
     /// any chunk shipped afterwards.  Replaces any previous registration;
     /// an empty slice unregisters.
-    pub fn register_sketches(&mut self, specs: &[SketchSpec]) {
+    ///
+    /// Rejects `WeightedRes` (A-ExpJ) pools: value-biased designs give each
+    /// item an inclusion probability the count-based Horvitz–Thompson
+    /// weights in the sketch fold do not model, so the resulting sketch
+    /// mass would be silently uncalibrated (the ROADMAP residual this
+    /// rejection closes).  A future fix would thread per-item inclusion
+    /// probabilities from the A-ExpJ keys into the fold; until then the
+    /// combination fails loudly here, mirroring how accuracy-target
+    /// budgets reject sketch queries in `validate_budget`.
+    pub fn register_sketches(&mut self, specs: &[SketchSpec]) -> Result<()> {
+        if self.kind == SamplerKind::WeightedRes && !specs.is_empty() {
+            return Err(Error::Config(
+                "sketch registration cannot run over the WeightedRes (A-ExpJ) \
+                 sampler: its value-biased inclusion probabilities are not \
+                 modeled by the count-based Horvitz-Thompson weights the \
+                 sketch fold uses, so quantile/distinct/top-k mass would be \
+                 uncalibrated - use Oasrs, Srs, or Sts for sketch-backed \
+                 queries"
+                    .to_string(),
+            ));
+        }
         self.specs = specs.to_vec();
         if let PoolImpl::Threaded(t) = &mut self.imp {
+            let t0 = obs::metrics_enabled().then(std::time::Instant::now);
             let mut acks = Vec::new();
             for tx in &t.ctrl_txs {
                 let (rtx, rrx) = bounded(1);
@@ -640,7 +744,11 @@ impl IngestPool {
             for ack in acks {
                 let _ = ack.recv();
             }
+            if let Some(t0) = t0 {
+                control_ack_hist().record_elapsed(t0);
+            }
         }
+        Ok(())
     }
 
     /// Update the sampling fraction for subsequent intervals.  Blocks
@@ -652,6 +760,7 @@ impl IngestPool {
         match &mut self.imp {
             PoolImpl::Inline(s) => s.set_fraction(fraction),
             PoolImpl::Threaded(t) => {
+                let t0 = obs::metrics_enabled().then(std::time::Instant::now);
                 let mut acks = Vec::new();
                 for tx in &t.ctrl_txs {
                     let (rtx, rrx) = bounded(1);
@@ -661,9 +770,22 @@ impl IngestPool {
                 for ack in acks {
                     let _ = ack.recv();
                 }
+                if let Some(t0) = t0 {
+                    control_ack_hist().record_elapsed(t0);
+                }
             }
         }
     }
+}
+
+/// Shared histogram for the acked control-plane rendezvous
+/// (`set_fraction` / `register_sketches`): time from first send to last
+/// worker ack.
+fn control_ack_hist() -> obs::Histogram {
+    crate::obs_histogram!(
+        "control_ack_ns",
+        "rendezvous ack latency for set_fraction / register_sketches"
+    )
 }
 
 impl Drop for IngestPool {
@@ -953,6 +1075,45 @@ mod tests {
     }
 
     #[test]
+    fn idle_pool_recycle_hit_rate_is_zero_not_nan() {
+        // Zero-denominator guard: a stats block that has never acquired a
+        // buffer must report 0.0, not NaN (ratio gauges feed dashboards —
+        // NaN poisons min/max/avg panels silently).
+        let idle = TransportStats::default();
+        assert_eq!(idle.recycle_hit_rate(), 0.0);
+        assert!(idle.recycle_hit_rate().is_finite());
+        // A freshly constructed threaded pool has recycled nothing yet:
+        // still finite, still zero.
+        let p = IngestPool::new(SamplerKind::Oasrs, 2, 0.5, 77);
+        let rate = p.transport_stats().unwrap().recycle_hit_rate();
+        assert_eq!(rate, 0.0);
+    }
+
+    #[test]
+    fn weighted_res_pool_rejects_sketch_registration() {
+        use crate::sketch::SketchSpec;
+        // The ROADMAP calibration residual, closed the cheap way: A-ExpJ
+        // inclusion probabilities are value-biased, so the count-based HT
+        // weights in the sketch fold would produce uncalibrated mass —
+        // reject loudly instead (cf. validate_budget for the analogous
+        // budget/query rejection).
+        for workers in [1usize, 2] {
+            let mut p = IngestPool::new(SamplerKind::WeightedRes, workers, 0.3, 55);
+            let err = p.register_sketches(&[SketchSpec::Quantile { clusters: 32 }]);
+            let msg = err.err().expect("WeightedRes registration must fail").to_string();
+            assert!(msg.contains("WeightedRes"), "unhelpful error: {msg}");
+            assert!(msg.contains("uncalibrated"), "unhelpful error: {msg}");
+            // the pool stays usable for plain sampling, with no partials
+            feed(&mut p, 2_000, 3);
+            let (r, sks) = p.finish_interval_with_sketches();
+            assert_eq!(r.arrived(), 2_000.0);
+            assert!(sks.is_empty());
+            // unregistering (empty slice) is always allowed
+            p.register_sketches(&[]).unwrap();
+        }
+    }
+
+    #[test]
     fn largest_remainder_sums_exactly() {
         // 5 workers, 3 items each, target 7: independent rounding gives
         // round(7*3/15) = 1 per worker = 5 != 7; largest remainder hits 7.
@@ -1028,7 +1189,7 @@ mod tests {
         ];
         let mut registered = IngestPool::new(SamplerKind::Oasrs, 1, 0.4, 41);
         let mut plain = IngestPool::new(SamplerKind::Oasrs, 1, 0.4, 41);
-        registered.register_sketches(&specs);
+        registered.register_sketches(&specs).unwrap();
         for interval in 0..3 {
             for i in 0..5_000u64 {
                 let it = Item::new((i % 4) as u16, (i * 7 % 1000) as f64, interval * 5_000 + i);
@@ -1059,7 +1220,7 @@ mod tests {
             SketchSpec::TopK { capacity: 16, cm_width: 1024, cm_depth: 4, seed: 0x70_4B },
         ];
         let mut p = IngestPool::new(SamplerKind::Oasrs, 3, 0.3, 42);
-        p.register_sketches(&specs);
+        p.register_sketches(&specs).unwrap();
         // warm-up interval so OASRS capacities are sized
         feed(&mut p, 30_000, 4);
         p.finish_interval();
@@ -1106,7 +1267,7 @@ mod tests {
         let mut p = IngestPool::new(SamplerKind::None, 2, 1.0, 43);
         feed(&mut p, 1_000, 2);
         p.finish_interval();
-        p.register_sketches(&[SketchSpec::Quantile { clusters: 32 }]);
+        p.register_sketches(&[SketchSpec::Quantile { clusters: 32 }]).unwrap();
         feed(&mut p, 4_000, 2);
         let (r, sks) = p.finish_interval_with_sketches();
         assert_eq!(r.sample.len(), 4_000);

@@ -115,6 +115,11 @@ impl FeedbackController {
             } else {
                 CI_WIDTH_EWMA * ci.bound + (1.0 - CI_WIDTH_EWMA) * self.ci_width_ewma
             };
+            crate::obs_gauge!(
+                "feedback_ci_width_ewma",
+                "EWMA of observed window CI half-widths (accuracy loop state)"
+            )
+            .set(self.ci_width_ewma);
         }
         self.observe(ci.relative())
     }
@@ -141,6 +146,11 @@ impl FeedbackController {
             self.adjustments += 1;
         }
         self.fraction = next;
+        crate::obs_gauge!(
+            "feedback_fraction",
+            "sampling fraction currently commanded by the feedback loop"
+        )
+        .set(self.fraction);
         self.fraction
     }
 }

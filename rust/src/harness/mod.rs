@@ -157,6 +157,33 @@ impl Ctx {
     }
 }
 
+/// Per-stage latency table from a metrics snapshot (or a run's snapshot
+/// delta): one row per latency histogram, with p50/p95/p99/max in µs.
+/// Shared by the CLI's `run --metrics` output and the CI perf-smoke job
+/// summary; empty-count series are skipped so a linear-query run does not
+/// print all-zero sketch rows.
+pub fn stage_latency_table(snap: &crate::obs::MetricsSnapshot) -> crate::util::table::Table {
+    let mut t = crate::util::table::Table::new(
+        "per-stage latency (us)",
+        &["stage", "count", "p50", "p95", "p99", "max"],
+    );
+    let us = |ns: u64| format!("{:.1}", ns as f64 / 1e3);
+    for (series, h) in &snap.hists {
+        if h.count == 0 {
+            continue;
+        }
+        t.row(vec![
+            series.clone(),
+            h.count.to_string(),
+            us(h.quantile(0.5)),
+            us(h.quantile(0.95)),
+            us(h.quantile(0.99)),
+            us(h.max),
+        ]);
+    }
+    t
+}
+
 /// One measured configuration.
 pub struct Measurement {
     pub system: System,

@@ -53,6 +53,7 @@ pub mod engine;
 pub mod error;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod query;
 pub mod runtime;
@@ -68,6 +69,7 @@ pub mod prelude {
     pub use crate::core::{Item, StratumId, MAX_STRATA};
     pub use crate::engine::{EngineKind, RunReport};
     pub use crate::error::{ConfidenceInterval, ConfidenceLevel, Estimate};
+    pub use crate::obs::MetricsSnapshot;
     pub use crate::pipeline::{Pipeline, PipelineBuilder, PipelineReport};
     pub use crate::query::Query;
     pub use crate::runtime::{Backend, ComputeService};

@@ -10,6 +10,7 @@
 //!                             quantile:<q>|distinct|topk:<k>]
 //!                    [--window <size_ms>:<slide_ms> | <size_ms>]
 //!                    [--dataset micro|caida|taxi] [--backend xla|native]
+//!                    [--metrics <out.prom>] [--trace <out.json>]
 //! streamapprox bench --figure fig5a|fig5b|fig5c|fig6a|fig6bc|fig7a|fig7b|
 //!                             fig7c|fig8|fig9|fig10|fig11|sketch|window|all
 //!                    [--full]
@@ -17,6 +18,11 @@
 //!
 //! `--window 60000:1000` runs a 60 s window sliding every second — the
 //! long-window/small-slide family the pane-store assembler makes viable.
+//!
+//! `--metrics out.prom` writes the run's registry delta as a Prometheus
+//! text export and prints the per-stage latency table; `--trace out.json`
+//! enables span tracing for the run and writes a Chrome `trace_event` file
+//! (load via chrome://tracing or Perfetto).
 
 use std::collections::HashMap;
 
@@ -167,6 +173,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
         "taxi" => TaxiConfig::default().generate(duration),
         _ => StreamGenerator::new(&StreamConfig::gaussian_micro(1000.0, 7)).take_until(duration),
     };
+    if flags.contains_key("trace") {
+        streamapprox::obs::trace::set_tracing_enabled(true);
+    }
     let r = pipeline.run_items(&items)?;
     println!(
         "{} items in {:.1} ms -> {:.0} items/s; {} windows; mean loss {:.4}%",
@@ -186,6 +195,21 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
                 w.exact_scalar.unwrap_or(f64::NAN)
             );
         }
+    }
+    if let Some(path) = flags.get("metrics") {
+        let snap = r
+            .metrics
+            .clone()
+            .unwrap_or_else(|| streamapprox::obs::global().snapshot());
+        std::fs::write(path, snap.to_prometheus())
+            .map_err(|e| format!("--metrics {path}: {e}"))?;
+        streamapprox::harness::stage_latency_table(&snap).print();
+        println!("metrics (prometheus text) -> {path}");
+    }
+    if let Some(path) = flags.get("trace") {
+        let json = streamapprox::obs::trace::chrome_trace().to_string();
+        std::fs::write(path, json).map_err(|e| format!("--trace {path}: {e}"))?;
+        println!("chrome trace -> {path} (load via chrome://tracing)");
     }
     Ok(())
 }

@@ -1,0 +1,232 @@
+//! Metric snapshots and exporters: Prometheus text exposition, JSON, and
+//! the per-run delta embedded in `RunReport`.
+//!
+//! The registry is process-global (many pipelines, one address space), so
+//! raw totals cannot attribute cost to a single run.  The engines take a
+//! [`MetricsSnapshot`] at run start and end and store `end.delta(&start)`
+//! in the report: counters and histogram cells subtract, gauges keep their
+//! end-of-run value (they are last-write-wins levels, not accumulations).
+//!
+//! Histograms export as Prometheus *summaries* (`quantile` label +
+//! `_sum`/`_count`) rather than native `_bucket{le=}` series — the
+//! log-linear store has 976 cells and the quantiles are what the per-stage
+//! latency tables read anyway.  CI diffs the `# TYPE` lines of this export
+//! against a committed golden name-set so metric renames break loudly.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::hist::HistSnapshot;
+use crate::util::json::{obj, Value};
+
+/// Plain-data copy of every registered series, either absolute (a registry
+/// snapshot) or a per-run delta.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+    /// Family name → help text (family = series id up to the label brace).
+    pub help: BTreeMap<String, String>,
+}
+
+impl MetricsSnapshot {
+    /// Per-run attribution: `self` is the end-of-run snapshot, `start` the
+    /// one taken before the run.  Series missing from `start` (registered
+    /// mid-run) keep their end value.
+    pub fn delta(&self, start: &MetricsSnapshot) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), v.saturating_sub(start.counters.get(k).copied().unwrap_or(0))))
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, v)| match start.hists.get(k) {
+                Some(s) => (k.clone(), v.delta(s)),
+                None => (k.clone(), v.clone()),
+            })
+            .collect();
+        MetricsSnapshot {
+            counters,
+            gauges: self.gauges.clone(),
+            hists,
+            help: self.help.clone(),
+        }
+    }
+
+    /// Sum of counter series whose family name equals `family`.
+    pub fn counter(&self, family: &str) -> u64 {
+        self.counters
+            .iter()
+            .filter(|(k, _)| family_of(k) == family)
+            .map(|(_, &v)| v)
+            .sum()
+    }
+
+    /// Gauge value by exact series id.
+    pub fn gauge(&self, series: &str) -> Option<f64> {
+        self.gauges.get(series).copied()
+    }
+
+    /// Histogram by exact series id.
+    pub fn hist(&self, series: &str) -> Option<&HistSnapshot> {
+        self.hists.get(series)
+    }
+
+    /// Render the Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut emitted: Vec<String> = Vec::new(); // families with headers written
+        let header = |out: &mut String, emitted: &mut Vec<String>, family: &str, kind: &str| {
+            if emitted.iter().any(|f| f == family) {
+                return;
+            }
+            if let Some(h) = self.help.get(family) {
+                let _ = writeln!(out, "# HELP {family} {h}");
+            }
+            let _ = writeln!(out, "# TYPE {family} {kind}");
+            emitted.push(family.to_string());
+        };
+        for (id, v) in &self.counters {
+            header(&mut out, &mut emitted, family_of(id), "counter");
+            let _ = writeln!(out, "{id} {v}");
+        }
+        for (id, v) in &self.gauges {
+            header(&mut out, &mut emitted, family_of(id), "gauge");
+            let _ = writeln!(out, "{id} {v}");
+        }
+        for (id, h) in &self.hists {
+            header(&mut out, &mut emitted, family_of(id), "summary");
+            for q in [0.5, 0.95, 0.99] {
+                let _ =
+                    writeln!(out, "{} {}", series_with(id, &format!("quantile=\"{q}\"")), h.quantile(q));
+            }
+            let _ = writeln!(out, "{}_sum {}", splice_suffix(id, "_sum"), h.sum);
+            let _ = writeln!(out, "{}_count {}", splice_suffix(id, "_count"), h.count);
+        }
+        out
+    }
+
+    /// Machine-readable snapshot (counters, gauges, histogram summaries).
+    pub fn to_json(&self) -> Value {
+        let counters = Value::Obj(
+            self.counters.iter().map(|(k, &v)| (k.clone(), Value::Num(v as f64))).collect(),
+        );
+        let gauges = Value::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), if v.is_finite() { Value::Num(v) } else { Value::Null }))
+                .collect(),
+        );
+        let hists = Value::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        obj(vec![
+                            ("count", Value::Num(h.count as f64)),
+                            ("sum", Value::Num(h.sum as f64)),
+                            ("max", Value::Num(h.max as f64)),
+                            ("mean", Value::Num(h.mean())),
+                            ("p50", Value::Num(h.quantile(0.5) as f64)),
+                            ("p95", Value::Num(h.quantile(0.95) as f64)),
+                            ("p99", Value::Num(h.quantile(0.99) as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![("counters", counters), ("gauges", gauges), ("histograms", hists)])
+    }
+}
+
+/// Family name of a rendered series id (strip the label block).
+pub fn family_of(series: &str) -> &str {
+    match series.find('{') {
+        Some(i) => &series[..i],
+        None => series,
+    }
+}
+
+/// Append one more label to a rendered series id.
+fn series_with(series: &str, label: &str) -> String {
+    match series.strip_suffix('}') {
+        Some(head) => format!("{head},{label}}}"),
+        None => format!("{series}{{{label}}}"),
+    }
+}
+
+/// `name{l=v}` → `name_sum{l=v}`; `name` → `name_sum`.
+fn splice_suffix(series: &str, suffix: &str) -> String {
+    match series.find('{') {
+        Some(i) => format!("{}{suffix}{}", &series[..i], &series[i..]),
+        None => format!("{series}{suffix}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Registry;
+
+    fn sample_registry() -> Registry {
+        let r = Registry::new();
+        r.counter("reqs_total", "requests").add(3);
+        r.gauge("ratio", "a ratio").set(0.5);
+        let h = r.histogram("lat_ns", "latency");
+        h.record(100);
+        h.record(200);
+        r
+    }
+
+    #[test]
+    fn prometheus_format_basics() {
+        let text = sample_registry().snapshot().to_prometheus();
+        assert!(text.contains("# TYPE reqs_total counter"), "{text}");
+        assert!(text.contains("reqs_total 3"));
+        assert!(text.contains("# TYPE ratio gauge"));
+        assert!(text.contains("# TYPE lat_ns summary"));
+        assert!(text.contains("lat_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("lat_ns_count 2"));
+        // one TYPE line per family
+        assert_eq!(text.matches("# TYPE lat_ns ").count(), 1);
+    }
+
+    #[test]
+    fn labeled_summary_series() {
+        let r = Registry::new();
+        r.histogram_with("lat_ns", &[("stage", "close")], "h").record(50);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("lat_ns{stage=\"close\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("lat_ns_sum{stage=\"close\"} 50"), "{text}");
+    }
+
+    #[test]
+    fn json_snapshot_parses_back() {
+        let v = sample_registry().snapshot().to_json();
+        let parsed = crate::util::json::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.get("counters").unwrap().get("reqs_total").unwrap().as_i64(), Some(3));
+        let lat = parsed.get("histograms").unwrap().get("lat_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn family_helpers() {
+        assert_eq!(family_of("a{b=\"c\"}"), "a");
+        assert_eq!(family_of("a"), "a");
+        assert_eq!(series_with("a", "q=\"1\""), "a{q=\"1\"}");
+        assert_eq!(series_with("a{b=\"c\"}", "q=\"1\""), "a{b=\"c\",q=\"1\"}");
+        assert_eq!(splice_suffix("a{b=\"c\"}", "_sum"), "a_sum{b=\"c\"}");
+    }
+
+    #[test]
+    fn counter_family_sums_labeled_series() {
+        let r = Registry::new();
+        r.counter_with("n", &[("w", "0")], "h").add(2);
+        r.counter_with("n", &[("w", "1")], "h").add(5);
+        assert_eq!(r.snapshot().counter("n"), 7);
+    }
+}

@@ -1,0 +1,226 @@
+//! Log-linear (HDR-style) latency histogram over atomics.
+//!
+//! Values (nanoseconds, `u64`) land in power-of-two octaves, each octave
+//! split into [`SUB`] linear sub-buckets, so relative error is bounded by
+//! `1/SUB` (6.25%) at every magnitude while the whole 64-bit range needs
+//! only [`BUCKETS`] cells.  Recording is three relaxed `fetch_add`s and one
+//! `fetch_max` — no locks, safe from any thread — which is what lets the
+//! ingest hot path keep a live latency distribution instead of a mean.
+//!
+//! Layout (the classic HdrHistogram scheme):
+//!
+//! * values `0..SUB` get one bucket each (width 1);
+//! * for `v >= SUB`, octave `o = floor(log2 v)` covers `[2^o, 2^(o+1))`
+//!   with `SUB` sub-buckets of width `2^(o-SUB_BITS)`.
+//!
+//! Quantiles walk the cumulative counts and answer with the matched
+//! bucket's midpoint (clamped to the observed max), so `p50 <= p95 <= p99
+//! <= max` holds by construction — pinned by the property tests in
+//! `tests/obs_plane.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the sub-buckets per octave.
+pub const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per power-of-two octave (16 → ≤ 6.25% bucket error).
+pub const SUB: usize = 1 << SUB_BITS;
+/// Octaves above the unit-width range (covers the full `u64` domain).
+pub const OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total bucket count.
+pub const BUCKETS: usize = SUB + OCTAVES * SUB;
+
+/// Bucket index for a recorded value (total order, contiguous coverage).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros(); // o >= SUB_BITS
+    let sub = ((v >> (o - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    SUB + (o - SUB_BITS) as usize * SUB + sub
+}
+
+/// Half-open value range `[low, high)` covered by bucket `i`; the final
+/// bucket saturates at `u64::MAX`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < BUCKETS, "bucket index {i} out of range");
+    if i < SUB {
+        return (i as u64, i as u64 + 1);
+    }
+    let o = SUB_BITS as usize + (i - SUB) / SUB;
+    let sub = ((i - SUB) % SUB) as u64;
+    let width = 1u64 << (o - SUB_BITS as usize);
+    let low = (1u64 << o) + sub * width;
+    (low, low.saturating_add(width))
+}
+
+/// Shared histogram cells: bucket counts plus count/sum/max, all relaxed
+/// atomics.  Handles ([`crate::obs::Histogram`]) wrap a `&'static` one.
+#[derive(Debug)]
+pub struct HistCore {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for HistCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistCore {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value: 3 relaxed `fetch_add` + 1 relaxed `fetch_max`.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Copy the cells out (relaxed loads; exact once recorders have
+    /// synchronized with the reader, e.g. via `join`).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Plain-data copy of a histogram, carried in
+/// [`crate::obs::MetricsSnapshot`] (and therefore in `RunReport`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// Largest value observed.  In a delta snapshot this is the *end* max
+    /// (an upper bound for the run — maxima are not subtractable).
+    pub max: u64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate: midpoint of the bucket holding the q-th ranked
+    /// value, clamped to the observed max.  Monotone in `q`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum = cum.saturating_add(c);
+            if cum >= target {
+                let (lo, hi) = bucket_bounds(i);
+                return (lo + (hi - lo) / 2).min(self.max.max(lo));
+            }
+        }
+        self.max
+    }
+
+    /// Per-run attribution: `self` (end-of-run) minus `start`.  Counts and
+    /// sums subtract bucket-wise; `max` keeps the end value.
+    pub fn delta(&self, start: &HistSnapshot) -> HistSnapshot {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| b.saturating_sub(start.buckets.get(i).copied().unwrap_or(0)))
+            .collect();
+        HistSnapshot {
+            count: self.count.saturating_sub(start.count),
+            sum: self.sum.saturating_sub(start.sum),
+            max: self.max,
+            buckets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_tile_the_domain() {
+        // Contiguous, non-overlapping: each bucket starts where the
+        // previous one ended.
+        let mut expect_low = 0u64;
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expect_low, "gap before bucket {i}");
+            assert!(hi > lo);
+            expect_low = hi;
+        }
+        assert_eq!(expect_low, u64::MAX, "last bucket saturates the domain");
+    }
+
+    #[test]
+    fn index_and_bounds_agree_on_edges() {
+        for v in [0u64, 1, 15, 16, 17, 31, 32, 255, 256, 257, 1 << 20, (1 << 20) + 1, u64::MAX] {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v < hi || (v == u64::MAX && i == BUCKETS - 1), "{v} not in [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn record_and_quantile_roundtrip() {
+        let h = HistCore::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500_500);
+        assert_eq!(s.max, 1000);
+        let p50 = s.quantile(0.5);
+        let p99 = s.quantile(0.99);
+        // bucket relative error is <= 1/SUB
+        assert!((p50 as f64 - 500.0).abs() <= 500.0 / SUB as f64 + 1.0, "p50={p50}");
+        assert!(p50 <= p99 && p99 <= s.max);
+    }
+
+    #[test]
+    fn delta_subtracts() {
+        let h = HistCore::new();
+        h.record(10);
+        let start = h.snapshot();
+        h.record(20);
+        h.record(30);
+        let d = h.snapshot().delta(&start);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum, 50);
+        assert_eq!(d.max, 30);
+        assert_eq!(d.buckets.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn empty_quantiles_are_zero() {
+        let s = HistCore::new().snapshot();
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! Pipeline-wide observability plane: a zero-dependency metrics registry,
+//! HDR-style latency histograms, and a lock-free span tracer — from ingest
+//! to window emit.
+//!
+//! The paper's whole argument is a measured throughput/accuracy trade-off,
+//! and means are not enough to defend it: per-stage latency *distributions*
+//! (p50/p95/p99) are what separate "the sampler is slow" from "one worker's
+//! ring is backing up".  This module replaces the previous scatter of
+//! ad-hoc globals and struct-local counters with one process-wide registry:
+//!
+//! * [`Counter`] / [`Gauge`] / [`Histogram`] handles over `&'static`
+//!   atomics — recording is a few relaxed atomic ops, no locks;
+//! * [`hist`]: log-linear (power-of-two octave × 16 linear sub-buckets)
+//!   histograms giving cheap p50/p95/p99/max at ≤ 6.25% bucket error;
+//! * [`trace`]: per-thread fixed-capacity span rings exportable as Chrome
+//!   `trace_event` JSON (off by default, enabled per run);
+//! * [`export`]: Prometheus text + JSON snapshot exporters, and
+//!   [`MetricsSnapshot`] deltas embedded in `RunReport` so per-run
+//!   attribution works even though the registry is process-global.
+//!
+//! Instrumentation cost discipline: hot sites record per *chunk* (512
+//! items), per slice, or per interval — never per item — and cache their
+//! handles in `OnceLock`s via the [`obs_counter!`] / [`obs_gauge!`] /
+//! [`obs_histogram!`] macros.  Histograms and gauges honor a global enable
+//! flag ([`set_metrics_enabled`]) so the benchmark can measure an
+//! uninstrumented baseline; counters always count, because drop accounting
+//! (`metrics::dropped_items`) is semantically load-bearing.
+//!
+//! # Metrics reference
+//!
+//! | name | type | stage | meaning |
+//! |------|------|-------|---------|
+//! | `ingest_items_total` | counter | ingest | items offered to the sampling plane (ticked at interval close) |
+//! | `ingest_accepts_total` | counter | ingest | sampled items surviving admission (interval sample size) |
+//! | `ingest_rng_draws_total` | counter | ingest | sampler RNG draws (= items offered for the per-item-rate samplers; derived at close) |
+//! | `ingest_dropped_items_total` | counter | ingest | admission-control drops (shimmed from `metrics::record_dropped_item`) |
+//! | `estimator_zero_weight_strata_total` | counter | estimate | strata skipped for zero weight (shimmed from `metrics::record_zero_weight_stratum`) |
+//! | `transport_chunks_sent_total` | counter | transport | 512-item chunks shipped over the SPSC rings |
+//! | `transport_buffers_recycled_total` | counter | transport | chunk buffers reused from the return rings |
+//! | `transport_buffers_allocated_total` | counter | transport | chunk buffers freshly allocated (pool misses) |
+//! | `ingest_backoff_naps_total` | counter | transport | worker idle-loop naps (sleep-tier backoff rounds) |
+//! | `window_pane_merges_total` | counter | window | structural pane merges (assembler folds + pane-store merges) |
+//! | `window_spill_events_total` | counter | window | sample-deque spills to compressed pane summaries |
+//! | `query_sketch_builds_total` | counter | query | sketches built at query time (rebuild path; prebuilt panes keep this flat) |
+//! | `transport_recycle_hit_rate` | gauge | transport | recycled / (recycled + allocated), 0.0 on an idle pool |
+//! | `ingest_ring_occupancy` | gauge | transport | chunks queued on the most recently shipped worker ring |
+//! | `feedback_ci_width_ewma` | gauge | feedback | EWMA of observed CI relative width (the controller's input) |
+//! | `feedback_fraction` | gauge | feedback | current sampling fraction chosen by the controller |
+//! | `broker_lag` | gauge | source | produced − consumed on the polled broker topic |
+//! | `ingest_offer_ns` | histogram | ingest | wall time of one `offer_slice` call (per slice, not per item) |
+//! | `control_ack_ns` | histogram | control | rendezvous ack latency for `set_fraction` / `register_sketches` |
+//! | `close_sts_sort_ns` | histogram | close | STS full random sort at interval close |
+//! | `close_sketch_build_ns` | histogram | close | sketch-partial build from the interval sample |
+//! | `interval_close_ns` | histogram | close | whole interval close (drain + merge + partials) |
+//! | `window_merge_ns` | histogram | window | assembling one window view from its panes |
+//! | `query_execute_ns` | histogram | query | estimate/aggregate execution per window |
+//! | `window_emit_ns` | histogram | emit | query + report assembly per emitted window |
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::MetricsSnapshot;
+pub use hist::{HistCore, HistSnapshot};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Gates [`Histogram::record`] and [`Gauge::set`] (counters always count —
+/// see the module doc).  Default on; the sampling-hotpath bench flips it
+/// off to measure the uninstrumented baseline.  Process-global: tests must
+/// not toggle it (they run in parallel); the bench is its own process.
+static METRICS_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable histogram+gauge recording process-wide.
+pub fn set_metrics_enabled(on: bool) {
+    METRICS_ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn metrics_enabled() -> bool {
+    METRICS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotone counter handle (`Copy` — cache freely).
+#[derive(Debug, Clone, Copy)]
+pub struct Counter {
+    cell: &'static AtomicU64,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge holding an `f64` (bits in an `AtomicU64`).
+#[derive(Debug, Clone, Copy)]
+pub struct Gauge {
+    cell: &'static AtomicU64,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if metrics_enabled() {
+            self.cell.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+/// Latency histogram handle (values in nanoseconds by convention).
+#[derive(Debug, Clone, Copy)]
+pub struct Histogram {
+    core: &'static HistCore,
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if metrics_enabled() {
+            self.core.record(v);
+        }
+    }
+
+    /// Record the elapsed time since `t0` in nanoseconds.
+    #[inline]
+    pub fn record_elapsed(&self, t0: Instant) {
+        if metrics_enabled() {
+            self.core.record(t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.core.snapshot()
+    }
+}
+
+enum Slot {
+    Counter(&'static AtomicU64),
+    Gauge(&'static AtomicU64),
+    Hist(&'static HistCore),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Counter(_) => "counter",
+            Slot::Gauge(_) => "gauge",
+            Slot::Hist(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: String,
+    slot: Slot,
+}
+
+impl Entry {
+    /// Rendered series id, `name` or `name{k="v",...}`.
+    fn series_id(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.clone();
+        }
+        let labels = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{v}\""))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!("{}{{{labels}}}", self.name)
+    }
+}
+
+/// A registry of named, labeled metrics.  Registration is idempotent (same
+/// name+labels returns the same handle) and cold-path locked; recording is
+/// lock-free through the returned handles.  Handle cells are `Box::leak`ed
+/// so instance registries (used by tests for race-free exact-delta
+/// assertions) leak a few atomics each — fine for their lifetime.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub const fn new() -> Self {
+        Self { entries: Mutex::new(Vec::new()) }
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        make: impl FnOnce() -> Slot,
+    ) -> usize {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(i) = entries
+            .iter()
+            .position(|e| e.name == name && e.labels.len() == labels.len()
+                && e.labels.iter().zip(labels).all(|(a, b)| a.0 == b.0 && a.1 == b.1))
+        {
+            return i;
+        }
+        entries.push(Entry {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            help: help.to_string(),
+            slot: make(),
+        });
+        entries.len() - 1
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, &[], help)
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+        let i = self.register(name, labels, help, || {
+            Slot::Counter(Box::leak(Box::new(AtomicU64::new(0))))
+        });
+        let entries = self.entries.lock().unwrap();
+        match entries[i].slot {
+            Slot::Counter(c) => Counter { cell: c },
+            ref other => panic!("metric {name} already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, &[], help)
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Gauge {
+        let i = self.register(name, labels, help, || {
+            Slot::Gauge(Box::leak(Box::new(AtomicU64::new(0))))
+        });
+        let entries = self.entries.lock().unwrap();
+        match entries[i].slot {
+            Slot::Gauge(g) => Gauge { cell: g },
+            ref other => panic!("metric {name} already registered as a {}", other.kind()),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        self.histogram_with(name, &[], help)
+    }
+
+    pub fn histogram_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Histogram {
+        let i = self.register(name, labels, help, || {
+            Slot::Hist(Box::leak(Box::new(HistCore::new())))
+        });
+        let entries = self.entries.lock().unwrap();
+        match entries[i].slot {
+            Slot::Hist(h) => Histogram { core: h },
+            ref other => panic!("metric {name} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Copy every registered series out as plain data.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let entries = self.entries.lock().unwrap();
+        let mut s = MetricsSnapshot::default();
+        for e in entries.iter() {
+            let id = e.series_id();
+            s.help.insert(e.name.clone(), e.help.clone());
+            match e.slot {
+                Slot::Counter(c) => {
+                    s.counters.insert(id, c.load(Ordering::Relaxed));
+                }
+                Slot::Gauge(g) => {
+                    s.gauges.insert(id, f64::from_bits(g.load(Ordering::Relaxed)));
+                }
+                Slot::Hist(h) => {
+                    s.hists.insert(id, h.snapshot());
+                }
+            }
+        }
+        s
+    }
+}
+
+/// The process-wide registry every pipeline stage records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Register-once-then-record counter handle for a hot site: the `OnceLock`
+/// fast path is one atomic load, the record one relaxed `fetch_add`.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr, $help:expr) => {{
+        static HANDLE: std::sync::OnceLock<$crate::obs::Counter> = std::sync::OnceLock::new();
+        *HANDLE.get_or_init(|| $crate::obs::global().counter($name, $help))
+    }};
+}
+
+/// Cached gauge handle (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr, $help:expr) => {{
+        static HANDLE: std::sync::OnceLock<$crate::obs::Gauge> = std::sync::OnceLock::new();
+        *HANDLE.get_or_init(|| $crate::obs::global().gauge($name, $help))
+    }};
+}
+
+/// Cached histogram handle (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_histogram {
+    ($name:expr, $help:expr) => {{
+        static HANDLE: std::sync::OnceLock<$crate::obs::Histogram> = std::sync::OnceLock::new();
+        *HANDLE.get_or_init(|| $crate::obs::global().histogram($name, $help))
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent() {
+        let r = Registry::new();
+        let a = r.counter("c", "help");
+        let b = r.counter("c", "help");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(b.get(), 3);
+        assert_eq!(r.snapshot().counters.len(), 1);
+    }
+
+    #[test]
+    fn labels_split_series() {
+        let r = Registry::new();
+        let a = r.counter_with("reqs", &[("stage", "ingest")], "h");
+        let b = r.counter_with("reqs", &[("stage", "close")], "h");
+        a.inc();
+        b.add(5);
+        let s = r.snapshot();
+        assert_eq!(s.counters["reqs{stage=\"ingest\"}"], 1);
+        assert_eq!(s.counters["reqs{stage=\"close\"}"], 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("m", "h");
+        let _ = r.gauge("m", "h");
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let r = Registry::new();
+        let g = r.gauge("ratio", "h");
+        g.set(0.375);
+        assert_eq!(g.get(), 0.375);
+        assert_eq!(r.snapshot().gauges["ratio"], 0.375);
+    }
+
+    #[test]
+    fn snapshot_delta_is_per_run() {
+        let r = Registry::new();
+        let c = r.counter("items", "h");
+        let h = r.histogram("lat", "h");
+        c.add(10);
+        h.record(100);
+        let start = r.snapshot();
+        c.add(7);
+        h.record(200);
+        h.record(300);
+        let d = r.snapshot().delta(&start);
+        assert_eq!(d.counters["items"], 7);
+        assert_eq!(d.hists["lat"].count, 2);
+        assert_eq!(d.hists["lat"].sum, 500);
+    }
+}

@@ -211,6 +211,18 @@ impl QueryExecutor {
     /// compute input and sketch builders, so the per-slide cost of a query
     /// does not include a span re-merge or clone.
     pub fn execute_view(&self, query: &Query, view: &WindowView<'_>) -> Result<QueryResult> {
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        let result = {
+            let _sp = crate::obs::trace::span("query_execute");
+            self.execute_view_impl(query, view)
+        };
+        if let Some(t0) = t0 {
+            query_execute_hist().record_elapsed(t0);
+        }
+        result
+    }
+
+    fn execute_view_impl(&self, query: &Query, view: &WindowView<'_>) -> Result<QueryResult> {
         // Distinct reads only the raw sample values — none of the aggregate
         // output — so skip the compute-service round trip (f32 conversion +
         // cross-thread rendezvous / XLA execution) and finish the estimate
@@ -235,6 +247,23 @@ impl QueryExecutor {
     /// `state` is the window's merged counters (for the output's
     /// weights/totals).
     pub fn execute_sketch(
+        &self,
+        query: &Query,
+        sketches: &SketchWindow,
+        state: &StrataState,
+    ) -> Result<QueryResult> {
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        let result = {
+            let _sp = crate::obs::trace::span("query_execute");
+            self.execute_sketch_impl(query, sketches, state)
+        };
+        if let Some(t0) = t0 {
+            query_execute_hist().record_elapsed(t0);
+        }
+        result
+    }
+
+    fn execute_sketch_impl(
         &self,
         query: &Query,
         sketches: &SketchWindow,
@@ -450,6 +479,11 @@ impl QueryExecutor {
         merge: impl Fn(&mut S, &S),
     ) -> S {
         self.sketch_builds.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!(
+            "query_sketch_builds_total",
+            "sketches constructed at query time (per-window rebuild path)"
+        )
+        .inc();
         let shards = self.sketch.shards.max(1);
         let mut parts: Vec<S> = (0..shards).map(|_| mk()).collect();
         for (i, &item) in view.iter().enumerate() {
@@ -500,6 +534,24 @@ impl QueryExecutor {
             |a, b| a.merge(b),
         )
     }
+}
+
+/// Shared handle for pane-store structural merge counting (same family as
+/// the window assembler's emission folds).
+fn pane_merge_counter() -> crate::obs::Counter {
+    crate::obs_counter!(
+        "window_pane_merges_total",
+        "pane summaries folded into emitted windows (assembler + pane store)"
+    )
+}
+
+/// Shared handle for the executor's per-query timing (both the view and
+/// the pane-sketch paths record into it).
+fn query_execute_hist() -> crate::obs::Histogram {
+    crate::obs_histogram!(
+        "query_execute_ns",
+        "one query execution over a completed window (view or pane-sketch path)"
+    )
 }
 
 /// The [`SketchSpec`] a query registers on the ingest pool, with the
@@ -582,7 +634,9 @@ impl SketchWindow {
             "pre-built pane sketch does not match the registered query spec"
         );
         self.prebuilt += 1;
+        let ops_before = self.panes.merge_ops();
         self.panes.push(pane);
+        pane_merge_counter().add(self.panes.merge_ops() - ops_before);
     }
 
     /// Build this interval's pane sketch from its sample result and push it
@@ -590,7 +644,9 @@ impl SketchWindow {
     /// on the query side — the fallback when the pool has no registration.
     pub fn push_pane(&mut self, interval: &SampleResult) {
         self.rebuilt += 1;
+        let ops_before = self.panes.merge_ops();
         self.panes.push(self.spec.build(interval));
+        pane_merge_counter().add(self.panes.merge_ops() - ops_before);
     }
 
     /// Merged sketch over every pane currently held (the spec's empty

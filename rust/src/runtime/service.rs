@@ -67,6 +67,13 @@ impl ComputeHandle {
     pub fn backend(&self) -> Backend {
         self.backend
     }
+
+    /// On-demand snapshot of the process-wide observability registry — the
+    /// service-level "scrape me" entry point (same data the CLI's
+    /// `--metrics` export and `RunReport::metrics` deltas are built from).
+    pub fn metrics_snapshot(&self) -> crate::obs::MetricsSnapshot {
+        crate::obs::global().snapshot()
+    }
 }
 
 /// Owns the service thread; dropping it shuts the thread down.
@@ -141,6 +148,11 @@ impl ComputeService {
     /// Handle for submitting jobs (cloneable, Send + Sync).
     pub fn handle(&self) -> ComputeHandle {
         self.handle.clone()
+    }
+
+    /// On-demand registry snapshot (see [`ComputeHandle::metrics_snapshot`]).
+    pub fn metrics_snapshot(&self) -> crate::obs::MetricsSnapshot {
+        self.handle.metrics_snapshot()
     }
 }
 

@@ -123,7 +123,10 @@ impl Broker {
     /// reads as 0 instead of wrapping to ~2^64.
     pub fn lag(&self, name: &str) -> Result<u64> {
         let (produced, consumed) = self.stats(name)?;
-        Ok(produced.saturating_sub(consumed))
+        let lag = produced.saturating_sub(consumed);
+        crate::obs_gauge!("broker_lag", "consumer lag of the most recently polled topic")
+            .set(lag as f64);
+        Ok(lag)
     }
 
     /// Total items currently buffered in a topic (queue depth).

@@ -211,6 +211,15 @@ impl<'a> WindowView<'a> {
     }
 }
 
+/// Shared handle for the assembler's per-push merge timing (both return
+/// paths of `push_interval_view` record into it).
+fn window_merge_hist() -> crate::obs::Histogram {
+    crate::obs_histogram!(
+        "window_merge_ns",
+        "one assembler push: pane append/evict + emission fold when due"
+    )
+}
+
 /// Per-pane bookkeeping the assembler keeps for eviction and emission.
 #[derive(Debug, Clone, Copy)]
 struct PaneMeta {
@@ -323,6 +332,14 @@ impl WindowAssembler {
         result: SampleResult,
         exact: ExactAgg,
     ) -> Option<WindowView<'_>> {
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        if self.spill {
+            crate::obs_counter!(
+                "window_spill_events_total",
+                "panes whose sample was dropped to a summary (spill mode)"
+            )
+            .inc();
+        }
         let cap = self.panes_per_window();
         if self.panes.len() == cap {
             let old = self.panes.pop_front().expect("ring non-empty at cap");
@@ -353,6 +370,9 @@ impl WindowAssembler {
         self.next_interval_end += self.interval_ms;
 
         if end % self.config.slide_ms != 0 {
+            if let Some(t0) = t0 {
+                window_merge_hist().record_elapsed(t0);
+            }
             return None;
         }
 
@@ -376,6 +396,14 @@ impl WindowAssembler {
             }
         }
 
+        crate::obs_counter!(
+            "window_pane_merges_total",
+            "pane summaries folded into emitted windows (assembler + pane store)"
+        )
+        .add(self.panes.len() as u64);
+        if let Some(t0) = t0 {
+            window_merge_hist().record_elapsed(t0);
+        }
         let intervals = self.panes.len();
         let sample_len = if self.spill {
             self.panes.iter().map(|m| m.sample_len).sum()

@@ -1,0 +1,333 @@
+//! End-to-end tests for the observability plane: histogram bucket/quantile
+//! properties, snapshot-delta exactness under concurrent recorders, both
+//! engines' per-run metric deltas, and Chrome-trace export validity on a
+//! threaded multi-worker run.
+//!
+//! This binary OWNS the process-global TRACING flag: the trace test enables
+//! it, and every other test here tolerates spans being recorded while it
+//! runs.  The METRICS_ENABLED flag is never touched (its default, enabled,
+//! is what the metric assertions rely on — toggling it would race the other
+//! tests in this process).
+
+use streamapprox::obs::hist::{bucket_bounds, bucket_index, BUCKETS};
+use streamapprox::obs::{HistCore, Registry};
+use streamapprox::prelude::*;
+use streamapprox::stream::StreamGenerator;
+use streamapprox::util::json::{parse, Value};
+use streamapprox::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// histogram properties
+// ---------------------------------------------------------------------------
+
+/// Every recorded value must land in a bucket whose bounds contain it —
+/// checked on the boundary-adjacent values of every octave plus a broad
+/// random sweep.
+#[test]
+fn bucket_bounds_contain_their_values() {
+    let mut probes: Vec<u64> = vec![0, 1, 2, 15, 16, 17, u64::MAX];
+    for shift in 4..63 {
+        let v = 1u64 << shift;
+        probes.extend([v - 1, v, v + 1]);
+    }
+    let mut rng = Rng::seed_from_u64(42);
+    for _ in 0..10_000 {
+        // Exponentially distributed magnitudes so every octave gets hits.
+        let shift = rng.range_usize(0, 63) as u32;
+        probes.push(rng.next_u64() >> shift);
+    }
+    for &v in &probes {
+        let i = bucket_index(v);
+        assert!(i < BUCKETS, "index {i} out of range for {v}");
+        let (lo, hi) = bucket_bounds(i);
+        // Half-open [lo, hi); the final bucket saturates at u64::MAX, which
+        // therefore lands on its (exclusive) bound.
+        assert!(
+            lo <= v && (v < hi || (v == u64::MAX && i == BUCKETS - 1)),
+            "bucket {i} [{lo}, {hi}) does not contain {v}"
+        );
+    }
+}
+
+/// Bucket bounds tile the u64 range in order: each bucket starts where the
+/// previous one ends, with no gaps or overlaps, saturating at `u64::MAX`.
+#[test]
+fn bucket_bounds_tile_without_gaps() {
+    let mut expected_lo = 0u64;
+    for i in 0..BUCKETS {
+        let (lo, hi) = bucket_bounds(i);
+        assert_eq!(lo, expected_lo, "bucket {i} leaves a gap");
+        assert!(hi > lo, "bucket {i} is empty or inverted");
+        expected_lo = hi;
+    }
+    assert_eq!(expected_lo, u64::MAX, "buckets must saturate the u64 domain");
+}
+
+/// Quantiles are monotone in q, never exceed the observed max, and q=1
+/// answers from the bucket holding the max.
+#[test]
+fn quantiles_are_monotone_and_bounded() {
+    let h = HistCore::new();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut max_v = 0u64;
+    for _ in 0..50_000 {
+        // Log-uniform-ish spread across six orders of magnitude.
+        let v = rng.next_u64() >> rng.range_usize(20, 60);
+        max_v = max_v.max(v);
+        h.record(v);
+    }
+    let s = h.snapshot();
+    assert_eq!(s.count, 50_000);
+    let qs = [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999, 1.0];
+    let mut prev = 0u64;
+    for &q in &qs {
+        let v = s.quantile(q);
+        assert!(v >= prev, "quantile({q}) = {v} < quantile at previous q = {prev}");
+        assert!(v <= max_v, "quantile({q}) = {v} exceeds recorded max {max_v}");
+        prev = v;
+    }
+    assert_eq!(s.max, max_v);
+    // q=1 answers from the bucket holding the max (midpoint, clamped to
+    // max): never above it, never below its bucket's lower bound.
+    let (max_lo, _) = bucket_bounds(bucket_index(max_v));
+    assert!(
+        s.quantile(1.0) >= max_lo,
+        "quantile(1) = {} below the max bucket [{}..]",
+        s.quantile(1.0),
+        max_lo
+    );
+}
+
+/// The log-linear layout guarantees a bounded relative quantile error: a
+/// reported quantile of a constant stream is within one sub-bucket (6.25%)
+/// of the true value.
+#[test]
+fn quantile_relative_error_is_bounded() {
+    for &v in &[100u64, 1_000, 50_000, 1_000_000, 123_456_789] {
+        let h = HistCore::new();
+        for _ in 0..1_000 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        for q in [0.5, 0.95, 0.99] {
+            let got = s.quantile(q) as f64;
+            let rel = (got - v as f64).abs() / v as f64;
+            assert!(rel <= 0.0625 + 1e-9, "quantile({q}) of constant {v} off by {rel}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshot deltas under concurrency
+// ---------------------------------------------------------------------------
+
+/// Counters and histogram counts in a snapshot delta are exact even with
+/// many threads recording concurrently — an isolated registry instance so
+/// parallel tests in this process cannot perturb the counts.
+#[test]
+fn snapshot_delta_exact_under_concurrent_recorders() {
+    static REG: Registry = Registry::new();
+    const THREADS: usize = 8;
+    const PER_THREAD: u64 = 10_000;
+
+    let start = REG.snapshot();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let c = REG.counter("events_total", "test counter");
+            let h = REG.histogram("work_ns", "test histogram");
+            s.spawn(move || {
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    h.record((t as u64 + 1) * 100 + i % 7);
+                }
+            });
+        }
+    });
+    let delta = REG.snapshot().delta(&start);
+    assert_eq!(delta.counter("events_total"), THREADS as u64 * PER_THREAD);
+    let h = delta.hist("work_ns").expect("histogram registered");
+    assert_eq!(h.count, THREADS as u64 * PER_THREAD);
+    assert!(h.sum > 0 && h.max >= 800);
+}
+
+// ---------------------------------------------------------------------------
+// per-run metric deltas from both engines
+// ---------------------------------------------------------------------------
+
+fn run_engine(engine: EngineKind, query: Query) -> RunReport {
+    let items =
+        StreamGenerator::new(&StreamConfig::gaussian_micro(400.0, 31)).take_until(12_000);
+    PipelineBuilder::new()
+        .engine(engine)
+        .sampler(SamplerKind::Oasrs)
+        .budget(QueryBudget::SamplingFraction(0.5))
+        .query(query)
+        .window(WindowConfig::new(4_000, 2_000))
+        .workers(2)
+        .build_native()
+        .run_items(&items)
+        .expect("pipeline run")
+}
+
+/// Acceptance criterion: both engines embed a `MetricsSnapshot` delta in
+/// their `RunReport` with nonzero ingest, window-merge, and query-stage
+/// series.
+#[test]
+fn both_engines_report_nonzero_stage_metrics() {
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        let r = run_engine(engine, Query::Sum);
+        let m = r.metrics.as_ref().unwrap_or_else(|| panic!("{engine:?}: no metrics delta"));
+        assert!(
+            m.counter("ingest_items_total") > 0,
+            "{engine:?}: ingest_items_total is zero"
+        );
+        let merges = m.hist("window_merge_ns").map_or(0, |h| h.count);
+        assert!(merges > 0, "{engine:?}: window_merge_ns recorded nothing");
+        let queries = m.hist("query_execute_ns").map_or(0, |h| h.count);
+        assert!(queries > 0, "{engine:?}: query_execute_ns recorded nothing");
+        let closes = m.hist("interval_close_ns").map_or(0, |h| h.count);
+        assert!(closes > 0, "{engine:?}: interval_close_ns recorded nothing");
+        // The delta attributes THIS run: the in-process batched engine
+        // ingests every offered item, so its delta must cover them all
+        // (parallel tests may add counts, never remove them).  The threaded
+        // pipelined transport may legitimately shed load, so only > 0 is
+        // asserted there.
+        if engine == EngineKind::Batched {
+            assert!(
+                m.counter("ingest_items_total") >= r.items_processed,
+                "{engine:?}: delta {} < items processed {}",
+                m.counter("ingest_items_total"),
+                r.items_processed
+            );
+        }
+    }
+}
+
+/// Sketch queries and the build-count series: the per-window rebuild path
+/// ticks `query_sketch_builds_total`, while the default streaming-ingest
+/// path performs zero query-time builds — the counter is the witness for
+/// both directions.
+#[test]
+fn sketch_query_build_counter_tracks_the_rebuild_path() {
+    let items =
+        StreamGenerator::new(&StreamConfig::gaussian_micro(400.0, 31)).take_until(12_000);
+    let run = |panes: bool| {
+        PipelineBuilder::new()
+            .engine(EngineKind::Batched)
+            .sampler(SamplerKind::Oasrs)
+            .budget(QueryBudget::SamplingFraction(0.5))
+            .query(Query::Distinct)
+            .window(WindowConfig::new(4_000, 2_000))
+            .workers(2)
+            .sketch_pane_windows(panes)
+            .build_native()
+            .run_items(&items)
+            .expect("pipeline run")
+    };
+    let rebuilt = run(false);
+    let m = rebuilt.metrics.as_ref().expect("metrics delta");
+    assert!(
+        m.counter("query_sketch_builds_total") > 0,
+        "rebuild path produced no query-time sketch builds"
+    );
+    assert!(m.hist("query_execute_ns").map_or(0, |h| h.count) > 0);
+    // Streaming ingest: panes arrive pre-built, so this run's delta adds
+    // nothing to the build counter (no other test in this binary runs the
+    // rebuild path concurrently).
+    let streamed = run(true);
+    let m = streamed.metrics.as_ref().expect("metrics delta");
+    assert_eq!(
+        m.counter("query_sketch_builds_total"),
+        0,
+        "streaming-ingest sketch query built sketches at query time"
+    );
+}
+
+/// The Prometheus rendering of a real run's delta carries the headline
+/// families — the same surface CI's golden name-set check scrapes.
+#[test]
+fn run_delta_renders_prometheus_families() {
+    let r = run_engine(EngineKind::Pipelined, Query::Sum);
+    let text = r.metrics.as_ref().expect("metrics delta").to_prometheus();
+    for family in [
+        "# TYPE ingest_items_total counter",
+        "# TYPE window_merge_ns summary",
+        "# TYPE query_execute_ns summary",
+        "# TYPE interval_close_ns summary",
+    ] {
+        assert!(text.contains(family), "missing {family:?} in:\n{text}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// span tracing
+// ---------------------------------------------------------------------------
+
+/// Chrome-trace export from a threaded 2-worker run: the document must
+/// parse as JSON, contain complete (`ph:"X"`) events from the pipeline
+/// stages, and every thread's spans must be well-nested (RAII drop order
+/// guarantees any two same-thread spans are nested or disjoint).
+#[test]
+fn chrome_trace_is_valid_json_with_well_nested_spans() {
+    streamapprox::obs::trace::set_tracing_enabled(true);
+    let r = run_engine(EngineKind::Pipelined, Query::Sum);
+    assert!(!r.windows.is_empty());
+
+    let doc = streamapprox::obs::trace::chrome_trace().to_string();
+    let parsed = parse(&doc).expect("chrome trace must be valid JSON");
+    let events = parsed
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .expect("traceEvents array");
+
+    // (tid, start_us, end_us, name) for complete events.
+    let mut spans: Vec<(i64, f64, f64, String)> = Vec::new();
+    let mut metadata = 0;
+    for e in events {
+        match e.get("ph").and_then(Value::as_str) {
+            Some("M") => {
+                assert_eq!(e.get("name").and_then(Value::as_str), Some("thread_name"));
+                metadata += 1;
+            }
+            Some("X") => {
+                let tid = e.get("tid").and_then(Value::as_i64).expect("tid");
+                let ts = e.get("ts").and_then(Value::as_f64).expect("ts");
+                let dur = e.get("dur").and_then(Value::as_f64).expect("dur");
+                assert!(dur >= 0.0, "negative span duration {dur}");
+                let name = e.get("name").and_then(Value::as_str).expect("name").to_string();
+                spans.push((tid, ts, ts + dur, name));
+            }
+            ph => panic!("unexpected event phase {ph:?}"),
+        }
+    }
+    assert!(metadata >= 2, "expected thread_name metadata for >= 2 threads");
+    assert!(!spans.is_empty(), "no spans recorded from a traced run");
+    let names: Vec<&str> = spans.iter().map(|s| s.3.as_str()).collect();
+    assert!(names.contains(&"interval_close"), "missing interval_close spans: {names:?}");
+    assert!(names.contains(&"window_emit"), "missing window_emit spans: {names:?}");
+
+    // Well-nesting: any two spans on one thread are nested or disjoint.
+    // Sweep each thread's spans by (start asc, end desc) with an open-span
+    // stack — a span that starts inside an open ancestor must also end
+    // inside it.  EPS absorbs the sub-ns float slack of the µs conversion.
+    const EPS: f64 = 0.002;
+    spans.sort_by(|a, b| {
+        (a.0, a.1, -a.2).partial_cmp(&(b.0, b.1, -b.2)).unwrap()
+    });
+    let mut open: Vec<(i64, f64, f64, String)> = Vec::new(); // per-tid stack
+    for s in &spans {
+        // Entering a new thread's run resets the stack; otherwise close
+        // every open span that ended before this one starts.
+        while open.last().is_some_and(|t| t.0 != s.0 || t.2 <= s.1 + EPS) {
+            open.pop();
+        }
+        if let Some(t) = open.last() {
+            assert!(
+                s.2 <= t.2 + EPS,
+                "tid {}: span {:?} [{};{}] partially overlaps {:?} [{};{}]",
+                s.0, s.3, s.1, s.2, t.3, t.1, t.2
+            );
+        }
+        open.push(s.clone());
+    }
+}
