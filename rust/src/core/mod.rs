@@ -6,6 +6,10 @@
 //! system runs on a virtual clock so experiments are deterministic and not
 //! bound to wall-clock pacing.
 
+pub mod columnar;
+
+pub use columnar::ColumnarChunk;
+
 /// Identifier of a stratum (sub-stream). The AOT artifacts are compiled for
 /// `MAX_STRATA` strata; higher ids are rejected at ingest.
 pub type StratumId = u16;

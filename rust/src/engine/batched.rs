@@ -19,7 +19,7 @@
 use std::time::Instant;
 
 use crate::budget::CostFunction;
-use crate::core::{EventTime, Item, Result};
+use crate::core::{ColumnarChunk, EventTime, Item, Result};
 use crate::query::{Query, QueryExecutor, SketchWindow};
 use crate::sampling::SamplerKind;
 use crate::window::{ExactAgg, WindowAssembler, WindowConfig};
@@ -92,13 +92,17 @@ impl<'a> BatchedEngine<'a> {
         let mut exact = ExactAgg::default();
         let start = Instant::now();
 
+        // Reusable SoA staging chunk: one AoS->SoA transpose per batch,
+        // then the whole slice rides the columnar fast path (capacity is
+        // retained across intervals — zero steady-state allocation).
+        let mut ingest_chunk = ColumnarChunk::new();
         let mut idx = 0usize;
         loop {
             let batch_end = assembler.current_interval_end();
             // Ingest this batch's contiguous slice (sampling at ingest for
             // stream-fashion samplers; buffering for batch-fashion ones).
             // The trace is event-time-sorted, so the batch is a range scan
-            // + one `offer_slice` — per-item dispatch amortizes over the
+            // + one `offer_columnar` — per-item dispatch amortizes over the
             // whole batch.
             let batch_start = idx;
             while idx < items.len() && items[idx].ts < batch_end {
@@ -110,7 +114,9 @@ impl<'a> BatchedEngine<'a> {
                     exact.add(it.stratum, it.value);
                 }
             }
-            pool.offer_slice(batch_items);
+            ingest_chunk.clear();
+            ingest_chunk.extend_from_items(batch_items);
+            pool.offer_columnar(&ingest_chunk);
             report.items_processed += batch_items.len() as u64;
 
             // Close the batch: per-worker finish + merge (the per-batch

@@ -16,7 +16,7 @@
 use std::time::Instant;
 
 use crate::budget::CostFunction;
-use crate::core::{Item, Result};
+use crate::core::{ColumnarChunk, Item, Result};
 use crate::error::bounds::ConfidenceInterval;
 use crate::query::{sketch_spec_for, Query, QueryExecutor, SketchWindow};
 use crate::sampling::{SampleResult, SamplerKind};
@@ -194,10 +194,13 @@ impl<'a> PipelinedEngine<'a> {
             // immediately, close intervals at slide boundaries.
             let mut exact = ExactAgg::default();
             let mut next_interval_end = self.window.slide_ms;
+            // Reusable SoA staging chunk (capacity retained across
+            // intervals — zero steady-state allocation).
+            let mut ingest_chunk = ColumnarChunk::new();
             let mut idx = 0usize;
             loop {
                 // The trace is event-time-sorted: the interval is one range
-                // scan + one `offer_slice` (per-item dispatch amortizes
+                // scan + one `offer_columnar` (per-item dispatch amortizes
                 // across the whole interval feed).
                 let interval_start = idx;
                 while idx < items.len() && items[idx].ts < next_interval_end {
@@ -209,7 +212,9 @@ impl<'a> PipelinedEngine<'a> {
                         exact.add(it.stratum, it.value);
                     }
                 }
-                pool.offer_slice(interval_items);
+                ingest_chunk.clear();
+                ingest_chunk.extend_from_items(interval_items);
+                pool.offer_columnar(&ingest_chunk);
                 items_processed += interval_items.len() as u64;
                 let t0 = Instant::now();
                 let (result, mut pane_sketches) = {

@@ -16,9 +16,11 @@
 //!
 //! **Transport (two planes).**  Item traffic rides a lock-free SPSC ring
 //! per worker ([`crate::util::spsc`]): the coordinator pushes 512-item
-//! chunks, the worker drains them and hands the emptied buffers back
-//! through a second (return) ring, so steady-state ingest performs **zero
-//! heap allocations and takes zero locks** — buffers just circulate.
+//! **columnar (SoA) chunks** ([`ColumnarChunk`] — the workers' batched
+//! kernels read whole columns), the worker drains them and hands the
+//! emptied buffers back through a second (return) ring, so steady-state
+//! ingest performs **zero heap allocations and takes zero locks** —
+//! buffers just circulate.
 //! Control messages (finish/counts/set-fraction/register-sketches) are
 //! rare rendezvous events and stay on the blocking MPMC channel; a worker
 //! always drains its data ring before acting on a control message, which
@@ -44,7 +46,7 @@
 //! single-core configuration and the pipelined engine's sampling operator
 //! use this fast path.
 
-use crate::core::{Error, Item, Result, MAX_STRATA};
+use crate::core::{ColumnarChunk, Error, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
 use crate::obs;
 use crate::sampling::oasrs::merge_worker_results;
@@ -105,6 +107,27 @@ impl WorkerSampler {
         }
     }
 
+    /// Columnar batch offer: the SoA fast path.  OASRS/SRS/STS run their
+    /// batched kernels (column reads, batched RNG, branchless acceptance);
+    /// WeightedRes/Noop bridge through the `Sampler` trait default, which
+    /// reassembles items — behaviorally identical either way, which the
+    /// columnar equivalence tests assert per kind.
+    #[inline]
+    fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        crate::obs_counter!(
+            "ingest_columnar_chunks_total",
+            "columnar chunks offered to the sampling kernels"
+        )
+        .inc();
+        match self {
+            WorkerSampler::Oasrs(s) => s.offer_columnar(chunk),
+            WorkerSampler::Srs(s) => s.offer_columnar(chunk),
+            WorkerSampler::Sts(s) => s.offer_columnar(chunk),
+            WorkerSampler::WeightedRes(s) => s.offer_columnar(chunk),
+            WorkerSampler::Noop(s) => s.offer_columnar(chunk),
+        }
+    }
+
     fn finish_simple(&mut self) -> SampleResult {
         match self {
             WorkerSampler::Oasrs(s) => s.finish_interval(),
@@ -162,6 +185,22 @@ impl StsBatch {
     pub fn offer_slice(&mut self, items: &[Item]) {
         for item in items {
             self.offer(item);
+        }
+    }
+
+    /// Columnar offer: partition the value column straight into the
+    /// per-stratum groups.  The ts column is never read — the groupBy
+    /// shuffle write touches two columns instead of three AoS fields.
+    #[inline]
+    pub fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        for (&s, &v) in chunk.strata.iter().zip(&chunk.values) {
+            let s = s as usize;
+            if s < MAX_STRATA {
+                self.groups[s].push(v);
+                self.counts[s] += 1;
+            } else {
+                crate::metrics::record_dropped_item();
+            }
         }
     }
 
@@ -296,13 +335,13 @@ impl TransportStats {
 /// chunk ring + buffer-return ring, and the free-list of recycled buffers.
 struct ThreadedTransport {
     ctrl_txs: Vec<Sender<Msg>>,
-    chunk_txs: Vec<SpscSender<Vec<Item>>>,
-    return_rxs: Vec<SpscReceiver<Vec<Item>>>,
+    chunk_txs: Vec<SpscSender<ColumnarChunk>>,
+    return_rxs: Vec<SpscReceiver<ColumnarChunk>>,
     joins: Vec<std::thread::JoinHandle<()>>,
     /// Pending chunk being filled (shipped to workers round-robin).
-    buf: Vec<Item>,
+    buf: ColumnarChunk,
     /// Recycled chunk buffers ready for reuse.
-    free: Vec<Vec<Item>>,
+    free: Vec<ColumnarChunk>,
     next: usize,
     stats: TransportStats,
 }
@@ -310,7 +349,7 @@ struct ThreadedTransport {
 impl ThreadedTransport {
     #[inline]
     fn offer(&mut self, item: Item) {
-        self.buf.push(item);
+        self.buf.push_item(&item);
         if self.buf.len() >= CHUNK {
             self.ship_chunk();
         }
@@ -320,10 +359,26 @@ impl ThreadedTransport {
         let mut rest = items;
         while !rest.is_empty() {
             // `buf` is always below CHUNK here (shipped eagerly), so at
-            // least one item fits: memcpy into the pending chunk.
+            // least one item fits: transpose into the pending chunk.
             let take = (CHUNK - self.buf.len()).min(rest.len());
-            self.buf.extend_from_slice(&rest[..take]);
+            self.buf.extend_from_items(&rest[..take]);
             rest = &rest[take..];
+            if self.buf.len() >= CHUNK {
+                self.ship_chunk();
+            }
+        }
+    }
+
+    /// Columnar offer: three column memcpys per take instead of an AoS
+    /// transpose.  Same chunk boundaries and round-robin assignment as
+    /// [`Self::offer_slice`], so seeded runs are ingest-path independent.
+    fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        let mut off = 0;
+        let n = chunk.len();
+        while off < n {
+            let take = (CHUNK - self.buf.len()).min(n - off);
+            self.buf.extend_from_chunk(chunk, off, take);
+            off += take;
             if self.buf.len() >= CHUNK {
                 self.ship_chunk();
             }
@@ -368,7 +423,7 @@ impl ThreadedTransport {
     /// to cover the worst-case number of in-flight buffers (see
     /// [`IngestPool::new`]), so the allocation branch is unreachable in
     /// practice and kept only as a safety net.
-    fn take_buffer(&mut self) -> Vec<Item> {
+    fn take_buffer(&mut self) -> ColumnarChunk {
         for rx in &self.return_rxs {
             while let Some(b) = rx.try_recv() {
                 self.free.push(b);
@@ -389,7 +444,7 @@ impl ThreadedTransport {
             "chunk buffers freshly allocated (pool misses)"
         )
         .inc();
-        Vec::with_capacity(CHUNK)
+        ColumnarChunk::with_capacity(CHUNK)
     }
 }
 
@@ -415,14 +470,14 @@ pub struct IngestPool {
 fn worker_loop(
     mut sampler: WorkerSampler,
     ctrl_rx: Receiver<Msg>,
-    chunk_rx: SpscReceiver<Vec<Item>>,
-    return_tx: SpscSender<Vec<Item>>,
+    chunk_rx: SpscReceiver<ColumnarChunk>,
+    return_tx: SpscSender<ColumnarChunk>,
 ) {
     let drain =
         |sampler: &mut WorkerSampler| {
             let mut any = false;
             while let Some(mut chunk) = chunk_rx.try_recv() {
-                sampler.offer_slice(&chunk);
+                sampler.offer_columnar(&chunk);
                 chunk.clear();
                 // A full return ring is impossible by capacity (see
                 // RETURN_RING_CAP) but degrade to dropping, not blocking.
@@ -505,8 +560,8 @@ impl IngestPool {
             let mut joins = Vec::with_capacity(n);
             for w in 0..n {
                 let (ctrl_tx, ctrl_rx): (Sender<Msg>, Receiver<Msg>) = bounded(64);
-                let (chunk_tx, chunk_rx) = spsc::<Vec<Item>>(RING_CAP);
-                let (return_tx, return_rx) = spsc::<Vec<Item>>(RETURN_RING_CAP);
+                let (chunk_tx, chunk_rx) = spsc::<ColumnarChunk>(RING_CAP);
+                let (return_tx, return_rx) = spsc::<ColumnarChunk>(RETURN_RING_CAP);
                 let sampler =
                     WorkerSampler::new(kind, fraction, seed.wrapping_add(w as u64 * 7919));
                 joins.push(
@@ -526,8 +581,8 @@ impl IngestPool {
             // unavailable, so RETURN_RING_CAP (= RING_CAP + 2) buffers per
             // worker plus the pending one always leave a spare.
             let pool_size = n * RETURN_RING_CAP;
-            let free: Vec<Vec<Item>> =
-                (0..pool_size).map(|_| Vec::with_capacity(CHUNK)).collect();
+            let free: Vec<ColumnarChunk> =
+                (0..pool_size).map(|_| ColumnarChunk::with_capacity(CHUNK)).collect();
             let stats = TransportStats {
                 buffers_allocated: (pool_size + 1) as u64,
                 ..Default::default()
@@ -537,7 +592,7 @@ impl IngestPool {
                 chunk_txs,
                 return_rxs,
                 joins,
-                buf: Vec::with_capacity(CHUNK),
+                buf: ColumnarChunk::with_capacity(CHUNK),
                 free,
                 next: 0,
                 stats,
@@ -580,6 +635,25 @@ impl IngestPool {
         match &mut self.imp {
             PoolImpl::Inline(s) => s.offer_slice(items),
             PoolImpl::Threaded(t) => t.offer_slice(items),
+        }
+        if let Some(t0) = t0 {
+            crate::obs_histogram!(
+                "ingest_offer_ns",
+                "wall time of one offer_slice call (per slice, never per item)"
+            )
+            .record_elapsed(t0);
+        }
+    }
+
+    /// Offer a columnar (SoA) batch — the engines' per-interval fast path.
+    /// Same chunk boundaries and worker assignment as [`Self::offer_slice`]
+    /// over the equivalent items, so seeded runs are ingest-path
+    /// independent (asserted by the columnar equivalence tests).
+    pub fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+        match &mut self.imp {
+            PoolImpl::Inline(s) => s.offer_columnar(chunk),
+            PoolImpl::Threaded(t) => t.offer_columnar(chunk),
         }
         if let Some(t0) = t0 {
             crate::obs_histogram!(
@@ -1035,6 +1109,30 @@ mod tests {
         let (ra, rb) = (a.finish_interval(), b.finish_interval());
         assert_eq!(ra.sample.len(), rb.sample.len());
         assert_eq!(ra.state.c, rb.state.c);
+    }
+
+    #[test]
+    fn offer_columnar_matches_offer_slice_threaded_byte_identical() {
+        // Same chunk boundaries, same worker round-robin, same per-worker
+        // kernels: an SoA feed must reproduce the AoS feed bit-for-bit.
+        let items: Vec<Item> =
+            (0..7000).map(|i| Item::new((i % 5) as u16, i as f64, i as u64)).collect();
+        let chunk = ColumnarChunk::from_items(&items);
+        for kind in [
+            SamplerKind::Oasrs,
+            SamplerKind::Srs,
+            SamplerKind::Sts,
+            SamplerKind::WeightedRes,
+            SamplerKind::None,
+        ] {
+            let mut a = IngestPool::new(kind, 3, 0.3, 10);
+            let mut b = IngestPool::new(kind, 3, 0.3, 10);
+            a.offer_slice(&items);
+            b.offer_columnar(&chunk);
+            let (ra, rb) = (a.finish_interval(), b.finish_interval());
+            assert_eq!(ra.sample, rb.sample, "{kind:?}");
+            assert_eq!(ra.state.c, rb.state.c, "{kind:?}");
+        }
     }
 
     #[test]

@@ -42,6 +42,8 @@
 //! | `window_pane_merges_total` | counter | window | structural pane merges (assembler folds + pane-store merges) |
 //! | `window_spill_events_total` | counter | window | sample-deque spills to compressed pane summaries |
 //! | `query_sketch_builds_total` | counter | query | sketches built at query time (rebuild path; prebuilt panes keep this flat) |
+//! | `ingest_columnar_chunks_total` | counter | ingest | columnar (SoA) chunks offered to the sampling kernels |
+//! | `ingest_mask_survivors_total` | counter | ingest | items surviving the batched acceptance kernels (OASRS columnar path) |
 //! | `transport_recycle_hit_rate` | gauge | transport | recycled / (recycled + allocated), 0.0 on an idle pool |
 //! | `ingest_ring_occupancy` | gauge | transport | chunks queued on the most recently shipped worker ring |
 //! | `feedback_ci_width_ewma` | gauge | feedback | EWMA of observed CI relative width (the controller's input) |
@@ -55,6 +57,7 @@
 //! | `window_merge_ns` | histogram | window | assembling one window view from its panes |
 //! | `query_execute_ns` | histogram | query | estimate/aggregate execution per window |
 //! | `window_emit_ns` | histogram | emit | query + report assembly per emitted window |
+//! | `columnar_compact_ns` | histogram | ingest | one OASRS columnar kernel pass over a chunk (partition + batched acceptance) |
 
 pub mod export;
 pub mod hist;

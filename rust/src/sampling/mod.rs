@@ -28,7 +28,7 @@ pub mod srs;
 pub mod sts;
 pub mod weighted;
 
-use crate::core::Item;
+use crate::core::{ColumnarChunk, Item};
 use crate::error::estimator::StrataState;
 
 pub use oasrs::OasrsSampler;
@@ -68,6 +68,27 @@ impl SamplerKind {
     pub fn is_batch_fashion(self) -> bool {
         matches!(self, SamplerKind::Srs | SamplerKind::Sts)
     }
+}
+
+/// How a sampler's columnar kernel consumes randomness (ISSUE 7).
+///
+/// The default is [`ColumnarMode::Exact`]: batched kernels replay each
+/// reservoir's RNG stream in exactly the scalar order, so `offer_columnar`
+/// is byte-identical to `offer`/`offer_slice` for a fixed seed regardless
+/// of chunking.  [`ColumnarMode::Masked`] trades that replay for a single
+/// chunk-level 8-wide uniform fill from a dedicated mask stream — the draw
+/// *order* deliberately differs from the scalar path (it could not be
+/// byte-identical), so equivalence is pinned statistically by the
+/// chi-square inclusion suite instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ColumnarMode {
+    /// Scalar-order RNG replay: byte-identical to `offer()` per seed.
+    #[default]
+    Exact,
+    /// Chunk-level Bernoulli-mask kernel from a dedicated uniform stream:
+    /// exactly uniform inclusion, different stream — statistically (not
+    /// byte-) equivalent.
+    Masked,
 }
 
 /// The per-interval output of a sampler.
@@ -129,6 +150,22 @@ pub trait Sampler: Send {
         }
     }
 
+    /// Offer a struct-of-arrays chunk (the columnar ingest path).
+    ///
+    /// The default reassembles each item on the stack and bridges to
+    /// [`Sampler::offer`] — zero allocation and semantically identical to
+    /// `offer_slice` of the transposed chunk, so samplers without a
+    /// columnar kernel (`WeightedRes`, `Noop`) keep working unchanged.
+    /// SRS/STS/OASRS override this with real columnar kernels (batched
+    /// RNG, branchless acceptance); under [`ColumnarMode::Exact`] (the
+    /// default everywhere) those overrides remain byte-identical to the
+    /// scalar path for a fixed seed.
+    fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        for i in 0..chunk.len() {
+            self.offer(&Item::new(chunk.strata[i], chunk.values[i], chunk.ts[i]));
+        }
+    }
+
     /// Close the current interval: emit the sample + strata bookkeeping and
     /// reset for the next interval.
     fn finish_interval(&mut self) -> SampleResult;
@@ -173,6 +210,15 @@ impl Sampler for NoopSampler {
         self.buf.reserve(items.len());
         for item in items {
             self.offer(item);
+        }
+    }
+
+    fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        // Same as the trait default (per-item bridge), plus the chunk-level
+        // reservation offer_slice makes.
+        self.buf.reserve(chunk.len());
+        for i in 0..chunk.len() {
+            self.offer(&Item::new(chunk.strata[i], chunk.values[i], chunk.ts[i]));
         }
     }
 

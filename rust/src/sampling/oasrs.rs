@@ -19,11 +19,14 @@
 //! independent OASRS with capacity `N_i/w`; [`merge_worker_results`]
 //! combines their samples, counters, and capacities without coordination.
 
-use crate::core::{Item, MAX_STRATA};
-use crate::error::estimator::StrataState;
+use std::time::Instant;
 
-use super::reservoir::Reservoir;
-use super::{SampleResult, Sampler, SamplerKind};
+use crate::core::{ColumnarChunk, Item, MAX_STRATA};
+use crate::error::estimator::StrataState;
+use crate::util::rng::Rng;
+
+use super::reservoir::{BatchScratch, Reservoir};
+use super::{ColumnarMode, SampleResult, Sampler, SamplerKind};
 
 /// Default capacity for a stratum never seen before (items).
 const DEFAULT_CAP: usize = 64;
@@ -44,12 +47,26 @@ pub struct OasrsSampler {
     caps: [usize; MAX_STRATA],
     seed: u64,
     interval: u64,
+    /// Which columnar kernel [`Sampler::offer_columnar`] runs.
+    columnar_mode: ColumnarMode,
+    /// Columnar-kernel scratch: per-stratum value runs (the 16-way stable
+    /// partition of a chunk), reused across chunks and intervals.
+    part_vals: Vec<Vec<f64>>,
+    /// Batched-reservoir scratch (uniforms + survivor/victim compaction).
+    scratch: BatchScratch,
+    /// Dedicated uniform stream for the `Masked` kernel's chunk-level mask
+    /// (deliberately separate from the reservoirs' streams).
+    mask_rng: Rng,
+    /// Mask-uniform buffer for the `Masked` kernel.
+    mask_uniforms: Vec<f64>,
 }
 
 impl OasrsSampler {
     pub fn new(fraction: f64, seed: u64) -> Self {
         let mut reservoirs = Vec::with_capacity(MAX_STRATA);
         reservoirs.resize_with(MAX_STRATA, || None);
+        let mut part_vals = Vec::with_capacity(MAX_STRATA);
+        part_vals.resize_with(MAX_STRATA, Vec::new);
         Self {
             fraction: fraction.clamp(1e-4, 1.0),
             reservoirs,
@@ -58,7 +75,25 @@ impl OasrsSampler {
             caps: [0; MAX_STRATA],
             seed,
             interval: 0,
+            columnar_mode: ColumnarMode::Exact,
+            part_vals,
+            scratch: BatchScratch::default(),
+            mask_rng: Rng::seed_from_u64(
+                seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x4D41_534B, // "MASK"
+            ),
+            mask_uniforms: Vec::new(),
         }
+    }
+
+    /// Select the columnar kernel (defaults to [`ColumnarMode::Exact`]).
+    pub fn set_columnar_mode(&mut self, mode: ColumnarMode) {
+        self.columnar_mode = mode;
+    }
+
+    /// Builder-style variant of [`OasrsSampler::set_columnar_mode`].
+    pub fn with_columnar_mode(mut self, mode: ColumnarMode) -> Self {
+        self.columnar_mode = mode;
+        self
     }
 
     /// Capacity for stratum `s` given current knowledge (Algorithm 3's
@@ -87,6 +122,107 @@ impl OasrsSampler {
     pub fn fraction(&self) -> f64 {
         self.fraction
     }
+
+    /// Create stratum `s`'s reservoir for this interval if absent (same
+    /// capacity rule and per-stratum seed as the scalar cold branch).
+    fn ensure_reservoir(&mut self, s: usize) {
+        if self.reservoirs[s].is_none() {
+            let cap = self.capacity_for(s);
+            self.caps[s] = cap;
+            let seed = self
+                .seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add((s as u64) << 32)
+                .wrapping_add(self.interval);
+            self.reservoirs[s] = Some(Reservoir::new(cap, seed));
+        }
+    }
+
+    /// Exact columnar kernel: 16-way stable partition of the chunk's value
+    /// column by stratum, then one batched reservoir offer per non-empty
+    /// stratum.  Each reservoir owns its RNG and sees its items in arrival
+    /// order, so this consumes every stream exactly as the scalar path does
+    /// — byte-identical `SampleResult`s for a fixed seed, any chunking.
+    fn columnar_exact(&mut self, chunk: &ColumnarChunk) {
+        let t0 = crate::obs::metrics_enabled().then(Instant::now);
+        for vals in &mut self.part_vals {
+            vals.clear();
+        }
+        let mut dropped = 0u64;
+        for (&s, &v) in chunk.strata.iter().zip(&chunk.values) {
+            let s = s as usize;
+            if s < MAX_STRATA {
+                self.part_vals[s].push(v);
+            } else {
+                dropped += 1;
+            }
+        }
+        for _ in 0..dropped {
+            crate::metrics::record_dropped_item();
+        }
+        let mut survivors = 0u64;
+        for s in 0..MAX_STRATA {
+            let n_s = self.part_vals[s].len();
+            if n_s == 0 {
+                continue;
+            }
+            self.counters[s] += n_s as f64;
+            self.ensure_reservoir(s);
+            let res = self.reservoirs[s].as_mut().expect("just ensured");
+            survivors += res.offer_batch(&self.part_vals[s], &mut self.scratch);
+        }
+        crate::obs_counter!(
+            "ingest_mask_survivors_total",
+            "items accepted by the columnar acceptance pass"
+        )
+        .add(survivors);
+        if let Some(t0) = t0 {
+            crate::obs_histogram!(
+                "columnar_compact_ns",
+                "wall time of one columnar acceptance/compaction kernel call"
+            )
+            .record_elapsed(t0);
+        }
+    }
+
+    /// Masked columnar kernel ([`ColumnarMode::Masked`]): one 8-wide
+    /// uniform fill for the whole chunk from the dedicated mask stream,
+    /// then an Algorithm-1 step per item driven by its mask lane.  Each
+    /// item's inclusion is exactly uniform (same law as `DrawPerItem`), but
+    /// the draw *order* differs from the scalar path — equivalence is
+    /// pinned by the chi-square suite, not byte comparison, which is why
+    /// this kernel is opt-in.
+    fn columnar_masked(&mut self, chunk: &ColumnarChunk) {
+        let t0 = crate::obs::metrics_enabled().then(Instant::now);
+        let n = chunk.len();
+        self.mask_uniforms.clear();
+        self.mask_uniforms.resize(n, 0.0);
+        self.mask_rng.fill_f64(&mut self.mask_uniforms);
+        let mut survivors = 0u64;
+        for i in 0..n {
+            let s = chunk.strata[i] as usize;
+            if s >= MAX_STRATA {
+                crate::metrics::record_dropped_item();
+                continue;
+            }
+            self.counters[s] += 1.0;
+            self.ensure_reservoir(s);
+            let res = self.reservoirs[s].as_mut().expect("just ensured");
+            survivors += res.offer_with_uniform(chunk.values[i], self.mask_uniforms[i]) as u64;
+        }
+        crate::obs_counter!(
+            "ingest_mask_survivors_total",
+            "items accepted by the columnar acceptance pass"
+        )
+        .add(survivors);
+        if let Some(t0) = t0 {
+            crate::obs_histogram!(
+                "columnar_compact_ns",
+                "wall time of one columnar acceptance/compaction kernel call"
+            )
+            .record_elapsed(t0);
+        }
+    }
 }
 
 impl Sampler for OasrsSampler {
@@ -114,6 +250,16 @@ impl Sampler for OasrsSampler {
         let mut res = Reservoir::new(cap, seed);
         res.offer(item.value);
         self.reservoirs[s] = Some(res);
+    }
+
+    fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        if chunk.is_empty() {
+            return;
+        }
+        match self.columnar_mode {
+            ColumnarMode::Exact => self.columnar_exact(chunk),
+            ColumnarMode::Masked => self.columnar_masked(chunk),
+        }
     }
 
     fn finish_interval(&mut self) -> SampleResult {
@@ -404,6 +550,65 @@ mod tests {
         let r = s.finish_interval();
         assert!(r.sample.is_empty());
         assert_eq!(r.arrived(), 0.0);
+    }
+
+    fn mixed_trace(n: usize, seed: u64) -> Vec<Item> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| Item::new(rng.range_usize(0, 5) as u16, rng.normal(50.0, 10.0), i as u64))
+            .collect()
+    }
+
+    #[test]
+    fn columnar_exact_is_byte_identical_to_scalar() {
+        // Two intervals (so EWMA-adapted capacities and per-interval seeds
+        // are exercised), several chunkings, plus an out-of-range stratum.
+        for chunk_size in [1usize, 17, 512, usize::MAX] {
+            let mut items = mixed_trace(6000, 42);
+            items.push(Item::new(999, 1.0, 6000));
+            let mut scalar = OasrsSampler::new(0.1, 7);
+            let mut columnar = OasrsSampler::new(0.1, 7);
+            for _ in 0..2 {
+                for it in &items {
+                    scalar.offer(it);
+                }
+                for c in items.chunks(chunk_size.min(items.len())) {
+                    columnar.offer_columnar(&ColumnarChunk::from_items(c));
+                }
+                let a = scalar.finish_interval();
+                let b = columnar.finish_interval();
+                assert_eq!(a.sample, b.sample, "chunk {chunk_size}");
+                assert_eq!(a.state.c, b.state.c, "chunk {chunk_size}");
+                assert_eq!(a.state.n_cap, b.state.n_cap, "chunk {chunk_size}");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_mode_respects_capacity_and_counts() {
+        let mut s = OasrsSampler::new(0.5, 13).with_columnar_mode(ColumnarMode::Masked);
+        let items = mixed_trace(3000, 8);
+        s.offer_columnar(&ColumnarChunk::from_items(&items));
+        let r = s.finish_interval();
+        assert_eq!(r.arrived(), 3000.0);
+        for st in 0..5usize {
+            let n = r.sample.iter().filter(|(x, _)| *x as usize == st).count();
+            assert!(n <= 64, "stratum {st}: {n} > default cap");
+            assert!(n > 0, "stratum {st} empty");
+        }
+    }
+
+    #[test]
+    fn masked_mode_is_deterministic_per_seed() {
+        let run = || {
+            let mut s = OasrsSampler::new(0.2, 21).with_columnar_mode(ColumnarMode::Masked);
+            let items = mixed_trace(4000, 3);
+            for c in items.chunks(512) {
+                s.offer_columnar(&ColumnarChunk::from_items(c));
+            }
+            s.finish_interval().sample
+        };
+        assert_eq!(run(), run());
     }
 
     use crate::util::rng::Rng;

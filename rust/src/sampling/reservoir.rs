@@ -30,6 +30,19 @@
 
 use crate::util::rng::Rng;
 
+/// Reusable scratch for [`Reservoir::offer_batch`] — owned by the caller
+/// (the sampler) so reservoirs recreated every interval share one
+/// allocation and the steady-state columnar path allocates nothing.
+#[derive(Debug, Default, Clone)]
+pub struct BatchScratch {
+    /// Batched uniforms (filled by `Rng::fill_f64`).
+    uniforms: Vec<f64>,
+    /// Cursor-compacted positions (within the batch) of accepted items.
+    survivors: Vec<u32>,
+    /// Victim slot for each accepted item, parallel to `survivors`.
+    victims: Vec<u32>,
+}
+
 /// Sentinel skip meaning "never accept again" (degenerate `w`; practically
 /// unreachable but keeps the arithmetic total).
 const SKIP_FOREVER: u64 = u64::MAX;
@@ -182,6 +195,29 @@ impl<T> Reservoir<T> {
         }
     }
 
+    /// Algorithm-1 step driven by a caller-supplied uniform (the batched
+    /// Bernoulli-mask path, [`crate::sampling::ColumnarMode::Masked`]):
+    /// identical inclusion law to [`Reservoir::offer`] in `DrawPerItem`
+    /// mode, but the reservoir consumes none of its own RNG.  Returns true
+    /// when the item entered the reservoir.
+    #[inline]
+    pub fn offer_with_uniform(&mut self, item: T, u: f64) -> bool {
+        self.seen += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(item);
+            return true;
+        }
+        if self.cap == 0 {
+            return false;
+        }
+        let r = u * self.seen as f64;
+        if r < self.cap as f64 {
+            self.buf[r as usize] = item;
+            return true;
+        }
+        false
+    }
+
     /// Items observed so far.
     pub fn seen(&self) -> u64 {
         self.seen
@@ -240,6 +276,153 @@ impl<T> Reservoir<T> {
         self.engaged = false;
         self.skip = 0;
         self.w = 1.0;
+    }
+}
+
+impl<T: Copy> Reservoir<T> {
+    /// Batched [`Reservoir::offer`]: process a whole slice with batched RNG
+    /// and a branchless acceptance sweep.  **Byte-identical** to offering
+    /// the items one at a time with the same seed — both phases consume the
+    /// reservoir's RNG stream in exactly the scalar order (the dense sweep
+    /// via [`Rng::fill_f64`], which replays sequential `f64()` draws; the
+    /// engaged skip phase draws only at acceptances, as scalar does) — so
+    /// chunk-size determinism holds for any chunking.  Returns the number
+    /// of items that entered the reservoir (fill-phase pushes + accepted
+    /// replacements).
+    ///
+    /// Cost shape: the dense phase replaces one serial
+    /// draw→compare→branch per item with an 8-wide uniform fill plus a
+    /// mask/cursor compaction whose loop body has no data-dependent
+    /// branches; the engaged skip phase collapses whole rejected runs to
+    /// one subtraction (`O(accepts)` total instead of `O(items)`
+    /// decrements).
+    pub fn offer_batch(&mut self, items: &[T], scratch: &mut BatchScratch) -> u64 {
+        let mut rest = items;
+        let mut accepted = 0u64;
+        // Fill phase: the first `cap` items are kept unconditionally.
+        if self.buf.len() < self.cap {
+            let take = (self.cap - self.buf.len()).min(rest.len());
+            self.buf.extend_from_slice(&rest[..take]);
+            self.seen += take as u64;
+            accepted += take as u64;
+            rest = &rest[take..];
+            if rest.is_empty() {
+                return accepted;
+            }
+        }
+        if self.cap == 0 {
+            self.seen += rest.len() as u64;
+            return accepted;
+        }
+        match self.mode {
+            ReservoirMode::DrawPerItem => {
+                accepted += self.dense_batch(rest, scratch);
+            }
+            ReservoirMode::SkipAheadL => {
+                if !self.engaged {
+                    // Items are dense while seen-after-increment stays at or
+                    // below the horizon — exactly the scalar engage check.
+                    let horizon = ENGAGE_HORIZON.saturating_mul(self.cap as u64);
+                    let dense_n = horizon.saturating_sub(self.seen).min(rest.len() as u64) as usize;
+                    accepted += self.dense_batch(&rest[..dense_n], scratch);
+                    rest = &rest[dense_n..];
+                    if rest.is_empty() {
+                        return accepted;
+                    }
+                    // The next item crosses the horizon: mirror the scalar
+                    // order exactly — count it, seed the chain, then let it
+                    // be the chain's first candidate.
+                    self.seen += 1;
+                    self.engage();
+                    if self.skip > 0 {
+                        self.skip -= 1;
+                    } else {
+                        let victim = self.rng.range_usize(0, self.cap);
+                        self.buf[victim] = rest[0];
+                        self.w *= (self.unit().ln() / self.cap as f64).exp();
+                        self.schedule_skip();
+                        accepted += 1;
+                    }
+                    rest = &rest[1..];
+                }
+                accepted += self.skip_batch(rest);
+            }
+        }
+        accepted
+    }
+
+    /// Batched Algorithm-1 body over a full reservoir: one `fill_f64`, then
+    /// a branchless mask/cursor sweep that compacts survivor positions and
+    /// their victim slots, and only then touches reservoir state.
+    fn dense_batch(&mut self, items: &[T], scratch: &mut BatchScratch) -> u64 {
+        let n = items.len();
+        if n == 0 {
+            return 0;
+        }
+        debug_assert!(self.cap < u32::MAX as usize);
+        scratch.uniforms.clear();
+        scratch.uniforms.resize(n, 0.0);
+        self.rng.fill_f64(&mut scratch.uniforms);
+        scratch.survivors.clear();
+        scratch.survivors.resize(n, 0);
+        scratch.victims.clear();
+        scratch.victims.resize(n, 0);
+        let cap = self.cap as f64;
+        let mut seen = self.seen as f64;
+        let mut cursor = 0usize;
+        // Every lane writes at the cursor; the cursor only advances on
+        // acceptance.  An accepted lane's write at position k is permanent
+        // (later lanes write at cursor >= k+1), a rejected lane's write is
+        // overwritten by the next lane or lies at the final cursor (never
+        // read) — so positions 0..cursor end up holding exactly the
+        // accepted lanes in stream order, with no data-dependent branch in
+        // the loop body.  Conditioned on acceptance `r` is uniform on
+        // [0, cap), so `r as u32` doubles as the victim index exactly as
+        // the scalar step's `r as usize` does (rejected lanes' saturated
+        // casts are never read).
+        for (i, &u) in scratch.uniforms.iter().enumerate() {
+            seen += 1.0;
+            let r = u * seen;
+            scratch.survivors[cursor] = i as u32;
+            scratch.victims[cursor] = r as u32;
+            cursor += (r < cap) as usize;
+        }
+        self.seen += n as u64;
+        // Only now touch reservoir state, survivors only.
+        for k in 0..cursor {
+            self.buf[scratch.victims[k] as usize] = items[scratch.survivors[k] as usize];
+        }
+        cursor as u64
+    }
+
+    /// Engaged Algorithm-L phase over a slice: consume whole rejected runs
+    /// with one subtraction, draw RNG only at acceptances (three draws
+    /// each, identical to the scalar acceptance body).
+    fn skip_batch(&mut self, mut rest: &[T]) -> u64 {
+        let mut accepted = 0u64;
+        loop {
+            let n = rest.len() as u64;
+            if n == 0 {
+                return accepted;
+            }
+            if self.skip >= n {
+                // The whole remaining run is rejected: O(1).
+                self.skip -= n;
+                self.seen += n;
+                return accepted;
+            }
+            // `skip` rejected items, then one acceptance.
+            let adv = self.skip as usize;
+            self.seen += self.skip + 1;
+            self.skip = 0;
+            let item = rest[adv];
+            rest = &rest[adv + 1..];
+            let victim = self.rng.range_usize(0, self.cap);
+            self.buf[victim] = item;
+            self.w *= (self.unit().ln() / self.cap as f64).exp();
+            self.schedule_skip();
+            accepted += 1;
+        }
     }
 }
 
@@ -408,6 +591,70 @@ mod tests {
             assert_eq!(collect(42), collect(42));
             assert_ne!(collect(42), collect(43));
         }
+    }
+
+    #[test]
+    fn offer_batch_is_byte_identical_to_offer() {
+        // The batched kernel must replay the scalar RNG order exactly —
+        // across both modes, all phases (fill, dense, engage boundary,
+        // engaged skips), and any chunking of the stream.
+        for mode in [ReservoirMode::SkipAheadL, ReservoirMode::DrawPerItem] {
+            for cap in [0usize, 1, 4, 64] {
+                for n in [0usize, 3, 40, 1_500, 12_000] {
+                    for chunk in [1usize, 7, 512, usize::MAX] {
+                        let items: Vec<f64> = (0..n).map(|i| i as f64).collect();
+                        let mut scalar = Reservoir::with_mode(cap, 77, mode);
+                        for &x in &items {
+                            scalar.offer(x);
+                        }
+                        let mut batched = Reservoir::with_mode(cap, 77, mode);
+                        let mut scratch = BatchScratch::default();
+                        for c in items.chunks(chunk.min(n.max(1))) {
+                            batched.offer_batch(c, &mut scratch);
+                        }
+                        let tag = format!("{mode:?} cap={cap} n={n} chunk={chunk}");
+                        assert_eq!(batched.items(), scalar.items(), "{tag}");
+                        assert_eq!(batched.seen(), scalar.seen(), "{tag}");
+                        assert_eq!(batched.skip_engaged(), scalar.skip_engaged(), "{tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offer_batch_counts_reservoir_entries() {
+        let mut r = Reservoir::with_mode(8, 5, ReservoirMode::DrawPerItem);
+        let mut scratch = BatchScratch::default();
+        let accepted = r.offer_batch(&(0..8).map(|i| i as f64).collect::<Vec<_>>(), &mut scratch);
+        assert_eq!(accepted, 8, "fill phase accepts everything");
+        let more = r.offer_batch(&(8..5000).map(|i| i as f64).collect::<Vec<_>>(), &mut scratch);
+        // E[accepts] = sum_{i=9..5000} 8/i ~ 8 ln(5000/8) ~ 51; just check
+        // it is in a sane band and that the buffer stayed full.
+        assert!(more > 10 && more < 200, "accepted {more}");
+        assert_eq!(r.len(), 8);
+    }
+
+    #[test]
+    fn offer_with_uniform_matches_draw_per_item_law() {
+        // Feeding externally drawn uniforms through offer_with_uniform must
+        // reproduce DrawPerItem exactly when given the same uniform stream.
+        let mut a = Reservoir::with_mode(4, 11, ReservoirMode::DrawPerItem);
+        let mut b = Reservoir::with_mode(4, 11, ReservoirMode::DrawPerItem);
+        let mut feed = Rng::seed_from_u64(11);
+        for i in 0..500 {
+            a.offer(i as f64);
+            // b's own RNG is untouched; replay the same stream externally.
+            if i < 4 {
+                b.offer_with_uniform(i as f64, 0.0);
+            } else {
+                b.offer_with_uniform(i as f64, feed.f64());
+            }
+        }
+        // a consumed its seeded stream starting after the fill phase; mirror
+        // by burning none for the first cap items (offer's fill phase draws
+        // nothing).
+        assert_eq!(a.items(), b.items());
     }
 
     #[test]

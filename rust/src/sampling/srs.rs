@@ -16,40 +16,61 @@
 //! shared weight law Eq. (1) produce exactly the SRS Horvitz-Thompson weight
 //! `C_total / k` for every stratum.
 
-use crate::core::{Item, MAX_STRATA};
+use crate::core::{ColumnarChunk, Item, MAX_STRATA};
 use crate::error::estimator::StrataState;
 use crate::util::rng::Rng;
 
 use super::{SampleResult, Sampler, SamplerKind};
 
+// The columnar histogram pass masks stratum ids with `MAX_STRATA - 1`.
+const _: () = assert!(MAX_STRATA.is_power_of_two());
+
 /// Spark-`sample`-style simple random sampler (batch fashion).
+///
+/// The buffered batch (the "RDD") is stored struct-of-arrays — parallel
+/// stratum/value columns — so the columnar ingest path appends a whole
+/// [`ColumnarChunk`] with two column `memcpy`s plus a count pass, instead
+/// of one tuple push per item.  The batch *buffering itself* stays: it is
+/// the baseline cost signature the paper charges Spark's `sample` with.
 #[derive(Debug)]
 pub struct SrsSampler {
     fraction: f64,
-    /// The buffered batch ("RDD"): (stratum, value).
-    batch: Vec<(u16, f64)>,
+    /// Stratum column of the buffered batch ("RDD").
+    batch_strata: Vec<u16>,
+    /// Value column, parallel to `batch_strata`.
+    batch_values: Vec<f64>,
     counters: [f64; MAX_STRATA],
     rng: Rng,
+    /// Random-sort key scratch, reused across intervals (the per-interval
+    /// key `Vec` rebuild was a measurable allocation hot spot).
+    keys: Vec<f64>,
 }
 
 impl SrsSampler {
     pub fn new(fraction: f64, seed: u64) -> Self {
         Self {
             fraction: fraction.clamp(1e-4, 1.0),
-            batch: Vec::new(),
+            batch_strata: Vec::new(),
+            batch_values: Vec::new(),
             counters: [0.0; MAX_STRATA],
             rng: Rng::seed_from_u64(seed),
+            keys: Vec::new(),
         }
     }
 
-    /// Random-sort selection of `k` items from `items` using the (p, q)
-    /// threshold optimization. Returns selected indices.
-    fn random_sort_select(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    /// Random-sort selection of `k` items from `n` using the (p, q)
+    /// threshold optimization. Returns selected indices.  `keys` is a
+    /// caller-owned scratch buffer (resized and overwritten here) filled by
+    /// the batched `fill_f64` — same draw order as the former per-item
+    /// `rng.f64()` loop, so selections are byte-identical.
+    fn random_sort_select(rng: &mut Rng, keys: &mut Vec<f64>, n: usize, k: usize) -> Vec<usize> {
         if k >= n {
             return (0..n).collect();
         }
-        // Keys for every item.
-        let keys: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+        // Keys for every item, 8-wide into the reused scratch.
+        keys.clear();
+        keys.resize(n, 0.0);
+        rng.fill_f64(keys);
         // Thresholds around k/n; the slack keeps P(middle misses the true
         // k-th key) negligible (Chernoff), same construction as Spark's.
         let ratio = k as f64 / n as f64;
@@ -88,28 +109,65 @@ impl Sampler for SrsSampler {
             crate::metrics::record_dropped_item();
             return;
         }
-        // Batch fashion: buffer everything (this allocation churn is the
-        // cost StreamApprox's pre-RDD sampling avoids).
-        self.batch.push((item.stratum, item.value));
+        // Batch fashion: buffer everything (this buffering is the cost
+        // StreamApprox's pre-RDD sampling avoids).
+        self.batch_strata.push(item.stratum);
+        self.batch_values.push(item.value);
         self.counters[s] += 1.0;
     }
 
     fn offer_slice(&mut self, items: &[Item]) {
         // One buffer reservation per chunk, then a tight append loop.
-        self.batch.reserve(items.len());
+        self.batch_strata.reserve(items.len());
+        self.batch_values.reserve(items.len());
         for item in items {
             self.offer(item);
         }
     }
 
+    fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
+        // Columnar kernel: when every stratum is in range (the common case,
+        // checked while counting), appending the chunk is two column memcpys
+        // plus one fused max-scan/histogram pass — no per-item Item
+        // reassembly, no per-item bounds branch.  The histogram accumulates
+        // in u64 (`s & (MAX_STRATA-1)` is a no-op when max_s is in range,
+        // and the pass is discarded otherwise), then folds into the f64
+        // counters once per chunk: per-item `counters[s] += 1.0` forms
+        // fp-add latency chains that alone cost more than the two memcpys.
+        let mut hist = [0u64; MAX_STRATA];
+        let mut max_s = 0u16;
+        for &s in &chunk.strata {
+            max_s = max_s.max(s);
+            hist[(s as usize) & (MAX_STRATA - 1)] += 1;
+        }
+        if (max_s as usize) < MAX_STRATA {
+            self.batch_strata.extend_from_slice(&chunk.strata);
+            self.batch_values.extend_from_slice(&chunk.values);
+            for (c, h) in self.counters.iter_mut().zip(hist) {
+                *c += h as f64;
+            }
+        } else {
+            // Rare: out-of-range strata present — per-item path with drops.
+            for i in 0..chunk.len() {
+                self.offer(&Item::new(chunk.strata[i], chunk.values[i], chunk.ts[i]));
+            }
+        }
+    }
+
     fn finish_interval(&mut self) -> SampleResult {
-        let batch = std::mem::take(&mut self.batch);
-        let n = batch.len();
+        let n = self.batch_values.len();
         let k = ((self.fraction * n as f64).round() as usize).min(n);
 
-        let selected = Self::random_sort_select(&mut self.rng, n, k);
+        let selected = Self::random_sort_select(&mut self.rng, &mut self.keys, n, k);
         let k_actual = selected.len();
-        let sample: Vec<(u16, f64)> = selected.into_iter().map(|i| batch[i]).collect();
+        let sample: Vec<(u16, f64)> = selected
+            .into_iter()
+            .map(|i| (self.batch_strata[i], self.batch_values[i]))
+            .collect();
+        // Keep the columns' capacity across intervals — batch *fashion* is
+        // the baseline's signature, per-interval reallocation is not.
+        self.batch_strata.clear();
+        self.batch_values.clear();
 
         // Global uniform weight C_total / k — exactly what Spark's `sample`
         // gives you: a uniform sample with NO per-stratum bookkeeping, so
@@ -241,9 +299,10 @@ mod tests {
         let k = 20;
         let trials = 3000;
         let mut counts = vec![0u32; n];
+        let mut keys = Vec::new();
         for t in 0..trials {
             let mut rng = Rng::seed_from_u64(t);
-            for i in SrsSampler::random_sort_select(&mut rng, n, k) {
+            for i in SrsSampler::random_sort_select(&mut rng, &mut keys, n, k) {
                 counts[i] += 1;
             }
         }
@@ -262,6 +321,30 @@ mod tests {
         let r2 = s.finish_interval();
         assert!(r2.sample.is_empty());
         assert_eq!(r2.arrived(), 0.0);
+    }
+
+    #[test]
+    fn offer_columnar_is_byte_identical_to_offer() {
+        for chunk_size in [1usize, 17, 512, usize::MAX] {
+            let mut items: Vec<Item> = (0..5000)
+                .map(|i| Item::new((i % 4) as u16, i as f64, i as u64))
+                .collect();
+            items.push(Item::new(999, 1.0, 5000)); // forces the fallback path
+            let mut scalar = SrsSampler::new(0.1, 5);
+            let mut columnar = SrsSampler::new(0.1, 5);
+            for _ in 0..2 {
+                for it in &items {
+                    scalar.offer(it);
+                }
+                for c in items.chunks(chunk_size.min(items.len())) {
+                    columnar.offer_columnar(&ColumnarChunk::from_items(c));
+                }
+                let a = scalar.finish_interval();
+                let b = columnar.finish_interval();
+                assert_eq!(a.sample, b.sample, "chunk {chunk_size}");
+                assert_eq!(a.state.c, b.state.c, "chunk {chunk_size}");
+            }
+        }
     }
 
     #[test]

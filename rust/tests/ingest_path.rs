@@ -1,13 +1,15 @@
 //! Integration tests for the zero-allocation batch ingest path:
 //! Algorithm-L vs draw-per-item reservoir uniformity (chi-square),
-//! chunk-size independence of seeded results, `offer_slice` ≡ `offer`
-//! equivalence across every sampler kind, and the threaded transport's
-//! buffer-recycling guarantee.
+//! chunk-size independence of seeded results, `offer_slice` ≡ `offer` ≡
+//! `offer_columnar` equivalence across every sampler kind, AoS↔SoA
+//! round-trip losslessness, batched-Bernoulli mask uniformity, and the
+//! threaded transport's buffer-recycling guarantee (scalar and columnar
+//! feeds alike).
 
-use streamapprox::core::Item;
+use streamapprox::core::{ColumnarChunk, Item};
 use streamapprox::engine::IngestPool;
 use streamapprox::sampling::{
-    make_sampler, Reservoir, ReservoirMode, SampleResult, SamplerKind,
+    make_sampler, ColumnarMode, OasrsSampler, Reservoir, ReservoirMode, SampleResult, SamplerKind,
 };
 use streamapprox::util::rng::Rng;
 
@@ -143,6 +145,184 @@ fn inline_pool_deterministic_across_chunk_sizes() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Columnar (SoA) path: round-trip, equivalence, mask uniformity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn aos_soa_round_trip_is_lossless() {
+    // Transposing an item slice into a ColumnarChunk and back must
+    // reproduce every field bit-for-bit, for arbitrary shapes (including
+    // out-of-range strata — transport does not validate, samplers do).
+    for case in 0..8u64 {
+        let mut meta = Rng::seed_from_u64(400 + case);
+        let n = meta.range_usize(0, 3000);
+        let mut items = trace(n, meta.range_usize(1, 9), 500 + case);
+        if !items.is_empty() {
+            items[0].stratum = 999;
+        }
+        let chunk = ColumnarChunk::from_items(&items);
+        assert_eq!(chunk.len(), items.len());
+        assert_eq!(chunk.to_items(), items, "case {case}");
+        // Incremental builds agree with the bulk transpose.
+        let mut push_built = ColumnarChunk::new();
+        for it in &items {
+            push_built.push_item(it);
+        }
+        assert_eq!(push_built, chunk, "case {case}: push_item path");
+    }
+}
+
+#[test]
+fn inline_pool_columnar_matches_scalar_across_chunk_sizes() {
+    // The tentpole equivalence gate at the pool level: a columnar feed in
+    // 1-item, 512-item, or whole-interval chunks must reproduce the
+    // per-item scalar feed bit-for-bit, for every sampler kind, across
+    // two intervals (adaptive capacities included).
+    let kinds = [
+        SamplerKind::Oasrs,
+        SamplerKind::Srs,
+        SamplerKind::Sts,
+        SamplerKind::WeightedRes,
+        SamplerKind::None,
+    ];
+    let items = trace(10_000, 5, 42);
+    for kind in kinds {
+        let scalar = {
+            let mut pool = IngestPool::new(kind, 1, 0.3, 7);
+            let mut out = Vec::new();
+            for _ in 0..2 {
+                for &it in &items {
+                    pool.offer(it);
+                }
+                out.push(pool.finish_interval());
+            }
+            out
+        };
+        for chunk_size in [1usize, 512, items.len()] {
+            let mut pool = IngestPool::new(kind, 1, 0.3, 7);
+            for interval in 0..2 {
+                for piece in items.chunks(chunk_size) {
+                    pool.offer_columnar(&ColumnarChunk::from_items(piece));
+                }
+                let r = pool.finish_interval();
+                assert_results_identical(
+                    &scalar[interval],
+                    &r,
+                    &format!("{kind:?} columnar[{chunk_size}] interval {interval}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn offer_columnar_equivalence_property_all_kinds() {
+    // Property over random seeds/shapes/chunkings: a sampler fed SoA
+    // chunks equals the same sampler fed item-at-a-time.
+    let kinds = [
+        SamplerKind::Oasrs,
+        SamplerKind::Srs,
+        SamplerKind::Sts,
+        SamplerKind::WeightedRes,
+        SamplerKind::None,
+    ];
+    for case in 0..10u64 {
+        let mut meta = Rng::seed_from_u64(2000 + case);
+        let n = meta.range_usize(1, 4000);
+        let strata = meta.range_usize(1, 8);
+        let fraction = meta.range_f64(0.05, 1.0);
+        let seed = meta.next_u64();
+        let items = trace(n, strata, 9_000 + case);
+        for kind in kinds {
+            let mut a = make_sampler(kind, fraction, seed);
+            for it in &items {
+                a.offer(it);
+            }
+            let mut b = make_sampler(kind, fraction, seed);
+            let mut rest = &items[..];
+            let mut chop = Rng::seed_from_u64(case);
+            while !rest.is_empty() {
+                let take = chop.range_usize(1, rest.len().min(700) + 1);
+                b.offer_columnar(&ColumnarChunk::from_items(&rest[..take]));
+                rest = &rest[take..];
+            }
+            let (ra, rb) = (a.finish_interval(), b.finish_interval());
+            assert_results_identical(&ra, &rb, &format!("case {case} {kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn batched_bernoulli_mask_is_uniform_chi_square() {
+    // Per-position acceptance counts of the batched Bernoulli mask over
+    // independent seeds must be binomial(trials, p) in every lane of the
+    // 8-wide fill.  Statistic ~ chi2 with df = 300 (mean 300, sd ~24.5);
+    // [180, 420] is a ±~5 sigma band — a failure is real lane bias.
+    let (n, trials, p) = (300usize, 2000u64, 0.3f64);
+    let mut counts = vec![0u64; n];
+    let mut mask = vec![false; n];
+    for t in 0..trials {
+        let mut rng = Rng::seed_from_u64(t.wrapping_mul(0x9E3779B9).wrapping_add(17));
+        rng.fill_bernoulli(p, &mut mask);
+        for (c, &hit) in counts.iter_mut().zip(&mask) {
+            *c += hit as u64;
+        }
+    }
+    let expect = trials as f64 * p;
+    let var = trials as f64 * p * (1.0 - p);
+    let chi2: f64 = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expect;
+            d * d / var
+        })
+        .sum();
+    assert!(
+        (180.0..420.0).contains(&chi2),
+        "mask chi-square {chi2:.1} outside uniformity band"
+    );
+}
+
+#[test]
+fn masked_columnar_inclusion_is_uniform_chi_square() {
+    // The Masked kernel consumes a dedicated mask stream, so it cannot be
+    // byte-compared to the scalar path — its pin is statistical: per-item
+    // inclusion over independent seeds must be uniform at p = cap/n.
+    // fraction 0.02 on a 300-item stratum -> cap 6 after the warm-up
+    // interval locks the EWMA, matching the reservoir suite's band.
+    let (n, trials) = (300usize, 4000u64);
+    let mut counts = vec![0u64; n];
+    let mut chunk = ColumnarChunk::new();
+    for i in 0..n {
+        chunk.push(0, i as f64, i as u64);
+    }
+    for t in 0..trials {
+        let mut s = OasrsSampler::new(0.02, t.wrapping_mul(0x9E3779B9).wrapping_add(29))
+            .with_columnar_mode(ColumnarMode::Masked);
+        s.offer_columnar(&chunk);
+        s.finish_interval(); // warm-up: EWMA = 300 -> cap = ceil(0.02*300) = 6
+        s.offer_columnar(&chunk);
+        let r = s.finish_interval();
+        assert_eq!(r.state.n_cap[0], 6.0, "capacity drifted; band below assumes cap 6");
+        for &(_, v) in &r.sample {
+            counts[v as usize] += 1;
+        }
+    }
+    let expect = trials as f64 * 6.0 / n as f64;
+    let chi2: f64 = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expect;
+            d * d / expect
+        })
+        .sum();
+    assert!(
+        (180.0..420.0).contains(&chi2),
+        "masked-mode inclusion chi-square {chi2:.1} outside uniformity band"
+    );
+}
+
 #[test]
 fn offer_slice_equivalence_property_all_kinds() {
     // Property over random seeds/shapes: a sampler fed via offer_slice with
@@ -244,4 +424,28 @@ fn threaded_transport_zero_allocations_in_steady_state() {
         "recycle hit rate {:.2} too low",
         steady.recycle_hit_rate()
     );
+}
+
+#[test]
+fn threaded_columnar_feed_zero_allocations_in_steady_state() {
+    // The columnar acceptance gate for the transport: whole-interval SoA
+    // slices ride the same recycled ColumnarChunk ring buffers — after
+    // construction the allocation counter never moves.
+    let chunk = ColumnarChunk::from_items(&trace(25_000, 4, 31));
+    let mut pool = IngestPool::new(SamplerKind::Oasrs, 4, 0.3, 56);
+    let constructed = pool.transport_stats().expect("threaded pool has stats");
+    for _ in 0..5 {
+        pool.offer_columnar(&chunk);
+        pool.finish_interval();
+    }
+    let steady = pool.transport_stats().unwrap();
+    assert_eq!(
+        steady.buffers_allocated, constructed.buffers_allocated,
+        "columnar ingest must never allocate chunk buffers after construction"
+    );
+    assert_eq!(
+        steady.buffers_recycled, steady.chunks_sent,
+        "every shipped chunk must ride a recycled buffer"
+    );
+    assert!(steady.chunks_sent >= 5 * 25_000 / 512);
 }

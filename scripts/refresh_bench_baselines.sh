@@ -1,0 +1,87 @@
+#!/usr/bin/env bash
+# Refresh the committed hot-path bench baselines with native cargo-bench
+# numbers.
+#
+# The authoring environment has no Rust toolchain, so the committed
+# BENCH_*.json files start life as C-proxy bootstraps
+# (provenance=c-proxy-estimate) that the CI regression guards deliberately
+# skip.  Run this script on a real machine (CI does, uploading the result
+# as the bench-hotpath-numbers artifact) to rewrite them with
+# provenance=cargo-bench; committing the rewritten files arms the guards
+# with like-for-like numbers.
+#
+# Usage: scripts/refresh_bench_baselines.sh
+#   (from the repo root; needs cargo + python3)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BENCHES=(sampling_hotpath window_hotpath)
+
+for bench in "${BENCHES[@]}"; do
+    echo "== cargo bench --bench ${bench} (full run) =="
+    cargo bench --bench "${bench}"
+done
+
+# The full runs overwrite the working-tree JSONs in place; refuse to hand
+# back anything that is not a native measurement.
+for bench in "${BENCHES[@]}"; do
+    json="BENCH_${bench}.json"
+    prov=$(python3 -c "import json,sys; print(json.load(open('${json}')).get('provenance','none'))")
+    if [ "${prov}" != "cargo-bench" ]; then
+        echo "ERROR: ${json} has provenance '${prov}', expected 'cargo-bench'" >&2
+        echo "       (full bench run should have rewritten it — check the bench output)" >&2
+        exit 1
+    fi
+    echo "ok: ${json} provenance=cargo-bench"
+done
+
+# Per-metric diff against the committed baselines (HEAD), so the refresh
+# is a review-and-commit instead of archaeology.
+python3 - <<'EOF'
+import json
+import subprocess
+
+SKIP = {"slide_ms", "items_per_pane", "intervals", "n_items", "workers"}
+
+
+def flatten(prefix, node, out):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        out[prefix] = float(node)
+
+
+for name in ("BENCH_sampling_hotpath.json", "BENCH_window_hotpath.json"):
+    try:
+        committed = json.loads(
+            subprocess.check_output(["git", "show", f"HEAD:{name}"], text=True)
+        )
+    except Exception as e:  # noqa: BLE001 - diagnostic path
+        print(f"\n{name}: no committed baseline ({e})")
+        committed = {}
+    with open(name) as f:
+        fresh = json.load(f)
+    print(f"\n=== {name} ===")
+    print(f"provenance: {committed.get('provenance', 'none')} -> "
+          f"{fresh.get('provenance', 'none')}")
+    b, fz = {}, {}
+    flatten("", committed, b)
+    flatten("", fresh, fz)
+    for key in sorted(set(b) | set(fz)):
+        if key in SKIP:
+            continue
+        bv, fv = b.get(key), fz.get(key)
+        if bv is None:
+            print(f"  {key:<40} {'-':>9} -> {fv:9.4g}  (new)")
+        elif fv is None:
+            print(f"  {key:<40} {bv:9.4g} -> {'-':>9}  (gone)")
+        else:
+            delta = "n/a" if bv == 0 else f"{(fv - bv) / bv * 100.0:+.1f}%"
+            print(f"  {key:<40} {bv:9.4g} -> {fv:9.4g}  ({delta})")
+EOF
+
+echo
+echo "Baselines refreshed in place.  Review the diff above, then commit"
+echo "BENCH_sampling_hotpath.json and BENCH_window_hotpath.json."
