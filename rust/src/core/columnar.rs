@@ -163,6 +163,31 @@ mod tests {
     }
 
     #[test]
+    fn ts_round_trip_preserves_extreme_event_times() {
+        // Event times are raw u64 virtual-ms: the transpose must carry the
+        // full domain bit-for-bit (the event-time router's pane arithmetic
+        // and watermark saturation depend on exact ts values, so a lossy
+        // cast anywhere in the chunk path would corrupt pane assignment).
+        let extremes = [0u64, 1, 999, 1_000, u64::MAX / 2, u64::MAX - 1, u64::MAX];
+        let items: Vec<Item> = extremes
+            .iter()
+            .enumerate()
+            .map(|(i, &ts)| Item::new(i as StratumId, -0.1 * i as f64, ts))
+            .collect();
+        let chunk = ColumnarChunk::from_items(&items);
+        assert_eq!(chunk.ts, extremes);
+        for (i, (orig, rt)) in items.iter().zip(chunk.to_items()).enumerate() {
+            assert_eq!(orig.ts, rt.ts, "slot {i}");
+            assert_eq!(orig.value.to_bits(), rt.value.to_bits(), "slot {i}");
+            assert_eq!(orig.stratum, rt.stratum, "slot {i}");
+        }
+        // Chunk-to-chunk bulk moves (the transport primitive) keep ts too.
+        let mut relay = ColumnarChunk::new();
+        relay.extend_from_chunk(&chunk, 0, chunk.len());
+        assert_eq!(relay.ts, extremes);
+    }
+
+    #[test]
     fn clear_keeps_capacity() {
         let mut chunk = ColumnarChunk::from_items(&sample_items());
         let cap = chunk.values.capacity();

@@ -22,7 +22,7 @@ use crate::budget::CostFunction;
 use crate::core::{ColumnarChunk, EventTime, Item, Result};
 use crate::query::{Query, QueryExecutor, SketchWindow};
 use crate::sampling::SamplerKind;
-use crate::window::{ExactAgg, WindowAssembler, WindowConfig};
+use crate::window::{DropLedger, EventTimeSlicer, ExactAgg, WindowAssembler, WindowConfig};
 
 use super::worker::IngestPool;
 use super::{EngineConfig, RunReport, WindowReport};
@@ -87,6 +87,13 @@ impl<'a> BatchedEngine<'a> {
         }
         let query_builds_at_start = self.executor.query_time_sketch_builds();
         let obs_start = crate::obs::global().snapshot();
+        // Event-time mode: panes come from the watermark-driven router
+        // (arrival order in, canonical event-time panes out) instead of the
+        // arrival-order range scan.  `None` keeps the legacy path
+        // byte-identical.
+        let mut slicer =
+            self.config.event_time.map(|et| EventTimeSlicer::new(items, interval, et));
+        let mut ledger = DropLedger::new(interval);
 
         let mut report = RunReport::default();
         let mut exact = ExactAgg::default();
@@ -101,14 +108,25 @@ impl<'a> BatchedEngine<'a> {
             let batch_end = assembler.current_interval_end();
             // Ingest this batch's contiguous slice (sampling at ingest for
             // stream-fashion samplers; buffering for batch-fashion ones).
-            // The trace is event-time-sorted, so the batch is a range scan
-            // + one `offer_columnar` — per-item dispatch amortizes over the
-            // whole batch.
-            let batch_start = idx;
-            while idx < items.len() && items[idx].ts < batch_end {
-                idx += 1;
-            }
-            let batch_items = &items[batch_start..idx];
+            // Legacy mode range-scans the event-time-sorted trace; event-time
+            // mode takes the next watermark-closed pane (canonical order, so
+            // a bounded shuffle of the trace yields the same pane bytes).
+            let pane_buf;
+            let batch_items: &[Item] = if let Some(sl) = slicer.as_mut() {
+                match sl.next_pane() {
+                    Some(pane) => {
+                        pane_buf = pane;
+                        &pane_buf
+                    }
+                    None => break,
+                }
+            } else {
+                let batch_start = idx;
+                while idx < items.len() && items[idx].ts < batch_end {
+                    idx += 1;
+                }
+                &items[batch_start..idx]
+            };
             if self.config.track_exact {
                 for it in batch_items {
                     exact.add(it.stratum, it.value);
@@ -129,6 +147,9 @@ impl<'a> BatchedEngine<'a> {
             };
             crate::obs_histogram!("interval_close_ns", "whole interval close (drain+merge+partials)")
                 .record_elapsed(t0);
+            if let Some(sl) = slicer.as_mut() {
+                ledger.absorb(sl.take_new_drops());
+            }
             let batch_exact = std::mem::take(&mut exact);
 
             if let Some(sw) = sketches.as_mut() {
@@ -146,7 +167,7 @@ impl<'a> BatchedEngine<'a> {
                 // The data-parallel job over the window: pane sketches for
                 // sketch-backed queries, the zero-copy sample view for
                 // linear ones.
-                let qr = match &sketches {
+                let mut qr = match &sketches {
                     Some(sw) => self.executor.execute_sketch(&self.query, sw, &ws.state)?,
                     None => self.executor.execute_view(&self.query, &ws)?,
                 };
@@ -170,6 +191,12 @@ impl<'a> BatchedEngine<'a> {
                 let ci = if self.query.is_sketch_backed() { None } else { qr.scalar };
                 let arrived = ws.arrived();
                 let sampled = ws.sample_len();
+                // Beyond-lateness drops charged to this window's span widen
+                // the emitted bound; the feedback loop keeps the pre-widening
+                // CI (a larger fraction cannot recover dropped items).
+                let late = ledger.span(ws.start_ms, ws.end_ms);
+                super::widen_for_late_drops(&self.query, &mut qr, arrived, &late);
+                ledger.prune_below(ws.start_ms);
                 report.windows.push(WindowReport {
                     start_ms: ws.start_ms,
                     end_ms: ws.end_ms,
@@ -179,6 +206,7 @@ impl<'a> BatchedEngine<'a> {
                     arrived,
                     sampled,
                     processing_ns,
+                    late_dropped: late.count as u64,
                 });
 
                 // Budget feedback -> next interval's fraction, driven by

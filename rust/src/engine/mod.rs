@@ -17,8 +17,12 @@ pub mod worker;
 
 use crate::budget::{CostFunction, QueryBudget};
 use crate::core::{Error, EventTime, Result};
+use crate::error::estimator::{
+    missing_mass_count, missing_mass_mean, missing_mass_sum, LateDrops,
+};
 use crate::query::{Query, QueryResult};
 
+pub use crate::window::EventTimeConfig;
 pub use worker::{IngestPool, TransportStats, WorkerFinish};
 
 /// Provenance counters for the pane-sketch path of one run — the
@@ -116,6 +120,11 @@ pub struct EngineConfig {
     /// state then stays O(ratio × summary) instead of O(window sample).
     /// Linear queries never spill (they execute over the sample).
     pub spill_ratio: usize,
+    /// Event-time mode: panes assigned from the `ts` column behind a
+    /// bounded-skew low-watermark with allowed lateness, instead of the
+    /// legacy arrival-order range scan (which requires a sorted trace).
+    /// `None` (the default) keeps the legacy path byte-identical.
+    pub event_time: Option<EventTimeConfig>,
     pub seed: u64,
 }
 
@@ -138,8 +147,37 @@ impl Default for EngineConfig {
             channel_capacity: 16 * 1024,
             sketch_panes: true,
             spill_ratio: 128,
+            event_time: None,
             seed: 42,
         }
+    }
+}
+
+/// Widen a linear query's scalar interval by the missing-mass charge for
+/// the window's beyond-lateness drops (see
+/// [`crate::error::estimator::LateDrops`]): the dropped values were
+/// observed, so the charge is exact per query shape — dropped mass for
+/// SUM-like outputs, dropped count for COUNT, the inclusion shift for
+/// MEAN-like outputs.  Sketch-backed queries keep their native guarantees
+/// untouched (a rank-ε or RSE bound is not missing-mass arithmetic; their
+/// drops are still visible via `WindowReport::late_dropped` and the
+/// `late_items_dropped_total` counter).
+pub(crate) fn widen_for_late_drops(
+    query: &Query,
+    result: &mut QueryResult,
+    arrived: f64,
+    drops: &LateDrops,
+) {
+    if drops.is_empty() || query.is_sketch_backed() {
+        return;
+    }
+    if let Some(ci) = result.scalar.as_mut() {
+        let extra = match query {
+            Query::Count => missing_mass_count(drops),
+            Query::Mean | Query::PerStratumMean => missing_mass_mean(drops, ci.value, arrived),
+            _ => missing_mass_sum(drops),
+        };
+        *ci = ci.widened(extra);
     }
 }
 
@@ -161,6 +199,11 @@ pub struct WindowReport {
     pub sampled: usize,
     /// Wall time spent closing the interval + running the query (ns).
     pub processing_ns: u64,
+    /// Beyond-lateness items whose event time fell in this window's span
+    /// (dropped by the event-time router; already folded into the scalar
+    /// bound via [`widen_for_late_drops`]).  Always 0 on the legacy
+    /// arrival-order path.
+    pub late_dropped: u64,
 }
 
 impl WindowReport {
@@ -271,6 +314,7 @@ mod tests {
             arrived: 100.0,
             sampled: 50,
             processing_ns: ns,
+            late_dropped: 0,
         }
     }
 

@@ -18,11 +18,12 @@ use std::time::Instant;
 use crate::budget::CostFunction;
 use crate::core::{ColumnarChunk, Item, Result};
 use crate::error::bounds::ConfidenceInterval;
+use crate::error::estimator::LateDrops;
 use crate::query::{sketch_spec_for, Query, QueryExecutor, SketchWindow};
 use crate::sampling::{SampleResult, SamplerKind};
 use crate::sketch::PaneSketch;
 use crate::util::channel::bounded;
-use crate::window::{ExactAgg, WindowAssembler, WindowConfig};
+use crate::window::{DropLedger, EventTimeSlicer, ExactAgg, WindowAssembler, WindowConfig};
 
 use super::batched::exact_values;
 use super::worker::IngestPool;
@@ -45,6 +46,9 @@ struct IntervalMsg {
     sketch: Option<PaneSketch>,
     /// ns spent closing the interval (sampling-side latency share).
     close_ns: u64,
+    /// Per-pane beyond-lateness drops recorded while feeding this interval
+    /// (always empty on the legacy arrival-order path).
+    drops: Vec<(u64, LateDrops)>,
 }
 
 /// Window-level observation flowing back from the query operator to the
@@ -133,8 +137,12 @@ impl<'a> PipelinedEngine<'a> {
                     assembler.spill_samples();
                 }
                 let mut out = Vec::new();
+                // Beyond-lateness drops, charged per event-time pane by the
+                // source operator and spanned per emitted window here.
+                let mut ledger = DropLedger::new(window_cfg.slide_ms);
                 while let Some(msg) = rx.recv() {
                     let t0 = Instant::now();
+                    ledger.absorb(msg.drops);
                     if let Some(sw) = sketches.as_mut() {
                         match msg.sketch {
                             Some(pane) => sw.push_prebuilt(pane),
@@ -144,7 +152,7 @@ impl<'a> PipelinedEngine<'a> {
                     if let Some(ws) = assembler.push_interval_view(msg.result, msg.exact) {
                         let emit_t0 = crate::obs::metrics_enabled().then(Instant::now);
                         let _sp = crate::obs::trace::span("window_emit");
-                        let qr = match &sketches {
+                        let mut qr = match &sketches {
                             Some(sw) => executor.execute_sketch(&query, sw, &ws.state)?,
                             None => executor.execute_view(&query, &ws)?,
                         };
@@ -164,6 +172,12 @@ impl<'a> PipelinedEngine<'a> {
                         // None keeps them out of the accuracy loop while the
                         // cost/arrival EWMAs still observe the window.
                         let ci = if query.is_sketch_backed() { None } else { qr.scalar };
+                        // Drops widen the emitted bound only; the feedback
+                        // loop keeps the pre-widening CI (a larger sampling
+                        // fraction cannot recover dropped items).
+                        let late = ledger.span(ws.start_ms, ws.end_ms);
+                        super::widen_for_late_drops(&query, &mut qr, arrived, &late);
+                        ledger.prune_below(ws.start_ms);
                         out.push(WindowReport {
                             start_ms: ws.start_ms,
                             end_ms: ws.end_ms,
@@ -173,6 +187,7 @@ impl<'a> PipelinedEngine<'a> {
                             arrived,
                             sampled,
                             processing_ns,
+                            late_dropped: late.count as u64,
                         });
                         // Report the window-level observation upstream.
                         let _ = frac_tx.try_send(WindowObs {
@@ -191,7 +206,13 @@ impl<'a> PipelinedEngine<'a> {
             });
 
             // Source + sampling operator (this thread): forward items
-            // immediately, close intervals at slide boundaries.
+            // immediately, close intervals at slide boundaries.  In
+            // event-time mode the watermark-driven router re-panes the
+            // arrival stream; `None` keeps the legacy path byte-identical.
+            let mut slicer = self
+                .config
+                .event_time
+                .map(|et| EventTimeSlicer::new(items, self.window.slide_ms, et));
             let mut exact = ExactAgg::default();
             let mut next_interval_end = self.window.slide_ms;
             // Reusable SoA staging chunk (capacity retained across
@@ -199,14 +220,26 @@ impl<'a> PipelinedEngine<'a> {
             let mut ingest_chunk = ColumnarChunk::new();
             let mut idx = 0usize;
             loop {
-                // The trace is event-time-sorted: the interval is one range
-                // scan + one `offer_columnar` (per-item dispatch amortizes
-                // across the whole interval feed).
-                let interval_start = idx;
-                while idx < items.len() && items[idx].ts < next_interval_end {
-                    idx += 1;
-                }
-                let interval_items = &items[interval_start..idx];
+                // Legacy mode range-scans the event-time-sorted trace (one
+                // scan + one `offer_columnar`; per-item dispatch amortizes
+                // across the whole interval feed).  Event-time mode takes
+                // the next watermark-closed pane in canonical order.
+                let pane_buf;
+                let interval_items: &[Item] = if let Some(sl) = slicer.as_mut() {
+                    match sl.next_pane() {
+                        Some(pane) => {
+                            pane_buf = pane;
+                            &pane_buf
+                        }
+                        None => break,
+                    }
+                } else {
+                    let interval_start = idx;
+                    while idx < items.len() && items[idx].ts < next_interval_end {
+                        idx += 1;
+                    }
+                    &items[interval_start..idx]
+                };
                 if self.config.track_exact {
                     for it in interval_items {
                         exact.add(it.stratum, it.value);
@@ -232,6 +265,7 @@ impl<'a> PipelinedEngine<'a> {
                     exact: std::mem::take(&mut exact),
                     sketch: pane_sketches.pop(),
                     close_ns,
+                    drops: slicer.as_mut().map(|sl| sl.take_new_drops()).unwrap_or_default(),
                 };
                 tx.send(msg)
                     .map_err(|_| crate::core::Error::Stream("query operator died".into()))?;

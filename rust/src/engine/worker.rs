@@ -46,7 +46,7 @@
 //! single-core configuration and the pipelined engine's sampling operator
 //! use this fast path.
 
-use crate::core::{ColumnarChunk, Error, Item, Result, MAX_STRATA};
+use crate::core::{ColumnarChunk, Error, EventTime, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
 use crate::obs;
 use crate::sampling::oasrs::merge_worker_results;
@@ -266,6 +266,27 @@ const RETURN_RING_CAP: usize = RING_CAP + 2;
 pub struct WorkerFinish {
     pub result: SampleResult,
     pub sketches: Vec<PaneSketch>,
+    /// `(min_ts, max_ts)` over the items this worker ingested during the
+    /// closing interval, observed worker-side off the SPSC chunk `ts`
+    /// column (`None` for an empty interval).  The ts column's downstream
+    /// consumer: the ingest-path tests assert these bounds survive the
+    /// transport bit-identically.
+    pub ts_bounds: Option<(EventTime, EventTime)>,
+}
+
+/// Fold a `[lo, hi]` event-time range into an accumulator.
+fn merge_ts_bounds(acc: &mut Option<(EventTime, EventTime)>, lo: EventTime, hi: EventTime) {
+    *acc = Some(match *acc {
+        Some((a, b)) => (a.min(lo), b.max(hi)),
+        None => (lo, hi),
+    });
+}
+
+/// Min/max over a ts column (one pass; `None` when empty).
+fn ts_column_bounds(ts: &[EventTime]) -> Option<(EventTime, EventTime)> {
+    let mut it = ts.iter();
+    let first = *it.next()?;
+    Some(it.fold((first, first), |(lo, hi), &t| (lo.min(t), hi.max(t))))
 }
 
 /// Control-plane messages (rare rendezvous events — the chunk traffic rides
@@ -463,6 +484,11 @@ pub struct IngestPool {
     /// Registered per-query sketch specs (the inline pool builds partials
     /// from these at close; threaded workers hold their own copy).
     specs: Vec<SketchSpec>,
+    /// Event-time bounds of the interval being fed (inline pools track at
+    /// offer; threaded pools fold worker-side bounds in at close).
+    cur_ts_bounds: Option<(EventTime, EventTime)>,
+    /// Bounds of the most recently closed interval.
+    last_ts_bounds: Option<(EventTime, EventTime)>,
 }
 
 /// Worker thread body: drain the data ring eagerly (recycling each emptied
@@ -474,10 +500,15 @@ fn worker_loop(
     return_tx: SpscSender<ColumnarChunk>,
 ) {
     let drain =
-        |sampler: &mut WorkerSampler| {
+        |sampler: &mut WorkerSampler, ts_bounds: &mut Option<(EventTime, EventTime)>| {
             let mut any = false;
             while let Some(mut chunk) = chunk_rx.try_recv() {
                 sampler.offer_columnar(&chunk);
+                // Worker-side event-time bounds, read off the transported
+                // ts column (the ingest-path tests' SPSC-fidelity witness).
+                if let Some((lo, hi)) = ts_column_bounds(&chunk.ts) {
+                    merge_ts_bounds(ts_bounds, lo, hi);
+                }
                 chunk.clear();
                 // A full return ring is impossible by capacity (see
                 // RETURN_RING_CAP) but degrade to dropping, not blocking.
@@ -487,21 +518,26 @@ fn worker_loop(
             any
         };
     let mut specs: Vec<SketchSpec> = Vec::new();
+    let mut ts_bounds: Option<(EventTime, EventTime)> = None;
     let mut idle = 0u32;
     loop {
-        let mut worked = drain(&mut sampler);
+        let mut worked = drain(&mut sampler, &mut ts_bounds);
         match ctrl_rx.try_recv() {
             Ok(msg) => {
                 // All chunks of the closing interval were pushed before the
                 // control message was sent: drain once more so the finish
                 // sees every item.
-                drain(&mut sampler);
+                drain(&mut sampler, &mut ts_bounds);
                 match msg {
                     Msg::Finish(reply) => {
                         let _sp = obs::trace::span("worker_finish");
                         let result = sampler.finish_simple();
                         let sketches = build_partials(&specs, &result);
-                        let _ = reply.send(WorkerFinish { result, sketches });
+                        let _ = reply.send(WorkerFinish {
+                            result,
+                            sketches,
+                            ts_bounds: ts_bounds.take(),
+                        });
                     }
                     Msg::Counts(reply) => {
                         if let WorkerSampler::Sts(s) = &sampler {
@@ -513,7 +549,11 @@ fn worker_loop(
                             let _sp = obs::trace::span("worker_finish_sts");
                             let result = s.finish_with_targets(&targets);
                             let sketches = build_partials(&specs, &result);
-                            let _ = reply.send(WorkerFinish { result, sketches });
+                            let _ = reply.send(WorkerFinish {
+                                result,
+                                sketches,
+                                ts_bounds: ts_bounds.take(),
+                            });
                         }
                     }
                     Msg::SetFraction(f, reply) => {
@@ -598,7 +638,15 @@ impl IngestPool {
                 stats,
             })
         };
-        Self { kind, fraction, imp, n_workers: n, specs: Vec::new() }
+        Self {
+            kind,
+            fraction,
+            imp,
+            n_workers: n,
+            specs: Vec::new(),
+            cur_ts_bounds: None,
+            last_ts_bounds: None,
+        }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -618,11 +666,23 @@ impl IngestPool {
         }
     }
 
+    /// Event-time bounds `(min_ts, max_ts)` over the items ingested in the
+    /// most recently closed interval (`None` if it was empty).  Threaded
+    /// pools observe these worker-side off the SPSC chunk `ts` column, so
+    /// equality with an inline pool's bounds certifies the column survives
+    /// the transport bit-identically.
+    pub fn interval_ts_bounds(&self) -> Option<(EventTime, EventTime)> {
+        self.last_ts_bounds
+    }
+
     /// Offer one item (chunk-round-robin partitioning across workers).
     #[inline]
     pub fn offer(&mut self, item: Item) {
         match &mut self.imp {
-            PoolImpl::Inline(s) => s.offer(&item),
+            PoolImpl::Inline(s) => {
+                merge_ts_bounds(&mut self.cur_ts_bounds, item.ts, item.ts);
+                s.offer(&item)
+            }
             PoolImpl::Threaded(t) => t.offer(item),
         }
     }
@@ -633,7 +693,14 @@ impl IngestPool {
     pub fn offer_slice(&mut self, items: &[Item]) {
         let t0 = obs::metrics_enabled().then(std::time::Instant::now);
         match &mut self.imp {
-            PoolImpl::Inline(s) => s.offer_slice(items),
+            PoolImpl::Inline(s) => {
+                let mut it = items.iter().map(|i| i.ts);
+                if let Some(first) = it.next() {
+                    let (lo, hi) = it.fold((first, first), |(lo, hi), t| (lo.min(t), hi.max(t)));
+                    merge_ts_bounds(&mut self.cur_ts_bounds, lo, hi);
+                }
+                s.offer_slice(items)
+            }
             PoolImpl::Threaded(t) => t.offer_slice(items),
         }
         if let Some(t0) = t0 {
@@ -652,7 +719,12 @@ impl IngestPool {
     pub fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
         let t0 = obs::metrics_enabled().then(std::time::Instant::now);
         match &mut self.imp {
-            PoolImpl::Inline(s) => s.offer_columnar(chunk),
+            PoolImpl::Inline(s) => {
+                if let Some((lo, hi)) = ts_column_bounds(&chunk.ts) {
+                    merge_ts_bounds(&mut self.cur_ts_bounds, lo, hi);
+                }
+                s.offer_columnar(chunk)
+            }
             PoolImpl::Threaded(t) => t.offer_columnar(chunk),
         }
         if let Some(t0) = t0 {
@@ -680,6 +752,7 @@ impl IngestPool {
     /// interval result.
     pub fn finish_interval_with_sketches(&mut self) -> (SampleResult, Vec<PaneSketch>) {
         let (result, sketches) = self.finish_impl();
+        self.last_ts_bounds = self.cur_ts_bounds.take();
         // Interval-close accounting: one counter batch per interval, zero
         // per-item cost.  RNG draws equal items offered for the per-item
         // rate samplers (OASRS/SRS draw once per offer).
@@ -764,6 +837,9 @@ impl IngestPool {
                 let mut sketches: Vec<PaneSketch> = Vec::new();
                 let mut results = Vec::with_capacity(finishes.len());
                 for f in finishes {
+                    if let Some((lo, hi)) = f.ts_bounds {
+                        merge_ts_bounds(&mut self.cur_ts_bounds, lo, hi);
+                    }
                     if sketches.is_empty() {
                         sketches = f.sketches;
                     } else {

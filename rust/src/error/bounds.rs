@@ -104,6 +104,21 @@ impl ConfidenceInterval {
         Self { value: estimate, bound: over_bound.max(0.0), level }
     }
 
+    /// Widen the interval by an additive half-width term (the missing-mass
+    /// charge for beyond-lateness drops — see
+    /// [`crate::error::estimator::missing_mass_sum`] and friends).  The
+    /// point estimate is untouched: the dropped mass is *known* to be
+    /// excluded, so honesty lives in the bound, not the value.  Negative or
+    /// non-finite extras are ignored (a NaN drop charge must not poison an
+    /// otherwise-calibrated interval).
+    pub fn widened(self, extra: f64) -> Self {
+        if extra.is_finite() && extra > 0.0 {
+            Self { bound: self.bound + extra, ..self }
+        } else {
+            self
+        }
+    }
+
     /// Relative error bound (`bound / |value|`).
     ///
     /// Edge cases, pinned by tests (the feedback loop ignores any
@@ -303,6 +318,20 @@ mod tests {
         // negative bounds are clamped
         let ci = ConfidenceInterval::for_count_overestimate(1.0, -3.0, ConfidenceLevel::P95);
         assert_eq!(ci.bound, 0.0);
+    }
+
+    #[test]
+    fn widened_adds_to_bound_and_ignores_garbage() {
+        let ci = ConfidenceInterval { value: 100.0, bound: 4.0, level: ConfidenceLevel::P95 };
+        let w = ci.widened(6.0);
+        assert_eq!(w.value, 100.0, "widening must not move the point estimate");
+        assert_eq!(w.bound, 10.0);
+        assert!(w.contains(92.0) && !ci.contains(92.0));
+        // zero / negative / non-finite extras are all no-ops
+        assert_eq!(ci.widened(0.0), ci);
+        assert_eq!(ci.widened(-5.0), ci);
+        assert_eq!(ci.widened(f64::NAN), ci);
+        assert_eq!(ci.widened(f64::INFINITY), ci);
     }
 
     #[test]

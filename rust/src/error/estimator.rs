@@ -163,6 +163,69 @@ pub fn weights_for(state: &StrataState) -> [f64; K] {
     weights
 }
 
+/// Mass the watermark policy dropped from a window: count and value-sum of
+/// the beyond-lateness items charged to its panes.  Unlike ordinary
+/// non-response, the values *were observed* at drop time (the item arrived,
+/// just too late to route), so the missing mass is exact, not estimated —
+/// the widening terms below are deterministic worst-case bounds, not
+/// variance inflations.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LateDrops {
+    /// Number of beyond-lateness items dropped.
+    pub count: f64,
+    /// Sum of their observed values.
+    pub mass: f64,
+}
+
+impl LateDrops {
+    /// Record one dropped item's observed value.
+    #[inline]
+    pub fn add(&mut self, value: f64) {
+        self.count += 1.0;
+        self.mass += value;
+    }
+
+    /// Associative combine (drops charged to the same window span add).
+    pub fn merge(&mut self, other: &LateDrops) {
+        self.count += other.count;
+        self.mass += other.mass;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0.0
+    }
+}
+
+/// Missing-mass half-width for a SUM-type estimate: the estimate excludes
+/// exactly `mass`, so the truth lies within `|mass|` of it (per-stratum
+/// sums and histograms take the same bound — each bin's shift is at most
+/// the total dropped mass).
+#[inline]
+pub fn missing_mass_sum(drops: &LateDrops) -> f64 {
+    drops.mass.abs()
+}
+
+/// Missing-mass half-width for a COUNT estimate: each dropped item is one
+/// uncounted arrival.
+#[inline]
+pub fn missing_mass_count(drops: &LateDrops) -> f64 {
+    drops.count
+}
+
+/// Missing-mass half-width for a MEAN estimate.  With the estimate's mean
+/// `m` over `arrived` items taken as exact, including the dropped mass
+/// shifts it to `(arrived·m + mass) / (arrived + count)`; the half-width is
+/// that shift, `|mass − count·m| / (arrived + count)`.
+#[inline]
+pub fn missing_mass_mean(drops: &LateDrops, est_mean: f64, arrived: f64) -> f64 {
+    let n = arrived + drops.count;
+    if n > 0.0 && est_mean.is_finite() {
+        (drops.mass - drops.count * est_mean).abs() / n
+    } else {
+        0.0
+    }
+}
+
 /// Finish an estimate from combined partials and strata state.
 ///
 /// This is the exact arithmetic of the L2 graph (`model.py`), kept in sync by
@@ -340,6 +403,41 @@ mod tests {
         let mut sk = crate::sketch::QuantileSketch::new(16);
         sk.offer(1.0, w[0]);
         assert!(sk.is_empty());
+    }
+
+    #[test]
+    fn late_drops_accumulate_and_merge() {
+        let mut a = LateDrops::default();
+        assert!(a.is_empty());
+        a.add(3.0);
+        a.add(-1.0);
+        let mut b = LateDrops::default();
+        b.add(10.0);
+        a.merge(&b);
+        assert_eq!(a.count, 3.0);
+        assert_eq!(a.mass, 12.0);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn missing_mass_sum_is_exact_dropped_mass() {
+        let d = LateDrops { count: 4.0, mass: -25.0 };
+        assert_eq!(missing_mass_sum(&d), 25.0);
+        assert_eq!(missing_mass_count(&d), 4.0);
+    }
+
+    #[test]
+    fn missing_mass_mean_is_the_inclusion_shift() {
+        // 9 arrived items with mean 10; one dropped item of value 30:
+        // including it moves the mean to (90 + 30) / 10 = 12 -> shift 2.
+        let d = LateDrops { count: 1.0, mass: 30.0 };
+        assert!((missing_mass_mean(&d, 10.0, 9.0) - 2.0).abs() < 1e-12);
+        // dropped items at exactly the mean shift nothing
+        let at_mean = LateDrops { count: 2.0, mass: 20.0 };
+        assert_eq!(missing_mass_mean(&at_mean, 10.0, 9.0), 0.0);
+        // degenerate inputs stay finite
+        assert_eq!(missing_mass_mean(&d, f64::NAN, 9.0), 0.0);
+        assert_eq!(missing_mass_mean(&LateDrops::default(), 10.0, 0.0), 0.0);
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //!                             quantile:<q>|distinct|topk:<k>]
 //!                    [--window <size_ms>:<slide_ms> | <size_ms>]
 //!                    [--dataset micro|caida|taxi] [--backend xla|native]
+//!                    [--watermark-skew <ms>] [--lateness <ms>]
+//!                    [--disorder <max_skew_ms>[:<straggler_frac>:<straggler_delay_ms>]]
 //!                    [--metrics <out.prom>] [--trace <out.json>]
 //! streamapprox bench --figure fig5a|fig5b|fig5c|fig6a|fig6bc|fig7a|fig7b|
 //!                             fig7c|fig8|fig9|fig10|fig11|sketch|window|all
@@ -18,6 +20,13 @@
 //!
 //! `--window 60000:1000` runs a 60 s window sliding every second — the
 //! long-window/small-slide family the pane-store assembler makes viable.
+//!
+//! `--watermark-skew`/`--lateness` turn on event-time windowing (panes
+//! assigned from item `ts` under a bounded-skew low-watermark; `--lateness`
+//! defaults to the skew).  `--disorder 400` shuffles the trace with seeded
+//! uniform arrival delays up to 400 virtual ms (optionally
+//! `400:0.05:900` adds a 5% straggler burst of +900 ms) before the run —
+//! the pairing the disorder-equivalence suite pins.
 //!
 //! `--metrics out.prom` writes the run's registry delta as a Prometheus
 //! text export and prints the per-stage latency table; `--trace out.json`
@@ -151,13 +160,26 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
             WindowConfig::new(size, slide)
         }
     };
-    let builder = PipelineBuilder::new()
+    let mut builder = PipelineBuilder::new()
         .engine(engine)
         .sampler(sampler)
         .budget(QueryBudget::SamplingFraction(fraction))
         .query(query)
         .window(window)
         .workers(workers);
+    // Event-time mode: either flag enables it; lateness defaults to the
+    // skew (a symmetric budget that absorbs `--disorder` up to 2x skew).
+    if flags.contains_key("watermark-skew") || flags.contains_key("lateness") {
+        let skew: u64 = match flags.get("watermark-skew") {
+            Some(s) => s.parse().map_err(|e| format!("--watermark-skew: bad ms {s:?} ({e})"))?,
+            None => 0,
+        };
+        let lateness: u64 = match flags.get("lateness") {
+            Some(s) => s.parse().map_err(|e| format!("--lateness: bad ms {s:?} ({e})"))?,
+            None => skew,
+        };
+        builder = builder.event_time(skew, lateness);
+    }
     let pipeline = match get("backend", "xla").as_str() {
         "native" => builder.build_native(),
         _ => match builder.clone().build_xla() {
@@ -168,11 +190,32 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
             }
         },
     };
-    let items = match get("dataset", "micro").as_str() {
+    let mut items = match get("dataset", "micro").as_str() {
         "caida" => CaidaConfig::default().generate(duration),
         "taxi" => TaxiConfig::default().generate(duration),
         _ => StreamGenerator::new(&StreamConfig::gaussian_micro(1000.0, 7)).take_until(duration),
     };
+    if let Some(spec) = flags.get("disorder") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = |e: &dyn std::fmt::Display| {
+            format!("--disorder <max_skew_ms>[:<frac>:<delay_ms>]: bad spec {spec:?} ({e})")
+        };
+        let mut cfg = streamapprox::stream::DisorderConfig::bounded_skew(
+            parts[0].parse().map_err(|e| bad(&e))?,
+            7,
+        );
+        match parts.len() {
+            1 => {}
+            3 => {
+                cfg = cfg.with_stragglers(
+                    parts[1].parse().map_err(|e| bad(&e))?,
+                    parts[2].parse().map_err(|e| bad(&e))?,
+                );
+            }
+            _ => return Err(bad(&"expected 1 or 3 colon-separated fields").into()),
+        }
+        items = cfg.apply(&items);
+    }
     if flags.contains_key("trace") {
         streamapprox::obs::trace::set_tracing_enabled(true);
     }
@@ -195,6 +238,10 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
                 w.exact_scalar.unwrap_or(f64::NAN)
             );
         }
+    }
+    let late: u64 = r.windows.iter().map(|w| w.late_dropped).sum();
+    if late > 0 {
+        println!("  beyond-lateness drops charged to windows: {late}");
     }
     if let Some(path) = flags.get("metrics") {
         let snap = r

@@ -39,6 +39,8 @@
 //! | `transport_buffers_recycled_total` | counter | transport | chunk buffers reused from the return rings |
 //! | `transport_buffers_allocated_total` | counter | transport | chunk buffers freshly allocated (pool misses) |
 //! | `ingest_backoff_naps_total` | counter | transport | worker idle-loop naps (sleep-tier backoff rounds) |
+//! | `late_items_dropped_total` | counter | window | beyond-lateness items dropped by the event-time router |
+//! | `window_pane_reopens_total` | counter | window | late arrivals routed into an already-open older event-time pane |
 //! | `window_pane_merges_total` | counter | window | structural pane merges (assembler folds + pane-store merges) |
 //! | `window_spill_events_total` | counter | window | sample-deque spills to compressed pane summaries |
 //! | `query_sketch_builds_total` | counter | query | sketches built at query time (rebuild path; prebuilt panes keep this flat) |
@@ -49,6 +51,7 @@
 //! | `feedback_ci_width_ewma` | gauge | feedback | EWMA of observed CI relative width (the controller's input) |
 //! | `feedback_fraction` | gauge | feedback | current sampling fraction chosen by the controller |
 //! | `broker_lag` | gauge | source | produced − consumed on the polled broker topic |
+//! | `event_time_watermark_lag_ms` | gauge | window | virtual ms the low-watermark trails the newest observed event time |
 //! | `ingest_offer_ns` | histogram | ingest | wall time of one `offer_slice` call (per slice, not per item) |
 //! | `control_ack_ns` | histogram | control | rendezvous ack latency for `set_fraction` / `register_sketches` |
 //! | `close_sts_sort_ns` | histogram | close | STS full random sort at interval close |

@@ -17,7 +17,7 @@ use crate::runtime::{Backend, ComputeHandle, ComputeService};
 use crate::sampling::SamplerKind;
 use crate::sketch::SketchParams;
 use crate::stream::{StreamConfig, StreamGenerator};
-use crate::window::WindowConfig;
+use crate::window::{EventTimeConfig, WindowConfig};
 
 /// Builder for a [`Pipeline`].
 #[derive(Debug, Clone)]
@@ -35,6 +35,7 @@ pub struct PipelineBuilder {
     spill_ratio: usize,
     seed: u64,
     sketch: SketchParams,
+    event_time: Option<EventTimeConfig>,
 }
 
 impl Default for PipelineBuilder {
@@ -53,6 +54,7 @@ impl Default for PipelineBuilder {
             spill_ratio: 128,
             seed: 42,
             sketch: SketchParams::default(),
+            event_time: None,
         }
     }
 }
@@ -130,6 +132,19 @@ impl PipelineBuilder {
         self
     }
 
+    /// Event-time windowing: assign panes from each item's `ts` (instead of
+    /// arrival order) under a bounded-skew low-watermark, keeping each pane
+    /// open for `allowed_lateness_ms` of watermark time past its end.
+    /// Within-lateness stragglers merge into their true pane; items later
+    /// than that are dropped, counted (`late_items_dropped_total`,
+    /// [`crate::engine::WindowReport::late_dropped`]) and charged into the
+    /// affected window's error bound.  Off by default — the legacy
+    /// arrival-order slicing stays byte-identical.
+    pub fn event_time(mut self, watermark_skew_ms: u64, allowed_lateness_ms: u64) -> Self {
+        self.event_time = Some(EventTimeConfig::new(watermark_skew_ms, allowed_lateness_ms));
+        self
+    }
+
     /// Tune the mergeable sketches behind `Query::Quantile` /
     /// `Query::Distinct` / `Query::TopK` (accuracy ↔ space knobs).
     pub fn sketch_params(mut self, params: SketchParams) -> Self {
@@ -168,6 +183,7 @@ impl PipelineBuilder {
             sketch_panes: self.sketch_panes,
             spill_ratio: self.spill_ratio,
             seed: self.seed,
+            event_time: self.event_time,
         };
         Pipeline {
             config,

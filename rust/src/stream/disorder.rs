@@ -1,0 +1,160 @@
+//! Seeded disorder injection: turn an event-time-sorted trace into the
+//! out-of-order *arrival* sequence a real source would deliver.
+//!
+//! Every existing generator emits sorted by `ts`; real million-user streams
+//! are neither sorted nor complete (NEXMark/YSB-style skew, ROADMAP
+//! direction 2).  [`DisorderConfig`] models that as a per-item network
+//! delay: each item's arrival key is `ts + delay`, where `delay` is a
+//! seeded uniform draw in `[0, max_skew_ms]` plus, for a seeded
+//! `straggler_fraction` of items, a fixed `straggler_delay_ms` burst.
+//! Sorting (stably) by arrival key yields the shuffled sequence — event
+//! times are untouched, only the order changes, so the disordered trace is
+//! the *same multiset* as the input.
+//!
+//! The shuffle is bounded: an item can arrive at most
+//! [`DisorderConfig::max_delay_ms`] behind the newest event time already
+//! delivered.  Pair it with an [`crate::window::EventTimeConfig`] whose
+//! `watermark_skew_ms + allowed_lateness_ms >= max_delay_ms()` and the
+//! event-time router drops nothing — the seeded disorder-equivalence
+//! contract `rust/tests/event_time.rs` pins.  Push `max_delay_ms` past
+//! that budget and the overflow becomes deterministic beyond-lateness
+//! drops, which is how the drop-accounting tests construct exact counts.
+
+use crate::core::{EventTime, Item};
+use crate::util::rng::Rng;
+
+/// Seeded disorder wrapper over any in-order item trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DisorderConfig {
+    /// Uniform per-item arrival delay bound (virtual ms): each item is
+    /// delayed by a seeded draw in `[0, max_skew_ms]`.
+    pub max_skew_ms: EventTime,
+    /// Fraction of items additionally delayed by `straggler_delay_ms`
+    /// (straggler bursts — the long tail of a retrying client).
+    pub straggler_fraction: f64,
+    /// Extra delay applied to straggler items (virtual ms).
+    pub straggler_delay_ms: EventTime,
+    /// Seed for the delay draws (independent of the trace's seed).
+    pub seed: u64,
+}
+
+impl DisorderConfig {
+    /// Bounded-skew shuffle only: uniform delays in `[0, max_skew_ms]`,
+    /// no stragglers.
+    pub fn bounded_skew(max_skew_ms: EventTime, seed: u64) -> Self {
+        Self { max_skew_ms, straggler_fraction: 0.0, straggler_delay_ms: 0, seed }
+    }
+
+    /// Add a straggler burst: `fraction` of items take an extra
+    /// `delay_ms` to arrive.
+    pub fn with_stragglers(mut self, fraction: f64, delay_ms: EventTime) -> Self {
+        self.straggler_fraction = fraction.clamp(0.0, 1.0);
+        self.straggler_delay_ms = delay_ms;
+        self
+    }
+
+    /// Worst-case arrival delay (virtual ms) this config can inject — the
+    /// disorder bound the watermark heuristic must budget for.
+    pub fn max_delay_ms(&self) -> EventTime {
+        let straggler = if self.straggler_fraction > 0.0 { self.straggler_delay_ms } else { 0 };
+        self.max_skew_ms.saturating_add(straggler)
+    }
+
+    /// Produce the arrival-order sequence: same items, same `ts` values,
+    /// stably reordered by seeded per-item delay.  Deterministic for a
+    /// given `(input, config)` pair.
+    pub fn apply(&self, items: &[Item]) -> Vec<Item> {
+        let mut rng = Rng::seed_from_u64(self.seed);
+        let mut keyed: Vec<(EventTime, usize)> = items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| {
+                let mut delay = if self.max_skew_ms > 0 {
+                    rng.range_usize(0, self.max_skew_ms as usize + 1) as EventTime
+                } else {
+                    0
+                };
+                if self.straggler_fraction > 0.0 && rng.f64() < self.straggler_fraction {
+                    delay = delay.saturating_add(self.straggler_delay_ms);
+                }
+                (item.ts.saturating_add(delay), i)
+            })
+            .collect();
+        // Stable by construction: ties in arrival time keep input order.
+        keyed.sort_by_key(|&(arrival, i)| (arrival, i));
+        keyed.into_iter().map(|(_, i)| items[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sorted_trace(n: u64) -> Vec<Item> {
+        (0..n).map(|t| Item::new((t % 3) as u16, t as f64, t * 7)).collect()
+    }
+
+    fn multiset_key(items: &[Item]) -> Vec<(u64, u16, u64)> {
+        let mut k: Vec<(u64, u16, u64)> =
+            items.iter().map(|i| (i.ts, i.stratum, i.value.to_bits())).collect();
+        k.sort_unstable();
+        k
+    }
+
+    #[test]
+    fn shuffle_preserves_the_multiset() {
+        let trace = sorted_trace(5_000);
+        let shuffled = DisorderConfig::bounded_skew(400, 9).apply(&trace);
+        assert_eq!(shuffled.len(), trace.len());
+        assert_eq!(multiset_key(&shuffled), multiset_key(&trace));
+        assert_ne!(shuffled, trace, "skew 400 over 7ms gaps must reorder something");
+    }
+
+    #[test]
+    fn disorder_respects_the_skew_bound() {
+        // Bounded-skew contract: no item arrives more than max_delay_ms
+        // behind the newest event time already delivered.
+        let trace = sorted_trace(5_000);
+        for cfg in [
+            DisorderConfig::bounded_skew(250, 3),
+            DisorderConfig::bounded_skew(100, 4).with_stragglers(0.05, 900),
+        ] {
+            let shuffled = cfg.apply(&trace);
+            let mut max_seen = 0u64;
+            for item in &shuffled {
+                assert!(
+                    item.ts.saturating_add(cfg.max_delay_ms()) >= max_seen,
+                    "item ts {} arrived {} behind the frontier (bound {})",
+                    item.ts,
+                    max_seen - item.ts,
+                    cfg.max_delay_ms()
+                );
+                max_seen = max_seen.max(item.ts);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_skew_is_identity_on_sorted_input() {
+        let trace = sorted_trace(1_000);
+        assert_eq!(DisorderConfig::bounded_skew(0, 1).apply(&trace), trace);
+    }
+
+    #[test]
+    fn apply_is_seed_deterministic() {
+        let trace = sorted_trace(3_000);
+        let cfg = DisorderConfig::bounded_skew(300, 11).with_stragglers(0.1, 500);
+        assert_eq!(cfg.apply(&trace), cfg.apply(&trace));
+        let other = DisorderConfig { seed: 12, ..cfg };
+        assert_ne!(other.apply(&trace), cfg.apply(&trace));
+    }
+
+    #[test]
+    fn stragglers_extend_the_delay_bound() {
+        let plain = DisorderConfig::bounded_skew(100, 5);
+        assert_eq!(plain.max_delay_ms(), 100);
+        assert_eq!(plain.with_stragglers(0.2, 400).max_delay_ms(), 500);
+        // zero-fraction stragglers do not budge the bound
+        assert_eq!(plain.with_stragglers(0.0, 400).max_delay_ms(), 100);
+    }
+}

@@ -3,9 +3,11 @@
 //! replay tool used by the case studies (§6.1).
 
 pub mod broker;
+pub mod disorder;
 pub mod generator;
 pub mod replay;
 
 pub use broker::{Broker, Consumer, Producer, TopicConfig};
+pub use disorder::DisorderConfig;
 pub use generator::{Distribution, RateSchedule, StreamConfig, StreamGenerator, SubStreamSpec};
 pub use replay::ReplayTool;

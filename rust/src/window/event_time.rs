@@ -1,0 +1,449 @@
+//! Event-time pane routing with a bounded-skew low-watermark.
+//!
+//! The legacy engines slice a pre-sorted trace by scanning `ts` ranges —
+//! correct only because every source emits in order.  This module makes the
+//! `ts` column authoritative: items route to the pane `ts / interval_ms`
+//! regardless of arrival order, panes stay open until the low-watermark
+//! minus the allowed lateness passes their end, and beyond-lateness items
+//! are dropped *exactly once* into [`late-drop accounting`](LateDrops) that
+//! widens the affected windows' confidence intervals.
+//!
+//! **Watermark heuristic (bounded skew).**  The watermark is
+//! `max(ts seen) − watermark_skew_ms`: the source promises (via
+//! [`crate::stream::DisorderConfig`] or its own semantics) that no item
+//! arrives more than `skew` behind the newest event time already observed.
+//! A pane `[start, end)` closes once `watermark ≥ end + allowed_lateness`.
+//! An item delayed by at most `skew + lateness` virtual ms therefore always
+//! finds its pane still open — the disorder-equivalence bound the
+//! `event_time` test suite exercises.
+//!
+//! **Byte-identity under disorder.**  Reservoir samplers are order
+//! sensitive (each offer consumes RNG), so routing alone cannot make a
+//! shuffled run reproduce the in-order run.  The router instead *buffers*
+//! each open pane's items and releases the pane as one canonically-ordered
+//! sequence at close (sorted by `(ts, stratum, value bits)` — a total order
+//! recoverable from item content alone).  Both an in-order and a
+//! within-lateness shuffled arrival of the same trace then present the
+//! sampler with identical per-pane sequences in identical pane order, so
+//! samples, estimates, and bounds match bit for bit.
+//!
+//! A closed pane is *never* mutated: the close boundary (`next_close`)
+//! only advances, and any item routed at or below it is dropped and
+//! counted — the property tests in `rust/tests/event_time.rs` pin both.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::core::{EventTime, Item};
+use crate::error::estimator::LateDrops;
+
+/// Event-time knobs, off by default ([`crate::engine::EngineConfig`] holds
+/// an `Option<EventTimeConfig>`; `None` keeps the legacy arrival-order
+/// slicing byte-identical).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventTimeConfig {
+    /// Bounded-skew watermark allowance: the watermark trails the newest
+    /// observed event time by this much (virtual ms).
+    pub watermark_skew_ms: EventTime,
+    /// How long past its end (watermark time) a pane stays open for late
+    /// arrivals.
+    pub allowed_lateness_ms: EventTime,
+}
+
+impl EventTimeConfig {
+    pub fn new(watermark_skew_ms: EventTime, allowed_lateness_ms: EventTime) -> Self {
+        Self { watermark_skew_ms, allowed_lateness_ms }
+    }
+
+    /// Largest per-item arrival delay (virtual ms) guaranteed to route
+    /// without drops: a pane closes only after an event `skew + lateness`
+    /// past its end has arrived, and an item delayed by at most that much
+    /// arrives no later than such a closer (see the module doc).
+    pub fn max_lossless_delay_ms(&self) -> EventTime {
+        self.watermark_skew_ms.saturating_add(self.allowed_lateness_ms)
+    }
+}
+
+/// Routes items into event-time panes and closes them in pane-id order as
+/// the watermark advances.
+pub struct EventTimeRouter {
+    interval_ms: EventTime,
+    config: EventTimeConfig,
+    /// Open pane buffers, keyed by pane id (`ts / interval_ms`).  Only
+    /// non-empty panes hold an entry; gaps close as empty panes so the
+    /// assembler's interval clock still ticks once per pane.
+    open: BTreeMap<u64, Vec<Item>>,
+    /// Panes closed but not yet taken, in pane-id order.
+    ready: VecDeque<Vec<Item>>,
+    /// Next pane id to close; every pane below it is sealed forever.
+    next_close: u64,
+    /// Highest pane id that has received an item (reopen detection).
+    max_pane_seen: u64,
+    /// Highest event time observed (the watermark input).
+    max_ts: EventTime,
+    watermark: EventTime,
+    seen_any: bool,
+    flushed: bool,
+    /// Per-pane drops recorded since the last [`Self::take_new_drops`].
+    new_drops: Vec<(u64, LateDrops)>,
+    dropped_items: u64,
+}
+
+impl EventTimeRouter {
+    pub fn new(interval_ms: EventTime, config: EventTimeConfig) -> Self {
+        assert!(interval_ms > 0, "event-time pane interval must be positive");
+        Self {
+            interval_ms,
+            config,
+            open: BTreeMap::new(),
+            ready: VecDeque::new(),
+            next_close: 0,
+            max_pane_seen: 0,
+            max_ts: 0,
+            watermark: 0,
+            seen_any: false,
+            flushed: false,
+            new_drops: Vec::new(),
+            dropped_items: 0,
+        }
+    }
+
+    /// Route one arrival.  Beyond-lateness items are dropped (counted, and
+    /// charged to their pane for CI widening); everything else lands in its
+    /// still-open pane.
+    pub fn push(&mut self, item: &Item) {
+        let pane = item.ts / self.interval_ms;
+        if pane < self.next_close {
+            self.dropped_items += 1;
+            crate::obs_counter!(
+                "late_items_dropped_total",
+                "beyond-lateness items dropped by the event-time router"
+            )
+            .inc();
+            match self.new_drops.iter_mut().find(|(p, _)| *p == pane) {
+                Some((_, d)) => d.add(item.value),
+                None => {
+                    let mut d = LateDrops::default();
+                    d.add(item.value);
+                    self.new_drops.push((pane, d));
+                }
+            }
+            return;
+        }
+        if self.seen_any && pane < self.max_pane_seen {
+            crate::obs_counter!(
+                "window_pane_reopens_total",
+                "late arrivals routed into an already-open older event-time pane"
+            )
+            .inc();
+        }
+        self.max_pane_seen = self.max_pane_seen.max(pane);
+        self.seen_any = true;
+        self.open.entry(pane).or_default().push(*item);
+        if item.ts > self.max_ts {
+            self.max_ts = item.ts;
+            self.advance_watermark();
+        }
+    }
+
+    /// Current low-watermark (`max ts seen − skew`, floored at 0).
+    pub fn watermark(&self) -> EventTime {
+        self.watermark
+    }
+
+    /// Beyond-lateness items dropped so far.
+    pub fn dropped_items(&self) -> u64 {
+        self.dropped_items
+    }
+
+    /// Pane id of the next pane to close (everything below is sealed).
+    pub fn next_close_id(&self) -> u64 {
+        self.next_close
+    }
+
+    /// Drain the drops recorded since the last call, as `(pane_id, drops)`
+    /// pairs — the engines ship these alongside each closed pane so the
+    /// window consumer can charge them to the right spans.
+    pub fn take_new_drops(&mut self) -> Vec<(u64, LateDrops)> {
+        std::mem::take(&mut self.new_drops)
+    }
+
+    /// End of stream: every remaining open pane (and gap) closes in order.
+    pub fn flush(&mut self) {
+        self.flushed = true;
+        if !self.seen_any {
+            return;
+        }
+        while self.next_close <= self.max_pane_seen {
+            self.close_next();
+        }
+    }
+
+    /// Next closed pane's items in canonical order (`(ts, stratum, value
+    /// bits)` — see the module doc), empty for a gap pane; `None` when
+    /// nothing is ready.  Panes come out strictly in pane-id order.
+    pub fn next_ready(&mut self) -> Option<Vec<Item>> {
+        self.ready.pop_front()
+    }
+
+    fn advance_watermark(&mut self) {
+        self.watermark = self.max_ts.saturating_sub(self.config.watermark_skew_ms);
+        crate::obs_gauge!(
+            "event_time_watermark_lag_ms",
+            "virtual ms the low-watermark trails the newest observed event time"
+        )
+        .set(self.max_ts.saturating_sub(self.watermark) as f64);
+        loop {
+            let end = (self.next_close + 1).saturating_mul(self.interval_ms);
+            if end.saturating_add(self.config.allowed_lateness_ms) > self.watermark {
+                break;
+            }
+            self.close_next();
+        }
+    }
+
+    fn close_next(&mut self) {
+        let mut items = self.open.remove(&self.next_close).unwrap_or_default();
+        canonical_sort(&mut items);
+        self.ready.push_back(items);
+        self.next_close += 1;
+    }
+}
+
+/// The canonical within-pane order: a total order recoverable from item
+/// content alone, so every arrival permutation of the same pane multiset
+/// releases the identical sequence.  This fold order *is* the byte-identity
+/// spec for event-time mode.
+fn canonical_sort(items: &mut [Item]) {
+    items.sort_unstable_by(|a, b| {
+        (a.ts, a.stratum, a.value.to_bits()).cmp(&(b.ts, b.stratum, b.value.to_bits()))
+    });
+}
+
+/// Pulls an arrival-order trace through an [`EventTimeRouter`], yielding
+/// one closed pane per call — the event-time replacement for the engines'
+/// sorted range scan.
+pub struct EventTimeSlicer<'a> {
+    items: &'a [Item],
+    pos: usize,
+    router: EventTimeRouter,
+}
+
+impl<'a> EventTimeSlicer<'a> {
+    pub fn new(items: &'a [Item], interval_ms: EventTime, config: EventTimeConfig) -> Self {
+        Self { items, pos: 0, router: EventTimeRouter::new(interval_ms, config) }
+    }
+
+    /// Items of the next pane (canonical order; empty `Vec` for a gap
+    /// pane), or `None` once the input is exhausted and every pane has
+    /// flushed.
+    pub fn next_pane(&mut self) -> Option<Vec<Item>> {
+        loop {
+            if let Some(pane) = self.router.next_ready() {
+                return Some(pane);
+            }
+            if self.pos < self.items.len() {
+                self.router.push(&self.items[self.pos]);
+                self.pos += 1;
+            } else if !self.router.flushed {
+                self.router.flush();
+            } else {
+                return None;
+            }
+        }
+    }
+
+    pub fn take_new_drops(&mut self) -> Vec<(u64, LateDrops)> {
+        self.router.take_new_drops()
+    }
+
+    pub fn dropped_items(&self) -> u64 {
+        self.router.dropped_items()
+    }
+
+    pub fn watermark(&self) -> EventTime {
+        self.router.watermark()
+    }
+}
+
+/// Window-side accounting of beyond-lateness drops: absorbs the routers'
+/// `(pane_id, drops)` batches and answers "how much mass is missing from
+/// the window `[start, end)`" at emission time.  Drops observed *after* a
+/// window emits are charged only to later windows still spanning the pane —
+/// an emitted result is immutable, so its bound reflects the drops known
+/// when it closed.
+#[derive(Debug, Default)]
+pub struct DropLedger {
+    interval_ms: EventTime,
+    per_pane: BTreeMap<u64, LateDrops>,
+}
+
+impl DropLedger {
+    pub fn new(interval_ms: EventTime) -> Self {
+        assert!(interval_ms > 0, "drop ledger needs a positive pane interval");
+        Self { interval_ms, per_pane: BTreeMap::new() }
+    }
+
+    pub fn absorb(&mut self, batch: Vec<(u64, LateDrops)>) {
+        for (pane, d) in batch {
+            self.per_pane.entry(pane).or_default().merge(&d);
+        }
+    }
+
+    /// Total drops charged to panes inside `[start_ms, end_ms)`.
+    pub fn span(&self, start_ms: EventTime, end_ms: EventTime) -> LateDrops {
+        let lo = start_ms / self.interval_ms;
+        let hi = end_ms / self.interval_ms; // exclusive
+        let mut out = LateDrops::default();
+        for (_, d) in self.per_pane.range(lo..hi) {
+            out.merge(d);
+        }
+        out
+    }
+
+    /// Forget panes below `start_ms` — window starts are monotone, so the
+    /// engines prune after each emission to bound ledger memory.
+    pub fn prune_below(&mut self, start_ms: EventTime) {
+        let lo = start_ms / self.interval_ms;
+        self.per_pane = self.per_pane.split_off(&lo);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn it(stratum: u16, value: f64, ts: EventTime) -> Item {
+        Item::new(stratum, value, ts)
+    }
+
+    fn cfg(skew: EventTime, lateness: EventTime) -> EventTimeConfig {
+        EventTimeConfig::new(skew, lateness)
+    }
+
+    #[test]
+    fn in_order_stream_panes_match_ts_ranges() {
+        // 0..1000 -> pane 0, 1000..2000 -> pane 1, ...
+        let items: Vec<Item> = (0..3000u64).map(|t| it(0, t as f64, t)).collect();
+        let mut s = EventTimeSlicer::new(&items, 1000, cfg(0, 0));
+        let mut pane_id = 0u64;
+        while let Some(pane) = s.next_pane() {
+            for item in &pane {
+                assert_eq!(item.ts / 1000, pane_id, "item {} in pane {pane_id}", item.ts);
+            }
+            pane_id += 1;
+        }
+        assert_eq!(pane_id, 3);
+        assert_eq!(s.dropped_items(), 0);
+    }
+
+    #[test]
+    fn pane_close_waits_for_watermark_plus_lateness() {
+        let mut r = EventTimeRouter::new(1000, cfg(200, 300));
+        r.push(&it(0, 1.0, 500));
+        assert!(r.next_ready().is_none(), "pane 0 must stay open");
+        // watermark = 1499 - 200 = 1299 < 1000 + 300 -> still open
+        r.push(&it(0, 2.0, 1499));
+        assert!(r.next_ready().is_none());
+        // watermark = 1500 - 200 = 1300 >= 1300 -> pane 0 closes
+        r.push(&it(0, 3.0, 1500));
+        let pane0 = r.next_ready().expect("pane 0 closed");
+        assert_eq!(pane0.len(), 1);
+        assert_eq!(pane0[0].ts, 500);
+        assert_eq!(r.watermark(), 1300);
+    }
+
+    #[test]
+    fn within_lateness_stragglers_route_into_open_pane() {
+        let mut r = EventTimeRouter::new(1000, cfg(0, 500));
+        r.push(&it(0, 1.0, 100));
+        r.push(&it(0, 2.0, 1200)); // wm 1200 < 1500: pane 0 open
+        r.push(&it(1, 3.0, 900)); // straggler for pane 0
+        r.push(&it(0, 4.0, 1600)); // wm 1600 >= 1500: pane 0 closes
+        let pane0 = r.next_ready().expect("pane 0");
+        let ts: Vec<u64> = pane0.iter().map(|i| i.ts).collect();
+        assert_eq!(ts, vec![100, 900], "straggler merged, canonical order");
+        assert_eq!(r.dropped_items(), 0);
+    }
+
+    #[test]
+    fn beyond_lateness_items_drop_exactly_once_and_are_charged() {
+        let mut r = EventTimeRouter::new(1000, cfg(0, 0));
+        r.push(&it(0, 1.0, 100));
+        r.push(&it(0, 2.0, 2500)); // wm 2500: panes 0 and 1 close
+        assert_eq!(r.next_close_id(), 2);
+        r.push(&it(0, 7.5, 900)); // pane 0 is sealed -> drop
+        r.push(&it(0, 2.5, 950)); // drop
+        r.push(&it(0, 1.0, 1100)); // pane 1 sealed -> drop
+        assert_eq!(r.dropped_items(), 3);
+        let drops = r.take_new_drops();
+        assert_eq!(drops.len(), 2, "charged per pane");
+        let p0 = drops.iter().find(|(p, _)| *p == 0).unwrap().1;
+        assert_eq!(p0.count, 2.0);
+        assert_eq!(p0.mass, 10.0);
+        let p1 = drops.iter().find(|(p, _)| *p == 1).unwrap().1;
+        assert_eq!(p1.count, 1.0);
+        // drained: a second take returns nothing
+        assert!(r.take_new_drops().is_empty());
+        // the dropped items never surface in any pane
+        r.flush();
+        let mut surfaced = 0;
+        while let Some(pane) = r.next_ready() {
+            surfaced += pane.len();
+        }
+        assert_eq!(surfaced, 2, "only the two routed items");
+    }
+
+    #[test]
+    fn gap_panes_close_empty_in_order() {
+        let items = [it(0, 1.0, 100), it(0, 2.0, 5100)];
+        let mut s = EventTimeSlicer::new(&items, 1000, cfg(0, 0));
+        let mut lens = Vec::new();
+        while let Some(pane) = s.next_pane() {
+            lens.push(pane.len());
+        }
+        assert_eq!(lens, vec![1, 0, 0, 0, 0, 1], "gaps tick the pane clock");
+    }
+
+    #[test]
+    fn canonical_order_is_arrival_invariant() {
+        let mut fwd = vec![it(2, 5.0, 10), it(0, 3.0, 10), it(0, 3.0, 7), it(1, -1.0, 10)];
+        let mut rev: Vec<Item> = fwd.iter().rev().copied().collect();
+        canonical_sort(&mut fwd);
+        canonical_sort(&mut rev);
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd[0].ts, 7);
+    }
+
+    #[test]
+    fn max_lossless_delay_is_skew_plus_lateness() {
+        assert_eq!(cfg(200, 300).max_lossless_delay_ms(), 500);
+        assert_eq!(cfg(u64::MAX, 1).max_lossless_delay_ms(), u64::MAX);
+    }
+
+    #[test]
+    fn drop_ledger_spans_and_prunes() {
+        let mut l = DropLedger::new(1000);
+        let mut d0 = LateDrops::default();
+        d0.add(5.0);
+        let mut d2 = LateDrops::default();
+        d2.add(7.0);
+        d2.add(1.0);
+        l.absorb(vec![(0, d0), (2, d2)]);
+        assert_eq!(l.span(0, 1000).count, 1.0);
+        assert_eq!(l.span(0, 3000).count, 3.0);
+        assert_eq!(l.span(0, 3000).mass, 13.0);
+        assert_eq!(l.span(1000, 2000).count, 0.0);
+        assert!(l.span(3000, 9000).is_empty());
+        l.prune_below(2000);
+        assert!(l.span(0, 2000).is_empty(), "pruned panes forgotten");
+        assert_eq!(l.span(2000, 3000).count, 2.0);
+    }
+
+    #[test]
+    fn flush_without_items_yields_nothing() {
+        let mut r = EventTimeRouter::new(500, cfg(100, 100));
+        r.flush();
+        assert!(r.next_ready().is_none());
+        assert_eq!(r.dropped_items(), 0);
+    }
+}

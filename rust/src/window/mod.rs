@@ -41,9 +41,11 @@ use crate::core::{EventTime, MAX_STRATA};
 use crate::error::estimator::StrataState;
 use crate::sampling::SampleResult;
 
+pub mod event_time;
 pub mod mergeable;
 pub mod pane;
 
+pub use event_time::{DropLedger, EventTimeConfig, EventTimeRouter, EventTimeSlicer};
 pub use mergeable::Mergeable;
 pub use pane::PaneStore;
 

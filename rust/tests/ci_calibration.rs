@@ -19,13 +19,21 @@
 //! (Eq. 1), or the window merge ever regress.
 //!
 //! Everything is seeded; the suite is deterministic in CI.
+//!
+//! A second axis runs the same bands over *disordered* arrivals: a seeded
+//! bounded-skew shuffle routed through the event-time watermark path, at
+//! every fraction — pinning that pane reassembly preserves the sampling
+//! distribution the bounds are calibrated against.
 
 use streamapprox::core::Item;
 use streamapprox::error::bounds::{ConfidenceInterval, ConfidenceLevel};
 use streamapprox::error::estimator::{estimate, StrataPartials};
 use streamapprox::sampling::{OasrsSampler, Sampler};
+use streamapprox::stream::DisorderConfig;
 use streamapprox::util::rng::Rng;
-use streamapprox::window::{ExactAgg, WindowAssembler, WindowConfig};
+use streamapprox::window::{
+    EventTimeConfig, EventTimeSlicer, ExactAgg, WindowAssembler, WindowConfig,
+};
 
 const TRIALS: u64 = 200;
 const FRACTIONS: [f64; 3] = [0.8, 0.4, 0.1];
@@ -71,12 +79,68 @@ fn trial(seed: u64, fraction: f64) -> (bool, bool) {
     (sum_ci.contains(truth_sum), mean_ci.contains(truth_mean))
 }
 
-fn coverage(fraction: f64, seed_bank: u64) -> (f64, f64) {
+/// Same populations as [`trial`], but arriving out of order: items carry
+/// per-item timestamps inside each interval, a seeded bounded-skew shuffle
+/// reorders the trace, and the event-time router reassembles the panes
+/// before the sampler sees them.  The disorder budget (skew 300) exactly
+/// matches the watermark config's lossless bound (150 + 150), so nothing
+/// drops and the coverage statistics face the identical estimator math —
+/// the axis pins that the event-time path neither biases the sample nor
+/// corrupts the weights that the CIs are built from.
+fn disordered_trial(seed: u64, fraction: f64) -> (bool, bool) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut sampler = OasrsSampler::new(fraction, seed ^ 0xA5A5_5A5A_0F0F_F0F0);
+    let mut assembler = WindowAssembler::new(WindowConfig::tumbling(1_000));
+
+    let mut items = Vec::new();
+    for interval in 0..2u64 {
+        for &(s, n, mu, sd) in &SPEC {
+            for k in 0..n {
+                let ts = interval * 1_000 + (k as u64 * 1_000) / n as u64;
+                items.push(Item::new(s, rng.normal(mu, sd), ts));
+            }
+        }
+    }
+    items.sort_by_key(|i| i.ts);
+    let mut exact_panes = [ExactAgg::default(), ExactAgg::default()];
+    for it in &items {
+        exact_panes[(it.ts / 1_000) as usize].add(it.stratum, it.value);
+    }
+    let arrivals = DisorderConfig::bounded_skew(300, seed ^ 0xD15C).apply(&items);
+
+    let mut slicer = EventTimeSlicer::new(&arrivals, 1_000, EventTimeConfig::new(150, 150));
+    let mut window = None;
+    let mut pane = 0usize;
+    while let Some(batch) = slicer.next_pane() {
+        for it in &batch {
+            sampler.offer(it);
+        }
+        window = assembler.push_interval(
+            sampler.finish_interval(),
+            std::mem::take(&mut exact_panes[pane]),
+        );
+        pane += 1;
+    }
+    assert_eq!(pane, 2, "two event-time panes per trial");
+    assert_eq!(slicer.dropped_items(), 0, "skew 300 fits the 150+150 lossless budget");
+    let ws = window.expect("tumbling window emits every interval");
+
+    let partials = StrataPartials::from_sample(&ws.result.sample);
+    let est = estimate(&partials, &ws.result.state);
+    let sum_ci = ConfidenceInterval::for_sum(&est, ConfidenceLevel::P95);
+    let mean_ci = ConfidenceInterval::for_mean(&est, ConfidenceLevel::P95);
+
+    let truth_sum = ws.exact.total_sum();
+    let truth_mean = truth_sum / ws.exact.total_count();
+    (sum_ci.contains(truth_sum), mean_ci.contains(truth_mean))
+}
+
+fn coverage(trial_fn: fn(u64, f64) -> (bool, bool), fraction: f64, seed_bank: u64) -> (f64, f64) {
     let mut sum_hits = 0u64;
     let mut mean_hits = 0u64;
     for i in 0..TRIALS {
         let seed = seed_bank.wrapping_add(i).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
-        let (s, m) = trial(seed, fraction);
+        let (s, m) = trial_fn(seed, fraction);
         sum_hits += s as u64;
         mean_hits += m as u64;
     }
@@ -88,7 +152,7 @@ fn p95_coverage_within_binomial_tolerance_at_all_fractions() {
     let mut pooled_sum = 0.0;
     let mut pooled_mean = 0.0;
     for (bank, &fraction) in FRACTIONS.iter().enumerate() {
-        let (cov_sum, cov_mean) = coverage(fraction, 1 + bank as u64);
+        let (cov_sum, cov_mean) = coverage(trial, fraction, 1 + bank as u64);
         pooled_sum += cov_sum;
         pooled_mean += cov_mean;
         for (what, cov) in [("SUM", cov_sum), ("MEAN", cov_mean)] {
@@ -107,6 +171,38 @@ fn p95_coverage_within_binomial_tolerance_at_all_fractions() {
         assert!(
             (0.925..=0.985).contains(&cov),
             "{what} pooled coverage {cov} outside [0.925, 0.985]"
+        );
+    }
+}
+
+#[test]
+fn p95_coverage_holds_under_bounded_skew_disorder() {
+    // The disorder axis: the same binomial acceptance bands, but the
+    // sampler is fed by the event-time router over a bounded-skew shuffled
+    // arrival sequence.  If pane reassembly double-offered, lost, or
+    // re-weighted items, coverage would collapse out of these bands.
+    let mut pooled_sum = 0.0;
+    let mut pooled_mean = 0.0;
+    for (bank, &fraction) in FRACTIONS.iter().enumerate() {
+        let (cov_sum, cov_mean) = coverage(disordered_trial, fraction, 11 + bank as u64);
+        pooled_sum += cov_sum;
+        pooled_mean += cov_mean;
+        for (what, cov) in [("SUM", cov_sum), ("MEAN", cov_mean)] {
+            assert!(
+                (0.90..=0.995).contains(&cov),
+                "{what}@f={fraction} (disordered): empirical P95 coverage {cov} outside \
+                 the n={TRIALS} binomial band [0.90, 0.995]"
+            );
+        }
+        eprintln!(
+            "disordered f={fraction}: SUM coverage {cov_sum:.3}, MEAN coverage {cov_mean:.3}"
+        );
+    }
+    for (what, pooled) in [("SUM", pooled_sum), ("MEAN", pooled_mean)] {
+        let cov = pooled / FRACTIONS.len() as f64;
+        assert!(
+            (0.925..=0.985).contains(&cov),
+            "{what} pooled disordered coverage {cov} outside [0.925, 0.985]"
         );
     }
 }

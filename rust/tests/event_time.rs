@@ -1,0 +1,351 @@
+//! Seeded disorder-equivalence suite for event-time windowing.
+//!
+//! The headline contract: with event-time mode on, a bounded shuffle of the
+//! trace (every arrival delayed at most `watermark_skew + allowed_lateness`
+//! virtual ms) changes *nothing* — same seed, same trace, the in-order run
+//! and the shuffled run emit byte-identical window estimates, for every
+//! sampler kind, on both engines, with zero drops.  The router buffers each
+//! open pane and releases it in canonical `(ts, stratum, value bits)` order
+//! at close, so the order-sensitive reservoir samplers see identical
+//! per-pane sequences either way.
+//!
+//! Around it: property tests that a closed pane is never mutated (items
+//! routed at a sealed pane drop, exactly once, and never surface), that
+//! `late_dropped` counts exactly the beyond-lateness items, and that those
+//! drops widen the affected window's confidence interval by exactly the
+//! missing mass.
+
+use streamapprox::prelude::*;
+use streamapprox::stream::{DisorderConfig, StreamGenerator};
+use streamapprox::util::rng::Rng;
+use streamapprox::window::{EventTimeConfig, EventTimeRouter};
+
+/// Event-time-sorted base trace (the "in-order" arrival sequence).
+fn sorted_trace(rate: f64, seed: u64, dur_ms: u64) -> Vec<Item> {
+    let mut items = StreamGenerator::new(&StreamConfig::gaussian_micro(rate, seed))
+        .take_until(dur_ms);
+    items.sort_by_key(|i| i.ts);
+    items
+}
+
+fn build(
+    svc: &ComputeService,
+    engine: EngineKind,
+    sampler: SamplerKind,
+    query: Query,
+    workers: usize,
+    skew_ms: u64,
+    lateness_ms: u64,
+) -> Pipeline {
+    PipelineBuilder::new()
+        .engine(engine)
+        .sampler(sampler)
+        // Fixed fraction: the pipelined engine applies budget feedback at a
+        // racy point in the loop, so only a constant fraction is
+        // replay-deterministic.
+        .budget(QueryBudget::SamplingFraction(0.4))
+        .query(query)
+        .window(WindowConfig::new(2_000, 1_000))
+        .workers(workers)
+        .seed(4242)
+        .event_time(skew_ms, lateness_ms)
+        .build_with_handle(svc.handle())
+}
+
+fn assert_windows_byte_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.windows.len(), b.windows.len(), "{tag}: window count");
+    for (x, y) in a.windows.iter().zip(&b.windows) {
+        let w = format!("{tag} window {}-{}", x.start_ms, x.end_ms);
+        assert_eq!(x.start_ms, y.start_ms, "{w}: start");
+        assert_eq!(x.end_ms, y.end_ms, "{w}: end");
+        assert_eq!(x.sampled, y.sampled, "{w}: sample size");
+        assert_eq!(x.arrived.to_bits(), y.arrived.to_bits(), "{w}: arrived");
+        assert_eq!(x.late_dropped, y.late_dropped, "{w}: late_dropped");
+        assert_eq!(
+            x.result.value().to_bits(),
+            y.result.value().to_bits(),
+            "{w}: estimate {} vs {}",
+            x.result.value(),
+            y.result.value()
+        );
+        match (x.result.scalar, y.result.scalar) {
+            (Some(ca), Some(cb)) => {
+                assert_eq!(ca.bound.to_bits(), cb.bound.to_bits(), "{w}: bound")
+            }
+            (None, None) => {}
+            _ => panic!("{w}: scalar presence diverged"),
+        }
+        match (x.exact_scalar, y.exact_scalar) {
+            (Some(ea), Some(eb)) => assert_eq!(ea.to_bits(), eb.to_bits(), "{w}: exact"),
+            (None, None) => {}
+            _ => panic!("{w}: exact presence diverged"),
+        }
+    }
+}
+
+/// The headline: in-order vs bounded-shuffle, byte-identical, every sampler
+/// kind, both engines, zero drops.
+#[test]
+fn seeded_disorder_equivalence_all_samplers_both_engines() {
+    const SKEW: u64 = 300;
+    const LATENESS: u64 = 200;
+    let et = EventTimeConfig::new(SKEW, LATENESS);
+    // Worst-case injected delay exactly matches the lossless budget.
+    let disorder = DisorderConfig::bounded_skew(400, 99).with_stragglers(0.05, 100);
+    assert_eq!(disorder.max_delay_ms(), et.max_lossless_delay_ms());
+
+    let svc = ComputeService::native();
+    let in_order = sorted_trace(200.0, 31, 10_000);
+    let shuffled = disorder.apply(&in_order);
+    assert_ne!(shuffled, in_order, "disorder must actually reorder the trace");
+
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        for sampler in [
+            SamplerKind::Oasrs,
+            SamplerKind::Srs,
+            SamplerKind::Sts,
+            SamplerKind::WeightedRes,
+            SamplerKind::None,
+        ] {
+            let tag = format!("{engine:?}/{sampler:?}");
+            let run = |items: &[Item]| {
+                build(&svc, engine, sampler, Query::Sum, 1, SKEW, LATENESS)
+                    .run_items(items)
+                    .unwrap()
+            };
+            let a = run(&in_order);
+            let b = run(&shuffled);
+            assert!(a.windows.len() >= 8, "{tag}: only {} windows", a.windows.len());
+            assert_eq!(
+                a.windows.iter().map(|w| w.late_dropped).sum::<u64>(),
+                0,
+                "{tag}: in-order run dropped items"
+            );
+            assert_eq!(
+                b.windows.iter().map(|w| w.late_dropped).sum::<u64>(),
+                0,
+                "{tag}: within-lateness shuffle must drop nothing"
+            );
+            assert_windows_byte_identical(&a, &b, &tag);
+        }
+    }
+}
+
+/// Multi-worker pools keep the equivalence: chunk round-robin assignment is
+/// a function of the canonical pane sequences, not of arrival order.
+#[test]
+fn disorder_equivalence_survives_threaded_ingest() {
+    let svc = ComputeService::native();
+    let in_order = sorted_trace(300.0, 47, 8_000);
+    let shuffled = DisorderConfig::bounded_skew(500, 5).apply(&in_order);
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        let tag = format!("{engine:?}/Oasrs/3-workers");
+        let run = |items: &[Item]| {
+            build(&svc, engine, SamplerKind::Oasrs, Query::Sum, 3, 300, 200)
+                .run_items(items)
+                .unwrap()
+        };
+        let a = run(&in_order);
+        let b = run(&shuffled);
+        assert_windows_byte_identical(&a, &b, &tag);
+    }
+}
+
+/// Ground-truth check: with the exact (native) sampler and a COUNT query,
+/// event-time windows over a *disordered* trace equal the legacy engine's
+/// windows over the sorted trace — the router reconstructs exactly the
+/// spans the sorted range scan reads off directly.
+#[test]
+fn event_time_count_matches_legacy_sorted_scan() {
+    let svc = ComputeService::native();
+    let in_order = sorted_trace(250.0, 53, 10_000);
+    let shuffled = DisorderConfig::bounded_skew(450, 13).apply(&in_order);
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        let legacy = PipelineBuilder::new()
+            .engine(engine)
+            .sampler(SamplerKind::None)
+            .budget(QueryBudget::SamplingFraction(1.0))
+            .query(Query::Count)
+            .window(WindowConfig::new(2_000, 1_000))
+            .build_with_handle(svc.handle())
+            .run_items(&in_order)
+            .unwrap();
+        let et = build(&svc, engine, SamplerKind::None, Query::Count, 1, 300, 200)
+            .run_items(&shuffled)
+            .unwrap();
+        assert_eq!(legacy.windows.len(), et.windows.len(), "{engine:?}: window count");
+        for (l, e) in legacy.windows.iter().zip(&et.windows) {
+            assert_eq!(l.end_ms, e.end_ms);
+            assert_eq!(
+                l.result.value(),
+                e.result.value(),
+                "{engine:?} window {}-{}: legacy {} vs event-time {}",
+                l.start_ms,
+                l.end_ms,
+                l.result.value(),
+                e.result.value()
+            );
+            let span = in_order
+                .iter()
+                .filter(|i| i.ts >= e.start_ms && i.ts < e.end_ms)
+                .count() as f64;
+            assert_eq!(e.result.value(), span, "window {}-{}", e.start_ms, e.end_ms);
+        }
+    }
+}
+
+/// Property: a closed pane is never mutated.  Every item a seeded
+/// adversarial arrival order routes at or below the close boundary drops —
+/// exactly once — and never surfaces in any released pane; everything else
+/// surfaces exactly once, in its own pane, and pane ids only advance.
+#[test]
+fn closed_panes_are_immutable_under_adversarial_arrivals() {
+    const INTERVAL: u64 = 100;
+    for seed in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(0xE7 + seed);
+        // Unbounded disorder: ~half the items arrive far beyond any
+        // lateness budget, forcing sealed-pane hits.
+        let mut arrivals: Vec<Item> = (0..2_000u64)
+            .map(|i| Item::new((i % 5) as u16, i as f64, rng.range_usize(0, 1_500) as u64))
+            .collect();
+        let order: Vec<usize> =
+            (0..arrivals.len()).map(|_| rng.range_usize(0, arrivals.len())).collect();
+        // seeded shuffle by random keys (stable; same multiset)
+        let mut keyed: Vec<(usize, Item)> =
+            order.into_iter().zip(arrivals.drain(..)).collect();
+        keyed.sort_by_key(|&(k, _)| k);
+
+        let mut router = EventTimeRouter::new(INTERVAL, EventTimeConfig::new(40, 60));
+        let mut surfaced: Vec<Item> = Vec::new();
+        let mut pane_id = 0u64;
+        let drain = |router: &mut EventTimeRouter, surfaced: &mut Vec<Item>,
+                     pane_id: &mut u64| {
+            while let Some(pane) = router.next_ready() {
+                for item in &pane {
+                    assert_eq!(
+                        item.ts / INTERVAL,
+                        *pane_id,
+                        "seed {seed}: item ts {} leaked into pane {pane_id}",
+                        item.ts
+                    );
+                }
+                surfaced.extend(pane);
+                *pane_id += 1;
+            }
+        };
+        let total = keyed.len();
+        for (_, item) in &keyed {
+            let sealed_below = router.next_close_id();
+            let is_late = item.ts / INTERVAL < sealed_below;
+            let before = router.dropped_items();
+            router.push(item);
+            assert_eq!(
+                router.dropped_items(),
+                before + u64::from(is_late),
+                "seed {seed}: sealed-pane routing must drop exactly once"
+            );
+            drain(&mut router, &mut surfaced, &mut pane_id);
+        }
+        router.flush();
+        drain(&mut router, &mut surfaced, &mut pane_id);
+        assert_eq!(
+            surfaced.len() as u64 + router.dropped_items(),
+            total as u64,
+            "seed {seed}: conservation"
+        );
+        assert!(router.dropped_items() > 0, "seed {seed}: adversarial order must drop");
+        assert!(router.next_ready().is_none());
+    }
+}
+
+/// Crafted trace with exactly three beyond-lateness items: the engines must
+/// drop them exactly once, report them in `late_dropped` on the affected
+/// window, and widen that window's bound by exactly the missing mass.
+#[test]
+fn beyond_lateness_drops_count_exactly_and_widen_the_bound() {
+    // Panes of 1000 ms, zero skew, zero lateness: pane p seals the moment
+    // an event at ts >= (p+1)*1000 arrives.
+    let mut clean: Vec<Item> = Vec::new();
+    for pane in 0..4u64 {
+        for k in 0..10u64 {
+            clean.push(Item::new((k % 3) as u16, 10.0, pane * 1_000 + k * 100));
+        }
+    }
+    // Arrival order: pane 1 seals when ts=2000 arrives; three ts∈pane-1
+    // stragglers arrive mid-pane-2, far beyond the zero lateness budget.
+    let mut disordered = clean.clone();
+    let at = disordered.iter().position(|i| i.ts == 2_500).unwrap();
+    for (j, ts) in [1_500u64, 1_600, 1_700].iter().enumerate() {
+        disordered.insert(at + 1 + j, Item::new(0, 10.0, *ts));
+    }
+
+    let svc = ComputeService::native();
+    // (query, expected widening of the affected window's bound):
+    // SUM charges |dropped mass| = 30; COUNT charges the 3 dropped items;
+    // MEAN drops at the window mean shift nothing — inclusion-shift 0.
+    for (query, extra) in [(Query::Sum, 30.0), (Query::Count, 3.0), (Query::Mean, 0.0)] {
+        for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+            let tag = format!("{engine:?}/{query:?}");
+            let run = |items: &[Item]| {
+                PipelineBuilder::new()
+                    .engine(engine)
+                    .sampler(SamplerKind::None)
+                    .budget(QueryBudget::SamplingFraction(1.0))
+                    .query(query.clone())
+                    .window(WindowConfig::new(2_000, 1_000))
+                    .batch_interval_ms(1_000)
+                    .event_time(0, 0)
+                    .build_with_handle(svc.handle())
+                    .run_items(items)
+                    .unwrap()
+            };
+            let base = run(&clean);
+            let late = run(&disordered);
+            assert_eq!(
+                base.windows.iter().map(|w| w.late_dropped).sum::<u64>(),
+                0,
+                "{tag}: clean trace must not drop"
+            );
+            assert_eq!(
+                late.windows.iter().map(|w| w.late_dropped).sum::<u64>(),
+                3,
+                "{tag}: exactly the three beyond-lateness items drop"
+            );
+            assert_eq!(base.windows.len(), late.windows.len(), "{tag}");
+            for (b, l) in base.windows.iter().zip(&late.windows) {
+                assert_eq!(b.end_ms, l.end_ms, "{tag}");
+                let (cb, cl) = (b.result.scalar.unwrap(), l.result.scalar.unwrap());
+                // The dropped items never reach the sampler, so the
+                // estimate itself matches the clean run bit for bit.
+                assert_eq!(cb.value.to_bits(), cl.value.to_bits(), "{tag} {}", b.end_ms);
+                if l.late_dropped > 0 {
+                    assert_eq!(l.late_dropped, 3, "{tag}: charged once, to one window");
+                    assert!(
+                        (cl.bound - cb.bound - extra).abs() < 1e-9,
+                        "{tag} window {}-{}: bound {} vs clean {} (want +{extra})",
+                        l.start_ms,
+                        l.end_ms,
+                        cl.bound,
+                        cb.bound
+                    );
+                } else {
+                    assert_eq!(
+                        cb.bound.to_bits(),
+                        cl.bound.to_bits(),
+                        "{tag} {}: unaffected window must keep its bound",
+                        b.end_ms
+                    );
+                }
+            }
+            // The charge lands on the window whose span still holds pane 1
+            // when the drops become known: the one ending at 3000.
+            let charged: Vec<u64> = late
+                .windows
+                .iter()
+                .filter(|w| w.late_dropped > 0)
+                .map(|w| w.end_ms)
+                .collect();
+            assert_eq!(charged, vec![3_000], "{tag}: charge attribution");
+        }
+    }
+}

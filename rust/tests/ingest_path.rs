@@ -2,9 +2,10 @@
 //! Algorithm-L vs draw-per-item reservoir uniformity (chi-square),
 //! chunk-size independence of seeded results, `offer_slice` ≡ `offer` ≡
 //! `offer_columnar` equivalence across every sampler kind, AoS↔SoA
-//! round-trip losslessness, batched-Bernoulli mask uniformity, and the
+//! round-trip losslessness, batched-Bernoulli mask uniformity, the
 //! threaded transport's buffer-recycling guarantee (scalar and columnar
-//! feeds alike).
+//! feeds alike), and bit-identical event-time transport (worker-side ts
+//! bounds vs inline ground truth).
 
 use streamapprox::core::{ColumnarChunk, Item};
 use streamapprox::engine::IngestPool;
@@ -390,6 +391,62 @@ fn seeded_threaded_runs_are_reproducible() {
     };
     let (a, b) = (run(), run());
     assert_results_identical(&a, &b, "threaded");
+}
+
+#[test]
+fn threaded_spsc_preserves_ts_bounds_bit_identically() {
+    // Threaded pools compute interval ts bounds worker-side, off the `ts`
+    // columns of the chunks that crossed the SPSC transport; inline pools
+    // compute them offer-side, before any transport.  Agreement with each
+    // other and with ground truth — including planted u64-domain extremes —
+    // certifies event times survive the chunk ring bit-identically (the
+    // event-time router's pane arithmetic depends on exact ts values).
+    let mut items = trace(20_000, 4, 61);
+    items[137].ts = u64::MAX;
+    items[9_000].ts = u64::MAX - 3;
+    items[18_111].ts = 0;
+    let truth = items
+        .iter()
+        .fold(None, |acc: Option<(u64, u64)>, it| match acc {
+            Some((lo, hi)) => Some((lo.min(it.ts), hi.max(it.ts))),
+            None => Some((it.ts, it.ts)),
+        })
+        .unwrap();
+
+    for workers in [1usize, 3] {
+        for feed in ["offer", "slice", "columnar"] {
+            let mut pool = IngestPool::new(SamplerKind::Oasrs, workers, 0.2, 91);
+            for interval in 0..2 {
+                match feed {
+                    "offer" => {
+                        for &it in &items {
+                            pool.offer(it);
+                        }
+                    }
+                    "slice" => {
+                        for piece in items.chunks(700) {
+                            pool.offer_slice(piece);
+                        }
+                    }
+                    _ => pool.offer_columnar(&ColumnarChunk::from_items(&items)),
+                }
+                pool.finish_interval();
+                assert_eq!(
+                    pool.interval_ts_bounds(),
+                    Some(truth),
+                    "workers={workers} feed={feed} interval={interval}: ts bounds diverged"
+                );
+            }
+            // An empty interval resets the bounds — stale values must not
+            // leak across closes.
+            pool.finish_interval();
+            assert_eq!(
+                pool.interval_ts_bounds(),
+                None,
+                "workers={workers} feed={feed}: empty interval must clear bounds"
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -243,6 +243,56 @@ fn sketch_query_build_counter_tracks_the_rebuild_path() {
     );
 }
 
+/// Event-time series under disorder: a pipelined run whose injected delays
+/// exceed the lateness budget must tick `late_items_dropped_total` exactly
+/// once per beyond-lateness item, tick `window_pane_reopens_total` for the
+/// within-budget reorders, and leave the watermark-lag gauge at a level.
+/// (No other test in this binary runs the event-time path, so the run's
+/// delta attributes these counters exactly.)
+#[test]
+fn disordered_run_ticks_event_time_metrics() {
+    use streamapprox::stream::DisorderConfig;
+    let items =
+        StreamGenerator::new(&StreamConfig::gaussian_micro(400.0, 37)).take_until(12_000);
+    // Lossless budget 150 ms; uniform skew 200 ms plus 2 s stragglers, so
+    // most items reorder within open panes and a seeded 2% land far past
+    // the lateness horizon — guaranteed reopens AND guaranteed drops.
+    let items =
+        DisorderConfig::bounded_skew(200, 3).with_stragglers(0.02, 2_000).apply(&items);
+    let r = PipelineBuilder::new()
+        .engine(EngineKind::Pipelined)
+        .sampler(SamplerKind::Oasrs)
+        .budget(QueryBudget::SamplingFraction(0.5))
+        .query(Query::Sum)
+        .window(WindowConfig::new(4_000, 2_000))
+        .workers(2)
+        .event_time(100, 50)
+        .build_native()
+        .run_items(&items)
+        .expect("pipeline run");
+    let m = r.metrics.as_ref().expect("metrics delta");
+    // The engine only ingests pane-surfaced items, so the router's drop
+    // count is the feed/processed difference — the counter must match it.
+    let dropped = items.len() as u64 - r.items_processed;
+    assert!(dropped > 0, "2s stragglers past a 150ms budget must drop items");
+    assert_eq!(
+        m.counter("late_items_dropped_total"),
+        dropped,
+        "drop counter must tick exactly once per beyond-lateness item"
+    );
+    assert!(
+        m.counter("late_items_dropped_total")
+            >= r.windows.iter().map(|w| w.late_dropped).sum::<u64>(),
+        "window reports cannot charge more drops than were counted"
+    );
+    assert!(
+        m.counter("window_pane_reopens_total") > 0,
+        "bounded skew must route some arrivals back into open lower panes"
+    );
+    let lag = m.gauge("event_time_watermark_lag_ms").expect("lag gauge never set");
+    assert!(lag >= 0.0, "watermark lag {lag} negative");
+}
+
 /// The Prometheus rendering of a real run's delta carries the headline
 /// families — the same surface CI's golden name-set check scrapes.
 #[test]
