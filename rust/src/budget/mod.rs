@@ -189,6 +189,78 @@ impl CostFunction {
     }
 }
 
+use crate::core::Result;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+impl Snapshot for QueryBudget {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        match self {
+            QueryBudget::SamplingFraction(f) => {
+                w.put_u8(0);
+                w.put_f64(*f);
+            }
+            QueryBudget::SampleSizePerInterval(n) => {
+                w.put_u8(1);
+                w.put_usize(*n);
+            }
+            QueryBudget::TargetRelativeError { target, initial_fraction } => {
+                w.put_u8(2);
+                w.put_f64(*target);
+                w.put_f64(*initial_fraction);
+            }
+            QueryBudget::LatencyPerWindowMs(ms) => {
+                w.put_u8(3);
+                w.put_f64(*ms);
+            }
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        match r.get_u8()? {
+            0 => Ok(QueryBudget::SamplingFraction(r.get_f64()?)),
+            1 => Ok(QueryBudget::SampleSizePerInterval(r.get_usize()?)),
+            2 => Ok(QueryBudget::TargetRelativeError {
+                target: r.get_f64()?,
+                initial_fraction: r.get_f64()?,
+            }),
+            3 => Ok(QueryBudget::LatencyPerWindowMs(r.get_f64()?)),
+            t => Err(crate::core::Error::Io(format!("unknown query budget tag {t}"))),
+        }
+    }
+}
+
+/// The whole adaptive loop travels: both EWMAs, the feedback controller
+/// (itself carrying its CI-width EWMA), and the fraction in force.  A
+/// restored pipeline therefore picks the *same* fraction for the next
+/// interval as the uninterrupted run — the property that makes adaptive-
+/// budget recovery bit-identical rather than merely eventually-convergent.
+impl Snapshot for CostFunction {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.budget.encode(w);
+        self.feedback.encode(w);
+        w.put_f64(self.cost_per_item_ns);
+        w.put_f64(self.arrivals_per_interval);
+        self.last_window_ci.encode(w);
+        w.put_f64(self.fraction);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let budget = QueryBudget::decode(r)?;
+        let feedback = Option::<FeedbackController>::decode(r)?;
+        if matches!(budget, QueryBudget::TargetRelativeError { .. }) != feedback.is_some() {
+            return Err(crate::core::Error::Io(
+                "cost function snapshot budget/feedback mismatch".into(),
+            ));
+        }
+        Ok(Self {
+            budget,
+            feedback,
+            cost_per_item_ns: r.get_f64()?,
+            arrivals_per_interval: r.get_f64()?,
+            last_window_ci: Option::<ConfidenceInterval>::decode(r)?,
+            fraction: r.get_f64()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -47,6 +47,11 @@ pub enum Error {
     Config(String),
     Stream(String),
     Query(String),
+    /// Snapshot/checkpoint I/O failures (truncated files, torn writes,
+    /// checksum mismatches).  Distinct from [`Error::Artifact`] so recovery
+    /// can tell "the checkpoint is damaged" from "the compute artifacts are
+    /// missing".
+    Io(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -65,6 +70,7 @@ impl std::fmt::Display for Error {
             Error::Config(s) => write!(f, "config error: {s}"),
             Error::Stream(s) => write!(f, "stream error: {s}"),
             Error::Query(s) => write!(f, "query error: {s}"),
+            Error::Io(s) => write!(f, "snapshot io error: {s}"),
         }
     }
 }

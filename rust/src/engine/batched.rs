@@ -19,8 +19,11 @@
 use std::time::Instant;
 
 use crate::budget::CostFunction;
-use crate::core::{ColumnarChunk, EventTime, Item, Result};
+use crate::core::{ColumnarChunk, Error, EventTime, Item, Result};
 use crate::query::{Query, QueryExecutor, SketchWindow};
+use crate::runtime::checkpoint::{
+    self, CheckpointSpec, CheckpointStore, PipelineSnapshot, Snapshot, SnapshotWriter,
+};
 use crate::sampling::SamplerKind;
 use crate::window::{DropLedger, EventTimeSlicer, ExactAgg, WindowAssembler, WindowConfig};
 
@@ -52,6 +55,63 @@ impl<'a> BatchedEngine<'a> {
         sampler_kind: SamplerKind,
         cost: &mut CostFunction,
     ) -> Result<RunReport> {
+        self.run_inner(items, sampler_kind, cost, None, None)
+    }
+
+    /// Run with periodic epoch-stamped snapshots per `spec` (and, for the
+    /// crash-injection suite, an optional deterministic stop).
+    pub fn run_checkpointed(
+        &self,
+        items: &[Item],
+        sampler_kind: SamplerKind,
+        cost: &mut CostFunction,
+        spec: &CheckpointSpec,
+    ) -> Result<RunReport> {
+        self.run_inner(items, sampler_kind, cost, Some(spec), None)
+    }
+
+    /// Restore from the newest valid snapshot in `spec.dir` and resume the
+    /// run from the recorded broker offset with restored sampler/window
+    /// state.  The emitted windows are bit-identical to the suffix the
+    /// uninterrupted run would have produced from the same boundary.
+    pub fn recover(
+        &self,
+        items: &[Item],
+        sampler_kind: SamplerKind,
+        cost: &mut CostFunction,
+        spec: &CheckpointSpec,
+    ) -> Result<RunReport> {
+        let store = CheckpointStore::open(spec.dir.clone())?;
+        let loaded = store.load_latest()?.ok_or_else(|| {
+            Error::Config(format!("no snapshot to restore in {}", spec.dir.display()))
+        })?;
+        let snap = PipelineSnapshot::from_snapshot_bytes(&loaded.payload)?;
+        let current = super::fingerprint(
+            self.config,
+            &self.window,
+            super::EngineKind::Batched,
+            sampler_kind,
+        );
+        snap.fingerprint.check(&current)?;
+        if std::mem::discriminant(snap.cost.budget()) != std::mem::discriminant(cost.budget()) {
+            return Err(Error::Config(format!(
+                "snapshot budget {:?} does not match the requested budget {:?}",
+                snap.cost.budget(),
+                cost.budget()
+            )));
+        }
+        checkpoint::record_restore();
+        self.run_inner(items, sampler_kind, cost, Some(spec), Some(snap))
+    }
+
+    fn run_inner(
+        &self,
+        items: &[Item],
+        sampler_kind: SamplerKind,
+        cost: &mut CostFunction,
+        ckpt: Option<&CheckpointSpec>,
+        resume: Option<PipelineSnapshot>,
+    ) -> Result<RunReport> {
         super::validate_budget(&self.query, cost)?;
         let interval = self.config.batch_interval_ms.min(self.window.slide_ms);
         let interval = gcd_fit(interval, self.window.slide_ms);
@@ -74,12 +134,57 @@ impl<'a> BatchedEngine<'a> {
         if sketches.is_some() && self.config.spills_at(assembler.panes_per_window()) {
             assembler.spill_samples();
         }
-        let mut pool = IngestPool::new(
+        let fingerprint = super::fingerprint(
+            self.config,
+            &self.window,
+            super::EngineKind::Batched,
             sampler_kind,
-            self.config.workers,
-            cost.fraction(),
-            self.config.seed,
         );
+        let store = ckpt.map(|s| CheckpointStore::create(s.dir.clone())).transpose()?;
+        let mut ledger = DropLedger::new(interval);
+        let mut intervals_done = 0u64;
+        let mut windows_base = 0u64;
+        let mut idx = 0usize;
+        let resumed = resume.is_some();
+        let mut pool = match resume {
+            Some(snap) => {
+                // The query shape is not part of the fingerprint, so the
+                // sketch state carries its own compatibility witness: the
+                // restored pane store must belong to the same sketch spec
+                // this run would register.
+                match (&snap.sketches, &sketches) {
+                    (None, None) => {}
+                    (Some(s), Some(f)) if s.spec() == f.spec() => {}
+                    _ => {
+                        return Err(Error::Config(
+                            "snapshot sketch state does not match this query's sketch \
+                             configuration (was the snapshot taken under a different query?)"
+                                .into(),
+                        ))
+                    }
+                }
+                intervals_done = snap.epoch;
+                windows_base = snap.windows_emitted;
+                idx = snap.item_offset as usize;
+                assembler = snap.assembler;
+                sketches = snap.sketches;
+                ledger = snap.ledger;
+                *cost = snap.cost;
+                IngestPool::restore(
+                    sampler_kind,
+                    self.config.workers,
+                    snap.fraction,
+                    &snap.workers,
+                    snap.transport_cursor,
+                )?
+            }
+            None => IngestPool::new(
+                sampler_kind,
+                self.config.workers,
+                cost.fraction(),
+                self.config.seed,
+            ),
+        };
         // Sketch registration is a control-plane message on the pool: the
         // acked rendezvous orders it before every chunk of the run.
         if let Some(sw) = &sketches {
@@ -93,18 +198,45 @@ impl<'a> BatchedEngine<'a> {
         // byte-identical.
         let mut slicer =
             self.config.event_time.map(|et| EventTimeSlicer::new(items, interval, et));
-        let mut ledger = DropLedger::new(interval);
+        if resumed && intervals_done > 0 {
+            if let Some(sl) = slicer.as_mut() {
+                // The watermark router's pane assignment depends only on
+                // event times, so recovery replays the consumed prefix
+                // through a fresh router and discards the already-emitted
+                // panes (and the already-checkpointed drop charges); the
+                // slicer consumes no RNG, so the surviving panes are
+                // byte-identical to the uninterrupted run's.
+                let mut replayed = 0u64;
+                for _ in 0..intervals_done {
+                    match sl.next_pane() {
+                        Some(pane) => replayed += pane.len() as u64,
+                        None => break,
+                    }
+                }
+                let _ = sl.take_new_drops();
+                checkpoint::record_replayed_items(replayed);
+            }
+            // Legacy mode seeks straight to the recorded offset — the
+            // event-time-sorted trace is a seekable broker, so no replay.
+        }
 
         let mut report = RunReport::default();
         let mut exact = ExactAgg::default();
         let start = Instant::now();
 
+        // A resumed legacy run whose snapshot was taken at end-of-trace has
+        // nothing left to ingest; entering the loop would process a phantom
+        // empty batch the uninterrupted run never saw.
+        let exhausted = resumed && slicer.is_none() && idx >= items.len();
+
         // Reusable SoA staging chunk: one AoS->SoA transpose per batch,
         // then the whole slice rides the columnar fast path (capacity is
         // retained across intervals — zero steady-state allocation).
         let mut ingest_chunk = ColumnarChunk::new();
-        let mut idx = 0usize;
         loop {
+            if exhausted {
+                break;
+            }
             let batch_end = assembler.current_interval_end();
             // Ingest this batch's contiguous slice (sampling at ingest for
             // stream-fashion samplers; buffering for batch-fashion ones).
@@ -213,6 +345,37 @@ impl<'a> BatchedEngine<'a> {
                 // the *window's* confidence interval.
                 let f = cost.observe_window(arrived, sampled, processing_ns, ci);
                 pool.set_fraction(f);
+            }
+
+            // Interval boundary fully processed (window emitted, feedback
+            // applied): this is the one consistent cut where a snapshot can
+            // be taken — pool fraction equals `cost.fraction()` here, and
+            // every sampler is post-reset for the next interval.
+            intervals_done += 1;
+            if let (Some(spec), Some(store)) = (ckpt, store.as_ref()) {
+                if spec.due(intervals_done) {
+                    let mut w = SnapshotWriter::new();
+                    fingerprint.encode(&mut w);
+                    w.put_u64(intervals_done);
+                    w.put_u64(if slicer.is_some() { 0 } else { idx as u64 });
+                    w.put_u64(windows_base + report.windows.len() as u64);
+                    w.put_f64(cost.fraction());
+                    w.put_u64(pool.transport_cursor());
+                    // Acked snapshot rendezvous: each worker drains its data
+                    // ring, then serializes its sampler (RNG stream
+                    // included) — same control-plane discipline as
+                    // `set_fraction`/`register_sketches`.
+                    pool.snapshot_workers().encode(&mut w);
+                    assembler.encode(&mut w);
+                    sketches.encode(&mut w);
+                    ledger.encode(&mut w);
+                    cost.encode(&mut w);
+                    store.write_epoch(intervals_done, &w.into_bytes())?;
+                }
+                if spec.crashes_at(intervals_done) {
+                    // Simulated crash: stop cold with whatever was emitted.
+                    break;
+                }
             }
 
             if idx >= items.len() {

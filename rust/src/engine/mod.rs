@@ -74,6 +74,35 @@ pub(crate) fn validate_budget(query: &Query, cost: &CostFunction) -> Result<()> 
     Ok(())
 }
 
+/// The configuration fingerprint a snapshot is stamped with — and checked
+/// against on restore.  Both engines call this with their own
+/// [`EngineKind`] (not `config.kind`, which callers sometimes leave at the
+/// default when driving an engine struct directly).
+pub(crate) fn fingerprint(
+    config: &EngineConfig,
+    window: &crate::window::WindowConfig,
+    engine: EngineKind,
+    sampler: crate::sampling::SamplerKind,
+) -> crate::runtime::checkpoint::ConfigFingerprint {
+    crate::runtime::checkpoint::ConfigFingerprint {
+        engine: match engine {
+            EngineKind::Batched => 0,
+            EngineKind::Pipelined => 1,
+        },
+        sampler: sampler.tag(),
+        workers: config.workers.max(1) as u64,
+        seed: config.seed,
+        window_size_ms: window.size_ms,
+        window_slide_ms: window.slide_ms,
+        batch_interval_ms: config.batch_interval_ms,
+        event_time: config.event_time.is_some(),
+        watermark_skew_ms: config.event_time.map(|e| e.watermark_skew_ms).unwrap_or(0),
+        allowed_lateness_ms: config.event_time.map(|e| e.allowed_lateness_ms).unwrap_or(0),
+        sketch_panes: config.sketch_panes,
+        spill_ratio: config.spill_ratio as u64,
+    }
+}
+
 /// Which processing model to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {

@@ -16,13 +16,16 @@
 use std::time::Instant;
 
 use crate::budget::CostFunction;
-use crate::core::{ColumnarChunk, Item, Result};
+use crate::core::{ColumnarChunk, Error, Item, Result};
 use crate::error::bounds::ConfidenceInterval;
 use crate::error::estimator::LateDrops;
 use crate::query::{sketch_spec_for, Query, QueryExecutor, SketchWindow};
+use crate::runtime::checkpoint::{
+    self, CheckpointSpec, CheckpointStore, PipelineSnapshot, Snapshot, SnapshotWriter,
+};
 use crate::sampling::{SampleResult, SamplerKind};
 use crate::sketch::PaneSketch;
-use crate::util::channel::bounded;
+use crate::util::channel::{bounded, Sender};
 use crate::window::{DropLedger, EventTimeSlicer, ExactAgg, WindowAssembler, WindowConfig};
 
 use super::batched::exact_values;
@@ -49,6 +52,22 @@ struct IntervalMsg {
     /// Per-pane beyond-lateness drops recorded while feeding this interval
     /// (always empty on the legacy arrival-order path).
     drops: Vec<(u64, LateDrops)>,
+    /// Acked snapshot rendezvous riding the interval stream: when set, the
+    /// window operator serializes its post-interval state and replies here.
+    /// FIFO channel ordering guarantees the reply reflects exactly the
+    /// state after this interval's windows were emitted — the same
+    /// discipline `set_fraction`/`register_sketches` use on the pool.
+    snapshot: Option<Sender<ConsumerCkpt>>,
+}
+
+/// The window operator's half of a whole-pipeline snapshot.
+struct ConsumerCkpt {
+    /// Windows emitted so far (including any restored base).
+    windows_emitted: u64,
+    /// `assembler · sketches · ledger`, encoded in [`PipelineSnapshot`]
+    /// field order; the coordinator splices these bytes raw into the full
+    /// payload between the worker blobs and the cost function.
+    state: Vec<u8>,
 }
 
 /// Window-level observation flowing back from the query operator to the
@@ -79,13 +98,76 @@ impl<'a> PipelinedEngine<'a> {
         sampler_kind: SamplerKind,
         cost: &mut CostFunction,
     ) -> Result<RunReport> {
-        super::validate_budget(&self.query, cost)?;
-        let mut pool = IngestPool::new(
+        self.run_inner(items, sampler_kind, cost, None, None)
+    }
+
+    /// Run with periodic epoch-stamped snapshots per `spec` (and, for the
+    /// crash-injection suite, an optional deterministic stop).
+    ///
+    /// Determinism caveat: under an *adaptive* budget the window-feedback
+    /// channel is racy by design (observations apply whenever they arrive),
+    /// so only fixed-fraction budgets give bit-identical recovery on this
+    /// engine; the batched engine's synchronous loop has no such race.
+    pub fn run_checkpointed(
+        &self,
+        items: &[Item],
+        sampler_kind: SamplerKind,
+        cost: &mut CostFunction,
+        spec: &CheckpointSpec,
+    ) -> Result<RunReport> {
+        self.run_inner(items, sampler_kind, cost, Some(spec), None)
+    }
+
+    /// Restore from the newest valid snapshot in `spec.dir` and resume the
+    /// run from the recorded broker offset with restored sampler/window
+    /// state (see [`Self::run_checkpointed`] for the adaptive-budget
+    /// caveat).
+    pub fn recover(
+        &self,
+        items: &[Item],
+        sampler_kind: SamplerKind,
+        cost: &mut CostFunction,
+        spec: &CheckpointSpec,
+    ) -> Result<RunReport> {
+        let store = CheckpointStore::open(spec.dir.clone())?;
+        let loaded = store.load_latest()?.ok_or_else(|| {
+            Error::Config(format!("no snapshot to restore in {}", spec.dir.display()))
+        })?;
+        let snap = PipelineSnapshot::from_snapshot_bytes(&loaded.payload)?;
+        let current = super::fingerprint(
+            self.config,
+            &self.window,
+            super::EngineKind::Pipelined,
             sampler_kind,
-            self.config.workers,
-            cost.fraction(),
-            self.config.seed,
         );
+        snap.fingerprint.check(&current)?;
+        if std::mem::discriminant(snap.cost.budget()) != std::mem::discriminant(cost.budget()) {
+            return Err(Error::Config(format!(
+                "snapshot budget {:?} does not match the requested budget {:?}",
+                snap.cost.budget(),
+                cost.budget()
+            )));
+        }
+        checkpoint::record_restore();
+        self.run_inner(items, sampler_kind, cost, Some(spec), Some(snap))
+    }
+
+    fn run_inner(
+        &self,
+        items: &[Item],
+        sampler_kind: SamplerKind,
+        cost: &mut CostFunction,
+        ckpt: Option<&CheckpointSpec>,
+        resume: Option<PipelineSnapshot>,
+    ) -> Result<RunReport> {
+        super::validate_budget(&self.query, cost)?;
+        let fingerprint = super::fingerprint(
+            self.config,
+            &self.window,
+            super::EngineKind::Pipelined,
+            sampler_kind,
+        );
+        let store = ckpt.map(|s| CheckpointStore::create(s.dir.clone())).transpose()?;
         // Streaming sketch ingest: register the query's sketch spec on the
         // pool (acked control-plane rendezvous — orders before every chunk)
         // so interval closes return pre-built pane sketches.
@@ -93,6 +175,48 @@ impl<'a> PipelinedEngine<'a> {
             sketch_spec_for(&self.query, self.executor.sketch_params())
         } else {
             None
+        };
+        let mut epoch0 = 0u64;
+        let mut windows_base = 0u64;
+        let mut idx0 = 0usize;
+        let mut consumer_resume: Option<(WindowAssembler, Option<SketchWindow>, DropLedger)> =
+            None;
+        let resumed = resume.is_some();
+        let mut pool = match resume {
+            Some(snap) => {
+                // The query shape is not part of the fingerprint; the
+                // restored sketch window must belong to the same spec this
+                // run would register.
+                match (&snap.sketches, &sketch_spec) {
+                    (None, None) => {}
+                    (Some(s), Some(spec)) if s.spec() == *spec => {}
+                    _ => {
+                        return Err(Error::Config(
+                            "snapshot sketch state does not match this query's sketch \
+                             configuration (was the snapshot taken under a different query?)"
+                                .into(),
+                        ))
+                    }
+                }
+                epoch0 = snap.epoch;
+                windows_base = snap.windows_emitted;
+                idx0 = snap.item_offset as usize;
+                *cost = snap.cost;
+                consumer_resume = Some((snap.assembler, snap.sketches, snap.ledger));
+                IngestPool::restore(
+                    sampler_kind,
+                    self.config.workers,
+                    snap.fraction,
+                    &snap.workers,
+                    snap.transport_cursor,
+                )?
+            }
+            None => IngestPool::new(
+                sampler_kind,
+                self.config.workers,
+                cost.fraction(),
+                self.config.seed,
+            ),
         };
         if let Some(spec) = sketch_spec {
             pool.register_sketches(&[spec])?;
@@ -117,29 +241,38 @@ impl<'a> PipelinedEngine<'a> {
             let window_cfg = self.window;
             let config = self.config;
             let consumer = scope.spawn(move || -> Result<ConsumerOut> {
-                let mut assembler = WindowAssembler::new(window_cfg);
-                // Pane-level sketches: one per slide interval, arriving
-                // pre-built from the ingest workers and merged
-                // incrementally through the two-stacks store.
-                let mut sketches = if config.sketch_panes {
-                    SketchWindow::for_query(
-                        &query,
-                        executor.sketch_params(),
-                        assembler.panes_per_window(),
-                    )
-                } else {
-                    None
-                };
-                // Long-window spill: pane sketches make the sample deque
-                // readerless, so past the ratio threshold keep summaries
-                // only.
-                if sketches.is_some() && config.spills_at(assembler.panes_per_window()) {
-                    assembler.spill_samples();
-                }
+                // Recovery hands the operator its checkpointed state whole;
+                // otherwise build it fresh.
+                let (mut assembler, mut sketches, mut ledger) =
+                    if let Some(state) = consumer_resume {
+                        state
+                    } else {
+                        let mut assembler = WindowAssembler::new(window_cfg);
+                        // Pane-level sketches: one per slide interval,
+                        // arriving pre-built from the ingest workers and
+                        // merged incrementally through the two-stacks store.
+                        let sketches = if config.sketch_panes {
+                            SketchWindow::for_query(
+                                &query,
+                                executor.sketch_params(),
+                                assembler.panes_per_window(),
+                            )
+                        } else {
+                            None
+                        };
+                        // Long-window spill: pane sketches make the sample
+                        // deque readerless, so past the ratio threshold keep
+                        // summaries only.
+                        if sketches.is_some() && config.spills_at(assembler.panes_per_window())
+                        {
+                            assembler.spill_samples();
+                        }
+                        // Beyond-lateness drops, charged per event-time pane
+                        // by the source operator and spanned per emitted
+                        // window here.
+                        (assembler, sketches, DropLedger::new(window_cfg.slide_ms))
+                    };
                 let mut out = Vec::new();
-                // Beyond-lateness drops, charged per event-time pane by the
-                // source operator and spanned per emitted window here.
-                let mut ledger = DropLedger::new(window_cfg.slide_ms);
                 while let Some(msg) = rx.recv() {
                     let t0 = Instant::now();
                     ledger.absorb(msg.drops);
@@ -197,6 +330,21 @@ impl<'a> PipelinedEngine<'a> {
                             ci,
                         });
                     }
+                    // Snapshot rendezvous: serialize the post-interval
+                    // operator state and ack.  Runs after the window emit,
+                    // so the blob reflects exactly what a restored operator
+                    // must resume from.
+                    if let Some(reply) = msg.snapshot {
+                        let _sp = crate::obs::trace::span("consumer_snapshot");
+                        let mut w = SnapshotWriter::new();
+                        assembler.encode(&mut w);
+                        sketches.encode(&mut w);
+                        ledger.encode(&mut w);
+                        let _ = reply.send(ConsumerCkpt {
+                            windows_emitted: windows_base + out.len() as u64,
+                            state: w.into_bytes(),
+                        });
+                    }
                 }
                 // Executor build-delta is filled in by the engine after the
                 // join (it owns the run-start snapshot).
@@ -213,13 +361,39 @@ impl<'a> PipelinedEngine<'a> {
                 .config
                 .event_time
                 .map(|et| EventTimeSlicer::new(items, self.window.slide_ms, et));
+            if resumed && epoch0 > 0 {
+                if let Some(sl) = slicer.as_mut() {
+                    // Replay the consumed prefix through a fresh watermark
+                    // router, discarding already-emitted panes and their
+                    // already-checkpointed drop charges (the slicer consumes
+                    // no RNG, so the surviving panes are byte-identical).
+                    let mut replayed = 0u64;
+                    for _ in 0..epoch0 {
+                        match sl.next_pane() {
+                            Some(pane) => replayed += pane.len() as u64,
+                            None => break,
+                        }
+                    }
+                    let _ = sl.take_new_drops();
+                    checkpoint::record_replayed_items(replayed);
+                }
+                // Legacy mode seeks straight to the recorded offset.
+            }
             let mut exact = ExactAgg::default();
-            let mut next_interval_end = self.window.slide_ms;
+            let mut intervals_done = epoch0;
+            let mut next_interval_end = (epoch0 + 1) * self.window.slide_ms;
             // Reusable SoA staging chunk (capacity retained across
             // intervals — zero steady-state allocation).
             let mut ingest_chunk = ColumnarChunk::new();
-            let mut idx = 0usize;
+            let mut idx = idx0;
+            // A resumed legacy run whose snapshot was taken at end-of-trace
+            // has nothing left to ingest; entering the loop would feed a
+            // phantom empty interval the uninterrupted run never saw.
+            let exhausted = resumed && slicer.is_none() && idx >= items.len();
             loop {
+                if exhausted {
+                    break;
+                }
                 // Legacy mode range-scans the event-time-sorted trace (one
                 // scan + one `offer_columnar`; per-item dispatch amortizes
                 // across the whole interval feed).  Event-time mode takes
@@ -260,16 +434,31 @@ impl<'a> PipelinedEngine<'a> {
                 // The engines register exactly one spec; pop() would
                 // silently mispair if that ever changed.
                 debug_assert!(pane_sketches.len() <= 1, "one registered spec per engine run");
+                // Snapshot rendezvous request rides the interval message so
+                // the window operator acks with its post-interval state.
+                let snap_rx = if store.is_some()
+                    && ckpt.is_some_and(|s| s.due(intervals_done + 1))
+                {
+                    Some(bounded::<ConsumerCkpt>(1))
+                } else {
+                    None
+                };
+                let (snap_tx, snap_rx) = match snap_rx {
+                    Some((t, r)) => (Some(t), Some(r)),
+                    None => (None, None),
+                };
                 let msg = IntervalMsg {
                     result,
                     exact: std::mem::take(&mut exact),
                     sketch: pane_sketches.pop(),
                     close_ns,
                     drops: slicer.as_mut().map(|sl| sl.take_new_drops()).unwrap_or_default(),
+                    snapshot: snap_tx,
                 };
                 tx.send(msg)
                     .map_err(|_| crate::core::Error::Stream("query operator died".into()))?;
                 next_interval_end += self.window.slide_ms;
+                intervals_done += 1;
 
                 // Apply any pending budget feedback (non-blocking): every
                 // completed window's observation updates the cost model in
@@ -285,6 +474,35 @@ impl<'a> PipelinedEngine<'a> {
                 }
                 if let Some(f) = latest {
                     pool.set_fraction(f);
+                }
+
+                // Assemble and persist the epoch snapshot: the consumer's
+                // blocking ack means every interval up to this one has been
+                // fully processed downstream, and the feedback block above
+                // keeps `cost.fraction()` in lockstep with the pool.
+                if let Some(crx) = snap_rx {
+                    let reply = crx.recv().ok_or_else(|| {
+                        crate::core::Error::Stream(
+                            "query operator died before snapshot ack".into(),
+                        )
+                    })?;
+                    let store = store.as_ref().expect("store exists when a snapshot is due");
+                    let mut w = SnapshotWriter::new();
+                    fingerprint.encode(&mut w);
+                    w.put_u64(intervals_done);
+                    w.put_u64(if slicer.is_some() { 0 } else { idx as u64 });
+                    w.put_u64(reply.windows_emitted);
+                    w.put_f64(cost.fraction());
+                    w.put_u64(pool.transport_cursor());
+                    pool.snapshot_workers().encode(&mut w);
+                    w.extend_raw(&reply.state);
+                    cost.encode(&mut w);
+                    store.write_epoch(intervals_done, &w.into_bytes())?;
+                }
+                if ckpt.is_some_and(|s| s.crashes_at(intervals_done)) {
+                    // Simulated crash: stop feeding; the operator drains
+                    // what was sent and the partial report is returned.
+                    break;
                 }
 
                 if idx >= items.len() {

@@ -49,6 +49,7 @@
 use crate::core::{ColumnarChunk, Error, EventTime, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
 use crate::obs;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::sampling::oasrs::merge_worker_results;
 use crate::sampling::{
     NoopSampler, OasrsSampler, SampleResult, Sampler, SamplerKind, SrsSampler,
@@ -146,6 +147,42 @@ impl WorkerSampler {
             WorkerSampler::Noop(s) => s.set_fraction(f),
             WorkerSampler::Sts(_) => {} // fraction applied via targets
         }
+    }
+
+    fn kind(&self) -> SamplerKind {
+        match self {
+            WorkerSampler::Oasrs(_) => SamplerKind::Oasrs,
+            WorkerSampler::Srs(_) => SamplerKind::Srs,
+            WorkerSampler::Sts(_) => SamplerKind::Sts,
+            WorkerSampler::WeightedRes(_) => SamplerKind::WeightedRes,
+            WorkerSampler::Noop(_) => SamplerKind::None,
+        }
+    }
+}
+
+/// Tagged by [`SamplerKind::tag`] so a restore can verify the blob matches
+/// the pool's configured algorithm before touching any payload bytes.
+impl Snapshot for WorkerSampler {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u8(self.kind().tag());
+        match self {
+            WorkerSampler::Oasrs(s) => s.encode(w),
+            WorkerSampler::Srs(s) => s.encode(w),
+            WorkerSampler::Sts(s) => s.encode(w),
+            WorkerSampler::WeightedRes(s) => s.encode(w),
+            WorkerSampler::Noop(s) => s.encode(w),
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(match SamplerKind::from_tag(r.get_u8()?)? {
+            SamplerKind::Oasrs => WorkerSampler::Oasrs(OasrsSampler::decode(r)?),
+            SamplerKind::Srs => WorkerSampler::Srs(SrsSampler::decode(r)?),
+            SamplerKind::Sts => WorkerSampler::Sts(StsBatch::decode(r)?),
+            SamplerKind::WeightedRes => {
+                WorkerSampler::WeightedRes(WeightedResSampler::decode(r)?)
+            }
+            SamplerKind::None => WorkerSampler::Noop(NoopSampler::decode(r)?),
+        })
     }
 }
 
@@ -246,6 +283,37 @@ impl StsBatch {
     }
 }
 
+/// Buffered batch + the partition RNG travel: a mid-stream STS worker that
+/// crashes between offers resumes with the same groups, the same exact
+/// counts, and the same key-sort randomness at the next close.
+impl Snapshot for StsBatch {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.groups.encode(w);
+        self.counts.encode(w);
+        self.rng.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let groups = Vec::<Vec<f64>>::decode(r)?;
+        let counts = <[usize; MAX_STRATA]>::decode(r)?;
+        if groups.len() != MAX_STRATA {
+            return Err(Error::Io(format!(
+                "STS snapshot has {} stratum groups, expected {MAX_STRATA}",
+                groups.len()
+            )));
+        }
+        for (s, g) in groups.iter().enumerate() {
+            if counts[s] != g.len() {
+                return Err(Error::Io(format!(
+                    "STS snapshot stratum {s} count {} disagrees with its {} buffered items",
+                    counts[s],
+                    g.len()
+                )));
+            }
+        }
+        Ok(Self { groups, counts, rng: Rng::decode(r)? })
+    }
+}
+
 /// Items are shipped to workers in chunks (shuffle buffers), not one by
 /// one — a per-item hand-off costs ~0.5 µs and would dominate every
 /// sampler; real engines batch their network transfers the same way.
@@ -308,6 +376,12 @@ enum Msg {
     /// `SetFraction`: no chunk shipped after `register_sketches` can close
     /// into an interval that lacks the registered partials.
     RegisterSketches(Vec<SketchSpec>, Sender<()>),
+    /// Checkpoint rendezvous, same acked discipline as `SetFraction`: the
+    /// coordinator sends it at an interval boundary (data rings drained at
+    /// send time, and the worker drains once more before replying), so the
+    /// returned blob serializes the worker's full post-close sampler state
+    /// — RNG streams mid-sequence included.
+    Snapshot(Sender<Vec<u8>>),
 }
 
 /// The worker-side sketch fold: one partial per registered spec, built
@@ -564,6 +638,10 @@ fn worker_loop(
                         specs = new_specs;
                         let _ = reply.send(());
                     }
+                    Msg::Snapshot(reply) => {
+                        let _sp = obs::trace::span("worker_snapshot");
+                        let _ = reply.send(sampler.to_snapshot_bytes());
+                    }
                 }
                 worked = true;
             }
@@ -591,19 +669,68 @@ fn worker_loop(
 impl IngestPool {
     pub fn new(kind: SamplerKind, n_workers: usize, fraction: f64, seed: u64) -> Self {
         let n = n_workers.max(1);
+        let samplers: Vec<WorkerSampler> = (0..n)
+            .map(|w| WorkerSampler::new(kind, fraction, seed.wrapping_add(w as u64 * 7919)))
+            .collect();
+        Self::assemble(kind, fraction, samplers, 0)
+    }
+
+    /// Rebuild a pool from checkpointed worker blobs (one per worker, in
+    /// worker order — see [`Self::snapshot_workers`]): each worker starts
+    /// from its restored sampler (RNG streams mid-sequence) and the chunk
+    /// round-robin resumes at `cursor`.  Sketch registration is *not* in
+    /// the blobs — the engine re-registers from its query config after
+    /// restore, exactly as at first construction.
+    pub fn restore(
+        kind: SamplerKind,
+        n_workers: usize,
+        fraction: f64,
+        blobs: &[Vec<u8>],
+        cursor: u64,
+    ) -> Result<Self> {
+        let n = n_workers.max(1);
+        if blobs.len() != n {
+            return Err(Error::Io(format!(
+                "checkpoint carries {} worker blobs but the pool needs {n}",
+                blobs.len()
+            )));
+        }
+        let mut samplers = Vec::with_capacity(n);
+        for blob in blobs {
+            let s = WorkerSampler::from_snapshot_bytes(blob)?;
+            if s.kind() != kind {
+                return Err(Error::Io(format!(
+                    "checkpointed worker sampler is {:?} but the pool runs {kind:?}",
+                    s.kind()
+                )));
+            }
+            samplers.push(s);
+        }
+        Ok(Self::assemble(kind, fraction, samplers, cursor as usize))
+    }
+
+    /// Shared constructor body: wire one worker (inline) or one thread per
+    /// sampler.  `cursor` seeds the round-robin chunk cursor so a restored
+    /// pool resumes the checkpointed partitioning.
+    fn assemble(
+        kind: SamplerKind,
+        fraction: f64,
+        samplers: Vec<WorkerSampler>,
+        cursor: usize,
+    ) -> Self {
+        let n = samplers.len();
         let imp = if n == 1 {
-            PoolImpl::Inline(Box::new(WorkerSampler::new(kind, fraction, seed)))
+            let s = samplers.into_iter().next().expect("one sampler");
+            PoolImpl::Inline(Box::new(s))
         } else {
             let mut ctrl_txs = Vec::with_capacity(n);
             let mut chunk_txs = Vec::with_capacity(n);
             let mut return_rxs = Vec::with_capacity(n);
             let mut joins = Vec::with_capacity(n);
-            for w in 0..n {
+            for (w, sampler) in samplers.into_iter().enumerate() {
                 let (ctrl_tx, ctrl_rx): (Sender<Msg>, Receiver<Msg>) = bounded(64);
                 let (chunk_tx, chunk_rx) = spsc::<ColumnarChunk>(RING_CAP);
                 let (return_tx, return_rx) = spsc::<ColumnarChunk>(RETURN_RING_CAP);
-                let sampler =
-                    WorkerSampler::new(kind, fraction, seed.wrapping_add(w as u64 * 7919));
                 joins.push(
                     std::thread::Builder::new()
                         .name(format!("sa-worker-{w}"))
@@ -634,7 +761,7 @@ impl IngestPool {
                 joins,
                 buf: ColumnarChunk::with_capacity(CHUNK),
                 free,
-                next: 0,
+                next: cursor % n,
                 stats,
             })
         };
@@ -646,6 +773,43 @@ impl IngestPool {
             specs: Vec::new(),
             cur_ts_bounds: None,
             last_ts_bounds: None,
+        }
+    }
+
+    /// Serialize every worker's sampler state (one opaque blob per worker,
+    /// in worker order) — the pool's contribution to a pipeline checkpoint.
+    /// Must be called at an interval boundary (right after a finish): the
+    /// data rings are drained there, so each blob observes exactly the
+    /// post-close state the uninterrupted run would carry forward.
+    pub fn snapshot_workers(&self) -> Vec<Vec<u8>> {
+        match &self.imp {
+            PoolImpl::Inline(s) => vec![s.to_snapshot_bytes()],
+            PoolImpl::Threaded(t) => {
+                let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+                let mut replies = Vec::new();
+                for tx in &t.ctrl_txs {
+                    let (rtx, rrx) = bounded(1);
+                    let _ = tx.send(Msg::Snapshot(rtx));
+                    replies.push(rrx);
+                }
+                let blobs =
+                    replies.into_iter().map(|r| r.recv().unwrap_or_default()).collect();
+                if let Some(t0) = t0 {
+                    control_ack_hist().record_elapsed(t0);
+                }
+                blobs
+            }
+        }
+    }
+
+    /// Round-robin chunk cursor (always 0 for inline pools): which worker
+    /// the next shipped chunk goes to.  Part of the checkpoint — a restored
+    /// pool must resume the same partitioning or every post-restore chunk
+    /// lands on the wrong sampler's RNG stream.
+    pub fn transport_cursor(&self) -> u64 {
+        match &self.imp {
+            PoolImpl::Inline(_) => 0,
+            PoolImpl::Threaded(t) => t.next as u64,
         }
     }
 

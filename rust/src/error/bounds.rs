@@ -16,6 +16,8 @@
 //!   ([`ConfidenceInterval::for_count_overestimate`]).
 
 use super::estimator::Estimate;
+use crate::core::{Error, Result};
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 
 /// Confidence levels supported by the paper's error-bound rule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -159,6 +161,43 @@ impl ConfidenceInterval {
     /// pins that behavior.
     pub fn contains(&self, truth: f64) -> bool {
         truth >= self.lo() && truth <= self.hi()
+    }
+}
+
+impl Snapshot for ConfidenceLevel {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u8(match self {
+            ConfidenceLevel::P68 => 0,
+            ConfidenceLevel::P95 => 1,
+            ConfidenceLevel::P997 => 2,
+        });
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(match r.get_u8()? {
+            0 => ConfidenceLevel::P68,
+            1 => ConfidenceLevel::P95,
+            2 => ConfidenceLevel::P997,
+            other => {
+                return Err(Error::Io(format!(
+                    "unknown confidence level tag {other} in snapshot"
+                )))
+            }
+        })
+    }
+}
+
+impl Snapshot for ConfidenceInterval {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.value);
+        w.put_f64(self.bound);
+        self.level.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            value: r.get_f64()?,
+            bound: r.get_f64()?,
+            level: ConfidenceLevel::decode(r)?,
+        })
     }
 }
 

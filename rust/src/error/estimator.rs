@@ -7,7 +7,8 @@
 //! arithmetic is implemented in the L2 JAX graph (`python/compile/model.py`);
 //! integration tests cross-check the two.
 
-use crate::core::MAX_STRATA;
+use crate::core::{Result, MAX_STRATA};
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 
 /// Number of strata the fixed-shape compute kernels support.
 pub const K: usize = MAX_STRATA;
@@ -91,6 +92,31 @@ impl StrataState {
 
     pub fn total_c(&self) -> f64 {
         self.c.iter().sum()
+    }
+}
+
+impl Snapshot for StrataPartials {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.y.encode(w);
+        self.sum.encode(w);
+        self.sumsq.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            y: <[f64; K]>::decode(r)?,
+            sum: <[f64; K]>::decode(r)?,
+            sumsq: <[f64; K]>::decode(r)?,
+        })
+    }
+}
+
+impl Snapshot for StrataState {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.c.encode(w);
+        self.n_cap.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self { c: <[f64; K]>::decode(r)?, n_cap: <[f64; K]>::decode(r)? })
     }
 }
 
@@ -193,6 +219,16 @@ impl LateDrops {
 
     pub fn is_empty(&self) -> bool {
         self.count == 0.0
+    }
+}
+
+impl Snapshot for LateDrops {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.count);
+        w.put_f64(self.mass);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self { count: r.get_f64()?, mass: r.get_f64()? })
     }
 }
 

@@ -18,7 +18,9 @@
 //! which would drive the fraction high; observing the window keeps the loop
 //! honest for long-window/small-slide configurations.)
 
+use crate::core::Result;
 use crate::error::bounds::ConfidenceInterval;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 
 /// Smoothing for the observed window-CI-width EWMA.
 const CI_WIDTH_EWMA: f64 = 0.4;
@@ -152,6 +154,34 @@ impl FeedbackController {
         )
         .set(self.fraction);
         self.fraction
+    }
+}
+
+/// The feedback EWMA is part of the checkpoint contract (ISSUE 9): an
+/// interrupted adaptive run must resume with the same fraction trajectory
+/// it would have followed uninterrupted.
+impl Snapshot for FeedbackController {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.target_rel_error);
+        w.put_f64(self.fraction);
+        w.put_f64(self.damping);
+        w.put_f64(self.min_fraction);
+        w.put_f64(self.max_fraction);
+        w.put_u64(self.adjustments);
+        w.put_f64(self.ci_width_ewma);
+        w.put_u64(self.windows_observed);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            target_rel_error: r.get_f64()?,
+            fraction: r.get_f64()?,
+            damping: r.get_f64()?,
+            min_fraction: r.get_f64()?,
+            max_fraction: r.get_f64()?,
+            adjustments: r.get_u64()?,
+            ci_width_ewma: r.get_f64()?,
+            windows_observed: r.get_u64()?,
+        })
     }
 }
 

@@ -12,6 +12,7 @@
 //!                    [--dataset micro|caida|taxi] [--backend xla|native]
 //!                    [--watermark-skew <ms>] [--lateness <ms>]
 //!                    [--disorder <max_skew_ms>[:<straggler_frac>:<straggler_delay_ms>]]
+//!                    [--checkpoint-dir <dir>] [--checkpoint-every <n>] [--restore]
 //!                    [--metrics <out.prom>] [--trace <out.json>]
 //! streamapprox bench --figure fig5a|fig5b|fig5c|fig6a|fig6bc|fig7a|fig7b|
 //!                             fig7c|fig8|fig9|fig10|fig11|sketch|window|all
@@ -27,6 +28,12 @@
 //! uniform arrival delays up to 400 virtual ms (optionally
 //! `400:0.05:900` adds a 5% straggler burst of +900 ms) before the run —
 //! the pairing the disorder-equivalence suite pins.
+//!
+//! `--checkpoint-dir ckpt/` persists an epoch-stamped pipeline snapshot
+//! every `--checkpoint-every` interval boundaries (default 1); `--restore`
+//! resumes from the newest valid snapshot in that directory with restored
+//! sampler/window state — a seeded run interrupted at a boundary continues
+//! bit-identically to the uninterrupted run.
 //!
 //! `--metrics out.prom` writes the run's registry delta as a Prometheus
 //! text export and prints the per-stage latency table; `--trace out.json`
@@ -179,6 +186,19 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
             None => skew,
         };
         builder = builder.event_time(skew, lateness);
+    }
+    // Durability: periodic snapshots and restore-on-start.
+    if let Some(dir) = flags.get("checkpoint-dir") {
+        let every: u64 = match flags.get("checkpoint-every") {
+            Some(s) => s.parse().map_err(|e| format!("--checkpoint-every: bad n {s:?} ({e})"))?,
+            None => 1,
+        };
+        builder = builder.checkpoint_to(dir, every);
+        if flags.contains_key("restore") {
+            builder = builder.restore_on_start(true);
+        }
+    } else if flags.contains_key("restore") || flags.contains_key("checkpoint-every") {
+        return Err("--restore/--checkpoint-every require --checkpoint-dir <dir>".into());
     }
     let pipeline = match get("backend", "xla").as_str() {
         "native" => builder.build_native(),

@@ -46,12 +46,17 @@
 //! | `query_sketch_builds_total` | counter | query | sketches built at query time (rebuild path; prebuilt panes keep this flat) |
 //! | `ingest_columnar_chunks_total` | counter | ingest | columnar (SoA) chunks offered to the sampling kernels |
 //! | `ingest_mask_survivors_total` | counter | ingest | items surviving the batched acceptance kernels (OASRS columnar path) |
+//! | `snapshots_written_total` | counter | checkpoint | epoch snapshots persisted (tmp-then-rename publishes) |
+//! | `recovery_restores_total` | counter | checkpoint | successful `Engine::recover` restores |
+//! | `recovery_fallbacks_total` | counter | checkpoint | invalid snapshot epochs skipped during recovery (exactly one tick per bad file) |
+//! | `recovery_replayed_items_total` | counter | checkpoint | items re-read from the broker offset during event-time recovery replay |
 //! | `transport_recycle_hit_rate` | gauge | transport | recycled / (recycled + allocated), 0.0 on an idle pool |
 //! | `ingest_ring_occupancy` | gauge | transport | chunks queued on the most recently shipped worker ring |
 //! | `feedback_ci_width_ewma` | gauge | feedback | EWMA of observed CI relative width (the controller's input) |
 //! | `feedback_fraction` | gauge | feedback | current sampling fraction chosen by the controller |
 //! | `broker_lag` | gauge | source | produced − consumed on the polled broker topic |
 //! | `event_time_watermark_lag_ms` | gauge | window | virtual ms the low-watermark trails the newest observed event time |
+//! | `snapshot_epoch` | gauge | checkpoint | most recently persisted checkpoint epoch |
 //! | `ingest_offer_ns` | histogram | ingest | wall time of one `offer_slice` call (per slice, not per item) |
 //! | `control_ack_ns` | histogram | control | rendezvous ack latency for `set_fraction` / `register_sketches` |
 //! | `close_sts_sort_ns` | histogram | close | STS full random sort at interval close |
@@ -61,6 +66,8 @@
 //! | `query_execute_ns` | histogram | query | estimate/aggregate execution per window |
 //! | `window_emit_ns` | histogram | emit | query + report assembly per emitted window |
 //! | `columnar_compact_ns` | histogram | ingest | one OASRS columnar kernel pass over a chunk (partition + batched acceptance) |
+//! | `snapshot_bytes` | histogram | checkpoint | size of one persisted snapshot frame (bytes) |
+//! | `snapshot_write_ns` | histogram | checkpoint | wall time to frame + persist one snapshot |
 
 pub mod export;
 pub mod hist;

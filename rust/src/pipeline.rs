@@ -12,8 +12,9 @@ use crate::core::{Item, Result};
 use crate::engine::batched::BatchedEngine;
 use crate::engine::pipelined::PipelinedEngine;
 use crate::engine::{EngineConfig, EngineKind, RunReport};
+use crate::core::Error;
 use crate::query::{Query, QueryExecutor};
-use crate::runtime::{Backend, ComputeHandle, ComputeService};
+use crate::runtime::{Backend, ComputeHandle, ComputeService, DurabilityOptions};
 use crate::sampling::SamplerKind;
 use crate::sketch::SketchParams;
 use crate::stream::{StreamConfig, StreamGenerator};
@@ -36,6 +37,7 @@ pub struct PipelineBuilder {
     seed: u64,
     sketch: SketchParams,
     event_time: Option<EventTimeConfig>,
+    durability: DurabilityOptions,
 }
 
 impl Default for PipelineBuilder {
@@ -55,6 +57,7 @@ impl Default for PipelineBuilder {
             seed: 42,
             sketch: SketchParams::default(),
             event_time: None,
+            durability: DurabilityOptions::default(),
         }
     }
 }
@@ -152,6 +155,28 @@ impl PipelineBuilder {
         self
     }
 
+    /// Persist an epoch-stamped pipeline snapshot to `dir` every `every`
+    /// interval boundaries (see [`crate::runtime::checkpoint`]).
+    pub fn checkpoint_to(mut self, dir: impl Into<std::path::PathBuf>, every: u64) -> Self {
+        self.durability = self.durability.checkpoint_to(dir, every);
+        self
+    }
+
+    /// Restore from the newest valid snapshot in the checkpoint directory
+    /// before processing, replaying from the recorded broker offset with
+    /// restored sampler/window state.  Requires [`Self::checkpoint_to`].
+    pub fn restore_on_start(mut self, yes: bool) -> Self {
+        self.durability = self.durability.restore_on_start(yes);
+        self
+    }
+
+    /// Set the full durability options in one call (service-level API; the
+    /// two builder methods above are sugar over this).
+    pub fn durability(mut self, options: DurabilityOptions) -> Self {
+        self.durability = options;
+        self
+    }
+
     /// Build with the pure-Rust compute backend (no artifacts needed).
     pub fn build_native(self) -> Pipeline {
         let svc = ComputeService::native();
@@ -191,6 +216,7 @@ impl PipelineBuilder {
             query: self.query,
             sampler: self.sampler,
             budget: self.budget,
+            durability: self.durability,
             executor: QueryExecutor::new(handle).with_sketch_params(self.sketch),
             _service: service,
         }
@@ -204,6 +230,7 @@ pub struct Pipeline {
     query: Query,
     sampler: SamplerKind,
     budget: QueryBudget,
+    durability: DurabilityOptions,
     executor: QueryExecutor,
     /// Owned compute service (None when sharing a handle).
     _service: Option<ComputeService>,
@@ -220,14 +247,42 @@ impl Pipeline {
     /// this, so direct engine users get the same rejection).
     pub fn run_items(&self, items: &[Item]) -> Result<RunReport> {
         let mut cost = CostFunction::new(self.budget.clone());
+        let ckpt = self.durability.checkpoint.as_ref();
+        if self.durability.restore_on_start && ckpt.is_none() {
+            return Err(Error::Config(
+                "restore_on_start requires a checkpoint directory (set checkpoint_to)".into(),
+            ));
+        }
         match self.config.kind {
             EngineKind::Batched => {
-                BatchedEngine::new(&self.config, self.window, self.query.clone(), &self.executor)
-                    .run(items, self.sampler, &mut cost)
+                let engine = BatchedEngine::new(
+                    &self.config,
+                    self.window,
+                    self.query.clone(),
+                    &self.executor,
+                );
+                match ckpt {
+                    Some(spec) if self.durability.restore_on_start => {
+                        engine.recover(items, self.sampler, &mut cost, spec)
+                    }
+                    Some(spec) => engine.run_checkpointed(items, self.sampler, &mut cost, spec),
+                    None => engine.run(items, self.sampler, &mut cost),
+                }
             }
             EngineKind::Pipelined => {
-                PipelinedEngine::new(&self.config, self.window, self.query.clone(), &self.executor)
-                    .run(items, self.sampler, &mut cost)
+                let engine = PipelinedEngine::new(
+                    &self.config,
+                    self.window,
+                    self.query.clone(),
+                    &self.executor,
+                );
+                match ckpt {
+                    Some(spec) if self.durability.restore_on_start => {
+                        engine.recover(items, self.sampler, &mut cost, spec)
+                    }
+                    Some(spec) => engine.run_checkpointed(items, self.sampler, &mut cost, spec),
+                    None => engine.run(items, self.sampler, &mut cost),
+                }
             }
         }
     }

@@ -684,6 +684,29 @@ impl SketchWindow {
     }
 }
 
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+/// Spec + the pane ring + both provenance counters travel, so a restored
+/// window keeps answering from the same per-pane sketches (bit-identical
+/// merges) and the prebuilt/rebuilt acceptance counters stay honest across
+/// a crash.
+impl Snapshot for SketchWindow {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.spec.encode(w);
+        self.panes.encode(w);
+        w.put_u64(self.prebuilt);
+        w.put_u64(self.rebuilt);
+    }
+    fn decode(r: &mut SnapshotReader) -> crate::core::Result<Self> {
+        Ok(Self {
+            spec: SketchSpec::decode(r)?,
+            panes: PaneStore::<PaneSketch>::decode(r)?,
+            prebuilt: r.get_u64()?,
+            rebuilt: r.get_u64()?,
+        })
+    }
+}
+
 /// Summed count of the `k` largest entries — the top-k ground-truth scalar
 /// shared by [`exact_eval`] and the engines' `exact_values`.
 pub fn top_k_mass(counts: &[f64], k: usize) -> f64 {

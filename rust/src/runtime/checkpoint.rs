@@ -1,0 +1,1002 @@
+//! Checkpoint/restore subsystem: mergeable state as the recovery format.
+//!
+//! Everything a pane holds is associatively `Mergeable`, and every sampler
+//! is a seeded deterministic machine — which together make the pipeline's
+//! state a *checkpoint format*: serialize sampler state (including RNG
+//! streams), pane-store contents, the `DropLedger`, and the feedback EWMA
+//! at an interval boundary, record the broker offset, and a recovered run
+//! replays bit-identically to one that never crashed.  (*The Marriage of
+//! Incremental and Approximate Computing*, 1611.08573, frames memoized
+//! partials as exactly this recovery substrate.)
+//!
+//! Three layers live here:
+//!
+//! * **[`SnapshotCodec`]** — [`SnapshotWriter`] / [`SnapshotReader`] and the
+//!   [`Snapshot`] trait: a zero-dependency little-endian binary codec.
+//!   Floats travel as `to_bits` so round-trips are bit-exact (NaN payloads
+//!   and signed zeros included); every `Mergeable` payload and every
+//!   sampler implements it in its own module (private fields stay private).
+//! * **[`CheckpointStore`]** — epoch-stamped snapshot files
+//!   (`epoch-NNNNNNNN.ckpt`, magic + version + payload + FNV-1a checksum,
+//!   written tmp-then-rename so a torn write never replaces a good epoch)
+//!   plus a `manifest.json`, with newest-valid-epoch fallback on load.
+//! * **[`PipelineSnapshot`]** — the engines' whole-pipeline frame: config
+//!   fingerprint, broker offset, per-worker sampler blobs, assembler,
+//!   sketch window, drop ledger, and cost/feedback state.
+//!
+//! The control-plane half (how workers *produce* their blobs at interval
+//! boundaries) rides the same acked rendezvous discipline as
+//! `set_fraction`/`register_sketches` — see `engine::worker::Msg::Snapshot`.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::core::{Error, Result};
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+/// Marker name for the codec half of this module (referenced by docs and
+/// the property suite): the writer/reader pair plus the [`Snapshot`] trait.
+pub type SnapshotCodec = SnapshotWriter;
+
+/// File magic for snapshot frames ("StreamApprox Checkpoint").
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"SAXC";
+
+/// Frame format version; bump on any layout change so stale snapshots are
+/// rejected loudly instead of mis-decoded.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+const FRAME_HEADER: usize = 4 + 2; // magic + version
+const FRAME_TRAILER: usize = 8; // FNV-1a-64 checksum
+
+/// FNV-1a 64-bit checksum (zero-dep, deterministic across platforms).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian byte sink for snapshot payloads.
+#[derive(Debug, Default)]
+pub struct SnapshotWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapshotWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as u64 so snapshots are word-size independent.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Floats travel as raw bits — bit-exact round-trip is the contract.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Length-prefixed raw bytes (nested payloads, worker blobs).
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Splice pre-encoded snapshot bytes in as-is (no length prefix): the
+    /// pipelined consumer serializes its assembler/sketch/ledger state on
+    /// its own thread and the coordinator stitches the blob into the full
+    /// payload at the exact field positions the typed encode would use.
+    pub fn extend_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Cursor over a snapshot payload; every read is bounds-checked and an
+/// underrun is a descriptive [`Error::Io`], never a panic.
+#[derive(Debug)]
+pub struct SnapshotReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapshotReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Io(format!(
+                "snapshot payload truncated: need {n} bytes at offset {}, {} remain",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(Error::Io(format!("snapshot bool byte {other} (corrupt payload)"))),
+        }
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_usize()?;
+        if n > self.remaining() {
+            return Err(Error::Io(format!(
+                "snapshot byte-blob length {n} exceeds {} remaining bytes (corrupt payload)",
+                self.remaining()
+            )));
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+/// Binary snapshot serialization — implemented by every `Mergeable`
+/// payload, every sampler, and the window/budget state machines, each in
+/// its own module so private fields stay private.  The contract is
+/// bit-exact continuation: `decode(encode(x))` must behave identically to
+/// `x` for every subsequent operation, RNG draws included.
+pub trait Snapshot: Sized {
+    fn encode(&self, w: &mut SnapshotWriter);
+    fn decode(r: &mut SnapshotReader) -> Result<Self>;
+
+    /// Convenience: encode into a fresh byte vector.
+    fn to_snapshot_bytes(&self) -> Vec<u8> {
+        let mut w = SnapshotWriter::new();
+        self.encode(&mut w);
+        w.into_bytes()
+    }
+
+    /// Convenience: decode from a byte slice, requiring full consumption
+    /// (trailing garbage means a framing bug, not a compatible snapshot).
+    fn from_snapshot_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = SnapshotReader::new(bytes);
+        let v = Self::decode(&mut r)?;
+        if !r.is_exhausted() {
+            return Err(Error::Io(format!(
+                "snapshot payload has {} trailing bytes after decode",
+                r.remaining()
+            )));
+        }
+        Ok(v)
+    }
+}
+
+impl Snapshot for u8 {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u8(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_u8()
+    }
+}
+
+impl Snapshot for u16 {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u16(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_u16()
+    }
+}
+
+impl Snapshot for u32 {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u32(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_u32()
+    }
+}
+
+impl Snapshot for u64 {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u64(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_u64()
+    }
+}
+
+impl Snapshot for usize {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_usize()
+    }
+}
+
+impl Snapshot for f64 {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_f64()
+    }
+}
+
+impl Snapshot for bool {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_bool(*self);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        r.get_bool()
+    }
+}
+
+impl<A: Snapshot, B: Snapshot> Snapshot for (A, B) {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.0.encode(w);
+        self.1.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<T: Snapshot> Snapshot for Option<T> {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        match self {
+            None => w.put_u8(0),
+            Some(v) => {
+                w.put_u8(1);
+                v.encode(w);
+            }
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        match r.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            other => Err(Error::Io(format!("snapshot Option tag {other} (corrupt payload)"))),
+        }
+    }
+}
+
+impl<T: Snapshot> Snapshot for Vec<T> {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.len());
+        for v in self {
+            v.encode(w);
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let n = r.get_usize()?;
+        // Every element costs >= 1 byte, so a length beyond the remaining
+        // payload is corruption — reject before allocating.
+        if n > r.remaining() {
+            return Err(Error::Io(format!(
+                "snapshot vec length {n} exceeds {} remaining bytes (corrupt payload)",
+                r.remaining()
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+impl<T: Snapshot + Copy + Default, const N: usize> Snapshot for [T; N] {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        for v in self {
+            v.encode(w);
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let mut out = [T::default(); N];
+        for slot in out.iter_mut() {
+            *slot = T::decode(r)?;
+        }
+        Ok(out)
+    }
+}
+
+impl Snapshot for Rng {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        let (s, spare) = self.state();
+        s.encode(w);
+        spare.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let s = <[u64; 4]>::decode(r)?;
+        let spare = Option::<f64>::decode(r)?;
+        Ok(Rng::from_state(s, spare))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epoch-stamped on-disk store
+// ---------------------------------------------------------------------------
+
+/// Wrap a payload in the on-disk frame: magic, version, payload, FNV-1a-64
+/// checksum of everything preceding it.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len() + FRAME_TRAILER);
+    frame.extend_from_slice(&SNAPSHOT_MAGIC);
+    frame.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+    frame.extend_from_slice(payload);
+    let sum = fnv1a64(&frame);
+    frame.extend_from_slice(&sum.to_le_bytes());
+    frame
+}
+
+/// Validate a frame and return its payload.  Rejection taxonomy:
+/// too-short/checksum failures are [`Error::Io`] (torn or bit-flipped
+/// writes), wrong magic or version are [`Error::Config`] (not a snapshot /
+/// incompatible layout).
+pub fn decode_frame(frame: &[u8]) -> Result<Vec<u8>> {
+    if frame.len() < FRAME_HEADER + FRAME_TRAILER {
+        return Err(Error::Io(format!(
+            "truncated snapshot frame: {} bytes, minimum {}",
+            frame.len(),
+            FRAME_HEADER + FRAME_TRAILER
+        )));
+    }
+    if frame[..4] != SNAPSHOT_MAGIC {
+        return Err(Error::Config(format!(
+            "bad snapshot magic {:02x?} (not a StreamApprox checkpoint)",
+            &frame[..4]
+        )));
+    }
+    let version = u16::from_le_bytes(frame[4..6].try_into().unwrap());
+    if version != SNAPSHOT_VERSION {
+        return Err(Error::Config(format!(
+            "snapshot version mismatch: file is v{version}, this build reads v{SNAPSHOT_VERSION}"
+        )));
+    }
+    let (body, trailer) = frame.split_at(frame.len() - FRAME_TRAILER);
+    let want = u64::from_le_bytes(trailer.try_into().unwrap());
+    let got = fnv1a64(body);
+    if got != want {
+        return Err(Error::Io(format!(
+            "snapshot checksum mismatch: computed {got:#018x}, recorded {want:#018x} \
+             (torn or bit-flipped write)"
+        )));
+    }
+    Ok(body[FRAME_HEADER..].to_vec())
+}
+
+/// A snapshot successfully loaded from a [`CheckpointStore`], with the
+/// exact-once fallback accounting the negative-path suite pins.
+#[derive(Debug)]
+pub struct LoadedSnapshot {
+    /// Epoch (interval count) the snapshot was taken at.
+    pub epoch: u64,
+    /// Decoded frame payload.
+    pub payload: Vec<u8>,
+    /// Newer epochs that were present but invalid and skipped — one tick
+    /// per skipped file, mirrored on `recovery_fallbacks_total`.
+    pub skipped: u64,
+}
+
+/// Directory of epoch-stamped snapshot files plus a `manifest.json`.
+///
+/// Layout:
+/// ```text
+/// <dir>/epoch-00000003.ckpt   (frame: magic | version | payload | fnv64)
+/// <dir>/manifest.json         ({"format": ..., "latest_epoch": 3, "epochs": [...]})
+/// ```
+///
+/// Writes go through a `.tmp` file renamed into place, so a crash mid-write
+/// leaves the previous epoch intact and the torn `.tmp` ignored.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating the directory if needed).
+    pub fn create(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| Error::Io(format!("create checkpoint dir {}: {e}", dir.display())))?;
+        Ok(Self { dir })
+    }
+
+    /// Open an existing checkpoint directory (restore path).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        if !dir.is_dir() {
+            return Err(Error::Config(format!(
+                "checkpoint dir {} does not exist",
+                dir.display()
+            )));
+        }
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of one epoch's snapshot file.
+    pub fn epoch_path(&self, epoch: u64) -> PathBuf {
+        self.dir.join(format!("epoch-{epoch:08}.ckpt"))
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+
+    /// Epochs with a snapshot file present, ascending.
+    pub fn epochs(&self) -> Result<Vec<u64>> {
+        let rd = std::fs::read_dir(&self.dir)
+            .map_err(|e| Error::Io(format!("read checkpoint dir {}: {e}", self.dir.display())))?;
+        let mut out = Vec::new();
+        for entry in rd {
+            let entry = entry.map_err(|e| Error::Io(format!("read checkpoint dir entry: {e}")))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("epoch-").and_then(|s| s.strip_suffix(".ckpt")) {
+                if let Ok(epoch) = num.parse::<u64>() {
+                    out.push(epoch);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Persist one epoch's payload (framed, tmp-then-rename) and refresh
+    /// the manifest.  Records snapshot size and write latency.
+    pub fn write_epoch(&self, epoch: u64, payload: &[u8]) -> Result<u64> {
+        let t0 = Instant::now();
+        let frame = encode_frame(payload);
+        let final_path = self.epoch_path(epoch);
+        let tmp = self.dir.join(format!("epoch-{epoch:08}.ckpt.tmp"));
+        std::fs::write(&tmp, &frame)
+            .map_err(|e| Error::Io(format!("write snapshot {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &final_path).map_err(|e| {
+            Error::Io(format!("publish snapshot {}: {e}", final_path.display()))
+        })?;
+        self.write_manifest(epoch)?;
+        let bytes = frame.len() as u64;
+        crate::obs_counter!("snapshots_written_total", "Checkpoint snapshots persisted").inc();
+        crate::obs_histogram!("snapshot_bytes", "Size of one persisted snapshot frame (bytes)")
+            .record(bytes);
+        crate::obs_histogram!("snapshot_write_ns", "Wall time to frame + persist one snapshot")
+            .record_elapsed(t0);
+        crate::obs_gauge!("snapshot_epoch", "Most recently persisted checkpoint epoch")
+            .set(epoch as f64);
+        Ok(bytes)
+    }
+
+    fn write_manifest(&self, latest: u64) -> Result<()> {
+        let epochs = self.epochs()?;
+        let doc = json::obj(vec![
+            ("format", Value::Str("streamapprox-checkpoint".into())),
+            ("version", Value::Num(SNAPSHOT_VERSION as f64)),
+            ("latest_epoch", Value::Num(latest as f64)),
+            (
+                "epochs",
+                Value::Arr(epochs.into_iter().map(|e| Value::Num(e as f64)).collect()),
+            ),
+        ]);
+        let tmp = self.dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, doc.to_string())
+            .map_err(|e| Error::Io(format!("write manifest {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, self.manifest_path())
+            .map_err(|e| Error::Io(format!("publish manifest: {e}")))?;
+        Ok(())
+    }
+
+    /// Read and validate one epoch's payload.
+    pub fn read_epoch(&self, epoch: u64) -> Result<Vec<u8>> {
+        let path = self.epoch_path(epoch);
+        let frame = std::fs::read(&path)
+            .map_err(|e| Error::Io(format!("read snapshot {}: {e}", path.display())))?;
+        decode_frame(&frame)
+    }
+
+    /// Load the newest *valid* epoch, skipping (and counting, exactly once
+    /// per file) any newer snapshots that fail validation.  `Ok(None)` when
+    /// the directory holds no snapshot files at all; `Err` when files exist
+    /// but none validates (the last failure is returned).
+    pub fn load_latest(&self) -> Result<Option<LoadedSnapshot>> {
+        let epochs = self.epochs()?;
+        if epochs.is_empty() {
+            return Ok(None);
+        }
+        let mut skipped = 0u64;
+        let mut last_err = None;
+        for &epoch in epochs.iter().rev() {
+            match self.read_epoch(epoch) {
+                Ok(payload) => {
+                    if skipped > 0 {
+                        crate::obs_counter!(
+                            "recovery_fallbacks_total",
+                            "Invalid snapshot epochs skipped during recovery"
+                        )
+                        .add(skipped);
+                    }
+                    return Ok(Some(LoadedSnapshot { epoch, payload, skipped }));
+                }
+                Err(e) => {
+                    skipped += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+        crate::obs_counter!(
+            "recovery_fallbacks_total",
+            "Invalid snapshot epochs skipped during recovery"
+        )
+        .add(skipped);
+        Err(last_err.unwrap_or_else(|| Error::Io("no valid snapshot epoch".into())))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint policy
+// ---------------------------------------------------------------------------
+
+/// Engine-side checkpoint policy: where to persist, how often (in interval
+/// boundaries), and — for the crash-injection suite — after how many
+/// intervals to simulate a crash.
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    /// Snapshot directory.
+    pub dir: PathBuf,
+    /// Snapshot every `every` interval boundaries (clamped to >= 1).
+    pub every: u64,
+    /// Deterministic crash injection: stop the run right after completing
+    /// (and, if due, snapshotting) this many intervals.  `None` in
+    /// production.
+    pub crash_after: Option<u64>,
+}
+
+impl CheckpointSpec {
+    pub fn new(dir: impl Into<PathBuf>, every: u64) -> Self {
+        Self { dir: dir.into(), every: every.max(1), crash_after: None }
+    }
+
+    pub fn with_crash_after(mut self, intervals: u64) -> Self {
+        self.crash_after = Some(intervals);
+        self
+    }
+
+    /// Is a snapshot due after `intervals_done` completed intervals?
+    pub fn due(&self, intervals_done: u64) -> bool {
+        intervals_done > 0 && intervals_done % self.every.max(1) == 0
+    }
+
+    /// Should the run stop (simulated crash) after `intervals_done`?
+    pub fn crashes_at(&self, intervals_done: u64) -> bool {
+        self.crash_after == Some(intervals_done)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-pipeline snapshot frame
+// ---------------------------------------------------------------------------
+
+/// Everything that distinguishes one run configuration from another for
+/// recovery purposes.  A snapshot taken under one fingerprint refuses to
+/// restore under a different one — silently resuming a `seed=1` run into a
+/// `seed=2` pipeline would void the determinism contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigFingerprint {
+    pub engine: u8,
+    pub sampler: u8,
+    pub workers: u64,
+    pub seed: u64,
+    pub window_size_ms: u64,
+    pub window_slide_ms: u64,
+    pub batch_interval_ms: u64,
+    pub event_time: bool,
+    pub watermark_skew_ms: u64,
+    pub allowed_lateness_ms: u64,
+    pub sketch_panes: bool,
+    pub spill_ratio: u64,
+}
+
+impl ConfigFingerprint {
+    /// Reject restore into a different configuration with a field-level
+    /// diagnostic.
+    pub fn check(&self, current: &ConfigFingerprint) -> Result<()> {
+        if self == current {
+            return Ok(());
+        }
+        let mut diffs = Vec::new();
+        macro_rules! diff {
+            ($field:ident) => {
+                if self.$field != current.$field {
+                    diffs.push(format!(
+                        concat!(stringify!($field), " {:?} != {:?}"),
+                        self.$field, current.$field
+                    ));
+                }
+            };
+        }
+        diff!(engine);
+        diff!(sampler);
+        diff!(workers);
+        diff!(seed);
+        diff!(window_size_ms);
+        diff!(window_slide_ms);
+        diff!(batch_interval_ms);
+        diff!(event_time);
+        diff!(watermark_skew_ms);
+        diff!(allowed_lateness_ms);
+        diff!(sketch_panes);
+        diff!(spill_ratio);
+        Err(Error::Config(format!(
+            "snapshot was taken under a different configuration: {}",
+            diffs.join(", ")
+        )))
+    }
+}
+
+impl Snapshot for ConfigFingerprint {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u8(self.engine);
+        w.put_u8(self.sampler);
+        w.put_u64(self.workers);
+        w.put_u64(self.seed);
+        w.put_u64(self.window_size_ms);
+        w.put_u64(self.window_slide_ms);
+        w.put_u64(self.batch_interval_ms);
+        w.put_bool(self.event_time);
+        w.put_u64(self.watermark_skew_ms);
+        w.put_u64(self.allowed_lateness_ms);
+        w.put_bool(self.sketch_panes);
+        w.put_u64(self.spill_ratio);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            engine: r.get_u8()?,
+            sampler: r.get_u8()?,
+            workers: r.get_u64()?,
+            seed: r.get_u64()?,
+            window_size_ms: r.get_u64()?,
+            window_slide_ms: r.get_u64()?,
+            batch_interval_ms: r.get_u64()?,
+            event_time: r.get_bool()?,
+            watermark_skew_ms: r.get_u64()?,
+            allowed_lateness_ms: r.get_u64()?,
+            sketch_panes: r.get_bool()?,
+            spill_ratio: r.get_u64()?,
+        })
+    }
+}
+
+/// The engines' whole-pipeline snapshot, taken at an interval boundary.
+///
+/// Worker sampler state travels as opaque per-worker blobs (the
+/// `WorkerSampler` machine is private to `engine::worker`; the blobs are
+/// produced/consumed by the acked `Msg::Snapshot` rendezvous).  The rest is
+/// typed: assembler panes, sketch-window pane store, drop ledger, and the
+/// cost/feedback controller.
+#[derive(Debug)]
+pub struct PipelineSnapshot {
+    pub fingerprint: ConfigFingerprint,
+    /// Completed intervals (the epoch stamp).
+    pub epoch: u64,
+    /// Broker offset: items consumed from the replayable source.
+    pub item_offset: u64,
+    /// Windows already emitted before the snapshot.
+    pub windows_emitted: u64,
+    /// Current sampling fraction (feedback output at the boundary).
+    pub fraction: f64,
+    /// Threaded transport's round-robin dispatch cursor — multi-worker
+    /// interleave must resume exactly where it stopped.
+    pub transport_cursor: u64,
+    /// Per-worker serialized `WorkerSampler` state (RNG streams included).
+    pub workers: Vec<Vec<u8>>,
+    pub assembler: crate::window::WindowAssembler,
+    pub sketches: Option<crate::query::SketchWindow>,
+    pub ledger: crate::window::event_time::DropLedger,
+    pub cost: crate::budget::CostFunction,
+}
+
+impl Snapshot for PipelineSnapshot {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.fingerprint.encode(w);
+        w.put_u64(self.epoch);
+        w.put_u64(self.item_offset);
+        w.put_u64(self.windows_emitted);
+        w.put_f64(self.fraction);
+        w.put_u64(self.transport_cursor);
+        self.workers.encode(w);
+        self.assembler.encode(w);
+        self.sketches.encode(w);
+        self.ledger.encode(w);
+        self.cost.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            fingerprint: ConfigFingerprint::decode(r)?,
+            epoch: r.get_u64()?,
+            item_offset: r.get_u64()?,
+            windows_emitted: r.get_u64()?,
+            fraction: r.get_f64()?,
+            transport_cursor: r.get_u64()?,
+            workers: Vec::<Vec<u8>>::decode(r)?,
+            assembler: crate::window::WindowAssembler::decode(r)?,
+            sketches: Option::<crate::query::SketchWindow>::decode(r)?,
+            ledger: crate::window::event_time::DropLedger::decode(r)?,
+            cost: crate::budget::CostFunction::decode(r)?,
+        })
+    }
+}
+
+/// Tick the replayed-items counter (recovery's replay cost witness).
+pub fn record_replayed_items(n: u64) {
+    crate::obs_counter!(
+        "recovery_replayed_items_total",
+        "Items re-read from the broker offset during recovery replay"
+    )
+    .add(n);
+}
+
+/// Tick the restore counter (one per successful `Engine::recover`).
+pub fn record_restore() {
+    crate::obs_counter!("recovery_restores_total", "Successful pipeline restores").inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "sax_ckpt_{tag}_{}_{n}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn primitive_roundtrip_bit_exact() {
+        let mut w = SnapshotWriter::new();
+        w.put_u8(7);
+        w.put_u16(65535);
+        w.put_u32(123456);
+        w.put_u64(u64::MAX);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_bool(true);
+        w.put_bytes(b"abc");
+        let bytes = w.into_bytes();
+        let mut r = SnapshotReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 65535);
+        assert_eq!(r.get_u32().unwrap(), 123456);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.get_f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_bytes().unwrap(), b"abc");
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn reader_underrun_is_io_error() {
+        let mut r = SnapshotReader::new(&[1, 2]);
+        match r.get_u64() {
+            Err(Error::Io(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rng_snapshot_continues_stream() {
+        let mut rng = Rng::seed_from_u64(99);
+        for _ in 0..10 {
+            rng.normal(0.0, 1.0); // leaves a gauss spare half the time
+        }
+        let mut restored = Rng::from_snapshot_bytes(&rng.to_snapshot_bytes()).unwrap();
+        for _ in 0..100 {
+            assert_eq!(rng.normal(2.0, 3.0).to_bits(), restored.normal(2.0, 3.0).to_bits());
+            assert_eq!(rng.next_u64(), restored.next_u64());
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_and_rejections() {
+        let payload = b"hello snapshot".to_vec();
+        let frame = encode_frame(&payload);
+        assert_eq!(decode_frame(&frame).unwrap(), payload);
+
+        // truncated
+        match decode_frame(&frame[..5]) {
+            Err(Error::Io(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // bad magic
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        match decode_frame(&bad) {
+            Err(Error::Config(msg)) => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // version mismatch
+        let mut bad = frame.clone();
+        bad[4] = bad[4].wrapping_add(1);
+        match decode_frame(&bad) {
+            Err(Error::Config(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        // payload bit-flip
+        let mut bad = frame.clone();
+        bad[FRAME_HEADER + 2] ^= 0x10;
+        match decode_frame(&bad) {
+            Err(Error::Io(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn store_writes_epochs_and_manifest() {
+        let dir = tmp_dir("store");
+        let store = CheckpointStore::create(&dir).unwrap();
+        store.write_epoch(1, b"one").unwrap();
+        store.write_epoch(2, b"two").unwrap();
+        assert_eq!(store.epochs().unwrap(), vec![1, 2]);
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let doc = json::parse(&manifest).unwrap();
+        assert_eq!(doc.get("latest_epoch").unwrap().as_i64(), Some(2));
+        assert_eq!(doc.get("epochs").unwrap().as_arr().unwrap().len(), 2);
+        let loaded = store.load_latest().unwrap().unwrap();
+        assert_eq!(loaded.epoch, 2);
+        assert_eq!(loaded.payload, b"two");
+        assert_eq!(loaded.skipped, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_latest_falls_back_past_corrupt_epoch() {
+        let dir = tmp_dir("fallback");
+        let store = CheckpointStore::create(&dir).unwrap();
+        store.write_epoch(1, b"good").unwrap();
+        store.write_epoch(2, b"newer").unwrap();
+        // Corrupt the newest epoch in place (payload bit-flip).
+        let path = store.epoch_path(2);
+        let mut frame = std::fs::read(&path).unwrap();
+        frame[FRAME_HEADER] ^= 0x01;
+        std::fs::write(&path, &frame).unwrap();
+        let loaded = store.load_latest().unwrap().unwrap();
+        assert_eq!(loaded.epoch, 1);
+        assert_eq!(loaded.payload, b"good");
+        assert_eq!(loaded.skipped, 1, "exact-once fallback accounting");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_latest_all_corrupt_is_err() {
+        let dir = tmp_dir("allbad");
+        let store = CheckpointStore::create(&dir).unwrap();
+        store.write_epoch(1, b"x").unwrap();
+        let path = store.epoch_path(1);
+        std::fs::write(&path, b"SA").unwrap(); // truncated beyond repair
+        assert!(store.load_latest().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_store_loads_none() {
+        let dir = tmp_dir("empty");
+        let store = CheckpointStore::create(&dir).unwrap();
+        assert!(store.load_latest().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spec_cadence_and_crash() {
+        let spec = CheckpointSpec::new("/tmp/x", 2).with_crash_after(4);
+        assert!(!spec.due(0));
+        assert!(!spec.due(1));
+        assert!(spec.due(2));
+        assert!(spec.due(4));
+        assert!(spec.crashes_at(4));
+        assert!(!spec.crashes_at(3));
+    }
+
+    #[test]
+    fn fingerprint_check_reports_fields() {
+        let a = ConfigFingerprint {
+            engine: 0,
+            sampler: 1,
+            workers: 2,
+            seed: 42,
+            window_size_ms: 2000,
+            window_slide_ms: 1000,
+            batch_interval_ms: 500,
+            event_time: false,
+            watermark_skew_ms: 0,
+            allowed_lateness_ms: 0,
+            sketch_panes: true,
+            spill_ratio: 128,
+        };
+        let mut b = a;
+        assert!(a.check(&b).is_ok());
+        b.seed = 43;
+        let msg = a.check(&b).unwrap_err().to_string();
+        assert!(msg.contains("seed"), "{msg}");
+    }
+}

@@ -9,10 +9,15 @@
 //! * [`service`] — hosts the engine on a dedicated thread (PJRT handles are
 //!   not `Send`) behind a cloneable handle.
 
+pub mod checkpoint;
 pub mod manifest;
 pub mod service;
 pub mod xla_engine;
 
+pub use checkpoint::{
+    CheckpointSpec, CheckpointStore, ConfigFingerprint, PipelineSnapshot, Snapshot,
+    SnapshotReader, SnapshotWriter,
+};
 pub use manifest::{default_artifacts_dir, Manifest};
-pub use service::{Backend, ComputeHandle, ComputeService};
+pub use service::{Backend, ComputeHandle, ComputeService, DurabilityOptions};
 pub use xla_engine::{RustExecutor, WindowInput, WindowOutput, XlaEngine};

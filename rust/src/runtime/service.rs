@@ -17,8 +17,38 @@ use std::sync::Arc;
 use crate::core::{Error, Result};
 use crate::util::channel::{bounded, Sender};
 
+use super::checkpoint::CheckpointSpec;
 use super::manifest::{default_artifacts_dir, Manifest};
 use super::xla_engine::{RustExecutor, WindowInput, WindowOutput, XlaEngine};
+
+/// Service-level durability options: periodic snapshots while a pipeline
+/// runs, and restore-on-start.  Consumed by
+/// [`crate::pipeline::Pipeline::run_items`], which dispatches to the
+/// engines' `run_checkpointed`/`recover` entry points; the CLI's
+/// `--checkpoint-dir`/`--checkpoint-every`/`--restore` flags build one of
+/// these.
+#[derive(Debug, Clone, Default)]
+pub struct DurabilityOptions {
+    /// Periodic snapshot policy (`None` = no checkpointing).
+    pub checkpoint: Option<CheckpointSpec>,
+    /// Restore from the newest valid snapshot in the checkpoint directory
+    /// before processing (requires `checkpoint` to be set).
+    pub restore_on_start: bool,
+}
+
+impl DurabilityOptions {
+    /// Snapshot to `dir` every `every` interval boundaries.
+    pub fn checkpoint_to(mut self, dir: impl Into<std::path::PathBuf>, every: u64) -> Self {
+        self.checkpoint = Some(CheckpointSpec::new(dir, every));
+        self
+    }
+
+    /// Restore from the newest valid snapshot before processing.
+    pub fn restore_on_start(mut self, yes: bool) -> Self {
+        self.restore_on_start = yes;
+        self
+    }
+}
 
 /// Which executor the service hosts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -28,8 +28,9 @@ pub mod srs;
 pub mod sts;
 pub mod weighted;
 
-use crate::core::{ColumnarChunk, Item};
+use crate::core::{ColumnarChunk, Error, Item, Result};
 use crate::error::estimator::StrataState;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 
 pub use oasrs::OasrsSampler;
 pub use reservoir::{Reservoir, ReservoirMode};
@@ -67,6 +68,29 @@ impl SamplerKind {
     /// (the Spark baselines); OASRS and native stream item-at-a-time.
     pub fn is_batch_fashion(self) -> bool {
         matches!(self, SamplerKind::Srs | SamplerKind::Sts)
+    }
+
+    /// Stable numeric tag used in snapshot frames and config fingerprints.
+    pub fn tag(self) -> u8 {
+        match self {
+            SamplerKind::Oasrs => 0,
+            SamplerKind::Srs => 1,
+            SamplerKind::Sts => 2,
+            SamplerKind::WeightedRes => 3,
+            SamplerKind::None => 4,
+        }
+    }
+
+    /// Inverse of [`SamplerKind::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => SamplerKind::Oasrs,
+            1 => SamplerKind::Srs,
+            2 => SamplerKind::Sts,
+            3 => SamplerKind::WeightedRes,
+            4 => SamplerKind::None,
+            other => return Err(Error::Io(format!("unknown sampler tag {other} in snapshot"))),
+        })
     }
 }
 
@@ -233,6 +257,26 @@ impl Sampler for NoopSampler {
 
     fn kind(&self) -> SamplerKind {
         SamplerKind::None
+    }
+}
+
+impl Snapshot for SampleResult {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.sample.encode(w);
+        self.state.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self { sample: Vec::<(u16, f64)>::decode(r)?, state: StrataState::decode(r)? })
+    }
+}
+
+impl Snapshot for NoopSampler {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.buf.encode(w);
+        self.state.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self { buf: Vec::<(u16, f64)>::decode(r)?, state: StrataState::decode(r)? })
     }
 }
 

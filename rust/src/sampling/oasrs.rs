@@ -21,8 +21,9 @@
 
 use std::time::Instant;
 
-use crate::core::{ColumnarChunk, Item, MAX_STRATA};
+use crate::core::{ColumnarChunk, Error, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::util::rng::Rng;
 
 use super::reservoir::{BatchScratch, Reservoir};
@@ -297,6 +298,69 @@ impl Sampler for OasrsSampler {
 
     fn kind(&self) -> SamplerKind {
         SamplerKind::Oasrs
+    }
+}
+
+impl Snapshot for OasrsSampler {
+    /// Serializes every behavior-bearing field: fraction, per-stratum
+    /// reservoirs (mid-interval states included), counters, EWMA history,
+    /// capacities, seed, interval number, the columnar-kernel mode, and the
+    /// dedicated mask RNG stream.  Scratch buffers (`part_vals`, `scratch`,
+    /// `mask_uniforms`) are rebuilt empty — they are cleared or resized
+    /// before every use and consume no RNG.
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.fraction);
+        self.reservoirs.encode(w);
+        self.counters.encode(w);
+        self.ewma_arrivals.encode(w);
+        self.caps.encode(w);
+        w.put_u64(self.seed);
+        w.put_u64(self.interval);
+        w.put_u8(match self.columnar_mode {
+            ColumnarMode::Exact => 0,
+            ColumnarMode::Masked => 1,
+        });
+        self.mask_rng.encode(w);
+    }
+
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let fraction = r.get_f64()?;
+        let reservoirs = Vec::<Option<Reservoir<f64>>>::decode(r)?;
+        if reservoirs.len() != MAX_STRATA {
+            return Err(Error::Io(format!(
+                "oasrs snapshot has {} strata, expected {MAX_STRATA}",
+                reservoirs.len()
+            )));
+        }
+        let counters = <[f64; MAX_STRATA]>::decode(r)?;
+        let ewma_arrivals = <[f64; MAX_STRATA]>::decode(r)?;
+        let caps = <[usize; MAX_STRATA]>::decode(r)?;
+        let seed = r.get_u64()?;
+        let interval = r.get_u64()?;
+        let columnar_mode = match r.get_u8()? {
+            0 => ColumnarMode::Exact,
+            1 => ColumnarMode::Masked,
+            other => {
+                return Err(Error::Io(format!("oasrs columnar-mode tag {other} (corrupt payload)")))
+            }
+        };
+        let mask_rng = Rng::decode(r)?;
+        let mut part_vals = Vec::with_capacity(MAX_STRATA);
+        part_vals.resize_with(MAX_STRATA, Vec::new);
+        Ok(Self {
+            fraction,
+            reservoirs,
+            counters,
+            ewma_arrivals,
+            caps,
+            seed,
+            interval,
+            columnar_mode,
+            part_vals,
+            scratch: BatchScratch::default(),
+            mask_rng,
+            mask_uniforms: Vec::new(),
+        })
     }
 }
 

@@ -28,6 +28,8 @@
 //!   draw per item, kept for cross-validation: the uniformity property
 //!   tests run both modes on the same seed budget and compare.
 
+use crate::core::{Error, Result};
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::util::rng::Rng;
 
 /// Reusable scratch for [`Reservoir::offer_batch`] — owned by the caller
@@ -423,6 +425,50 @@ impl<T: Copy> Reservoir<T> {
             self.schedule_skip();
             accepted += 1;
         }
+    }
+}
+
+impl<T: Snapshot> Snapshot for Reservoir<T> {
+    /// Full mid-stream state: capacity, residents, seen count, RNG stream,
+    /// mode, and the Algorithm-L chain (engaged flag, pending skip,
+    /// threshold `w`) — so a reservoir serialized mid-dense-phase or
+    /// mid-skip continues offering bit-identically to one never paused.
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.cap);
+        self.buf.encode(w);
+        w.put_u64(self.seen);
+        self.rng.encode(w);
+        w.put_u8(match self.mode {
+            ReservoirMode::SkipAheadL => 0,
+            ReservoirMode::DrawPerItem => 1,
+        });
+        w.put_bool(self.engaged);
+        w.put_u64(self.skip);
+        w.put_f64(self.w);
+    }
+
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let cap = r.get_usize()?;
+        let buf = Vec::<T>::decode(r)?;
+        let seen = r.get_u64()?;
+        let rng = Rng::decode(r)?;
+        let mode = match r.get_u8()? {
+            0 => ReservoirMode::SkipAheadL,
+            1 => ReservoirMode::DrawPerItem,
+            other => {
+                return Err(Error::Io(format!("reservoir mode tag {other} (corrupt payload)")))
+            }
+        };
+        Ok(Self {
+            cap,
+            buf,
+            seen,
+            rng,
+            mode,
+            engaged: r.get_bool()?,
+            skip: r.get_u64()?,
+            w: r.get_f64()?,
+        })
     }
 }
 

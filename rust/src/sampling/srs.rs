@@ -16,8 +16,9 @@
 //! shared weight law Eq. (1) produce exactly the SRS Horvitz-Thompson weight
 //! `C_total / k` for every stratum.
 
-use crate::core::{ColumnarChunk, Item, MAX_STRATA};
+use crate::core::{ColumnarChunk, Error, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::util::rng::Rng;
 
 use super::{SampleResult, Sampler, SamplerKind};
@@ -199,6 +200,42 @@ impl Sampler for SrsSampler {
 
     fn kind(&self) -> SamplerKind {
         SamplerKind::Srs
+    }
+}
+
+/// SRS checkpoint state: the buffered batch columns, the counters, and —
+/// critically — the random-sort RNG stream.  SRS clears its batch at every
+/// `finish_interval`, but the RNG advances monotonically across intervals,
+/// so a boundary snapshot that dropped it would diverge on the very next
+/// selection.  The `keys` scratch is derived (overwritten before each use)
+/// and is rebuilt empty.
+impl Snapshot for SrsSampler {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.fraction);
+        self.batch_strata.encode(w);
+        self.batch_values.encode(w);
+        self.counters.encode(w);
+        self.rng.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let fraction = r.get_f64()?;
+        let batch_strata = Vec::<u16>::decode(r)?;
+        let batch_values = Vec::<f64>::decode(r)?;
+        if batch_strata.len() != batch_values.len() {
+            return Err(Error::Io(format!(
+                "SRS snapshot column mismatch: {} strata vs {} values",
+                batch_strata.len(),
+                batch_values.len()
+            )));
+        }
+        Ok(Self {
+            fraction,
+            batch_strata,
+            batch_values,
+            counters: <[f64; MAX_STRATA]>::decode(r)?,
+            rng: Rng::decode(r)?,
+            keys: Vec::new(),
+        })
     }
 }
 

@@ -16,8 +16,9 @@
 //! per stratum, so `n_cap_i = fraction · C_i` makes Eq. (1) produce the STS
 //! weight `1 / fraction` uniformly.
 
-use crate::core::{ColumnarChunk, Item, MAX_STRATA};
+use crate::core::{ColumnarChunk, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::util::rng::Rng;
 
 use super::{SampleResult, Sampler, SamplerKind};
@@ -123,6 +124,24 @@ impl Sampler for StsSampler {
 
     fn kind(&self) -> SamplerKind {
         SamplerKind::Sts
+    }
+}
+
+/// STS checkpoint state: the buffered batch and the per-stratum sort RNG
+/// stream (which, like SRS's, advances across intervals and must survive a
+/// boundary snapshot bit-exactly).
+impl Snapshot for StsSampler {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.fraction);
+        self.batch.encode(w);
+        self.rng.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            fraction: r.get_f64()?,
+            batch: Vec::<(u16, f64)>::decode(r)?,
+            rng: Rng::decode(r)?,
+        })
     }
 }
 

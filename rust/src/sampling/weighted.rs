@@ -38,8 +38,9 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::core::{Item, MAX_STRATA};
+use crate::core::{Error, Item, Result, MAX_STRATA};
 use crate::error::estimator::StrataState;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::util::rng::Rng;
 
 use super::{SampleResult, Sampler, SamplerKind};
@@ -308,6 +309,87 @@ impl Sampler for WeightedResSampler {
 
     fn kind(&self) -> SamplerKind {
         SamplerKind::WeightedRes
+    }
+}
+
+/// Heap codec: residents are encoded in `buf.iter()` order, i.e. the
+/// heap's underlying array.  That array already satisfies the heap
+/// invariant, so rebuilding with `BinaryHeap::from` (Floyd heapify, which
+/// never moves a node that already dominates its children) reproduces the
+/// identical internal layout — and therefore the identical `items()`
+/// emission order, which downstream f64 accumulation order depends on.
+impl<T: Snapshot + Copy> Snapshot for WeightedReservoir<T> {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.cap);
+        w.put_usize(self.buf.len());
+        for k in self.buf.iter() {
+            w.put_f64(k.key);
+            k.item.encode(w);
+        }
+        w.put_f64(self.acc);
+        w.put_f64(self.jump);
+        w.put_u64(self.seen);
+        w.put_f64(self.weight_seen);
+        self.rng.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let cap = r.get_usize()?;
+        let n = r.get_usize()?;
+        if n > cap || n > r.remaining() {
+            return Err(Error::Io(format!(
+                "weighted-reservoir snapshot resident count {n} exceeds capacity {cap} \
+                 or remaining payload (corrupt payload)"
+            )));
+        }
+        let mut residents = Vec::with_capacity(n);
+        for _ in 0..n {
+            let key = r.get_f64()?;
+            let item = T::decode(r)?;
+            residents.push(Keyed { key, item });
+        }
+        Ok(Self {
+            cap,
+            buf: BinaryHeap::from(residents),
+            acc: r.get_f64()?,
+            jump: r.get_f64()?,
+            seen: r.get_u64()?,
+            weight_seen: r.get_f64()?,
+            rng: Rng::decode(r)?,
+        })
+    }
+}
+
+/// Same scaffolding as [`OasrsSampler`]'s snapshot (SYNC CONTRACT above):
+/// per-stratum reservoirs, counters, EWMA arrivals, capacities, the base
+/// seed, and the interval counter that salts per-stratum reservoir seeds.
+impl Snapshot for WeightedResSampler {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_f64(self.fraction);
+        self.reservoirs.encode(w);
+        self.counters.encode(w);
+        self.ewma_arrivals.encode(w);
+        self.caps.encode(w);
+        w.put_u64(self.seed);
+        w.put_u64(self.interval);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let fraction = r.get_f64()?;
+        let reservoirs = Vec::<Option<WeightedReservoir<f64>>>::decode(r)?;
+        if reservoirs.len() != MAX_STRATA {
+            return Err(Error::Io(format!(
+                "weighted sampler snapshot has {} strata slots, expected {MAX_STRATA}",
+                reservoirs.len()
+            )));
+        }
+        Ok(Self {
+            fraction,
+            reservoirs,
+            counters: <[f64; MAX_STRATA]>::decode(r)?,
+            ewma_arrivals: <[f64; MAX_STRATA]>::decode(r)?,
+            caps: <[usize; MAX_STRATA]>::decode(r)?,
+            seed: r.get_u64()?,
+            interval: r.get_u64()?,
+        })
     }
 }
 

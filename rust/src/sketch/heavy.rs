@@ -259,6 +259,51 @@ impl HeavyHitters {
     }
 }
 
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+impl Snapshot for CountMin {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.width);
+        w.put_usize(self.depth);
+        self.counters.encode(w);
+        w.put_f64(self.total);
+        w.put_u64(self.seed);
+    }
+    fn decode(r: &mut SnapshotReader) -> crate::core::Result<Self> {
+        let width = r.get_usize()?;
+        let depth = r.get_usize()?;
+        let counters = Vec::<f64>::decode(r)?;
+        if counters.len() != width.saturating_mul(depth) {
+            return Err(crate::core::Error::Io(format!(
+                "CountMin snapshot has {} counters, expected {width}x{depth}",
+                counters.len()
+            )));
+        }
+        Ok(Self { width, depth, counters, total: r.get_f64()?, seed: r.get_u64()? })
+    }
+}
+
+impl Snapshot for HeavyHitters {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.cm.encode(w);
+        // BTreeSet iterates key-ascending — a canonical, deterministic order.
+        let keys: Vec<u64> = self.candidates.iter().copied().collect();
+        keys.encode(w);
+        w.put_usize(self.capacity);
+        w.put_f64(self.min_floor);
+    }
+    fn decode(r: &mut SnapshotReader) -> crate::core::Result<Self> {
+        let cm = CountMin::decode(r)?;
+        let keys = Vec::<u64>::decode(r)?;
+        Ok(Self {
+            cm,
+            candidates: keys.into_iter().collect(),
+            capacity: r.get_usize()?,
+            min_floor: r.get_f64()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

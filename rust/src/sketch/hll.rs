@@ -116,6 +116,26 @@ impl HyperLogLog {
     }
 }
 
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+impl Snapshot for HyperLogLog {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u8(self.p);
+        w.put_bytes(&self.regs);
+    }
+    fn decode(r: &mut SnapshotReader) -> crate::core::Result<Self> {
+        let p = r.get_u8()?;
+        let regs = r.get_bytes()?;
+        if !(4..=18).contains(&p) || regs.len() != 1usize << p {
+            return Err(crate::core::Error::Io(format!(
+                "HLL snapshot precision {p} with {} registers is inconsistent",
+                regs.len()
+            )));
+        }
+        Ok(Self { p, regs })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

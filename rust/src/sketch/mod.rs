@@ -35,7 +35,9 @@ pub mod heavy;
 pub mod hll;
 pub mod quantile;
 
+use crate::core::{Error, Result};
 use crate::error::estimator::{weight_from, weights_for};
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 use crate::sampling::SampleResult;
 
 pub use heavy::{CountMin, HeavyHitters};
@@ -187,6 +189,68 @@ impl PaneSketch {
                 | (PaneSketch::Distinct(_), SketchSpec::Distinct { .. })
                 | (PaneSketch::TopK(_), SketchSpec::TopK { .. })
         )
+    }
+}
+
+impl Snapshot for SketchSpec {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        match *self {
+            SketchSpec::Quantile { clusters } => {
+                w.put_u8(0);
+                w.put_usize(clusters);
+            }
+            SketchSpec::Distinct { precision } => {
+                w.put_u8(1);
+                w.put_u8(precision);
+            }
+            SketchSpec::TopK { capacity, cm_width, cm_depth, seed } => {
+                w.put_u8(2);
+                w.put_usize(capacity);
+                w.put_usize(cm_width);
+                w.put_usize(cm_depth);
+                w.put_u64(seed);
+            }
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(match r.get_u8()? {
+            0 => SketchSpec::Quantile { clusters: r.get_usize()? },
+            1 => SketchSpec::Distinct { precision: r.get_u8()? },
+            2 => SketchSpec::TopK {
+                capacity: r.get_usize()?,
+                cm_width: r.get_usize()?,
+                cm_depth: r.get_usize()?,
+                seed: r.get_u64()?,
+            },
+            other => return Err(Error::Io(format!("unknown sketch spec tag {other}"))),
+        })
+    }
+}
+
+impl Snapshot for PaneSketch {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        match self {
+            PaneSketch::Quantile(sk) => {
+                w.put_u8(0);
+                sk.encode(w);
+            }
+            PaneSketch::Distinct(sk) => {
+                w.put_u8(1);
+                sk.encode(w);
+            }
+            PaneSketch::TopK(sk) => {
+                w.put_u8(2);
+                sk.encode(w);
+            }
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(match r.get_u8()? {
+            0 => PaneSketch::Quantile(QuantileSketch::decode(r)?),
+            1 => PaneSketch::Distinct(HyperLogLog::decode(r)?),
+            2 => PaneSketch::TopK(HeavyHitters::decode(r)?),
+            other => return Err(Error::Io(format!("unknown pane sketch tag {other}"))),
+        })
     }
 }
 

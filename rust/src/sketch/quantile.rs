@@ -281,6 +281,36 @@ impl QuantileSketch {
     }
 }
 
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+/// Full-state codec: centroids *and* the uncompacted buffer travel, so a
+/// restored sketch answers and compacts exactly like the original (a
+/// compact-on-encode would instead advance the drift odometer).
+impl Snapshot for QuantileSketch {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.clusters);
+        self.centroids.encode(w);
+        self.buffer.encode(w);
+        w.put_f64(self.total_weight);
+        w.put_f64(self.min);
+        w.put_f64(self.max);
+        w.put_u32(self.depth);
+        w.put_bool(self.buffered_summaries);
+    }
+    fn decode(r: &mut SnapshotReader) -> crate::core::Result<Self> {
+        Ok(Self {
+            clusters: r.get_usize()?,
+            centroids: Vec::<(f64, f64)>::decode(r)?,
+            buffer: Vec::<(f64, f64)>::decode(r)?,
+            total_weight: r.get_f64()?,
+            min: r.get_f64()?,
+            max: r.get_f64()?,
+            depth: r.get_u32()?,
+            buffered_summaries: r.get_bool()?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -41,6 +41,20 @@ impl Rng {
         Self { s, gauss_spare: None }
     }
 
+    /// Raw generator state for snapshotting: the four xoshiro words plus
+    /// the cached Box-Muller spare.  Restoring via [`Rng::from_state`]
+    /// continues the stream exactly where it left off — bit-identical to a
+    /// generator that was never serialized, including a pending Gaussian
+    /// half-pair.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from [`Rng::state`] output.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Self {
+        Self { s, gauss_spare }
+    }
+
     /// Next raw 64 bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

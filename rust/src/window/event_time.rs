@@ -308,6 +308,46 @@ impl DropLedger {
     }
 }
 
+use crate::core::Result;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+/// The ledger travels in every checkpoint: a crash between a late-drop
+/// charge and the window emission that would consume it must not lose (or
+/// double-count) the missing mass — recovery replays the emission against
+/// the *restored* per-pane charges, widening exactly one window by exactly
+/// the recorded amount (satellite 3 of the recovery suite pins this).
+impl Snapshot for DropLedger {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.interval_ms);
+        w.put_usize(self.per_pane.len());
+        for (pane, drops) in &self.per_pane {
+            w.put_u64(*pane);
+            drops.encode(w);
+        }
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let interval_ms = r.get_u64()?;
+        if interval_ms == 0 {
+            return Err(crate::core::Error::Io(
+                "drop ledger snapshot has zero pane interval (corrupt payload)".into(),
+            ));
+        }
+        let n = r.get_usize()?;
+        if n > r.remaining() {
+            return Err(crate::core::Error::Io(format!(
+                "drop ledger snapshot claims {n} panes but only {} bytes remain",
+                r.remaining()
+            )));
+        }
+        let mut per_pane = BTreeMap::new();
+        for _ in 0..n {
+            let pane = r.get_u64()?;
+            per_pane.insert(pane, LateDrops::decode(r)?);
+        }
+        Ok(Self { interval_ms, per_pane })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

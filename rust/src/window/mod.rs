@@ -442,6 +442,104 @@ impl WindowAssembler {
     }
 }
 
+use crate::core::Result;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
+
+impl Snapshot for ExactAgg {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.count.encode(w);
+        self.sum.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            count: <[f64; MAX_STRATA]>::decode(r)?,
+            sum: <[f64; MAX_STRATA]>::decode(r)?,
+        })
+    }
+}
+
+impl Snapshot for WindowConfig {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_u64(self.size_ms);
+        w.put_u64(self.slide_ms);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        // Bypass `new`'s asserts: a corrupt frame must surface as an error,
+        // and a frame that decodes got its invariants checked at write time.
+        Ok(Self { size_ms: r.get_u64()?, slide_ms: r.get_u64()? })
+    }
+}
+
+impl Snapshot for PaneMeta {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.sample_len);
+        self.state.encode(w);
+        self.exact.encode(w);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        Ok(Self {
+            sample_len: r.get_usize()?,
+            state: StrataState::decode(r)?,
+            exact: ExactAgg::decode(r)?,
+        })
+    }
+}
+
+/// Whole-assembler codec: pane ring, concatenated sample deque (in pane
+/// order), active-strata mask, spill flag, and the interval clock — a
+/// restored assembler emits the same windows at the same boundaries,
+/// byte-for-byte, because the ring-order fold sees the identical metas.
+impl Snapshot for WindowAssembler {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        self.config.encode(w);
+        w.put_u64(self.interval_ms);
+        w.put_usize(self.panes.len());
+        for meta in &self.panes {
+            meta.encode(w);
+        }
+        w.put_usize(self.sample.len());
+        for item in &self.sample {
+            item.encode(w);
+        }
+        self.active.encode(w);
+        w.put_bool(self.spill);
+        w.put_u64(self.next_interval_end);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let config = WindowConfig::decode(r)?;
+        let interval_ms = r.get_u64()?;
+        let n_panes = r.get_usize()?;
+        if n_panes > r.remaining() {
+            return Err(crate::core::Error::Io(format!(
+                "assembler snapshot pane count {n_panes} exceeds remaining payload"
+            )));
+        }
+        let mut panes = VecDeque::with_capacity(n_panes);
+        for _ in 0..n_panes {
+            panes.push_back(PaneMeta::decode(r)?);
+        }
+        let n_sample = r.get_usize()?;
+        if n_sample > r.remaining() {
+            return Err(crate::core::Error::Io(format!(
+                "assembler snapshot sample length {n_sample} exceeds remaining payload"
+            )));
+        }
+        let mut sample = VecDeque::with_capacity(n_sample);
+        for _ in 0..n_sample {
+            sample.push_back(<(u16, f64)>::decode(r)?);
+        }
+        Ok(Self {
+            config,
+            interval_ms,
+            panes,
+            sample,
+            active: <[bool; MAX_STRATA]>::decode(r)?,
+            spill: r.get_bool()?,
+            next_interval_end: r.get_u64()?,
+        })
+    }
+}
+
 /// The seed's merge-all-intervals assembler, kept verbatim as the
 /// equivalence oracle for the incremental pane path (tests only).
 #[cfg(test)]

@@ -34,6 +34,8 @@
 //! its in-place deque instead (see `super` docs for the split).
 
 use super::mergeable::Mergeable;
+use crate::core::Result;
+use crate::runtime::checkpoint::{Snapshot, SnapshotReader, SnapshotWriter};
 
 /// Sliding ring of the most recent `capacity` panes with two-stacks
 /// incremental aggregation.
@@ -134,6 +136,35 @@ impl<T: Mergeable + Clone> PaneStore<T> {
             (None, Some(prefix)) => Some(prefix.clone()),
             (None, None) => None,
         }
+    }
+}
+
+/// Structural codec: both stacks (with the front's precomputed suffix
+/// aggregates) and the running back prefix travel as-is, so a restored
+/// store performs the *same* flips at the same pushes — `merge_ops` and
+/// every aggregate stay bit-identical to the uninterrupted run.
+impl<T: Mergeable + Clone + Snapshot> Snapshot for PaneStore<T> {
+    fn encode(&self, w: &mut SnapshotWriter) {
+        w.put_usize(self.capacity);
+        self.front.encode(w);
+        self.back.encode(w);
+        self.back_agg.encode(w);
+        w.put_u64(self.merges);
+    }
+    fn decode(r: &mut SnapshotReader) -> Result<Self> {
+        let capacity = r.get_usize()?;
+        if capacity == 0 {
+            return Err(crate::core::Error::Io(
+                "pane store snapshot has zero capacity (corrupt payload)".into(),
+            ));
+        }
+        Ok(Self {
+            capacity,
+            front: Vec::<(T, T)>::decode(r)?,
+            back: Vec::<T>::decode(r)?,
+            back_agg: Option::<T>::decode(r)?,
+            merges: r.get_u64()?,
+        })
     }
 }
 

@@ -15,7 +15,9 @@
 //! drops widen the affected window's confidence interval by exactly the
 //! missing mass.
 
+use streamapprox::engine::WindowReport;
 use streamapprox::prelude::*;
+use streamapprox::runtime::{CheckpointSpec, DurabilityOptions};
 use streamapprox::stream::{DisorderConfig, StreamGenerator};
 use streamapprox::util::rng::Rng;
 use streamapprox::window::{EventTimeConfig, EventTimeRouter};
@@ -346,6 +348,92 @@ fn beyond_lateness_drops_count_exactly_and_widen_the_bound() {
                 .map(|w| w.end_ms)
                 .collect();
             assert_eq!(charged, vec![3_000], "{tag}: charge attribution");
+        }
+    }
+}
+
+/// Recovery preserves the `DropLedger`: with a 500 ms batch interval and a
+/// 1000 ms slide, beyond-lateness drops detected at an *odd* interval
+/// boundary are charged to the ledger one boundary before the affected
+/// window emits.  Crashing in that gap — charge checkpointed, emission
+/// still pending — must not lose or double the charge: the recovered run
+/// still widens exactly one window by the same missing mass, and every
+/// crash point stitches bit-identically to the clean run.
+#[test]
+fn recovery_between_drop_charge_and_window_emission_keeps_the_ledger() {
+    // Same crafted trace as above: 1000 ms event-time panes of ten items,
+    // value 10.0 each; three ts∈[1500,1700] stragglers arrive right after
+    // the first ts=2000 arrival (which seals the 500 ms pane [1500,2000)),
+    // so they are consumed — and dropped — while the engine reads the
+    // [2000,2500) pane at boundary 5, between the window emissions at
+    // boundary 4 (end 2000) and boundary 6 (end 3000).
+    let mut clean_trace: Vec<Item> = Vec::new();
+    for pane in 0..4u64 {
+        for k in 0..10u64 {
+            clean_trace.push(Item::new((k % 3) as u16, 10.0, pane * 1_000 + k * 100));
+        }
+    }
+    let mut disordered = clean_trace.clone();
+    let at = disordered.iter().position(|i| i.ts == 2_000).unwrap();
+    for (j, ts) in [1_500u64, 1_600, 1_700].iter().enumerate() {
+        disordered.insert(at + 1 + j, Item::new(0, 10.0, *ts));
+    }
+
+    let svc = ComputeService::native();
+    let run = |durability: DurabilityOptions| {
+        PipelineBuilder::new()
+            .engine(EngineKind::Batched)
+            .sampler(SamplerKind::None)
+            .budget(QueryBudget::SamplingFraction(1.0))
+            .query(Query::Sum)
+            .window(WindowConfig::new(2_000, 1_000))
+            .batch_interval_ms(500)
+            .event_time(0, 0)
+            .durability(durability)
+            .build_with_handle(svc.handle())
+            .run_items(&disordered)
+            .unwrap()
+    };
+    let clean = run(DurabilityOptions::default());
+    assert_eq!(
+        clean.windows.iter().map(|w| w.late_dropped).sum::<u64>(),
+        3,
+        "the crafted stragglers must drop"
+    );
+
+    let dir_tag = std::process::id();
+    for crash_after in 1..=7u64 {
+        let dir = std::env::temp_dir().join(format!("sax_et_ledger_{dir_tag}_{crash_after}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let crashed = run(DurabilityOptions {
+            checkpoint: Some(CheckpointSpec::new(&dir, 1).with_crash_after(crash_after)),
+            restore_on_start: false,
+        });
+        let recovered =
+            run(DurabilityOptions::default().checkpoint_to(&dir, 1).restore_on_start(true));
+        let tag = format!("ledger crash@{crash_after}");
+        let mut stitched = RunReport::default();
+        stitched.windows.extend(crashed.windows.iter().cloned());
+        stitched.windows.extend(recovered.windows.iter().cloned());
+        assert_windows_byte_identical(&clean, &stitched, &tag);
+        if crash_after == 5 {
+            // The gap this test exists for: the charge predates the crash,
+            // the emission follows it.
+            assert!(
+                crashed.windows.iter().all(|w| w.end_ms < 3_000),
+                "{tag}: the charged window must not have been emitted yet"
+            );
+            let widened: Vec<&WindowReport> =
+                recovered.windows.iter().filter(|w| w.late_dropped > 0).collect();
+            assert_eq!(widened.len(), 1, "{tag}: exactly one window carries the charge");
+            assert_eq!(widened[0].end_ms, 3_000, "{tag}: charge attribution");
+            assert_eq!(widened[0].late_dropped, 3, "{tag}: full missing count");
+            let clean_w = clean.windows.iter().find(|w| w.end_ms == 3_000).unwrap();
+            assert_eq!(
+                widened[0].result.scalar.unwrap().bound.to_bits(),
+                clean_w.result.scalar.unwrap().bound.to_bits(),
+                "{tag}: widened bound must match the clean run's"
+            );
         }
     }
 }

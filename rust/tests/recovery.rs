@@ -1,0 +1,597 @@
+//! Seeded crash-injection determinism suite for checkpoint/restore.
+//!
+//! The headline contract: a seeded run interrupted at *any* interval
+//! boundary and restored from its newest snapshot is bit-identical to the
+//! uninterrupted run — the crashed run's windows concatenated with the
+//! recovered run's windows equal the clean run's windows field for field
+//! (`to_bits` on every float), for every sampler kind, on both engines,
+//! single- and multi-worker.  Checkpointing itself must not perturb the
+//! run: a checkpointed run matches a plain run byte for byte.
+//!
+//! Around it: torn-write/corrupt-snapshot rejection with fallback to the
+//! previous epoch (pinned, exact-once accounting), version/fingerprint/
+//! budget mismatch rejection with descriptive errors, adaptive-budget
+//! feedback state surviving the crash, and sketch-backed answers (top-k
+//! lists, quantiles, distinct counts) surviving recovery unchanged.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// The two corruption tests below tick the global
+/// `recovery_fallbacks_total` counter; this serializes them so the
+/// exact-once delta assertion cannot be perturbed by a parallel test.
+static FALLBACK_COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+use streamapprox::engine::WindowReport;
+use streamapprox::prelude::*;
+use streamapprox::runtime::{CheckpointSpec, CheckpointStore, DurabilityOptions};
+use streamapprox::stream::StreamGenerator;
+
+const ALL_SAMPLERS: [SamplerKind; 5] = [
+    SamplerKind::Oasrs,
+    SamplerKind::Srs,
+    SamplerKind::Sts,
+    SamplerKind::WeightedRes,
+    SamplerKind::None,
+];
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let dir =
+        std::env::temp_dir().join(format!("sax_recovery_{tag}_{}_{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Event-time-sorted trace (both engines expect a sorted broker log).
+fn sorted_trace(rate: f64, seed: u64, dur_ms: u64) -> Vec<Item> {
+    let mut items =
+        StreamGenerator::new(&StreamConfig::gaussian_micro(rate, seed)).take_until(dur_ms);
+    items.sort_by_key(|i| i.ts);
+    items
+}
+
+fn build(
+    svc: &ComputeService,
+    engine: EngineKind,
+    sampler: SamplerKind,
+    query: Query,
+    workers: usize,
+    budget: QueryBudget,
+    durability: DurabilityOptions,
+) -> Pipeline {
+    PipelineBuilder::new()
+        .engine(engine)
+        .sampler(sampler)
+        // Fixed fraction by default: the pipelined engine's window-feedback
+        // channel is racy under adaptive budgets, so only a constant
+        // fraction is replay-deterministic there (the batched engine's
+        // adaptive path is covered by its own test below).
+        .budget(budget)
+        .query(query)
+        .window(WindowConfig::new(2_000, 1_000))
+        .batch_interval_ms(500)
+        .workers(workers)
+        .seed(7177)
+        .durability(durability)
+        .build_with_handle(svc.handle())
+}
+
+fn ckpt_every(dir: &PathBuf) -> DurabilityOptions {
+    DurabilityOptions::default().checkpoint_to(dir, 1)
+}
+
+fn crash_at(dir: &PathBuf, n: u64) -> DurabilityOptions {
+    DurabilityOptions {
+        checkpoint: Some(CheckpointSpec::new(dir, 1).with_crash_after(n)),
+        restore_on_start: false,
+    }
+}
+
+fn restore_from(dir: &PathBuf) -> DurabilityOptions {
+    DurabilityOptions::default().checkpoint_to(dir, 1).restore_on_start(true)
+}
+
+fn assert_window_bits(x: &WindowReport, y: &WindowReport, tag: &str) {
+    let w = format!("{tag} window {}-{}", x.start_ms, x.end_ms);
+    assert_eq!(x.start_ms, y.start_ms, "{w}: start");
+    assert_eq!(x.end_ms, y.end_ms, "{w}: end");
+    assert_eq!(x.sampled, y.sampled, "{w}: sample size");
+    assert_eq!(x.arrived.to_bits(), y.arrived.to_bits(), "{w}: arrived");
+    assert_eq!(x.late_dropped, y.late_dropped, "{w}: late_dropped");
+    assert_eq!(
+        x.result.value().to_bits(),
+        y.result.value().to_bits(),
+        "{w}: estimate {} vs {}",
+        x.result.value(),
+        y.result.value()
+    );
+    match (x.result.scalar, y.result.scalar) {
+        (Some(a), Some(b)) => assert_eq!(a.bound.to_bits(), b.bound.to_bits(), "{w}: bound"),
+        (None, None) => {}
+        _ => panic!("{w}: scalar presence diverged"),
+    }
+    match (&x.result.per_stratum, &y.result.per_stratum) {
+        (Some(a), Some(b)) => {
+            let a: Vec<u64> = a.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{w}: per-stratum");
+        }
+        (None, None) => {}
+        _ => panic!("{w}: per-stratum presence diverged"),
+    }
+    match (&x.result.top_k, &y.result.top_k) {
+        (Some(a), Some(b)) => {
+            let a: Vec<(u64, u64)> = a.iter().map(|&(k, v)| (k, v.to_bits())).collect();
+            let b: Vec<(u64, u64)> = b.iter().map(|&(k, v)| (k, v.to_bits())).collect();
+            assert_eq!(a, b, "{w}: top-k ranking");
+        }
+        (None, None) => {}
+        _ => panic!("{w}: top-k presence diverged"),
+    }
+    match (x.exact_scalar, y.exact_scalar) {
+        (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "{w}: exact"),
+        (None, None) => {}
+        _ => panic!("{w}: exact presence diverged"),
+    }
+}
+
+fn assert_reports_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.windows.len(), b.windows.len(), "{tag}: window count");
+    for (x, y) in a.windows.iter().zip(&b.windows) {
+        assert_window_bits(x, y, tag);
+    }
+}
+
+/// crashed ++ recovered == clean, field for field.
+fn assert_stitch_equals_clean(
+    clean: &RunReport,
+    crashed: &RunReport,
+    recovered: &RunReport,
+    tag: &str,
+) {
+    assert_eq!(
+        crashed.windows.len() + recovered.windows.len(),
+        clean.windows.len(),
+        "{tag}: stitched window count ({} crashed + {} recovered)",
+        crashed.windows.len(),
+        recovered.windows.len()
+    );
+    let stitched = crashed.windows.iter().chain(&recovered.windows);
+    for (c, s) in clean.windows.iter().zip(stitched) {
+        assert_window_bits(c, s, tag);
+    }
+}
+
+/// Epochs the clean checkpointed run wrote — one per interval boundary.
+fn boundaries(dir: &PathBuf) -> Vec<u64> {
+    CheckpointStore::open(dir).expect("store").epochs().expect("epochs")
+}
+
+// ---------------------------------------------------------------------------
+// the headline: crash at every boundary × all samplers × both engines
+// ---------------------------------------------------------------------------
+
+/// Crash-injection matrix: every interval boundary, all five sampler
+/// kinds, both engines, single-worker.  Also pins that snapshotting does
+/// not perturb a run (checkpointed == plain, byte for byte).
+#[test]
+fn crash_at_every_boundary_all_samplers_both_engines() {
+    let svc = ComputeService::native();
+    let items = sorted_trace(200.0, 31, 4_000);
+    let budget = QueryBudget::SamplingFraction(0.4);
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        for sampler in ALL_SAMPLERS {
+            let tag = format!("{engine:?}/{sampler:?}");
+            let plain = build(
+                &svc,
+                engine,
+                sampler,
+                Query::Sum,
+                1,
+                budget,
+                DurabilityOptions::default(),
+            )
+            .run_items(&items)
+            .unwrap();
+            let clean_dir = tmp_dir("clean");
+            let clean =
+                build(&svc, engine, sampler, Query::Sum, 1, budget, ckpt_every(&clean_dir))
+                    .run_items(&items)
+                    .unwrap();
+            assert_reports_identical(&plain, &clean, &format!("{tag}: ckpt-on vs off"));
+
+            let epochs = boundaries(&clean_dir);
+            assert!(
+                epochs.len() >= 4,
+                "{tag}: only {} interval boundaries — trace too short",
+                epochs.len()
+            );
+            for &n in &epochs {
+                let dir = tmp_dir("crash");
+                let crashed =
+                    build(&svc, engine, sampler, Query::Sum, 1, budget, crash_at(&dir, n))
+                        .run_items(&items)
+                        .unwrap();
+                let recovered =
+                    build(&svc, engine, sampler, Query::Sum, 1, budget, restore_from(&dir))
+                        .run_items(&items)
+                        .unwrap();
+                assert_stitch_equals_clean(
+                    &clean,
+                    &crashed,
+                    &recovered,
+                    &format!("{tag} crash@{n}"),
+                );
+            }
+        }
+    }
+}
+
+/// Multi-worker pools recover bit-identically: per-worker RNG streams,
+/// the round-robin transport cursor, and STS's two-phase batch state all
+/// restore to exactly where the crash left them.
+#[test]
+fn multi_worker_recovery_is_bit_identical() {
+    let svc = ComputeService::native();
+    let items = sorted_trace(300.0, 47, 4_000);
+    let budget = QueryBudget::SamplingFraction(0.4);
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        for sampler in [SamplerKind::Oasrs, SamplerKind::Sts, SamplerKind::WeightedRes] {
+            let tag = format!("{engine:?}/{sampler:?}/3-workers");
+            let clean_dir = tmp_dir("mw_clean");
+            let clean =
+                build(&svc, engine, sampler, Query::Sum, 3, budget, ckpt_every(&clean_dir))
+                    .run_items(&items)
+                    .unwrap();
+            let epochs = boundaries(&clean_dir);
+            let picks = [epochs[epochs.len() / 2], *epochs.last().unwrap()];
+            for n in picks {
+                let dir = tmp_dir("mw_crash");
+                let crashed =
+                    build(&svc, engine, sampler, Query::Sum, 3, budget, crash_at(&dir, n))
+                        .run_items(&items)
+                        .unwrap();
+                let recovered =
+                    build(&svc, engine, sampler, Query::Sum, 3, budget, restore_from(&dir))
+                        .run_items(&items)
+                        .unwrap();
+                assert_stitch_equals_clean(
+                    &clean,
+                    &crashed,
+                    &recovered,
+                    &format!("{tag} crash@{n}"),
+                );
+            }
+        }
+    }
+}
+
+/// The feedback-EWMA controller's state is part of the snapshot: under an
+/// adaptive accuracy budget the recovered run continues the *same*
+/// fraction trajectory the clean run followed (batched engine — the only
+/// one whose feedback point is replay-deterministic).
+#[test]
+fn adaptive_budget_feedback_state_survives_crash() {
+    let svc = ComputeService::native();
+    let items = sorted_trace(250.0, 53, 4_000);
+    let budget = QueryBudget::TargetRelativeError { target: 0.02, initial_fraction: 0.5 };
+    let clean_dir = tmp_dir("adapt_clean");
+    let run = |durability: DurabilityOptions| {
+        build(
+            &svc,
+            EngineKind::Batched,
+            SamplerKind::Oasrs,
+            Query::Sum,
+            1,
+            budget,
+            durability,
+        )
+        .run_items(&items)
+        .unwrap()
+    };
+    let clean = run(ckpt_every(&clean_dir));
+    for &n in &boundaries(&clean_dir) {
+        let dir = tmp_dir("adapt_crash");
+        let crashed = run(crash_at(&dir, n));
+        let recovered = run(restore_from(&dir));
+        assert_stitch_equals_clean(&clean, &crashed, &recovered, &format!("adaptive crash@{n}"));
+    }
+}
+
+/// Sketch-backed answers survive recovery unchanged: pane-sketch partials
+/// (quantile clusters, HLL registers, Count-Min + heavy-hitter entries)
+/// restore from the snapshot, and the recovered windows report the same
+/// top-k rankings, quantiles, and distinct counts as the clean run.
+#[test]
+fn sketch_answers_survive_recovery() {
+    let svc = ComputeService::native();
+    let items = sorted_trace(300.0, 61, 4_000);
+    let budget = QueryBudget::SamplingFraction(0.5);
+    for engine in [EngineKind::Batched, EngineKind::Pipelined] {
+        for query in [Query::TopK(4), Query::Quantile(0.9), Query::Distinct] {
+            let tag = format!("{engine:?}/{query:?}");
+            let clean_dir = tmp_dir("sk_clean");
+            let clean = build(
+                &svc,
+                engine,
+                SamplerKind::Oasrs,
+                query.clone(),
+                1,
+                budget,
+                ckpt_every(&clean_dir),
+            )
+            .run_items(&items)
+            .unwrap();
+            let epochs = boundaries(&clean_dir);
+            let n = epochs[epochs.len() / 2];
+            let dir = tmp_dir("sk_crash");
+            let crashed = build(
+                &svc,
+                engine,
+                SamplerKind::Oasrs,
+                query.clone(),
+                1,
+                budget,
+                crash_at(&dir, n),
+            )
+            .run_items(&items)
+            .unwrap();
+            let recovered = build(
+                &svc,
+                engine,
+                SamplerKind::Oasrs,
+                query.clone(),
+                1,
+                budget,
+                restore_from(&dir),
+            )
+            .run_items(&items)
+            .unwrap();
+            if matches!(query, Query::TopK(_)) {
+                assert!(
+                    clean.windows.iter().any(|w| w.result.top_k.is_some()),
+                    "{tag}: no top-k output to compare"
+                );
+            }
+            assert_stitch_equals_clean(&clean, &crashed, &recovered, &format!("{tag} crash@{n}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// torn writes, corrupt snapshots, fallback accounting
+// ---------------------------------------------------------------------------
+
+/// Corrupting the newest epoch (bit-flip, truncation, or an empty torn
+/// file) makes recovery fall back to the previous epoch — skipping exactly
+/// one file, ticking `recovery_fallbacks_total` exactly once — and the
+/// fallback recovery is bit-identical to a recovery that never saw the
+/// corrupt epoch.
+#[test]
+fn corrupt_newest_epoch_falls_back_exactly_once() {
+    let _serial =
+        FALLBACK_COUNTER_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let svc = ComputeService::native();
+    let items = sorted_trace(200.0, 71, 4_000);
+    let budget = QueryBudget::SamplingFraction(0.4);
+    let run = |sampler, durability: DurabilityOptions| {
+        build(&svc, EngineKind::Batched, sampler, Query::Sum, 1, budget, durability)
+            .run_items(&items)
+            .unwrap()
+    };
+
+    // Reference: crash at boundary n-1 and recover — the trajectory a
+    // fallback from a corrupt epoch n must reproduce exactly.
+    let probe_dir = tmp_dir("fb_probe");
+    run(SamplerKind::Oasrs, ckpt_every(&probe_dir));
+    let epochs = boundaries(&probe_dir);
+    let n = epochs[epochs.len() / 2];
+    assert!(n >= 2, "need at least two epochs before the crash point");
+    let ref_dir = tmp_dir("fb_ref");
+    run(SamplerKind::Oasrs, crash_at(&ref_dir, n - 1));
+    let reference = run(SamplerKind::Oasrs, restore_from(&ref_dir));
+
+    let corruptions: [(&str, fn(&PathBuf)); 3] = [
+        ("bit-flip", |p| {
+            let mut bytes = std::fs::read(p).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+            std::fs::write(p, bytes).unwrap();
+        }),
+        ("truncate", |p| {
+            let bytes = std::fs::read(p).unwrap();
+            std::fs::write(p, &bytes[..bytes.len() / 3]).unwrap();
+        }),
+        ("torn-empty", |p| {
+            std::fs::write(p, []).unwrap();
+        }),
+    ];
+    for (mode, corrupt) in corruptions {
+        let dir = tmp_dir("fb_crash");
+        run(SamplerKind::Oasrs, crash_at(&dir, n));
+        let store = CheckpointStore::open(&dir).unwrap();
+        corrupt(&store.epoch_path(n));
+
+        // Pin the accounting: the loader skips exactly the one corrupt
+        // file, lands on epoch n-1, and ticks the fallback counter once.
+        let before = streamapprox::obs::global().snapshot();
+        let loaded = store.load_latest().unwrap().expect("a valid epoch remains");
+        let delta = streamapprox::obs::global().snapshot().delta(&before);
+        assert_eq!(loaded.epoch, n - 1, "{mode}: fallback epoch");
+        assert_eq!(loaded.skipped, 1, "{mode}: exactly one file skipped");
+        assert_eq!(
+            delta.counter("recovery_fallbacks_total"),
+            1,
+            "{mode}: fallback counter must tick exactly once"
+        );
+
+        let recovered = run(SamplerKind::Oasrs, restore_from(&dir));
+        assert_reports_identical(
+            &reference,
+            &recovered,
+            &format!("{mode}: fallback recovery vs clean epoch-{} recovery", n - 1),
+        );
+    }
+}
+
+/// When every epoch is corrupt there is nothing to fall back to: recovery
+/// reports the torn write instead of silently starting fresh.
+#[test]
+fn all_epochs_corrupt_is_an_error_not_a_fresh_start() {
+    let _serial =
+        FALLBACK_COUNTER_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let svc = ComputeService::native();
+    let items = sorted_trace(200.0, 73, 3_000);
+    let budget = QueryBudget::SamplingFraction(0.4);
+    let dir = tmp_dir("all_corrupt");
+    build(
+        &svc,
+        EngineKind::Batched,
+        SamplerKind::Srs,
+        Query::Sum,
+        1,
+        budget,
+        ckpt_every(&dir),
+    )
+    .run_items(&items)
+    .unwrap();
+    let store = CheckpointStore::open(&dir).unwrap();
+    let epochs = store.epochs().unwrap();
+    assert!(!epochs.is_empty());
+    for &e in &epochs {
+        let p = store.epoch_path(e);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF; // breaks the FNV-1a checksum
+        std::fs::write(&p, bytes).unwrap();
+    }
+    let err = build(
+        &svc,
+        EngineKind::Batched,
+        SamplerKind::Srs,
+        Query::Sum,
+        1,
+        budget,
+        restore_from(&dir),
+    )
+    .run_items(&items)
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("checksum mismatch"),
+        "want the torn-write diagnosis, got: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// version / fingerprint / budget mismatch rejection
+// ---------------------------------------------------------------------------
+
+/// A snapshot from a different codec version, a different pipeline
+/// configuration, or a different budget family is rejected with a
+/// descriptive error — never silently reinterpreted.
+#[test]
+fn mismatched_snapshots_are_rejected_with_descriptive_errors() {
+    let svc = ComputeService::native();
+    let items = sorted_trace(200.0, 79, 3_000);
+    let budget = QueryBudget::SamplingFraction(0.4);
+    let dir = tmp_dir("mismatch");
+    build(
+        &svc,
+        EngineKind::Batched,
+        SamplerKind::Oasrs,
+        Query::Sum,
+        1,
+        budget,
+        ckpt_every(&dir),
+    )
+    .run_items(&items)
+    .unwrap();
+
+    // Different seed → fingerprint check names the diverging field.
+    let err = PipelineBuilder::new()
+        .engine(EngineKind::Batched)
+        .sampler(SamplerKind::Oasrs)
+        .budget(budget)
+        .query(Query::Sum)
+        .window(WindowConfig::new(2_000, 1_000))
+        .batch_interval_ms(500)
+        .seed(9999)
+        .durability(restore_from(&dir))
+        .build_with_handle(svc.handle())
+        .run_items(&items)
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("different configuration"),
+        "want fingerprint rejection, got: {err}"
+    );
+
+    // Different budget family → discriminant check.
+    let err = build(
+        &svc,
+        EngineKind::Batched,
+        SamplerKind::Oasrs,
+        Query::Sum,
+        1,
+        QueryBudget::SampleSizePerInterval(64),
+        restore_from(&dir),
+    )
+    .run_items(&items)
+    .unwrap_err();
+    assert!(err.to_string().contains("budget"), "want budget rejection, got: {err}");
+
+    // Future codec version → version check (bytes 4..6 are the LE version
+    // in the frame header).
+    let store = CheckpointStore::open(&dir).unwrap();
+    let newest = *store.epochs().unwrap().last().unwrap();
+    let p = store.epoch_path(newest);
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[4] = 0x63; // v99
+    bytes[5] = 0x00;
+    std::fs::write(&p, bytes).unwrap();
+    let err = store.read_epoch(newest).unwrap_err();
+    assert!(
+        err.to_string().contains("version mismatch"),
+        "want version rejection, got: {err}"
+    );
+
+    // An empty directory has nothing to restore.
+    let empty = tmp_dir("mismatch_empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = build(
+        &svc,
+        EngineKind::Batched,
+        SamplerKind::Oasrs,
+        Query::Sum,
+        1,
+        budget,
+        restore_from(&empty),
+    )
+    .run_items(&items)
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("no snapshot"),
+        "want empty-store rejection, got: {err}"
+    );
+}
+
+/// Restore-on-start without a checkpoint directory is a config error at
+/// the facade, before any engine work happens.
+#[test]
+fn restore_without_checkpoint_dir_is_rejected() {
+    let svc = ComputeService::native();
+    let err = build(
+        &svc,
+        EngineKind::Batched,
+        SamplerKind::Oasrs,
+        Query::Sum,
+        1,
+        QueryBudget::SamplingFraction(0.4),
+        DurabilityOptions::default().restore_on_start(true),
+    )
+    .run_items(&sorted_trace(100.0, 83, 1_000))
+    .unwrap_err();
+    assert!(err.to_string().contains("checkpoint directory"), "got: {err}");
+}

@@ -1,0 +1,363 @@
+//! SnapshotCodec property suite: serialize → restore → continue offering
+//! is bit-identical to never having snapshotted, for every Mergeable
+//! payload and sampler kind, across seeds and chunk sizes — including
+//! mid-dense-phase and mid-skip Algorithm-L reservoir states and
+//! mid-interval buffered batch state.  Plus the negative paths: trailing
+//! bytes, truncation, bad magic, version mismatch, and checksum damage
+//! all reject with descriptive `Error::Io`/`Error::Config`.
+
+use streamapprox::core::Error;
+use streamapprox::engine::IngestPool;
+use streamapprox::error::estimator::LateDrops;
+use streamapprox::prelude::*;
+use streamapprox::runtime::checkpoint::{decode_frame, encode_frame};
+use streamapprox::runtime::Snapshot;
+use streamapprox::sampling::{Reservoir, SampleResult, WeightedReservoir};
+use streamapprox::stream::StreamGenerator;
+use streamapprox::util::rng::Rng;
+use streamapprox::window::DropLedger;
+
+/// Round-trip through the codec and pin the canonical form: decoding and
+/// re-encoding must reproduce the exact bytes.
+fn roundtrip<T: Snapshot>(x: &T, tag: &str) -> T {
+    let bytes = x.to_snapshot_bytes();
+    let decoded = T::from_snapshot_bytes(&bytes).unwrap_or_else(|e| panic!("{tag}: {e}"));
+    assert_eq!(decoded.to_snapshot_bytes(), bytes, "{tag}: re-encode differs");
+    decoded
+}
+
+fn trace(rate: f64, seed: u64, dur_ms: u64) -> Vec<Item> {
+    let mut items =
+        StreamGenerator::new(&StreamConfig::gaussian_micro(rate, seed)).take_until(dur_ms);
+    items.sort_by_key(|i| i.ts);
+    items
+}
+
+// ---------------------------------------------------------------------------
+// RNG and reservoir states
+// ---------------------------------------------------------------------------
+
+/// The RNG stream continues bit-identically through a snapshot.
+#[test]
+fn rng_stream_continues_through_snapshot() {
+    for seed in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+        let mut a = Rng::seed_from_u64(seed);
+        for _ in 0..100 {
+            a.next_u64();
+        }
+        let mut b = roundtrip(&a, &format!("rng seed {seed}"));
+        for i in 0..1_000 {
+            assert_eq!(a.next_u64(), b.next_u64(), "seed {seed}: draw {i} diverged");
+        }
+    }
+}
+
+/// Algorithm-L reservoirs snapshot mid-dense-phase (still filling) and
+/// mid-skip (geometric skip counter engaged) and continue bit-identically:
+/// same surviving items, same seen count, same skip state, same future
+/// acceptances.
+#[test]
+fn reservoir_roundtrip_continues_from_dense_and_skip_phases() {
+    let mut dense_covered = false;
+    let mut skip_covered = false;
+    for cap in [8usize, 64] {
+        for seed in 0..4u64 {
+            for prefix in [0usize, 3, cap - 1, cap, cap + 1, 20 * cap] {
+                let tag = format!("cap {cap} seed {seed} prefix {prefix}");
+                let mut a = Reservoir::<(u16, f64)>::new(cap, seed);
+                for i in 0..prefix {
+                    a.offer(((i % 5) as u16, i as f64 * 0.618 + 1.0));
+                }
+                dense_covered |= !a.skip_engaged() && a.len() < cap;
+                skip_covered |= a.skip_engaged();
+                let mut b = roundtrip(&a, &tag);
+                assert_eq!(a.seen(), b.seen(), "{tag}: seen");
+                assert_eq!(a.skip_engaged(), b.skip_engaged(), "{tag}: skip phase");
+                for i in prefix..prefix + 500 {
+                    let item = ((i % 5) as u16, i as f64 * 0.618 + 1.0);
+                    a.offer(item);
+                    b.offer(item);
+                }
+                let bits = |r: &Reservoir<(u16, f64)>| -> Vec<(u16, u64)> {
+                    r.items().iter().map(|&(s, v)| (s, v.to_bits())).collect()
+                };
+                assert_eq!(bits(&a), bits(&b), "{tag}: reservoirs diverged after restore");
+                assert_eq!(
+                    a.to_snapshot_bytes(),
+                    b.to_snapshot_bytes(),
+                    "{tag}: full state diverged after restore"
+                );
+            }
+        }
+    }
+    assert!(dense_covered, "matrix never hit a mid-dense-phase state");
+    assert!(skip_covered, "matrix never hit a mid-skip state");
+}
+
+/// A-ExpJ weighted reservoirs keep their key heap and jump state across a
+/// snapshot: the restored sampler makes the same future selections.
+#[test]
+fn weighted_reservoir_roundtrip_continues_bit_identical() {
+    for seed in 0..4u64 {
+        for prefix in [0usize, 5, 16, 400] {
+            let tag = format!("weighted seed {seed} prefix {prefix}");
+            let mut a = WeightedReservoir::<(u16, f64)>::new(16, seed);
+            for i in 0..prefix {
+                a.offer(((i % 3) as u16, i as f64), (i % 9 + 1) as f64);
+            }
+            let mut b = roundtrip(&a, &tag);
+            for i in prefix..prefix + 300 {
+                let item = ((i % 3) as u16, i as f64);
+                let w = (i % 9 + 1) as f64;
+                a.offer(item, w);
+                b.offer(item, w);
+            }
+            assert_eq!(
+                a.to_snapshot_bytes(),
+                b.to_snapshot_bytes(),
+                "{tag}: diverged after restore"
+            );
+            assert_eq!(a.seen(), b.seen(), "{tag}: seen");
+            assert_eq!(
+                a.weight_seen().to_bits(),
+                b.weight_seen().to_bits(),
+                "{tag}: weight seen"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sketches and window payloads
+// ---------------------------------------------------------------------------
+
+/// Sketch partials (quantile clusters, HLL registers, Count-Min counters +
+/// heavy-hitter entries) round-trip and keep answering identically while
+/// more data streams in.
+#[test]
+fn sketch_partials_roundtrip_and_continue() {
+    for seed in [3u64, 11] {
+        let mut rng = Rng::seed_from_u64(seed);
+        let feed: Vec<f64> = (0..2_000).map(|_| rng.range_usize(0, 5_000) as f64).collect();
+        let (head, tail) = feed.split_at(700);
+
+        let mut q = QuantileSketch::new(64);
+        let mut h = HyperLogLog::new(12);
+        let mut hh = HeavyHitters::new(8, 128, 4, seed);
+        for &v in head {
+            q.offer(v, 1.0);
+            h.offer(v);
+            hh.offer(v as u64 % 37, v);
+        }
+        let mut q2 = roundtrip(&q, "quantile");
+        let mut h2 = roundtrip(&h, "hll");
+        let mut hh2 = roundtrip(&hh, "heavy-hitters");
+        for &v in tail {
+            q.offer(v, 1.0);
+            q2.offer(v, 1.0);
+            h.offer(v);
+            h2.offer(v);
+            hh.offer(v as u64 % 37, v);
+            hh2.offer(v as u64 % 37, v);
+        }
+        for p in [0.1, 0.5, 0.99] {
+            assert_eq!(
+                q.quantile(p).to_bits(),
+                q2.quantile(p).to_bits(),
+                "seed {seed}: q{p} diverged"
+            );
+        }
+        assert_eq!(
+            h.estimate().to_bits(),
+            h2.estimate().to_bits(),
+            "seed {seed}: distinct estimate diverged"
+        );
+        assert_eq!(h.registers(), h2.registers(), "seed {seed}: HLL registers diverged");
+        let top = |s: &HeavyHitters| -> Vec<(u64, u64)> {
+            s.top_k(4).into_iter().map(|(k, w)| (k, w.to_bits())).collect()
+        };
+        assert_eq!(top(&hh), top(&hh2), "seed {seed}: top-k diverged");
+        assert_eq!(q.to_snapshot_bytes(), q2.to_snapshot_bytes(), "seed {seed}: quantile");
+        assert_eq!(hh.to_snapshot_bytes(), hh2.to_snapshot_bytes(), "seed {seed}: hh");
+    }
+}
+
+/// `PaneStore` contents (ring of Mergeable pane partials) and the
+/// `DropLedger` round-trip exactly, including aggregate answers.
+#[test]
+fn pane_store_and_drop_ledger_roundtrip() {
+    // Panes of real sampler output: one finished interval each.
+    let items = trace(300.0, 17, 2_000);
+    let mut store = PaneStore::<SampleResult>::new(4);
+    let mut pool = IngestPool::new(SamplerKind::Oasrs, 1, 0.5, 23);
+    for chunk in items.chunks(200) {
+        pool.offer_slice(chunk);
+        store.push(pool.finish_interval());
+    }
+    let restored = roundtrip(&store, "pane store");
+    assert_eq!(store.len(), restored.len(), "pane count");
+    assert_eq!(store.merge_ops(), restored.merge_ops(), "merge telemetry");
+    match (store.aggregate(), restored.aggregate()) {
+        (Some(a), Some(b)) => {
+            assert_eq!(a.to_snapshot_bytes(), b.to_snapshot_bytes(), "window aggregate")
+        }
+        (None, None) => {}
+        _ => panic!("aggregate presence diverged"),
+    }
+
+    let mut ledger = DropLedger::new(500);
+    ledger.absorb(vec![
+        (2, LateDrops { count: 3.0, mass: 30.5 }),
+        (5, LateDrops { count: 1.0, mass: 7.25 }),
+    ]);
+    let restored = roundtrip(&ledger, "drop ledger");
+    for (lo, hi) in [(0u64, 2_000u64), (1_000, 3_000), (2_500, 3_000)] {
+        let a = ledger.span(lo, hi);
+        let b = restored.span(lo, hi);
+        assert_eq!(a.count.to_bits(), b.count.to_bits(), "span {lo}-{hi}: count");
+        assert_eq!(a.mass.to_bits(), b.mass.to_bits(), "span {lo}-{hi}: mass");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the full pool, every sampler kind
+// ---------------------------------------------------------------------------
+
+/// The pool-level contract the engines rely on: snapshot the workers
+/// (mid-interval or at a boundary), restore a second pool from the blobs,
+/// feed both the identical suffix, and the merged interval results are
+/// bit-identical — every sampler kind, single- and multi-worker, across
+/// offer chunk sizes.
+#[test]
+fn ingest_pool_restores_bit_identically_for_every_sampler_kind() {
+    let items = trace(400.0, 29, 2_000);
+    let (head, tail) = items.split_at(items.len() / 2);
+    for kind in [
+        SamplerKind::Oasrs,
+        SamplerKind::Srs,
+        SamplerKind::Sts,
+        SamplerKind::WeightedRes,
+        SamplerKind::None,
+    ] {
+        for workers in [1usize, 3] {
+            for chunk in [7usize, 64] {
+                for boundary_snapshot in [false, true] {
+                    let tag = format!(
+                        "{kind:?}/{workers}w/chunk{chunk}/{}",
+                        if boundary_snapshot { "boundary" } else { "mid-interval" }
+                    );
+                    let mut a = IngestPool::new(kind, workers, 0.4, 31);
+                    for c in head.chunks(chunk) {
+                        a.offer_slice(c);
+                    }
+                    if boundary_snapshot {
+                        // Engine discipline: snapshot after the interval
+                        // close, with empty batch buffers.
+                        let _ = a.finish_interval();
+                    }
+                    let blobs = a.snapshot_workers();
+                    assert_eq!(blobs.len(), workers, "{tag}: one blob per worker");
+                    let cursor = a.transport_cursor();
+                    let mut b = IngestPool::restore(kind, workers, 0.4, &blobs, cursor)
+                        .unwrap_or_else(|e| panic!("{tag}: restore failed: {e}"));
+                    for c in tail.chunks(chunk) {
+                        a.offer_slice(c);
+                        b.offer_slice(c);
+                    }
+                    let ra = a.finish_interval();
+                    let rb = b.finish_interval();
+                    assert_eq!(
+                        ra.to_snapshot_bytes(),
+                        rb.to_snapshot_bytes(),
+                        "{tag}: merged interval results diverged after restore"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Restore validates its inputs: a blob count that does not match the
+/// worker count and a blob from a different sampler kind both reject.
+#[test]
+fn pool_restore_rejects_mismatched_blobs() {
+    let items = trace(200.0, 37, 1_000);
+    let mut pool = IngestPool::new(SamplerKind::Srs, 2, 0.4, 41);
+    pool.offer_slice(&items);
+    let _ = pool.finish_interval();
+    let blobs = pool.snapshot_workers();
+    let cursor = pool.transport_cursor();
+
+    let err = IngestPool::restore(SamplerKind::Srs, 3, 0.4, &blobs, cursor).unwrap_err();
+    assert!(
+        err.to_string().contains("worker blobs"),
+        "worker-count mismatch must say how many blobs, got: {err}"
+    );
+    let err = IngestPool::restore(SamplerKind::Oasrs, 2, 0.4, &blobs, cursor).unwrap_err();
+    assert!(
+        err.to_string().contains("sampler"),
+        "kind mismatch must name the sampler, got: {err}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// negative paths: trailing bytes, truncation, frame damage
+// ---------------------------------------------------------------------------
+
+/// A payload with trailing garbage or missing bytes is rejected with a
+/// descriptive `Error::Io` — never silently accepted.
+#[test]
+fn truncated_and_padded_payloads_are_rejected() {
+    let mut rng = Rng::seed_from_u64(47);
+    rng.next_u64();
+    let bytes = rng.to_snapshot_bytes();
+
+    let mut padded = bytes.clone();
+    padded.push(0);
+    let err = Rng::from_snapshot_bytes(&padded).unwrap_err();
+    assert!(matches!(err, Error::Io(_)), "want Io, got: {err}");
+    assert!(err.to_string().contains("trailing"), "got: {err}");
+
+    let err = Rng::from_snapshot_bytes(&bytes[..bytes.len() - 1]).unwrap_err();
+    assert!(matches!(err, Error::Io(_)), "want Io, got: {err}");
+    assert!(err.to_string().contains("truncated"), "got: {err}");
+}
+
+/// Frame-level damage taxonomy: short frames and checksum damage are
+/// `Error::Io` (torn writes); foreign magic and future versions are
+/// `Error::Config` (wrong file / wrong build) — each with a message that
+/// says what happened.
+#[test]
+fn frame_damage_is_rejected_with_descriptive_errors() {
+    let frame = encode_frame(b"mergeable payload");
+    assert_eq!(decode_frame(&frame).unwrap(), b"mergeable payload");
+
+    let err = decode_frame(&frame[..5]).unwrap_err();
+    assert!(matches!(err, Error::Io(_)), "short frame: want Io, got {err}");
+    assert!(err.to_string().contains("truncated"), "got: {err}");
+
+    let mut torn = frame.clone();
+    let last = torn.len() - 1;
+    torn[last] ^= 0x01;
+    let err = decode_frame(&torn).unwrap_err();
+    assert!(matches!(err, Error::Io(_)), "checksum: want Io, got {err}");
+    assert!(err.to_string().contains("checksum mismatch"), "got: {err}");
+
+    let mut flipped = frame.clone();
+    flipped[10] ^= 0x80; // payload bit-flip → checksum catches it
+    let err = decode_frame(&flipped).unwrap_err();
+    assert!(err.to_string().contains("checksum mismatch"), "got: {err}");
+
+    let mut foreign = frame.clone();
+    foreign[0] = b'Z';
+    let err = decode_frame(&foreign).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "magic: want Config, got {err}");
+    assert!(err.to_string().contains("magic"), "got: {err}");
+
+    let mut future = frame;
+    future[4] = 0xFF;
+    future[5] = 0x7F;
+    let err = decode_frame(&future).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "version: want Config, got {err}");
+    assert!(err.to_string().contains("version mismatch"), "got: {err}");
+}
