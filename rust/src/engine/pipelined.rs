@@ -33,6 +33,7 @@ use super::worker::IngestPool;
 use super::{EngineConfig, RunReport, SketchIngestStats, WindowReport};
 
 /// Pipelined engine over a finite, event-time-sorted trace.
+#[derive(Debug)]
 pub struct PipelinedEngine<'a> {
     config: &'a EngineConfig,
     window: WindowConfig,
@@ -230,7 +231,7 @@ impl<'a> PipelinedEngine<'a> {
         let (frac_tx, frac_rx) = bounded::<WindowObs>(self.config.channel_capacity.max(64));
         let (tx, rx) = bounded::<IntervalMsg>(self.config.channel_capacity.max(2));
 
-        let start = Instant::now();
+        let start = Instant::now(); // lint: wall-clock latency metric only, never feeds results
         let mut items_processed = 0u64;
 
         type ConsumerOut = (Vec<WindowReport>, Option<SketchIngestStats>);
@@ -274,7 +275,7 @@ impl<'a> PipelinedEngine<'a> {
                     };
                 let mut out = Vec::new();
                 while let Some(msg) = rx.recv() {
-                    let t0 = Instant::now();
+                    let t0 = Instant::now(); // lint: wall-clock latency metric only, never feeds results
                     ledger.absorb(msg.drops);
                     if let Some(sw) = sketches.as_mut() {
                         match msg.sketch {
@@ -283,7 +284,7 @@ impl<'a> PipelinedEngine<'a> {
                         }
                     }
                     if let Some(ws) = assembler.push_interval_view(msg.result, msg.exact) {
-                        let emit_t0 = crate::obs::metrics_enabled().then(Instant::now);
+                        let emit_t0 = crate::obs::metrics_enabled().then(Instant::now); // lint: wall-clock latency metric only, never feeds results
                         let _sp = crate::obs::trace::span("window_emit");
                         let mut qr = match &sketches {
                             Some(sw) => executor.execute_sketch(&query, sw, &ws.state)?,
@@ -423,7 +424,7 @@ impl<'a> PipelinedEngine<'a> {
                 ingest_chunk.extend_from_items(interval_items);
                 pool.offer_columnar(&ingest_chunk);
                 items_processed += interval_items.len() as u64;
-                let t0 = Instant::now();
+                let t0 = Instant::now(); // lint: wall-clock latency metric only, never feeds results
                 let (result, mut pane_sketches) = {
                     let _sp = crate::obs::trace::span("interval_close");
                     pool.finish_interval_with_sketches()

@@ -62,6 +62,7 @@ use crate::util::spsc::{self, spsc, SpscReceiver, SpscSender};
 
 /// Per-worker sampler instance (concrete dispatch; the STS two-phase
 /// protocol needs more than the `Sampler` trait exposes).
+#[derive(Debug)]
 pub enum WorkerSampler {
     Oasrs(OasrsSampler),
     Srs(SrsSampler),
@@ -135,6 +136,10 @@ impl WorkerSampler {
             WorkerSampler::Srs(s) => s.finish_interval(),
             WorkerSampler::WeightedRes(s) => s.finish_interval(),
             WorkerSampler::Noop(s) => s.finish_interval(),
+            // lint: allow(P1) internal protocol bug, not a data condition:
+            // the coordinator statically routes STS through the two-phase
+            // close (local_counts -> finish_with_targets) and never sends
+            // an STS pool the simple-finish control message.
             WorkerSampler::Sts(_) => panic!("STS requires the two-phase protocol"),
         }
     }
@@ -188,6 +193,7 @@ impl Snapshot for WorkerSampler {
 
 /// STS worker state: buffers its partition of the batch; the coordinator
 /// drives the two-phase count/sample protocol.
+#[derive(Debug)]
 pub struct StsBatch {
     groups: Vec<Vec<f64>>,
     counts: [usize; MAX_STRATA],
@@ -229,6 +235,7 @@ impl StsBatch {
     /// per-stratum groups.  The ts column is never read — the groupBy
     /// shuffle write touches two columns instead of three AoS fields.
     #[inline]
+    // lint: hot-path — per-chunk dispatch into the sampler kernels
     pub fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
         for (&s, &v) in chunk.strata.iter().zip(&chunk.values) {
             let s = s as usize;
@@ -250,7 +257,7 @@ impl StsBatch {
     /// Phase 2: sample exactly `targets[s]` items per stratum from the local
     /// groups by full random sort, then reset for the next interval.
     pub fn finish_with_targets(&mut self, targets: &[usize; MAX_STRATA]) -> SampleResult {
-        let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+        let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
         let mut sample = Vec::new();
         let mut state = StrataState::default();
         for s in 0..MAX_STRATA {
@@ -262,7 +269,10 @@ impl StsBatch {
             let k_i = targets[s].min(c_i);
             // Full key sort — the exact variant's cost signature.
             let mut keyed: Vec<(f64, usize)> = (0..c_i).map(|i| (self.rng.f64(), i)).collect();
-            keyed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): byte-identical for
+            // these keys (rng.f64() yields [0,1) — never NaN or -0.0, where
+            // the two orderings could differ) and panic-free by type.
+            keyed.sort_by(|a, b| a.0.total_cmp(&b.0));
             for &(_, idx) in keyed.iter().take(k_i) {
                 sample.push((s as u16, self.groups[s][idx]));
             }
@@ -331,6 +341,7 @@ const RETURN_RING_CAP: usize = RING_CAP + 2;
 
 /// One worker's interval close: the local sample plus one pre-built
 /// sketch partial per registered spec (empty when nothing is registered).
+#[derive(Debug)]
 pub struct WorkerFinish {
     pub result: SampleResult,
     pub sketches: Vec<PaneSketch>,
@@ -390,7 +401,7 @@ fn build_partials(specs: &[SketchSpec], result: &SampleResult) -> Vec<PaneSketch
     if specs.is_empty() {
         return Vec::new();
     }
-    let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+    let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
     let partials = specs.iter().map(|spec| spec.build(result)).collect();
     if let Some(t0) = t0 {
         crate::obs_histogram!(
@@ -565,6 +576,19 @@ pub struct IngestPool {
     last_ts_bounds: Option<(EventTime, EventTime)>,
 }
 
+// Manual Debug: `PoolImpl` holds join handles and ring endpoints; report
+// the pool shape rather than demanding Debug of transport internals.
+impl std::fmt::Debug for IngestPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IngestPool")
+            .field("kind", &self.kind)
+            .field("fraction", &self.fraction)
+            .field("n_workers", &self.n_workers)
+            .field("specs", &self.specs.len())
+            .finish_non_exhaustive()
+    }
+}
+
 /// Worker thread body: drain the data ring eagerly (recycling each emptied
 /// buffer), interleave control messages, and back off when idle.
 fn worker_loop(
@@ -720,6 +744,7 @@ impl IngestPool {
     ) -> Self {
         let n = samplers.len();
         let imp = if n == 1 {
+            // lint: allow(P1) `n == 1` was just read from this Vec's len.
             let s = samplers.into_iter().next().expect("one sampler");
             PoolImpl::Inline(Box::new(s))
         } else {
@@ -735,6 +760,10 @@ impl IngestPool {
                     std::thread::Builder::new()
                         .name(format!("sa-worker-{w}"))
                         .spawn(move || worker_loop(sampler, ctrl_rx, chunk_rx, return_tx))
+                        // lint: allow(P1) construction-time, before any
+                        // ring carries data: OS thread exhaustion here is
+                        // unrecoverable for the pool and nothing is queued
+                        // yet to poison.
                         .expect("spawn worker"),
                 );
                 ctrl_txs.push(ctrl_tx);
@@ -785,7 +814,7 @@ impl IngestPool {
         match &self.imp {
             PoolImpl::Inline(s) => vec![s.to_snapshot_bytes()],
             PoolImpl::Threaded(t) => {
-                let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+                let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
                 let mut replies = Vec::new();
                 for tx in &t.ctrl_txs {
                     let (rtx, rrx) = bounded(1);
@@ -855,7 +884,7 @@ impl IngestPool {
     /// chunk boundaries and worker assignment as repeated [`Self::offer`]
     /// calls, so seeded runs are chunk-size independent.
     pub fn offer_slice(&mut self, items: &[Item]) {
-        let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+        let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
         match &mut self.imp {
             PoolImpl::Inline(s) => {
                 let mut it = items.iter().map(|i| i.ts);
@@ -880,8 +909,9 @@ impl IngestPool {
     /// Same chunk boundaries and worker assignment as [`Self::offer_slice`]
     /// over the equivalent items, so seeded runs are ingest-path
     /// independent (asserted by the columnar equivalence tests).
+    // lint: hot-path — per-chunk dispatch into the sampler kernels
     pub fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
-        let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+        let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
         match &mut self.imp {
             PoolImpl::Inline(s) => {
                 if let Some((lo, hi)) = ts_column_bounds(&chunk.ts) {
@@ -1048,7 +1078,7 @@ impl IngestPool {
         }
         self.specs = specs.to_vec();
         if let PoolImpl::Threaded(t) = &mut self.imp {
-            let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+            let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
             let mut acks = Vec::new();
             for tx in &t.ctrl_txs {
                 let (rtx, rrx) = bounded(1);
@@ -1074,7 +1104,7 @@ impl IngestPool {
         match &mut self.imp {
             PoolImpl::Inline(s) => s.set_fraction(fraction),
             PoolImpl::Threaded(t) => {
-                let t0 = obs::metrics_enabled().then(std::time::Instant::now);
+                let t0 = obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
                 let mut acks = Vec::new();
                 for tx in &t.ctrl_txs {
                     let (rtx, rrx) = bounded(1);

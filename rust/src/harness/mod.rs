@@ -114,6 +114,15 @@ pub struct Ctx {
     pub scale: Scale,
 }
 
+impl std::fmt::Debug for Ctx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ctx")
+            .field("service", &self.service)
+            .field("scale", &self.scale)
+            .finish()
+    }
+}
+
 impl Ctx {
     /// XLA backend when artifacts are present, else the native executor.
     pub fn auto(scale: Scale) -> Self {
@@ -185,6 +194,7 @@ pub fn stage_latency_table(snap: &crate::obs::MetricsSnapshot) -> crate::util::t
 }
 
 /// One measured configuration.
+#[derive(Debug)]
 pub struct Measurement {
     pub system: System,
     pub summary: RunSummary,

@@ -46,6 +46,14 @@
 //! println!("{:.0} items/s", report.throughput());
 //! ```
 
+// Every `unsafe` operation inside an `unsafe fn` must sit in its own
+// `unsafe {}` block with its own `// SAFETY:` comment (enforced together
+// with pallas-lint rule U1).
+#![deny(unsafe_op_in_unsafe_fn)]
+// Public types must be inspectable — worker state, rings and handles all
+// show up in test failure messages and operator logs.
+#![warn(missing_debug_implementations)]
+
 pub mod budget;
 pub mod core;
 pub mod datasets;

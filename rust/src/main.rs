@@ -40,7 +40,9 @@
 //! enables span tracing for the run and writes a Chrome `trace_event` file
 //! (load via chrome://tracing or Perfetto).
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: flag maps feed result-facing config echoes (RunReport
+// headers, manifest dumps) — keep iteration deterministic (lint rule D1).
+use std::collections::BTreeMap;
 
 use streamapprox::datasets::{CaidaConfig, TaxiConfig};
 use streamapprox::harness::{figures, Ctx, Scale};
@@ -48,9 +50,9 @@ use streamapprox::prelude::*;
 use streamapprox::runtime::default_artifacts_dir;
 use streamapprox::stream::StreamGenerator;
 
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
     let mut pos = Vec::new();
-    let mut flags = HashMap::new();
+    let mut flags = BTreeMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
@@ -87,7 +89,7 @@ fn cmd_info() {
     }
 }
 
-fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
+fn cmd_run(flags: &BTreeMap<String, String>) -> Result<(), Box<dyn std::error::Error>> {
     let get = |k: &str, d: &str| flags.get(k).cloned().unwrap_or_else(|| d.to_string());
     let engine = match get("engine", "pipelined").as_str() {
         "batched" => EngineKind::Batched,
@@ -281,7 +283,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), Box<dyn std::error::Er
     Ok(())
 }
 
-fn cmd_bench(flags: &HashMap<String, String>) {
+fn cmd_bench(flags: &BTreeMap<String, String>) {
     let scale = if flags.contains_key("full") { Scale::full() } else { Scale::quick() };
     let ctx = Ctx::auto(scale);
     eprintln!("backend: {:?}, scale: {:?}", ctx.backend(), ctx.scale);

@@ -213,6 +213,13 @@ pub struct Registry {
     entries: Mutex<Vec<Entry>>,
 }
 
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.entries.lock().map(|e| e.len()).unwrap_or(0);
+        f.debug_struct("Registry").field("entries", &n).finish()
+    }
+}
+
 impl Registry {
     pub const fn new() -> Self {
         Self { entries: Mutex::new(Vec::new()) }

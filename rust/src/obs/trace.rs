@@ -117,6 +117,7 @@ thread_local! {
 /// RAII span: records on drop (LIFO drop order keeps per-thread spans
 /// well-nested).  Inert when tracing is disabled at creation.
 #[must_use = "a span measures the scope it lives in"]
+#[derive(Debug)]
 pub struct SpanGuard {
     id: u32,
     start: u64,

@@ -236,6 +236,19 @@ pub struct Pipeline {
     _service: Option<ComputeService>,
 }
 
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pipeline")
+            .field("config", &self.config)
+            .field("window", &self.window)
+            .field("query", &self.query)
+            .field("sampler", &self.sampler)
+            .field("budget", &self.budget)
+            .field("durability", &self.durability)
+            .finish_non_exhaustive()
+    }
+}
+
 /// Convenience alias for the run outcome.
 pub type PipelineReport = RunReport;
 

@@ -170,6 +170,18 @@ pub struct QueryExecutor {
     sketch_builds: AtomicU64,
 }
 
+impl std::fmt::Debug for QueryExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QueryExecutor")
+            .field("compute", &self.compute)
+            .field("level", &self.level)
+            .field("sketch", &self.sketch)
+            // ordering: monotonic stats counter, diagnostics only.
+            .field("sketch_builds", &self.sketch_builds.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
 impl QueryExecutor {
     pub fn new(compute: ComputeHandle) -> Self {
         Self {
@@ -182,6 +194,7 @@ impl QueryExecutor {
 
     /// Sketches built at query time by this executor so far (monotone).
     pub fn query_time_sketch_builds(&self) -> u64 {
+        // ordering: monotonic stats counter read for reporting only.
         self.sketch_builds.load(Ordering::Relaxed)
     }
 
@@ -211,7 +224,7 @@ impl QueryExecutor {
     /// compute input and sketch builders, so the per-slide cost of a query
     /// does not include a span re-merge or clone.
     pub fn execute_view(&self, query: &Query, view: &WindowView<'_>) -> Result<QueryResult> {
-        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
         let result = {
             let _sp = crate::obs::trace::span("query_execute");
             self.execute_view_impl(query, view)
@@ -252,7 +265,7 @@ impl QueryExecutor {
         sketches: &SketchWindow,
         state: &StrataState,
     ) -> Result<QueryResult> {
-        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
         let result = {
             let _sp = crate::obs::trace::span("query_execute");
             self.execute_sketch_impl(query, sketches, state)
@@ -478,6 +491,7 @@ impl QueryExecutor {
         mut feed: impl FnMut(&mut S, (u16, f64)),
         merge: impl Fn(&mut S, &S),
     ) -> S {
+        // ordering: monotonic stats counter; nothing orders against it.
         self.sketch_builds.fetch_add(1, Ordering::Relaxed);
         crate::obs_counter!(
             "query_sketch_builds_total",
@@ -777,7 +791,10 @@ pub fn exact_eval(query: &Query, items: &[(u16, f64)]) -> (f64, Vec<f64>) {
             (vals[idx.min(vals.len() - 1)], vec![])
         }
         Query::Distinct => {
-            let mut seen = std::collections::HashSet::new();
+            // BTreeSet over bit patterns (lint rule D1): count is order-
+            // free today, but the ground-truth path must stay deterministic
+            // if anyone ever iterates it (e.g. to list distinct values).
+            let mut seen = std::collections::BTreeSet::new();
             for &(s, v) in items {
                 if (s as usize) < MAX_STRATA {
                     let v = if v == 0.0 { 0.0 } else { v };

@@ -71,6 +71,16 @@ pub struct ComputeHandle {
     backend: Backend,
 }
 
+impl std::fmt::Debug for ComputeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputeHandle")
+            .field("backend", &self.backend)
+            // ordering: monotonic stats counter, diagnostics only.
+            .field("jobs", &self.jobs.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
 impl Clone for ComputeHandle {
     fn clone(&self) -> Self {
         Self { tx: self.tx.clone(), jobs: self.jobs.clone(), backend: self.backend }
@@ -84,6 +94,8 @@ impl ComputeHandle {
         self.tx
             .send(Request { input, reply: rtx })
             .map_err(|_| Error::Xla("compute service stopped".into()))?;
+        // ordering: monotonic stats counter; the channel rendezvous is
+        // the synchronizing hand-off.
         self.jobs.fetch_add(1, Ordering::Relaxed);
         rrx.recv()
             .ok_or_else(|| Error::Xla("compute service dropped reply".into()))?
@@ -91,6 +103,7 @@ impl ComputeHandle {
 
     /// Total jobs submitted through all clones of this handle.
     pub fn jobs_submitted(&self) -> u64 {
+        // ordering: monotonic stats counter read for reporting only.
         self.jobs.load(Ordering::Relaxed)
     }
 
@@ -110,6 +123,15 @@ impl ComputeHandle {
 pub struct ComputeService {
     handle: ComputeHandle,
     join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for ComputeService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputeService")
+            .field("handle", &self.handle)
+            .field("running", &self.join.is_some())
+            .finish()
+    }
 }
 
 impl ComputeService {

@@ -95,6 +95,16 @@ pub struct XlaEngine {
 }
 
 #[cfg(feature = "xla")]
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine")
+            .field("variants", &self.variants.len())
+            .field("num_strata", &self.num_strata)
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Compile every variant in the manifest on a fresh PJRT CPU client.
     pub fn load(manifest: &Manifest) -> Result<Self> {
@@ -255,6 +265,13 @@ impl XlaEngine {
 #[cfg(not(feature = "xla"))]
 pub struct XlaEngine {
     _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl std::fmt::Debug for XlaEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaEngine").field("available", &false).finish()
+    }
 }
 
 #[cfg(not(feature = "xla"))]

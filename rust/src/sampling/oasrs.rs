@@ -144,8 +144,9 @@ impl OasrsSampler {
     /// stratum.  Each reservoir owns its RNG and sees its items in arrival
     /// order, so this consumes every stream exactly as the scalar path does
     /// — byte-identical `SampleResult`s for a fixed seed, any chunking.
+    // lint: hot-path — per-chunk acceptance sweep, zero steady-state allocation
     fn columnar_exact(&mut self, chunk: &ColumnarChunk) {
-        let t0 = crate::obs::metrics_enabled().then(Instant::now);
+        let t0 = crate::obs::metrics_enabled().then(Instant::now); // lint: wall-clock latency metric only, never feeds results
         for vals in &mut self.part_vals {
             vals.clear();
         }
@@ -193,8 +194,9 @@ impl OasrsSampler {
     /// the draw *order* differs from the scalar path — equivalence is
     /// pinned by the chi-square suite, not byte comparison, which is why
     /// this kernel is opt-in.
+    // lint: hot-path — per-chunk Bernoulli-mask sweep
     fn columnar_masked(&mut self, chunk: &ColumnarChunk) {
-        let t0 = crate::obs::metrics_enabled().then(Instant::now);
+        let t0 = crate::obs::metrics_enabled().then(Instant::now); // lint: wall-clock latency metric only, never feeds results
         let n = chunk.len();
         self.mask_uniforms.clear();
         self.mask_uniforms.resize(n, 0.0);
@@ -382,6 +384,7 @@ pub fn merge_worker_results(parts: Vec<SampleResult>) -> SampleResult {
 /// A distributed OASRS: `w` independent per-worker samplers, each sized
 /// `fraction/w` of the stream it sees.  Used by the engines' parallel path
 /// and by the scalability experiments (Fig. 7a).
+#[derive(Debug)]
 pub struct DistributedOasrs {
     workers: Vec<OasrsSampler>,
     next: usize,

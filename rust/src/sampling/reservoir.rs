@@ -298,6 +298,7 @@ impl<T: Copy> Reservoir<T> {
     /// branches; the engaged skip phase collapses whole rejected runs to
     /// one subtraction (`O(accepts)` total instead of `O(items)`
     /// decrements).
+    // lint: hot-path — geometric-skip batch offer (scratch reused by caller)
     pub fn offer_batch(&mut self, items: &[T], scratch: &mut BatchScratch) -> u64 {
         let mut rest = items;
         let mut accepted = 0u64;
@@ -356,6 +357,7 @@ impl<T: Copy> Reservoir<T> {
     /// Batched Algorithm-1 body over a full reservoir: one `fill_f64`, then
     /// a branchless mask/cursor sweep that compacts survivor positions and
     /// their victim slots, and only then touches reservoir state.
+    // lint: hot-path — dense-phase batch fill
     fn dense_batch(&mut self, items: &[T], scratch: &mut BatchScratch) -> u64 {
         let n = items.len();
         if n == 0 {

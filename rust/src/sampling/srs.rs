@@ -126,6 +126,7 @@ impl Sampler for SrsSampler {
         }
     }
 
+    // lint: hot-path — fused max/histogram + column memcpy kernel
     fn offer_columnar(&mut self, chunk: &ColumnarChunk) {
         // Columnar kernel: when every stratum is in range (the common case,
         // checked while counting), appending the chunk is two column memcpys

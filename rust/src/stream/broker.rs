@@ -11,7 +11,7 @@
 //! per-sub-stream FIFO order — the property OASRS's per-stratum counters
 //! rely on.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -41,9 +41,22 @@ struct Topic {
 }
 
 /// The in-process stream aggregator.
+///
+/// Topics live in a `BTreeMap` (not `HashMap`): any future "for each
+/// topic" operation — shutdown sweeps, stats dumps, snapshot manifests —
+/// iterates in name order regardless of creation order, so broker-fed
+/// results can never pick up iteration-order nondeterminism (lint rule
+/// D1; pinned by `topic_iteration_is_insertion_order_invariant` below).
 #[derive(Default)]
 pub struct Broker {
-    topics: Mutex<HashMap<String, Arc<Topic>>>,
+    topics: Mutex<BTreeMap<String, Arc<Topic>>>,
+}
+
+impl std::fmt::Debug for Broker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let names: Vec<String> = self.topic_names();
+        f.debug_struct("Broker").field("topics", &names).finish()
+    }
 }
 
 impl Broker {
@@ -115,6 +128,8 @@ impl Broker {
     /// them directly — use [`Broker::lag`], which saturates at zero.
     pub fn stats(&self, name: &str) -> Result<(u64, u64)> {
         let t = self.topic(name)?;
+        // ordering: statistical counters only (see doc comment above) — no
+        // slot or queue access is derived from these reads.
         Ok((t.produced.load(Ordering::Relaxed), t.consumed.load(Ordering::Relaxed)))
     }
 
@@ -134,11 +149,38 @@ impl Broker {
         let t = self.topic(name)?;
         Ok(t.receivers.iter().map(|r| r.len()).sum())
     }
+
+    /// Topic names in deterministic (lexicographic) order — the order every
+    /// whole-broker sweep observes, independent of creation order.
+    pub fn topic_names(&self) -> Vec<String> {
+        self.topics.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Per-topic (produced, consumed) counters in deterministic name order.
+    pub fn all_stats(&self) -> Vec<(String, u64, u64)> {
+        let topics = self.topics.lock().unwrap();
+        topics
+            .iter()
+            .map(|(name, t)| {
+                // ordering: statistical counters (see `stats` docs); reads
+                // race in-flight hand-offs by design.
+                (name.clone(), t.produced.load(Ordering::Relaxed), t.consumed.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
 }
 
 /// Producer: publishes items, partitioned by stratum (per-stratum FIFO).
 pub struct Producer {
     topic: Arc<Topic>,
+}
+
+impl std::fmt::Debug for Producer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Producer")
+            .field("partitions", &self.topic.senders.len())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Producer {
@@ -148,6 +190,8 @@ impl Producer {
         self.topic.senders[p]
             .send(item)
             .map_err(|_| Error::Stream("topic closed".into()))?;
+        // ordering: monotonic stats counter; the channel send above is the
+        // synchronizing hand-off, the counter never gates data access.
         self.topic.produced.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -157,6 +201,7 @@ impl Producer {
         let p = item.stratum as usize % self.topic.senders.len();
         match self.topic.senders[p].try_send(item) {
             Ok(()) => {
+                // ordering: monotonic stats counter (see `send`).
                 self.topic.produced.fetch_add(1, Ordering::Relaxed);
                 Ok(true)
             }
@@ -184,6 +229,15 @@ pub struct Consumer {
     next: usize,
 }
 
+impl std::fmt::Debug for Consumer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Consumer")
+            .field("partitions", &self.topic.receivers.len())
+            .field("next", &self.next)
+            .finish_non_exhaustive()
+    }
+}
+
 impl Consumer {
     /// Blocking poll across partitions; `None` when the topic is closed and
     /// fully drained.
@@ -196,6 +250,8 @@ impl Consumer {
                 match self.topic.receivers[idx].try_recv() {
                     Ok(item) => {
                         self.next = (idx + 1) % n;
+                        // ordering: monotonic stats counter; the channel
+                        // recv is the synchronizing hand-off.
                         self.topic.consumed.fetch_add(1, Ordering::Relaxed);
                         return Some(item);
                     }
@@ -221,6 +277,7 @@ impl Consumer {
             let idx = self.next;
             self.next = (self.next + 1) % n;
             while let Ok(item) = self.topic.receivers[idx].try_recv() {
+                // ordering: monotonic stats counter (see `poll`).
                 self.topic.consumed.fetch_add(1, Ordering::Relaxed);
                 out.push(item);
                 if out.len() >= max {
@@ -274,7 +331,7 @@ mod tests {
             p.send(item((i % 5) as u16, i as f64)).unwrap();
         }
         p.close();
-        let mut per_stratum: HashMap<u16, Vec<f64>> = HashMap::new();
+        let mut per_stratum: BTreeMap<u16, Vec<f64>> = BTreeMap::new();
         while let Some(it) = c.poll() {
             per_stratum.entry(it.stratum).or_default().push(it.value);
         }
@@ -368,6 +425,63 @@ mod tests {
         let batch = c.poll_batch(100);
         assert_eq!(batch.len(), 50);
         assert!(c.poll_batch(10).is_empty());
+    }
+
+    #[test]
+    fn topic_iteration_is_insertion_order_invariant() {
+        // Pinned determinism audit (lint rule D1): whole-broker sweeps must
+        // observe the same topic order and the same per-topic results no
+        // matter the order topics were created in.  With the old HashMap
+        // this held only by accident of the per-process hash seed.
+        let names = ["zeta", "alpha", "mid", "aa", "zz"];
+        let mut reversed = names;
+        reversed.reverse();
+
+        let mut sweeps = Vec::new();
+        for order in [names.as_slice(), reversed.as_slice()] {
+            let b = Broker::new();
+            for (i, name) in order.iter().enumerate() {
+                b.create_topic(name, TopicConfig { partitions: 2, capacity: 64 }).unwrap();
+                let p = b.producer(name).unwrap();
+                // distinct per-topic item counts so produced counters differ
+                for v in 0..=i {
+                    p.send(item(0, v as f64)).unwrap();
+                }
+            }
+            // The sweep result must depend only on the topic *set*, not on
+            // creation order: name-sorted with matching produced counts.
+            let stats = b.all_stats();
+            let expect_names: Vec<&str> = {
+                let mut s = order.to_vec();
+                s.sort_unstable();
+                s
+            };
+            let got_names: Vec<&str> = stats.iter().map(|(n, _, _)| n.as_str()).collect();
+            assert_eq!(got_names, expect_names);
+            assert_eq!(b.topic_names(), expect_names);
+            sweeps.push(
+                stats
+                    .into_iter()
+                    .map(|(n, prod, cons)| {
+                        // produced count was keyed to creation index; map it
+                        // back through the name so both orders agree
+                        let idx = order.iter().position(|x| *x == n).unwrap() as u64;
+                        (n, prod, cons, idx + 1)
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        }
+        // every topic produced exactly (creation index + 1) items
+        for sweep in &sweeps {
+            for (name, prod, cons, expect) in sweep {
+                assert_eq!(prod, expect, "topic {name} produced count");
+                assert_eq!(*cons, 0);
+            }
+        }
+        // and the name-keyed view is identical across creation orders
+        let a: Vec<(String, u64)> = sweeps[0].iter().map(|(n, p, _, _)| (n.clone(), *p)).collect();
+        let b: Vec<(String, u64)> = sweeps[1].iter().map(|(n, p, _, _)| (n.clone(), *p)).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -140,6 +140,7 @@ impl StreamConfig {
 }
 
 /// Deterministic event-time-ordered generator over a [`StreamConfig`].
+#[derive(Debug)]
 pub struct StreamGenerator {
     /// Per-substream state: (spec, next event time f64 ms, rng).
     subs: Vec<(SubStreamSpec, f64, Rng)>,

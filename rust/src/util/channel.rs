@@ -32,6 +32,19 @@ pub struct Receiver<T> {
     shared: Arc<Shared<T>>,
 }
 
+// Manual Debug without a `T: Debug` bound (payloads need not be printable).
+impl<T> std::fmt::Debug for Sender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Sender").finish_non_exhaustive()
+    }
+}
+
+impl<T> std::fmt::Debug for Receiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Receiver").finish_non_exhaustive()
+    }
+}
+
 /// Error returned when sending on a closed channel.
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);

@@ -33,10 +33,18 @@ struct Ring<T> {
     closed: AtomicBool,
 }
 
-// The ring hands each `T` from exactly one thread to exactly one other
-// thread; slots are never aliased mutably (head/tail ordering partitions
-// them between the sides).
+// SAFETY: the ring hands each `T` from exactly one thread to exactly one
+// other thread, so `Ring<T>` only needs `T: Send`.  Auto-impls are blocked
+// by the `UnsafeCell` slots; moving the whole ring between threads is fine
+// because a slot's contents are only touched by whichever side currently
+// owns the index range it sits in.
 unsafe impl<T: Send> Send for Ring<T> {}
+// SAFETY: `&Ring` is shared between exactly two threads (the non-cloneable
+// sender and receiver halves).  Slots are never aliased mutably: the
+// producer writes only slots in `[tail, head+cap)` and the consumer reads
+// only `[head, tail)`, and each side publishes its index with `Release`
+// before the other side's `Acquire` load can include the slot in its range
+// — the head/tail ordering partitions slot ownership between the sides.
 unsafe impl<T: Send> Sync for Ring<T> {}
 
 impl<T> Drop for Ring<T> {
@@ -46,6 +54,10 @@ impl<T> Drop for Ring<T> {
         let tail = *self.tail.get_mut();
         for i in head..tail {
             let slot = self.slots[i % self.cap].get();
+            // SAFETY: `[head, tail)` is exactly the set of slots the
+            // producer initialized (via `write`) and the consumer has not
+            // yet moved out (via `assume_init_read`), so each is a live `T`
+            // we own exclusively here (`&mut self`).
             unsafe { (*slot).assume_init_drop() };
         }
     }
@@ -59,6 +71,30 @@ pub struct SpscSender<T> {
 /// Consuming half (not cloneable — single consumer).
 pub struct SpscReceiver<T> {
     ring: Arc<Ring<T>>,
+}
+
+// Manual Debug (no `T: Debug` bound — chunks carrying samples need not be
+// printable): capacity plus the approximate occupancy/closed state.
+impl<T> std::fmt::Debug for SpscSender<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpscSender")
+            .field("cap", &self.ring.cap)
+            .field("len", &self.len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl<T> std::fmt::Debug for SpscReceiver<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // ordering: approximate occupancy snapshot for diagnostics only.
+        let tail = self.ring.tail.load(Ordering::Relaxed);
+        // ordering: same diagnostics-only snapshot.
+        let len = tail.wrapping_sub(self.ring.head.load(Ordering::Relaxed));
+        f.debug_struct("SpscReceiver")
+            .field("cap", &self.ring.cap)
+            .field("len", &len)
+            .finish_non_exhaustive()
+    }
 }
 
 /// Create a bounded SPSC ring with capacity `cap` (>= 1).
@@ -97,17 +133,35 @@ pub(crate) fn backoff(round: u32) {
 impl<T> SpscSender<T> {
     /// Non-blocking push; gives the value back when the ring is full or the
     /// consumer is gone.
+    // lint: hot-path — per-chunk push on the ingest data plane
     pub fn try_send(&self, value: T) -> Result<(), T> {
         let ring = &*self.ring;
+        // ordering: `closed` is an advisory flag, not a data hand-off; a
+        // stale read only delays the failure by one call, it never loses or
+        // duplicates an item.
         if ring.closed.load(Ordering::Relaxed) {
             return Err(value);
         }
-        let tail = ring.tail.load(Ordering::Relaxed); // own index
+        // ordering: the producer is the only writer of `tail`, so reading
+        // its own index needs no synchronization.
+        let tail = ring.tail.load(Ordering::Relaxed);
+        // ordering: Acquire pairs with the consumer's Release store of
+        // `head` — once we observe head advanced past a slot, the
+        // consumer's `assume_init_read` of that slot happens-before our
+        // re-`write` of it.
         let head = ring.head.load(Ordering::Acquire);
         if tail.wrapping_sub(head) >= ring.cap {
             return Err(value);
         }
+        // SAFETY: `tail - head < cap` proves slot `tail % cap` is outside
+        // the consumer's live range `[head, tail)`: it is either never
+        // initialized or already moved out (the Acquire above synchronizes
+        // with the read), so overwriting the `MaybeUninit` cannot leak or
+        // race.
         unsafe { (*ring.slots[tail % ring.cap].get()).write(value) };
+        // ordering: Release publishes the slot write above to the
+        // consumer's Acquire load of `tail` before the slot becomes part of
+        // its readable range.
         ring.tail.store(tail.wrapping_add(1), Ordering::Release);
         Ok(())
     }
@@ -120,6 +174,8 @@ impl<T> SpscSender<T> {
             match self.try_send(value) {
                 Ok(()) => return Ok(()),
                 Err(v) => {
+                    // ordering: advisory close check in a retry loop; a
+                    // stale value costs one more backoff round at most.
                     if self.ring.closed.load(Ordering::Relaxed) {
                         return Err(RingSendError(v));
                     }
@@ -139,6 +195,8 @@ impl<T> SpscSender<T> {
     /// Buffered item count (approximate under concurrency).
     pub fn len(&self) -> usize {
         let ring = &*self.ring;
+        // ordering: own-index read (producer owns `tail`); the result is
+        // documented as approximate, no slot access depends on it.
         ring.tail.load(Ordering::Relaxed).wrapping_sub(ring.head.load(Ordering::Acquire))
     }
 
@@ -155,14 +213,27 @@ impl<T> Drop for SpscSender<T> {
 
 impl<T> SpscReceiver<T> {
     /// Non-blocking pop; `None` when the ring is currently empty.
+    // lint: hot-path — per-chunk pop on the ingest data plane
     pub fn try_recv(&self) -> Option<T> {
         let ring = &*self.ring;
-        let head = ring.head.load(Ordering::Relaxed); // own index
+        // ordering: the consumer is the only writer of `head`, so reading
+        // its own index needs no synchronization.
+        let head = ring.head.load(Ordering::Relaxed);
+        // ordering: Acquire pairs with the producer's Release store of
+        // `tail`, making the slot `write` visible before the slot enters
+        // our readable range `[head, tail)`.
         let tail = ring.tail.load(Ordering::Acquire);
         if head == tail {
             return None;
         }
+        // SAFETY: `head != tail` puts slot `head % cap` inside `[head,
+        // tail)`, which the producer initialized with `write` before its
+        // Release store of `tail` (synchronized by the Acquire above), and
+        // which we have not yet moved out of — so it holds a live `T`.
         let value = unsafe { (*ring.slots[head % ring.cap].get()).assume_init_read() };
+        // ordering: Release pairs with the producer's Acquire load of
+        // `head` — our move-out above happens-before the producer reuses
+        // the slot.
         ring.head.store(head.wrapping_add(1), Ordering::Release);
         Some(value)
     }
@@ -187,6 +258,8 @@ impl<T> SpscReceiver<T> {
     /// True once closed with nothing left to drain.
     pub fn is_terminated(&self) -> bool {
         self.ring.closed.load(Ordering::Acquire)
+            // ordering: own-index read (consumer owns `head`); the tail
+            // Acquire pairs with the producer's final Release store.
             && self.ring.head.load(Ordering::Relaxed)
                 == self.ring.tail.load(Ordering::Acquire)
     }

@@ -65,6 +65,7 @@ impl EventTimeConfig {
 
 /// Routes items into event-time panes and closes them in pane-id order as
 /// the watermark advances.
+#[derive(Debug)]
 pub struct EventTimeRouter {
     interval_ms: EventTime,
     config: EventTimeConfig,
@@ -222,6 +223,7 @@ fn canonical_sort(items: &mut [Item]) {
 /// Pulls an arrival-order trace through an [`EventTimeRouter`], yielding
 /// one closed pane per call — the event-time replacement for the engines'
 /// sorted range scan.
+#[derive(Debug)]
 pub struct EventTimeSlicer<'a> {
     items: &'a [Item],
     pos: usize,

@@ -334,7 +334,7 @@ impl WindowAssembler {
         result: SampleResult,
         exact: ExactAgg,
     ) -> Option<WindowView<'_>> {
-        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now);
+        let t0 = crate::obs::metrics_enabled().then(std::time::Instant::now); // lint: wall-clock latency metric only, never feeds results
         if self.spill {
             crate::obs_counter!(
                 "window_spill_events_total",
@@ -547,6 +547,7 @@ pub(crate) mod reference {
     use super::*;
     use crate::sampling::oasrs::merge_worker_results;
 
+    #[derive(Debug)]
     pub struct ReferenceAssembler {
         config: WindowConfig,
         interval_ms: EventTime,

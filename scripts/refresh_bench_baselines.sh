@@ -10,6 +10,16 @@
 # provenance=cargo-bench; committing the rewritten files arms the guards
 # with like-for-like numbers.
 #
+# Status of the carried-over "commit the native numbers" residual (checked
+# again in PR 10): still blocked in the authoring environment — there is no
+# cargo in the container, so the provenance check below refuses the local
+# tree by design.  The committable numbers come from CI's perf-smoke job:
+# download the `bench-hotpath-numbers` artifact from a green main run,
+# verify `"provenance": "cargo-bench"` in both JSONs, and commit them.
+# (PR 10 also added the `pallas-lint-census` artifact on the
+# lint-invariants job — rule-drift numbers per PR — but that one is
+# informational and never committed.)
+#
 # Usage: scripts/refresh_bench_baselines.sh
 #   (from the repo root; needs cargo + python3)
 set -euo pipefail

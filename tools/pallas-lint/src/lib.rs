@@ -1,0 +1,830 @@
+//! pallas-lint — first-party invariant linter for the streamapprox tree.
+//!
+//! Every accuracy claim this reproduction makes rests on contracts the
+//! compiler cannot see: byte-identical sampler determinism across chunk
+//! sizes/workers/recovery, per-named-stream RNG discipline, zero
+//! steady-state allocation in the ingest kernels, and a hand-rolled unsafe
+//! SPSC ring whose memory-ordering choices are load-bearing.  The tests
+//! exercise specific schedules; this linter makes the *invariants
+//! themselves* un-mergeable to violate.
+//!
+//! The scanner is deliberately token-level (no `syn`, no regex — the build
+//! is offline and zero-dep): each file is split into parallel per-line
+//! `code` / `comment` streams by a small string/char/comment state machine,
+//! `#[cfg(test)]` / `#[test]` regions are tracked by brace depth, and each
+//! rule is a token query over non-test code plus a justification-comment
+//! lookup.  False positives are handled by *justifying*, not by making the
+//! scanner clever — a justification is a reviewable artifact, a cleverer
+//! scanner is not.
+//!
+//! Rules (see `tools/pallas-lint/README.md` for the full reference):
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | D1 | no `HashMap`/`HashSet` (iteration-order nondeterminism) — use `BTreeMap`/`BTreeSet` or justify `// lint: sorted-before-use` |
+//! | D2 | no `SystemTime::now`/`Instant::now`/`RandomState` outside `obs/`+`harness/` — justify `// lint: wall-clock` |
+//! | D3 | no fresh seed literals in `sampling/` — derive from the named stream; justify `// lint: rng-stream` |
+//! | U1 | every `unsafe` needs a `// SAFETY:` comment |
+//! | A1 | every `Ordering::Relaxed`/`SeqCst` needs an `// ordering:` comment or an `.lint-allow.toml` entry |
+//! | H1 | no `Vec::new`/`format!`/`.clone()`/`.to_vec(` inside `// lint: hot-path` functions |
+//! | P1 | no `unwrap`/`expect`/`panic!` in `engine/worker.rs` + `util/spsc.rs` |
+//!
+//! Any rule can also be suppressed site-by-site with
+//! `// lint: allow(<ID>) <reason>` on the offending line or the comment
+//! block above it.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One rule violation, printed as `ID path:line message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}:{} {}", self.rule, self.file, self.line, self.message)
+    }
+}
+
+/// Parsed `.lint-allow.toml`: per-rule lists of path suffixes whose files
+/// are exempt from that rule (the audited-and-allowlisted escape hatch,
+/// e.g. the obs counters' `Relaxed` orderings).
+#[derive(Debug, Default, Clone)]
+pub struct Allowlist {
+    /// rule id -> path suffixes (forward-slash form).
+    entries: BTreeMap<String, Vec<String>>,
+}
+
+impl Allowlist {
+    /// Parse the TOML subset the allowlist uses:
+    ///
+    /// ```toml
+    /// [A1]
+    /// files = [
+    ///   "rust/src/obs/mod.rs",  # reason
+    /// ]
+    /// ```
+    ///
+    /// Unknown keys and malformed lines are errors — a typo in the
+    /// allowlist must not silently widen it.
+    pub fn parse(src: &str) -> Result<Self, String> {
+        let mut entries: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut section: Option<String> = None;
+        let mut in_array = false;
+        for (i, raw) in src.lines().enumerate() {
+            let line = strip_toml_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let lineno = i + 1;
+            if in_array {
+                // inside `files = [` ... `]`
+                if line == "]" {
+                    in_array = false;
+                    continue;
+                }
+                let item = line.trim_end_matches(',').trim();
+                if item == "]" {
+                    in_array = false;
+                    continue;
+                }
+                let path = parse_toml_string(item)
+                    .ok_or_else(|| format!("allowlist line {lineno}: expected quoted path, got {item:?}"))?;
+                let rule = section
+                    .clone()
+                    .ok_or_else(|| format!("allowlist line {lineno}: array outside a [RULE] section"))?;
+                entries.entry(rule).or_default().push(path);
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(format!("allowlist line {lineno}: empty section name"));
+                }
+                section = Some(name.to_string());
+                entries.entry(name.to_string()).or_default();
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("files") {
+                let rest = rest.trim_start();
+                let rest = rest
+                    .strip_prefix('=')
+                    .ok_or_else(|| format!("allowlist line {lineno}: expected `files = [`"))?
+                    .trim_start();
+                if section.is_none() {
+                    return Err(format!("allowlist line {lineno}: `files` outside a [RULE] section"));
+                }
+                if rest == "[" {
+                    in_array = true;
+                    continue;
+                }
+                // single-line array: files = ["a", "b"]
+                let inner = rest
+                    .strip_prefix('[')
+                    .and_then(|s| s.strip_suffix(']'))
+                    .ok_or_else(|| format!("allowlist line {lineno}: expected `[` after `files =`"))?;
+                let rule = section.clone().unwrap_or_default();
+                for item in inner.split(',') {
+                    let item = item.trim();
+                    if item.is_empty() {
+                        continue;
+                    }
+                    let path = parse_toml_string(item)
+                        .ok_or_else(|| format!("allowlist line {lineno}: expected quoted path, got {item:?}"))?;
+                    entries.entry(rule.clone()).or_default().push(path);
+                }
+                continue;
+            }
+            return Err(format!("allowlist line {lineno}: unrecognized line {line:?}"));
+        }
+        if in_array {
+            return Err("allowlist: unterminated files = [ array".to_string());
+        }
+        Ok(Self { entries })
+    }
+
+    /// Serialize back to the same TOML subset (round-trip tested).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        for (rule, paths) in &self.entries {
+            out.push_str(&format!("[{rule}]\nfiles = [\n"));
+            for p in paths {
+                out.push_str(&format!("  \"{p}\",\n"));
+            }
+            out.push_str("]\n");
+        }
+        out
+    }
+
+    /// Is `file` (forward-slash path) exempt from `rule`?
+    pub fn allows(&self, rule: &str, file: &str) -> bool {
+        self.entries
+            .get(rule)
+            .map(|paths| paths.iter().any(|p| file == p || file.ends_with(&format!("/{p}"))))
+            .unwrap_or(false)
+    }
+}
+
+fn strip_toml_comment(line: &str) -> &str {
+    // The allowlist never quotes a '#', so a bare scan is enough.
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn parse_toml_string(item: &str) -> Option<String> {
+    let inner = item.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.to_string())
+}
+
+/// Linter configuration: the allowlist plus the scan roots.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub allow: Allowlist,
+}
+
+// ---------------------------------------------------------------------------
+// Source model: parallel per-line code/comment streams.
+// ---------------------------------------------------------------------------
+
+/// One source line split into its code part (string/char literal contents
+/// blanked) and its comment text (line + block comments, `//` markers
+/// stripped).
+#[derive(Debug, Clone, Default)]
+pub struct SplitLine {
+    pub code: String,
+    pub comment: String,
+}
+
+/// Split `src` into per-line code/comment streams with a small state
+/// machine: line comments, nested block comments, string/char/byte/raw
+/// literals (contents blanked so tokens inside strings never trigger
+/// rules), and the `'a`-lifetime-vs-`'a'`-char-literal distinction.
+pub fn split_lines(src: &str) -> Vec<SplitLine> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum St {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let bytes = src.as_bytes();
+    let mut st = St::Code;
+    let mut lines = Vec::new();
+    let mut cur = SplitLine::default();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = bytes.get(i + 1).map(|&b| b as char);
+                match c {
+                    '/' if next == Some('/') => {
+                        st = St::LineComment;
+                        i += 2;
+                    }
+                    '/' if next == Some('*') => {
+                        st = St::Block(1);
+                        i += 2;
+                    }
+                    '"' => {
+                        // keep the quotes as token separators
+                        cur.code.push('"');
+                        st = St::Str;
+                        i += 1;
+                    }
+                    'r' | 'b' if !prev_is_ident(&cur.code) => {
+                        // raw / byte / byte-raw string prefixes
+                        let (hashes, quote_at) = raw_string_open(&bytes[i..]);
+                        if let Some(off) = quote_at {
+                            cur.code.push('"');
+                            st = St::RawStr(hashes);
+                            i += off + 1;
+                        } else if c == 'b' && next == Some('\'') {
+                            cur.code.push('\'');
+                            st = St::Char;
+                            i += 2;
+                        } else {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    }
+                    '\'' => {
+                        // char literal iff `'\...'` or `'X'`; else lifetime
+                        let nn = bytes.get(i + 2).map(|&b| b as char);
+                        if next == Some('\\') || nn == Some('\'') {
+                            cur.code.push('\'');
+                            st = St::Char;
+                            i += 1;
+                        } else {
+                            cur.code.push('\'');
+                            i += 1;
+                        }
+                    }
+                    _ => {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                let next = bytes.get(i + 1).map(|&b| b as char);
+                if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && has_hashes(&bytes[i + 1..], hashes) {
+                    cur.code.push('"');
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false)
+}
+
+/// For a byte slice starting at `r`/`b`: if it opens a raw string
+/// (`r"`, `r#"`, `br##"`, ...), return (hash count, offset of the quote).
+fn raw_string_open(bytes: &[u8]) -> (u32, Option<usize>) {
+    let mut j = 1;
+    if bytes.first() == Some(&b'b') && bytes.get(1) == Some(&b'r') {
+        j = 2;
+    } else if bytes.first() == Some(&b'b') {
+        // plain byte string b"..."
+        if bytes.get(1) == Some(&b'"') {
+            return (0, Some(1));
+        }
+        return (0, None);
+    }
+    let mut hashes = 0u32;
+    while bytes.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if bytes.get(j) == Some(&b'"') {
+        (hashes, Some(j))
+    } else {
+        (0, None)
+    }
+}
+
+fn has_hashes(bytes: &[u8], n: u32) -> bool {
+    (0..n as usize).all(|k| bytes.get(k) == Some(&b'#'))
+}
+
+/// Per-line facts the rules consume.
+#[derive(Debug)]
+pub struct ScannedFile {
+    pub lines: Vec<SplitLine>,
+    /// True where the line sits inside `#[cfg(test)]` / `#[test]` code.
+    pub in_test: Vec<bool>,
+    /// True where the line sits inside a `// lint: hot-path` function body.
+    pub in_hot: Vec<bool>,
+}
+
+/// Scan a file: split code/comments, then walk brace depth to mark test
+/// regions and `// lint: hot-path` function bodies.
+pub fn scan(src: &str) -> ScannedFile {
+    let lines = split_lines(src);
+    let n = lines.len();
+    let mut in_test = vec![false; n];
+    let mut in_hot = vec![false; n];
+
+    let mut depth: i64 = 0;
+    // open test/hot regions, recorded as the depth *at* their opening brace
+    let mut test_stack: Vec<i64> = Vec::new();
+    let mut hot_stack: Vec<i64> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_hot = false;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let comment = line.comment.as_str();
+        if code.contains("#[cfg(test)]") || code.contains("#[test]") {
+            pending_test = true;
+        }
+        if comment.contains("lint: hot-path") {
+            pending_hot = true;
+        }
+        let started_in = (!test_stack.is_empty(), !hot_stack.is_empty());
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending_test {
+                        test_stack.push(depth);
+                        pending_test = false;
+                    }
+                    if pending_hot {
+                        hot_stack.push(depth);
+                        pending_hot = false;
+                    }
+                }
+                '}' => {
+                    if test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    if hot_stack.last() == Some(&depth) {
+                        hot_stack.pop();
+                    }
+                    depth -= 1;
+                }
+                // an attribute that applies to a brace-less item
+                // (`#[cfg(test)] use x;`) expires at the `;`
+                ';' if pending_test && !code.contains('{') => {
+                    pending_test = false;
+                }
+                _ => {}
+            }
+        }
+        // A line counts as test/hot if it started inside the region or the
+        // region is still open at end of line — the opening line itself is
+        // covered either way.
+        in_test[idx] = started_in.0 || !test_stack.is_empty();
+        in_hot[idx] = started_in.1 || !hot_stack.is_empty();
+    }
+
+    ScannedFile { lines, in_test, in_hot }
+}
+
+/// Does the violation at `line` carry the given justification marker —
+/// trailing on the same line, or in the contiguous comment block above
+/// (attribute-only lines like `#[inline]` may sit between the comment and
+/// the code)?
+pub fn justified(file: &ScannedFile, line: usize, markers: &[&str]) -> bool {
+    let has = |s: &str| markers.iter().any(|m| s.contains(m));
+    if has(&file.lines[line].comment) {
+        return true;
+    }
+    let mut j = line;
+    while j > 0 {
+        j -= 1;
+        let l = &file.lines[j];
+        let code = l.code.trim();
+        let is_attr = code.starts_with("#[") && code.ends_with(']');
+        if code.is_empty() || is_attr {
+            if has(&l.comment) {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Word-boundary token search on a code line (identifier chars delimit).
+pub fn contains_token(code: &str, token: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(token) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .last()
+                .map(|c| c.is_alphanumeric() || c == '_')
+                .unwrap_or(false);
+        let after = code[at + token.len()..].chars().next();
+        let after_ok = !after.map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + token.len();
+    }
+    false
+}
+
+/// D3 helper: does this code line seed an RNG from a bare literal
+/// (`seed_from_u64(42)` / `seed_from_u64(0xABCD)`)?  Derivations from a
+/// named stream (`seed_from_u64(self.seed ^ ...)`) pass.
+pub fn seeds_from_literal(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("seed_from_u64") {
+        let at = start + pos;
+        let rest = &code[at + "seed_from_u64".len()..];
+        let mut chars = rest.chars().skip_while(|c| c.is_whitespace());
+        if chars.next() == Some('(') {
+            if let Some(first) = chars.find(|c| !c.is_whitespace()) {
+                if first.is_ascii_digit() {
+                    return true;
+                }
+            }
+        }
+        start = at + "seed_from_u64".len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+const GENERIC_ALLOW: [&str; 7] = [
+    "lint: allow(D1", "lint: allow(D2", "lint: allow(D3", "lint: allow(U1",
+    "lint: allow(A1", "lint: allow(H1", "lint: allow(P1",
+];
+
+fn allow_marker(rule: &'static str) -> &'static str {
+    match rule {
+        "D1" => GENERIC_ALLOW[0],
+        "D2" => GENERIC_ALLOW[1],
+        "D3" => GENERIC_ALLOW[2],
+        "U1" => GENERIC_ALLOW[3],
+        "A1" => GENERIC_ALLOW[4],
+        "H1" => GENERIC_ALLOW[5],
+        _ => GENERIC_ALLOW[6],
+    }
+}
+
+/// Normalize to forward slashes for scope matching.
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+fn in_module(path: &str, module: &str) -> bool {
+    let needle = format!("/{module}/");
+    path.contains(&needle) || path.starts_with(&format!("{module}/"))
+}
+
+/// All rule ids, in report order.
+pub const RULES: [&str; 7] = ["D1", "D2", "D3", "U1", "A1", "H1", "P1"];
+
+/// Lint one file's source under `path` (used verbatim in reports; scope
+/// rules match on it, so fixture tests can place a snippet "in" any
+/// module).
+pub fn lint_source(path: &str, src: &str, cfg: &Config) -> Vec<Violation> {
+    let path = norm(path);
+    let scanned = scan(src);
+    let mut out = Vec::new();
+    let mut push = |rule: &'static str, line: usize, message: String| {
+        out.push(Violation { rule, file: path.clone(), line: line + 1, message });
+    };
+
+    let p1_scoped = path.ends_with("engine/worker.rs") || path.ends_with("util/spsc.rs");
+    let d2_exempt = in_module(&path, "obs") || in_module(&path, "harness");
+    let d3_scoped = in_module(&path, "sampling");
+
+    for (i, line) in scanned.lines.iter().enumerate() {
+        if scanned.in_test[i] {
+            continue;
+        }
+        let code = line.code.as_str();
+
+        // D1 — iteration-order nondeterminism
+        if !cfg.allow.allows("D1", &path)
+            && (contains_token(code, "HashMap") || contains_token(code, "HashSet"))
+            && !justified(&scanned, i, &["lint: sorted-before-use", allow_marker("D1")])
+        {
+            push(
+                "D1",
+                i,
+                "HashMap/HashSet iteration order is nondeterministic and breaks byte-identity; \
+                 use BTreeMap/BTreeSet or justify with `// lint: sorted-before-use`"
+                    .to_string(),
+            );
+        }
+
+        // D2 — wall-clock / random hash state outside obs/ + harness/
+        if !d2_exempt && !cfg.allow.allows("D2", &path) {
+            for tok in ["SystemTime::now", "Instant::now", "RandomState"] {
+                if code.contains(tok)
+                    && !justified(&scanned, i, &["lint: wall-clock", allow_marker("D2")])
+                {
+                    push(
+                        "D2",
+                        i,
+                        format!(
+                            "{tok} outside obs/ and harness/ can leak nondeterminism into results; \
+                             justify with `// lint: wall-clock` if it only feeds metrics/latency"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // D3 — fresh seed literals in sampling/
+        if d3_scoped
+            && !cfg.allow.allows("D3", &path)
+            && seeds_from_literal(code)
+            && !justified(&scanned, i, &["lint: rng-stream", allow_marker("D3")])
+        {
+            push(
+                "D3",
+                i,
+                "RNG seeded from a bare literal in sampling/ — every draw must derive from the \
+                 sampler's named seed stream so runs stay reproducible; justify with \
+                 `// lint: rng-stream` if the literal is a stream-label salt"
+                    .to_string(),
+            );
+        }
+
+        // U1 — unsafe needs SAFETY
+        if !cfg.allow.allows("U1", &path)
+            && contains_token(code, "unsafe")
+            && !justified(&scanned, i, &["SAFETY:", allow_marker("U1")])
+        {
+            push(
+                "U1",
+                i,
+                "`unsafe` without a `// SAFETY:` comment stating the invariant that makes it sound"
+                    .to_string(),
+            );
+        }
+
+        // A1 — atomic ordering justification
+        if !cfg.allow.allows("A1", &path) {
+            for tok in ["Ordering::Relaxed", "Ordering::SeqCst"] {
+                if code.contains(tok)
+                    && !justified(&scanned, i, &["ordering:", allow_marker("A1")])
+                {
+                    push(
+                        "A1",
+                        i,
+                        format!(
+                            "{tok} without an `// ordering:` justification (why this ordering is \
+                             sufficient/necessary); audited files can be listed in .lint-allow.toml"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // H1 — hot-path allocation discipline
+        if scanned.in_hot[i] && !cfg.allow.allows("H1", &path) {
+            for tok in ["Vec::new", "format!", ".clone()", ".to_vec("] {
+                if code.contains(tok) && !justified(&scanned, i, &[allow_marker("H1")]) {
+                    push(
+                        "H1",
+                        i,
+                        format!(
+                            "`{tok}` inside a `// lint: hot-path` function — ingest kernels, SPSC \
+                             push/pop and pane merges must not allocate or copy in steady state"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // P1 — panic discipline in the worker/transport layer
+        if p1_scoped && !cfg.allow.allows("P1", &path) {
+            for tok in [".unwrap()", ".expect(", "panic!"] {
+                if code.contains(tok) && !justified(&scanned, i, &[allow_marker("P1")]) {
+                    push(
+                        "P1",
+                        i,
+                        format!(
+                            "`{tok}` in worker/transport non-test code — a panic here poisons the \
+                             ring and deadlocks the coordinator; return an Error or justify"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+/// Lint run summary: violations plus per-rule counts (the census).
+#[derive(Debug, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// Per-rule violation counts, all rules present (zero-filled).
+    pub fn census(&self) -> BTreeMap<&'static str, usize> {
+        let mut c: BTreeMap<&'static str, usize> = RULES.iter().map(|r| (*r, 0)).collect();
+        for v in &self.violations {
+            *c.entry(v.rule).or_insert(0) += 1;
+        }
+        c
+    }
+
+    /// Census as a small JSON object (hand-written — zero-dep).
+    pub fn census_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"total\": {},\n", self.violations.len()));
+        s.push_str("  \"by_rule\": {");
+        let census = self.census();
+        let mut first = true;
+        for (rule, n) in &census {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str(&format!("\n    \"{rule}\": {n}"));
+        }
+        s.push_str("\n  },\n  \"violations\": [");
+        let mut first = true;
+        for v in &self.violations {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str(&format!(
+                "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}}}",
+                v.rule, v.file, v.line
+            ));
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+}
+
+/// Recursively collect `.rs` files under `root` in sorted order (stable
+/// output across filesystems).
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(root)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            out.extend(collect_rs_files(&p)?);
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(out)
+}
+
+/// Lint every `.rs` file under the given roots.
+pub fn lint_paths(roots: &[PathBuf], cfg: &Config) -> std::io::Result<Report> {
+    let mut report = Report::default();
+    for root in roots {
+        for file in collect_rs_files(root)? {
+            let src = std::fs::read_to_string(&file)?;
+            let label = norm(&file.to_string_lossy());
+            report.violations.extend(lint_source(&label, &src, cfg));
+            report.files_scanned += 1;
+        }
+    }
+    report.violations.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitter_blanks_strings_and_comments() {
+        let src = "let x = \"Ordering::Relaxed\"; // HashMap in comment\nlet y = 1;\n";
+        let lines = split_lines(src);
+        assert!(!lines[0].code.contains("Relaxed"));
+        assert!(lines[0].comment.contains("HashMap"));
+        assert_eq!(lines[1].code.trim(), "let y = 1;");
+    }
+
+    #[test]
+    fn lifetime_is_not_a_char_literal() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x';\nlet n = 1;\n";
+        let lines = split_lines(src);
+        assert!(lines[0].code.contains("fn f"));
+        assert!(lines[0].code.contains("{ x }"));
+        assert_eq!(lines[2].code.trim(), "let n = 1;");
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let src = "let s = r#\"unsafe { HashMap }\"#;\nlet t = 2;\n";
+        let lines = split_lines(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert_eq!(lines[1].code.trim(), "let t = 2;");
+    }
+
+    #[test]
+    fn token_word_boundaries() {
+        assert!(contains_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!contains_token("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(contains_token("unsafe impl Send for X {}", "unsafe"));
+    }
+
+    #[test]
+    fn seed_literal_detection() {
+        assert!(seeds_from_literal("let r = Rng::seed_from_u64(42);"));
+        assert!(seeds_from_literal("Rng::seed_from_u64( 0xABCD )"));
+        assert!(!seeds_from_literal("Rng::seed_from_u64(seed ^ 0x4D)"));
+        assert!(!seeds_from_literal("Rng::seed_from_u64(self.seed)"));
+    }
+
+    #[test]
+    fn allowlist_rejects_malformed_lines() {
+        assert!(Allowlist::parse("files = [\"x\"]").is_err()); // outside section
+        assert!(Allowlist::parse("[A1]\nfiles = [\n\"unterminated\",\n").is_err());
+        assert!(Allowlist::parse("[A1]\nnot_files = 3\n").is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! pallas-lint CLI.
+//!
+//! ```text
+//! cargo run -p pallas-lint -- rust/src                 # lint, exit 1 on violations
+//! cargo run -p pallas-lint -- rust/src --census out.json
+//! cargo run -p pallas-lint -- rust/src --allow-file .lint-allow.toml --quiet
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = violations found, 2 = usage/IO/allowlist error.
+//! Violations print as `RULE path:line message` — the format CI greps and
+//! the fixture suite asserts on.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use pallas_lint::{lint_paths, Allowlist, Config};
+
+const USAGE: &str = "usage: pallas-lint <path>... [--allow-file FILE] [--census FILE] [--quiet]
+
+Lints .rs files under each <path> for project invariants (D1 D2 D3 U1 A1 H1 P1).
+  --allow-file FILE   per-rule file allowlist (default: .lint-allow.toml if present)
+  --census FILE       also write a JSON violation census (counts per rule + sites)
+  --quiet             suppress the per-file summary line, print violations only";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(msg) => {
+            eprintln!("pallas-lint: {msg}");
+            eprintln!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<bool, String> {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut allow_file: Option<PathBuf> = None;
+    let mut census_file: Option<PathBuf> = None;
+    let mut quiet = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--allow-file" => {
+                allow_file =
+                    Some(PathBuf::from(args.next().ok_or("--allow-file needs a FILE")?));
+            }
+            "--census" => {
+                census_file = Some(PathBuf::from(args.next().ok_or("--census needs a FILE")?));
+            }
+            "--quiet" => quiet = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(true);
+            }
+            s if s.starts_with('-') => return Err(format!("unknown flag {s}")),
+            _ => roots.push(PathBuf::from(arg)),
+        }
+    }
+    if roots.is_empty() {
+        return Err("no paths given".to_string());
+    }
+
+    let mut cfg = Config::default();
+    let default_allow = PathBuf::from(".lint-allow.toml");
+    let allow_path = match allow_file {
+        Some(p) => Some(p),
+        None if default_allow.exists() => Some(default_allow),
+        None => None,
+    };
+    if let Some(p) = allow_path {
+        let src = std::fs::read_to_string(&p)
+            .map_err(|e| format!("cannot read allowlist {}: {e}", p.display()))?;
+        cfg.allow = Allowlist::parse(&src)?;
+    }
+
+    let report = lint_paths(&roots, &cfg).map_err(|e| format!("scan failed: {e}"))?;
+
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if let Some(p) = census_file {
+        std::fs::write(&p, report.census_json())
+            .map_err(|e| format!("cannot write census {}: {e}", p.display()))?;
+    }
+    if !quiet {
+        let census = report.census();
+        let per_rule: Vec<String> =
+            census.iter().map(|(r, n)| format!("{r}={n}")).collect();
+        eprintln!(
+            "pallas-lint: {} file(s), {} violation(s) [{}]",
+            report.files_scanned,
+            report.violations.len(),
+            per_rule.join(" ")
+        );
+    }
+    Ok(report.violations.is_empty())
+}
